@@ -1,0 +1,51 @@
+"""Fig. 16 reproduction: ablating the three throughput-oriented strategies
+(R = routing, S = synchronization, M = migration) against their vanilla
+counterparts. Expected: all-vanilla ~= the in-flight-limit baseline; each
+staleflow strategy added improves throughput; all three together best."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, note, sim_cfg
+from repro.core import StrategySuite
+from repro.core.strategies import (
+    migration_strategy,
+    routing_strategy,
+    synchronization_strategy,
+    vanilla_migration,
+    vanilla_routing,
+    vanilla_synchronization,
+)
+from repro.core.types import reset_traj_ids
+from repro.sim.engine import StaleFlowSim
+
+GRID = {
+    "vanilla": (vanilla_routing, vanilla_synchronization, vanilla_migration),
+    "R": (routing_strategy, vanilla_synchronization, vanilla_migration),
+    "RS": (routing_strategy, synchronization_strategy, vanilla_migration),
+    "RM": (routing_strategy, vanilla_synchronization, migration_strategy),
+    "SM": (vanilla_routing, synchronization_strategy, migration_strategy),
+    "RSM": (routing_strategy, synchronization_strategy, migration_strategy),
+}
+
+
+def run(quick: bool = False) -> dict:
+    note("bench_ablation (Fig. 16): R/S/M strategy grid")
+    out = {}
+    combos = ("vanilla", "R", "RS", "RSM") if quick else tuple(GRID)
+    base = sim_cfg(eta=3, total_steps=4 if quick else 6)
+    for name in combos:
+        r, s, m = GRID[name]
+        cfg = dataclasses.replace(
+            base, suite=StrategySuite(routing=r, synchronization=s, migration=m)
+        )
+        reset_traj_ids()
+        res = StaleFlowSim(cfg).run()
+        emit("ablation", f"{name}_tokens_per_s", res.throughput)
+        out[name] = res.throughput
+    emit("ablation", "RSM_over_vanilla", out["RSM"] / out["vanilla"])
+    return out
+
+
+if __name__ == "__main__":
+    run()

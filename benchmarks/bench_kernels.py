@@ -1,0 +1,83 @@
+"""Kernel substrate microbenchmark: per-op wall time of the reference
+execution path (what CPU actually runs) + one interpret-mode correctness
+probe per Pallas kernel (the TPU-target code path). The TPU kernels
+themselves can only be timed on TPU; their roofline behavior is covered by
+the dry-run cost analysis instead."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, note
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us
+
+
+def run(quick: bool = False) -> dict:
+    note("bench_kernels: ref-path us/call + interpret-mode correctness")
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    b, s, h, hkv, hd = 2, 512, 8, 2, 64
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(key, (b, s, hkv, hd))
+    v = jax.random.normal(key, (b, s, hkv, hd))
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="ref"))
+    out["flash_attention_us"] = _time(fa, q, k, v)
+    emit("kernels", "flash_attention_ref_us", out["flash_attention_us"])
+
+    qd = jax.random.normal(key, (b, h, hd))
+    lengths = jnp.full((b,), s, jnp.int32)
+    da = jax.jit(
+        lambda q, k, v, l: ops.decode_attention(q, k, v, l, impl="ref")
+    )
+    out["decode_attention_us"] = _time(da, qd, k, v, lengths)
+    emit("kernels", "decode_attention_ref_us", out["decode_attention_us"])
+
+    e, c, d, f = 8, 128, 256, 512
+    x = jax.random.normal(key, (e, c, d)) * 0.1
+    wg = jax.random.normal(key, (e, d, f)) * 0.05
+    wu = jax.random.normal(key, (e, d, f)) * 0.05
+    wd = jax.random.normal(key, (e, f, d)) * 0.05
+    gm = jax.jit(
+        lambda x, a, b2, c2: ops.moe_expert_ffn(x, a, b2, c2, impl="ref")
+    )
+    out["moe_ffn_us"] = _time(gm, x, wg, wu, wd)
+    emit("kernels", "moe_expert_ffn_ref_us", out["moe_ffn_us"])
+
+    bt, tt = 16, 1024
+    lp = jax.random.normal(key, (bt, tt)) * 0.1 - 2.0
+    olp = lp + 0.01
+    adv = jax.random.normal(key, (bt,))
+    mask = jnp.ones((bt, tt))
+    dl = jax.jit(lambda a, b2, c2, d2: ops.dapo_loss(a, b2, c2, d2, impl="ref"))
+    out["dapo_loss_us"] = _time(dl, lp, olp, adv, mask)
+    emit("kernels", "dapo_loss_ref_us", out["dapo_loss_us"])
+
+    # interpret-mode correctness probes (TPU-target kernel bodies)
+    if not quick:
+        o1 = ops.flash_attention(q[:1, :128], k[:1, :128], v[:1, :128],
+                                 impl="interpret")
+        r1 = ref.flash_attention_ref(q[:1, :128], k[:1, :128], v[:1, :128])
+        err = float(jnp.abs(o1 - r1).max())
+        emit("kernels", "flash_attention_interpret_max_err", err)
+        assert err < 1e-4
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 25 reproduction: redundant rollout ablation (batch-level and
+group-level). Expected: redundancy drops long-tail trajectories -> max/mean
+response length of *consumed* data falls, per-step time falls, throughput
+improves modestly; batch-level cuts deeper than group-level at the same
+redundant ratio (it can discard whole long groups)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, note, sim_cfg
+from repro.core.types import reset_traj_ids
+from repro.sim.engine import StaleFlowSim
+
+
+def _run(cfg):
+    reset_traj_ids()
+    return StaleFlowSim(cfg).run()
+
+
+def run(quick: bool = False) -> dict:
+    note("bench_redundancy (Fig. 25): none vs batch-level vs group-level")
+    base = sim_cfg(eta=3, total_steps=3 if quick else 5, response_sigma=1.6)
+    out = {}
+    variants = {
+        "none": base,
+        "batch_1_16": dataclasses.replace(
+            base, batch_redundancy=max(1, base.batch_size // 16)
+        ),
+        "group_1_16": dataclasses.replace(
+            base, group_redundancy=max(1, base.group_size // 16)
+        ),
+    }
+    for name, cfg in variants.items():
+        res = _run(cfg)
+        tokens_per_step = res.total_tokens / max(res.steps, 1)
+        time_per_step = res.total_time / max(res.steps, 1)
+        emit("redundancy", f"{name}_tokens_per_step", tokens_per_step)
+        emit("redundancy", f"{name}_time_per_step_s", time_per_step)
+        emit("redundancy", f"{name}_throughput", res.throughput)
+        out[name] = {
+            "tokens_per_step": tokens_per_step,
+            "time_per_step": time_per_step,
+            "throughput": res.throughput,
+        }
+    return out
+
+
+if __name__ == "__main__":
+    run()

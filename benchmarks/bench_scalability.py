@@ -1,0 +1,56 @@
+"""Fig. 15 reproduction: throughput scaling with response length, batch
+size, and instance count (staleflow vs the in-flight-limit baseline).
+Expected: staleflow holds the highest absolute throughput and its relative
+advantage grows with response length (long-tail skew)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, note, sim_cfg
+from repro.core import StrategySuite
+from repro.core.types import reset_traj_ids
+from repro.sim.engine import StaleFlowSim
+
+
+def _pair(cfg):
+    reset_traj_ids()
+    sf = StaleFlowSim(cfg).run().throughput
+    reset_traj_ids()
+    inf = StaleFlowSim(
+        dataclasses.replace(cfg, suite=StrategySuite.vanilla())
+    ).run().throughput
+    return sf, inf
+
+
+def run(quick: bool = False) -> dict:
+    note("bench_scalability (Fig. 15): sweeps of len/batch/instances")
+    out = {}
+    base = sim_cfg(eta=3, total_steps=3 if quick else 5)
+
+    for mean_len in (2000, 4000) if quick else (2000, 4000, 8000):
+        cfg = dataclasses.replace(
+            base, response_mean=float(mean_len), response_cap=mean_len * 10
+        )
+        sf, inf = _pair(cfg)
+        emit("scalability", f"len{mean_len}_staleflow", sf)
+        emit("scalability", f"len{mean_len}_ratio", sf / inf)
+        out[f"len{mean_len}"] = (sf, inf)
+
+    for bs in (8, 16) if quick else (8, 16, 32):
+        cfg = dataclasses.replace(base, batch_size=bs)
+        sf, inf = _pair(cfg)
+        emit("scalability", f"batch{bs}_staleflow", sf)
+        emit("scalability", f"batch{bs}_ratio", sf / inf)
+        out[f"batch{bs}"] = (sf, inf)
+
+    for n in (4, 8) if quick else (4, 8, 16):
+        cfg = dataclasses.replace(base, n_instances=n)
+        sf, inf = _pair(cfg)
+        emit("scalability", f"inst{n}_staleflow", sf)
+        emit("scalability", f"inst{n}_ratio", sf / inf)
+        out[f"inst{n}"] = (sf, inf)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Fig. 19 + Table 3 reproduction: command/time breakdown.
+
+Two evidence classes:
+1. REAL runtime timers (tiny model): share of decode / prefill / pull /
+   route / interrupt / coordinator time. Expected: decode dominates,
+   coordination overhead < a few % (Table 3: commands < 3%, Alg. 1 < 0.1s).
+2. PS communication plans (Appendix A): push (cross-DCN, load-balanced
+   greedy planner) vs pull (replicated co-located PS, PCIe-local) makespans
+   for the paper's Qwen3-30B-A3B sharding, at 16..128 workers — expected
+   flat with scale (Fig. 23).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, note
+from repro.configs import get_arch
+from repro.core.parameter_server import replicated_pull_plan, sharded_push_plan
+from repro.core.types import reset_traj_ids
+from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
+
+
+def run(quick: bool = False) -> dict:
+    note("bench_sync_overhead (Fig. 19 / Table 3): time breakdown")
+    reset_traj_ids()
+    arch = get_arch("qwen2-1.5b").reduced()
+    rt = AsyncRLRuntime(
+        arch,
+        RuntimeConfig(
+            eta=1, batch_size=4, group_size=2, n_instances=2, max_slots=4,
+            max_len=48, max_new_tokens=10, total_steps=2 if quick else 4,
+        ),
+    )
+    with Timer() as t:
+        rt.run(max_ticks=20000)
+    total = sum(rt.timers.values())
+    out = {"timers": dict(rt.timers)}
+    for k, v in sorted(rt.timers.items()):
+        emit("sync_overhead", f"time_{k}_s", v)
+        emit("sync_overhead", f"share_{k}", v / total if total else 0.0)
+    cmd = rt.timers["pull"] + rt.timers["route"] + rt.timers["interrupt"] \
+        + rt.timers["coordinator"]
+    emit("sync_overhead", "command_share", cmd / total if total else 0.0)
+
+    # --- PS plans across scale (Appendix A.3 / Fig. 23)
+    cfg = get_arch("qwen3-30b-a3b")
+    param_bytes = int(cfg.n_params * 2)  # bf16
+    n_slices = 64
+    slices = {f"slice{i}": param_bytes // n_slices for i in range(n_slices)}
+    for n_hosts in (2, 4) if quick else (2, 4, 8, 16):
+        pull = replicated_pull_plan(slices, n_rollout_hosts=n_hosts)
+        holders = {
+            name: [f"train{j}" for j in range(4)] for name in slices
+        }
+        push = sharded_push_plan(slices, holders, n_ps_workers=n_hosts)
+        emit("sync_overhead", f"pull_makespan_{n_hosts}hosts_s", pull.makespan)
+        emit("sync_overhead", f"push_makespan_{n_hosts}hosts_s", push.makespan)
+        out[f"plan_{n_hosts}"] = (pull.makespan, push.makespan)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 13 reproduction: end-to-end throughput across systems x staleness
+bounds. Expected: staleflow >= inflight(VeRL-Async) > onestep(VeRL-Pipeline)
+> sync(VeRL), with the staleflow/inflight gap widening as eta grows."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, note, sim_cfg
+from repro.core import StrategySuite
+from repro.core.types import reset_traj_ids
+from repro.sim.baselines import OneStepSim, SyncSim
+from repro.sim.engine import StaleFlowSim
+
+
+def _once(cls, cfg):
+    reset_traj_ids()
+    return cls(cfg).run()
+
+
+def run(quick: bool = False) -> dict:
+    note("bench_throughput (Fig. 13): tokens/s by system and eta")
+    etas = (1, 3) if quick else (1, 2, 3)
+    steps = 4 if quick else 6
+    out = {}
+    base = sim_cfg(total_steps=steps)
+
+    r_sync = _once(SyncSim, base)
+    r_os = _once(OneStepSim, base)
+    emit("throughput", "sync_tokens_per_s", r_sync.throughput)
+    emit("throughput", "onestep_tokens_per_s", r_os.throughput)
+    out["sync"] = r_sync.throughput
+    out["onestep"] = r_os.throughput
+
+    for eta in etas:
+        cfg = dataclasses.replace(base, eta=eta)
+        r_sf = _once(StaleFlowSim, cfg)
+        r_if = _once(
+            StaleFlowSim, dataclasses.replace(cfg, suite=StrategySuite.vanilla())
+        )
+        emit("throughput", f"staleflow_eta{eta}_tokens_per_s", r_sf.throughput)
+        emit("throughput", f"inflight_eta{eta}_tokens_per_s", r_if.throughput)
+        emit("throughput", f"gain_vs_inflight_eta{eta}",
+             r_sf.throughput / r_if.throughput)
+        emit("throughput", f"gain_vs_sync_eta{eta}",
+             r_sf.throughput / r_sync.throughput)
+        out[f"staleflow_eta{eta}"] = r_sf.throughput
+        out[f"inflight_eta{eta}"] = r_if.throughput
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Shared benchmark helpers: CSV emission + scaled-down default configs.
+
+Every benchmark prints ``bench,metric,value`` CSV rows (plus human-readable
+headers to stderr-like comment lines starting with '#') and returns a dict
+so ``benchmarks.run`` can aggregate. Scales are chosen so the full suite
+finishes in minutes on one CPU; each module documents which paper
+table/figure it reproduces and what the expected qualitative result is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+from repro.core import PAPER_H20_QWEN3_30B, StrategySuite
+from repro.core.types import reset_traj_ids
+from repro.sim.engine import SimConfig
+
+
+def emit(bench: str, metric: str, value) -> None:
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{bench},{metric},{value}", flush=True)
+
+
+def note(text: str) -> None:
+    print(f"# {text}", flush=True)
+
+
+def kv_bound_cost_model(tokens_per_instance: int = 75_000):
+    return dataclasses.replace(
+        PAPER_H20_QWEN3_30B,
+        kv_budget=tokens_per_instance * PAPER_H20_QWEN3_30B.k5,
+    )
+
+
+def sim_cfg(**kw) -> SimConfig:
+    """Paper-shaped but CPU-sized simulation default."""
+    d = dict(
+        n_instances=8,
+        batch_size=16,
+        group_size=8,
+        eta=1,
+        prompt_len=2048,
+        response_mean=4000.0,
+        response_sigma=1.6,
+        response_cap=40000,
+        total_steps=6,
+        dt=0.5,
+        train_fixed=20.0,
+        train_per_token=2e-5,
+        cost_model=kv_bound_cost_model(),
+    )
+    d.update(kw)
+    return SimConfig(**d)
+
+
+def fresh(fn, *args, **kw):
+    reset_traj_ids()
+    return fn(*args, **kw)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,81 @@
+"""Benchmark suite entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits ``bench,metric,value`` CSV rows. Mapping to the paper:
+
+  bench_throughput      Fig. 13   system x eta throughput (simulator)
+  bench_convergence     Fig. 3/14 reward & IS drift vs eta (real runtime)
+  bench_scalability     Fig. 15   len/batch/instance sweeps (simulator)
+  bench_ablation        Fig. 16   R/S/M strategy grid (simulator)
+  bench_case_study      Fig. 17   per-instance load timelines (simulator)
+  bench_staleness_dist  Fig. 18   buffer staleness histogram (simulator)
+  bench_sync_overhead   Fig.19/T3 time breakdown + PS comm plans (runtime)
+  bench_cost_model      Fig.24/T4 cost-model fit on our engine (runtime)
+  bench_redundancy      Fig. 25   redundant rollout ablation (simulator)
+  bench_kernels         (substrate) kernel microbench + interpret probes
+
+The dry-run / roofline deliverables are separate:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_ablation,
+    bench_case_study,
+    bench_convergence,
+    bench_cost_model,
+    bench_kernels,
+    bench_redundancy,
+    bench_scalability,
+    bench_staleness_dist,
+    bench_sync_overhead,
+    bench_throughput,
+)
+
+ALL = {
+    "throughput": bench_throughput,
+    "convergence": bench_convergence,
+    "scalability": bench_scalability,
+    "ablation": bench_ablation,
+    "case_study": bench_case_study,
+    "staleness_dist": bench_staleness_dist,
+    "sync_overhead": bench_sync_overhead,
+    "cost_model": bench_cost_model,
+    "redundancy": bench_redundancy,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(ALL)
+    print("bench,metric,value")
+    failures = []
+    for name in names:
+        mod = ALL[name]
+        t0 = time.time()
+        try:
+            mod.run(quick=args.quick)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED benches: {failures}")
+        sys.exit(1)
+    print("# all benches passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""StaleFlow reproduction: staleness-constrained asynchronous RL
+post-training in JAX (+ Pallas TPU kernels). See README.md."""

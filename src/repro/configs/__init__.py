@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned archs + the paper's own model."""
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ArchConfig,
+    ShapeConfig,
+)
+from repro.configs.dbrx_132b import CONFIG as DBRX_132B
+from repro.configs.glm4_9b import CONFIG as GLM4_9B
+from repro.configs.granite_3_8b import CONFIG as GRANITE_3_8B
+from repro.configs.hymba_1_5b import CONFIG as HYMBA_1_5B
+from repro.configs.internvl2_76b import CONFIG as INTERNVL2_76B
+from repro.configs.llama4_scout_17b_a16e import CONFIG as LLAMA4_SCOUT_17B_A16E
+from repro.configs.qwen2_1_5b import CONFIG as QWEN2_1_5B
+from repro.configs.qwen2_5_14b import CONFIG as QWEN2_5_14B
+from repro.configs.qwen3_30b_a3b import CONFIG as QWEN3_30B_A3B
+from repro.configs.whisper_tiny import CONFIG as WHISPER_TINY
+from repro.configs.xlstm_1_3b import CONFIG as XLSTM_1_3B
+
+# The 10 assigned architectures (cell matrix rows).
+ASSIGNED = (
+    LLAMA4_SCOUT_17B_A16E,
+    DBRX_132B,
+    QWEN2_5_14B,
+    GRANITE_3_8B,
+    QWEN2_1_5B,
+    GLM4_9B,
+    HYMBA_1_5B,
+    INTERNVL2_76B,
+    WHISPER_TINY,
+    XLSTM_1_3B,
+)
+
+# Full registry (assigned + the paper's evaluation model).
+REGISTRY = {cfg.name: cfg for cfg in ASSIGNED + (QWEN3_30B_A3B,)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def cell_matrix():
+    """All (arch, shape) cells; ``supported=False`` cells are documented skips."""
+    cells = []
+    for arch in ASSIGNED:
+        for shape in ALL_SHAPES:
+            cells.append((arch, shape, arch.supports_shape(shape)))
+    return cells

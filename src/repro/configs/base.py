@@ -1,0 +1,182 @@
+"""Base configuration dataclasses for the architecture zoo.
+
+Every assigned architecture is expressed as an ``ArchConfig``; input-shape
+cells are ``ShapeConfig``. Full-size configs are only ever *lowered*
+(ShapeDtypeStruct dry-run); smoke tests use ``reduced()`` variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (seq_len x global_batch, plus which step it lowers)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    # "train"   -> lowers train_step      (full fwd+bwd+opt update)
+    # "prefill" -> lowers prefill_step    (inference prefill, builds KV cache)
+    # "decode"  -> lowers serve_step      (one new token vs seq_len-sized cache)
+    kind: str
+
+
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524288, global_batch=1, kind="decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Unified architecture description covering the whole assigned zoo.
+
+    family:
+      dense   -- standard GQA transformer
+      moe     -- mixture-of-experts FFN
+      hybrid  -- parallel attention + Mamba (SSM) heads per block  (hymba)
+      ssm     -- alternating mLSTM / sLSTM blocks                  (xlstm)
+      vlm     -- LM backbone + patch-embedding stub frontend       (internvl2)
+      audio   -- encoder-decoder backbone + frame-embedding stub   (whisper)
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False  # llama4-style shared expert alongside routed ones
+    moe_capacity_factor: float = 1.25  # token-choice capacity (drops overflow)
+
+    # --- attention details ---
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+
+    # --- hybrid / ssm ---
+    ssm_state: int = 0          # mamba state size (hymba) / 0
+    ssm_expand: int = 2         # mamba inner expansion
+    ssm_conv: int = 4           # mamba depthwise conv width
+    block_pattern: str = "attn"  # "attn" | "attn+ssm" | "mlstm/slstm"
+    # sub-quadratic long-context mode: sliding-window attention width used when
+    # seq_len exceeds ``long_context_threshold`` (hybrid archs); SSM/xLSTM parts
+    # are O(1)-state by construction.
+    sliding_window: int = 0
+    long_context_threshold: int = 65536
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0        # stub frontend: number of frame embeddings
+    cross_attention: bool = False
+
+    # --- frontend stub (vlm / audio) ---
+    frontend: str = "none"      # "none" | "patch" | "frames"
+    n_patches: int = 0          # vlm: patch embeddings prepended to the text
+
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # sub-quadratic archs may run long_500k
+    subquadratic: bool = False
+    source: str = ""            # provenance note [source; verified-tier]
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a 256 multiple (divisible by data x model =
+        16 x 16) so embeddings/logits shard cleanly — Megatron-style vocab
+        padding. Padded logit columns are masked to -inf in the model."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_params(self) -> int:
+        """Approximate total parameter count (embedding + blocks)."""
+        d, hd = self.d_model, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.block_pattern == "attn+ssm":
+            inner = self.ssm_expand * d
+            ssm = d * 2 * inner + inner * d + inner * (2 * self.ssm_state + 2)
+            attn = attn + ssm
+        if self.block_pattern == "mlstm/slstm":
+            # xLSTM: mostly mLSTM layers (wq/wk/wv/wo + gates), 1-per-period
+            # sLSTM (4-gate proj + recurrent + out). hd*n_heads == d here.
+            hh = self.n_heads * hd
+            mlstm = 4 * d * hh + 2 * d * self.n_heads
+            slstm = 4 * d * hh + 4 * self.n_heads * hd * hd + hh * d
+            # period-8 blend (7:1) matching models.model.xlstm_period
+            attn = (7 * mlstm + slstm) / 8.0
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff
+            if self.shared_expert:
+                ffn += 3 * d * self.d_ff
+            ffn += d * self.n_experts  # router
+        else:
+            ffn = 3 * d * self.d_ff
+        block = attn + ffn + 2 * d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        enc = self.encoder_layers * (4 * d * d + 3 * d * self.d_ff + 2 * d)
+        cross = self.n_layers * (4 * d * d) if self.cross_attention else 0
+        return self.n_layers * block + emb + enc + cross
+
+    @property
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only top_k experts count)."""
+        if not self.is_moe:
+            return self.n_params
+        d = self.d_model
+        inactive = (self.n_experts - self.top_k) * 3 * d * self.d_ff * self.n_layers
+        return self.n_params - inactive
+
+    def supports_shape(self, shape: ShapeConfig) -> bool:
+        """long_500k needs a sub-quadratic path; everything else always runs."""
+        if shape.name == "long_500k":
+            return self.subquadratic
+        return True
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/block structure, tiny dims."""
+        hd = 16
+        n_heads = max(2, min(4, self.n_heads))
+        # preserve the GQA ratio flavor (kv < q whenever original had it)
+        n_kv = 1 if self.n_kv_heads < self.n_heads else n_heads
+        changes = dict(
+            n_layers=min(4, self.n_layers) if self.block_pattern != "mlstm/slstm" else 4,
+            d_model=n_heads * hd,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=256,
+            head_dim=hd,
+            long_context_threshold=512,
+            sliding_window=64 if self.sliding_window else 0,
+        )
+        if self.is_moe:
+            changes.update(n_experts=4, top_k=min(self.top_k, 2))
+        if self.encoder_layers:
+            changes.update(encoder_layers=2, encoder_seq=32)
+        if self.n_patches:
+            changes.update(n_patches=8)
+        if self.ssm_state:
+            changes.update(ssm_state=4)
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,20 @@
+"""glm4-9b [dense] — RoPE, GQA kv=2. [hf:THUDM/glm-4-9b; hf]
+
+GLM uses partial-rotary (0.5); we apply full rotary — backbone-equivalent for
+systems purposes (noted in DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+    head_dim=128,
+    rope_theta=1e4,
+    source="hf:THUDM/glm-4-9b; hf",
+)

@@ -1,0 +1,27 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads per block.
+
+[arXiv:2411.13676; hf]. Sub-quadratic at long context: the attention heads
+switch to a sliding window while the SSM heads carry global state, so
+``long_500k`` runs. Meta tokens omitted (systems-irrelevant).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    ssm_state=16,
+    ssm_expand=2,
+    block_pattern="attn+ssm",
+    sliding_window=1024,
+    subquadratic=True,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    source="arXiv:2411.13676; hf",
+)

@@ -1,0 +1,23 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone. [arXiv:2404.16821; unverified]
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (n_patches x d_model) prepended to the text
+sequence. Only the LM backbone (80L) is modeled.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    head_dim=128,
+    frontend="patch",
+    n_patches=256,
+    rope_theta=5e5,
+    source="arXiv:2404.16821; unverified",
+)

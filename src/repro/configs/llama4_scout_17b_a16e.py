@@ -1,0 +1,22 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16e top-1 with shared expert, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,
+    n_experts=16,
+    top_k=1,
+    shared_expert=True,  # llama4 routes top-1 + always-on shared expert
+    rope_theta=5e5,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

@@ -1,0 +1,23 @@
+"""qwen3-30b-a3b [moe] — the paper's own evaluation model (Qwen3-30B-A3B).
+
+48L d_model=2048 32H (GQA kv=4) 128 experts top-8, expert d_ff=768.
+[arXiv:2505.09388; hf] — not part of the assigned 10; used by the paper's
+benchmarks (Fig. 13d, §6.5) and by our convergence/throughput reproductions.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    vocab_size=151936,
+    head_dim=128,
+    n_experts=128,
+    top_k=8,
+    rope_theta=1e6,
+    source="arXiv:2505.09388; hf",
+)

@@ -1,0 +1,26 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (stub). [arXiv:2212.04356; unverified]
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (encoder_seq x d_model). Encoder is bidirectional;
+decoder has causal self-attention (KV cache) + cross-attention to the encoder.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,            # decoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    encoder_layers=4,
+    encoder_seq=1500,
+    cross_attention=True,
+    frontend="frames",
+    tie_embeddings=True,
+    rope_theta=1e4,
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,22 @@
+"""xlstm-1.3b [ssm] — alternating sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+
+d_ff = 0: projections live inside the blocks. Pure recurrent state, so
+``long_500k`` decode runs with O(1) memory in sequence length.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=512,          # d_model / n_heads
+    block_pattern="mlstm/slstm",
+    subquadratic=True,
+    tie_embeddings=True,
+    source="arXiv:2405.04517; unverified",
+)

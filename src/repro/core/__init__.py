@@ -1,0 +1,45 @@
+"""StaleFlow core: the paper's contribution.
+
+* ``staleness``          — global consistency protocol (§4)
+* ``cost_model``         — decode-throughput model (Eq. 2-4, App. B)
+* ``snapshot``           — per-instance snapshots (Fig. 11)
+* ``commands``           — Pull / Route / Interrupt / Abort (Table 1)
+* ``speculative``        — speculative state P + Eq. 1 validation
+* ``strategies``         — routing / synchronization / migration (Alg. 2-5)
+* ``coordinator``        — snapshot->command cycle (Alg. 1)
+* ``trajectory_server``  — TS middleware (§5.1)
+* ``parameter_server``   — PS middleware + comm planning (§5.1, App. A)
+"""
+from repro.core.commands import Abort, Command, Interrupt, Pull, Route
+from repro.core.coordinator import GroupBook, RolloutCoordinator, StalenessVerifier
+from repro.core.cost_model import PAPER_H20_QWEN3_30B, CostModel, fit_coefficients
+from repro.core.parameter_server import (
+    CommPlan,
+    ParameterServer,
+    ReadWriteLock,
+    plan_transfers,
+    replicated_pull_plan,
+    sharded_push_plan,
+)
+from repro.core.snapshot import InstanceSnapshot, Snapshot, clone_snapshot
+from repro.core.speculative import SpeculativeState
+from repro.core.staleness import (
+    BufferState,
+    EntryState,
+    StalenessBuffer,
+    StalenessManager,
+    StalenessViolation,
+)
+from repro.core.strategies import (
+    StrategyConfig,
+    StrategySuite,
+    check_routable,
+    migration_strategy,
+    routing_strategy,
+    synchronization_strategy,
+    vanilla_migration,
+    vanilla_routing,
+    vanilla_synchronization,
+)
+from repro.core.trajectory_server import TrajectoryServer
+from repro.core.types import Trajectory, TrajectoryGroup, TrajStatus, next_traj_id

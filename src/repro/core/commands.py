@@ -1,0 +1,43 @@
+"""Rollout commands issued by the coordinator (paper §5.1, Table 1).
+
+``Pull``      — instance fetches latest parameters from the PS.
+``Route``     — trajectories move TS -> instance.
+``Interrupt`` — trajectories stop on the instance and return to the TS
+                (partial rollout / migration).
+``Abort``     — trajectories are irrevocably discarded (redundancy surplus /
+                filtering); they do *not* return to the TS.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class Command:
+    inst: int
+
+
+@dataclass(frozen=True)
+class Pull(Command):
+    """Fetch latest model parameters from the PS (blocks instance decode)."""
+
+
+@dataclass(frozen=True)
+class Route(Command):
+    traj_ids: Tuple[int, ...] = ()
+    # V_traj assigned at routing time (None entries keep their existing one)
+    v_traj: int = -1
+
+
+@dataclass(frozen=True)
+class Interrupt(Command):
+    traj_ids: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class Abort(Command):
+    traj_ids: Tuple[int, ...] = ()
+
+
+CommandList = List[Command]

@@ -1,0 +1,332 @@
+"""Centralized rollout coordinator (paper §5, Algorithm 1 + Fig. 12).
+
+The coordinator runs a snapshot -> command cycle:
+
+1. A snapshot of all rollout instances arrives and is validated against the
+   speculative state ``P`` (Eq. 1); invalid snapshots are discarded.
+2. The strategy suite runs sequentially — synchronization, migration,
+   routing (Alg. 1) — each producing commands that are applied to the
+   *local* snapshot copy so later strategies see their effects.
+3. Commands are issued asynchronously; ``P`` is updated per Table 1.
+
+The coordinator also owns protocol bookkeeping that spans servers:
+``V_traj`` assignment (Reserve on first route), group accounting
+(Occupy when a whole group is rewarded, §4.3), redundancy surplus and
+filtering aborts.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.commands import Abort, Command, CommandList, Interrupt, Pull, Route
+from repro.core.cost_model import CostModel
+from repro.core.snapshot import Snapshot, clone_snapshot
+from repro.core.speculative import SpeculativeState
+from repro.core.staleness import StalenessManager
+from repro.core.strategies import StrategyConfig, StrategySuite
+from repro.core.trajectory_server import TrajectoryServer
+from repro.core.types import Trajectory, TrajStatus
+
+
+class GroupBook:
+    """Group-sampling accounting (§4.3, Fig. 8a).
+
+    Protocol entries live at group granularity: the staleness-buffer key for
+    a grouped trajectory is its ``group_id`` (offset into a disjoint key
+    space). Occupy fires only when ``group_size`` members are rewarded;
+    surplus members (group-level redundancy) are then reported for Abort.
+    """
+
+    GROUP_KEY_BASE = 1 << 40  # disjoint from trajectory IDs
+
+    def __init__(self, ts: TrajectoryServer):
+        self.ts = ts
+        self._rewarded: Dict[int, Set[int]] = {}
+        self._lock = threading.RLock()
+
+    @staticmethod
+    def key(group_id: int) -> int:
+        return GroupBook.GROUP_KEY_BASE + group_id
+
+    def group_size(self, group_id: int) -> int:
+        return self.ts.groups[group_id].group_size
+
+    def on_rewarded(self, traj: Trajectory) -> Tuple[bool, List[int]]:
+        """Returns (group_now_complete, surplus_member_ids_to_abort)."""
+        with self._lock:
+            done = self._rewarded.setdefault(traj.group_id, set())
+            done.add(traj.traj_id)
+            group = self.ts.groups.get(traj.group_id)
+            if group is None:
+                return False, []
+            if len(done) == group.group_size:
+                surplus = [
+                    tid
+                    for tid in group.traj_ids
+                    if tid not in done and self.ts.get(tid) is not None
+                ]
+                return True, surplus
+            return False, []
+
+    def rewarded_members(self, group_id: int) -> Set[int]:
+        with self._lock:
+            return set(self._rewarded.get(group_id, set()))
+
+    def forget(self, group_id: int) -> None:
+        with self._lock:
+            self._rewarded.pop(group_id, None)
+
+
+class StalenessVerifier:
+    """Discriminator facade for Alg. 2 — group-aware ``can_assign``."""
+
+    def __init__(self, manager: StalenessManager, groups: Optional[GroupBook]):
+        self.manager = manager
+        self.groups = groups
+
+    def _group_key(self, traj: Trajectory) -> Optional[int]:
+        if traj.group_id >= 0 and self.groups is not None:
+            return GroupBook.key(traj.group_id)
+        return None
+
+    def can_assign(self, traj: Trajectory, version: int) -> bool:
+        key = self._group_key(traj)
+        if key is not None and self.manager.is_tracked(key):
+            info = self.manager.entry_info(key)
+            v_buf, _, entry_version = info
+            if version >= entry_version:
+                return True  # group min unchanged
+            # joining member lowers the group min: entry must stay legal or
+            # be relocatable
+            if version + self.manager.eta >= v_buf:
+                return True
+            return self.manager.can_reserve(version)
+        return self.manager.can_reserve(version)
+
+
+@dataclass
+class CoordinatorStats:
+    cycles: int = 0
+    snapshots_rejected: int = 0
+    commands: Dict[str, int] = field(
+        default_factory=lambda: {"Pull": 0, "Route": 0, "Interrupt": 0, "Abort": 0}
+    )
+
+
+class RolloutCoordinator:
+    def __init__(
+        self,
+        manager: StalenessManager,
+        ts: TrajectoryServer,
+        *,
+        cost_model: CostModel,
+        cfg: StrategyConfig = StrategyConfig(),
+        suite: Optional[StrategySuite] = None,
+        group_sampling: bool = True,
+        group_filter=None,  # callable([Trajectory]) -> keep? (§4.3 filtering)
+    ):
+        self.manager = manager
+        self.ts = ts
+        self.cost_model = cost_model
+        self.cfg = cfg
+        self.suite = suite or StrategySuite.staleflow()
+        self.groups = GroupBook(ts) if group_sampling else None
+        self.group_filter = group_filter
+        self.verifier = StalenessVerifier(manager, self.groups)
+        self.spec = SpeculativeState()
+        self.stats = CoordinatorStats()
+        self._lock = threading.RLock()
+
+    # --------------------------------------------------------- protocol keys
+    def _protocol_key(self, traj: Trajectory) -> int:
+        if traj.group_id >= 0 and self.groups is not None:
+            return GroupBook.key(traj.group_id)
+        return traj.traj_id
+
+    def _reserve_on_route(self, traj: Trajectory, version: int) -> bool:
+        """Reserve / group-min update at Route issuance. Returns success."""
+        key = self._protocol_key(traj)
+        if self.manager.is_tracked(key):
+            info = self.manager.entry_info(key)
+            if info is not None and version < info[2]:
+                return self.manager.lower_version(key, version)
+            return True
+        if not self.manager.can_reserve(version):
+            return False
+        self.manager.reserve(key, version)
+        return True
+
+    # ------------------------------------------------------------ the cycle
+    def step(self, snapshot: Snapshot, ps_version: int) -> CommandList:
+        """One snapshot->command cycle (Alg. 1). Returns issued commands.
+
+        The caller (runtime / simulator) is responsible for executing the
+        commands on the data planes; the coordinator updates ``P`` here so
+        the *next* snapshot is validated against the expected effects.
+        """
+        with self._lock:
+            self.stats.cycles += 1
+            if not self.spec.validate(snapshot):
+                self.stats.snapshots_rejected += 1
+                return []
+
+            s = clone_snapshot(snapshot)
+            commands: CommandList = []
+            ts_trajs = list(self.ts.peek())
+            k5 = self.cost_model.k5
+
+            # ---- redundancy surplus + protocol-dropped payload aborts
+            for cmd in self._collect_aborts(s):
+                commands.append(cmd)
+                self.spec.apply(cmd, ps_version=ps_version)
+                s[cmd.inst].discard(cmd.traj_ids, bytes_per_token=k5)
+
+            # ---- Alg. 1 line 3: synchronization strategy
+            for inst in self.suite.synchronization(
+                s, ts_trajs, ps_version, self.cost_model, self.verifier, self.cfg
+            ):
+                resident = sorted(s[inst].resident())
+                if resident:
+                    cmd_i = Interrupt(inst, tuple(resident))
+                    commands.append(cmd_i)
+                    self.spec.apply(cmd_i, ps_version=ps_version)
+                cmd_p = Pull(inst)
+                commands.append(cmd_p)
+                self.spec.apply(cmd_p, ps_version=ps_version)
+                s[inst].discard(resident, bytes_per_token=k5)
+                s[inst].complete_trajs = set()
+                s[inst].inst_version = ps_version
+                ts_trajs.extend(
+                    t for tid in resident if (t := self.ts.get(tid)) is not None
+                )
+
+            # ---- Alg. 1 line 9: migration strategy
+            for inst, trajs in self.suite.migration(s, self.cost_model, self.cfg):
+                cmd = Interrupt(inst, tuple(trajs))
+                commands.append(cmd)
+                self.spec.apply(cmd, ps_version=ps_version)
+                s[inst].discard(trajs, bytes_per_token=k5)
+                ts_trajs.extend(
+                    t for tid in trajs if (t := self.ts.get(tid)) is not None
+                )
+
+            # ---- Alg. 1 line 13: routing strategy
+            for inst, traj, version in self.suite.routing(
+                s, ts_trajs, self.cost_model, self.verifier, self.cfg
+            ):
+                if not self._reserve_on_route(traj, version):
+                    continue  # discriminator said no at issue time
+                if traj.v_traj is None:
+                    traj.v_traj = version
+                cmd = Route(inst, (traj.traj_id,), v_traj=version)
+                commands.append(cmd)
+                self.spec.apply(cmd, ps_version=ps_version)
+
+            for c in commands:
+                self.stats.commands[type(c).__name__] += 1
+            return commands
+
+    def _collect_aborts(self, s: Snapshot) -> List[Abort]:
+        """Redundancy surplus (batch level) and stale-protocol filtering."""
+        aborts: List[Abort] = []
+        surplus = set(self.manager.surplus_keys())
+        if not surplus:
+            return aborts
+        # map protocol keys back to resident trajectory IDs per instance
+        for key in surplus:
+            if key >= GroupBook.GROUP_KEY_BASE and self.groups is not None:
+                gid = key - GroupBook.GROUP_KEY_BASE
+                group = self.ts.groups.get(gid)
+                member_ids = set(group.traj_ids) if group else set()
+            else:
+                member_ids = {key}
+            self.manager.abort(key)
+            for inst, si in s.items():
+                hit = sorted(member_ids & si.resident())
+                if hit:
+                    aborts.append(Abort(inst, tuple(hit)))
+            for tid in member_ids:
+                self.ts.drop(tid)
+            if key >= GroupBook.GROUP_KEY_BASE and self.groups is not None:
+                self.groups.forget(key - GroupBook.GROUP_KEY_BASE)
+        return aborts
+
+    # ----------------------------------------------------- lifecycle events
+    def _abort_members(self, traj_ids: List[int]) -> List[int]:
+        """Protocol-initiated aborts (redundancy surplus / group filtering).
+
+        CRITICAL: these bypass the snapshot->command cycle, so the
+        speculative state P must be updated here (Table 1: Abort decrements
+        accum_traj_num) or Eq. 1 would reject every subsequent snapshot and
+        the coordinator would deadlock. Only trajectories actually RESIDENT
+        on an instance (running/waiting) change P; TS-resident ones don't.
+        """
+        for tid in traj_ids:
+            t = self.ts.get(tid)
+            if (
+                t is not None
+                and t.instance is not None
+                and t.status == TrajStatus.RUNNING
+            ):
+                self.spec.apply(Abort(t.instance, (tid,)))
+            self.ts.drop(tid)
+        return traj_ids
+
+    def on_trajectory_rewarded(self, traj: Trajectory) -> List[int]:
+        """Reward landed: run protocol Occupy. Returns surplus member IDs the
+        caller must Abort on their instances (group-level redundancy)."""
+        with self._lock:
+            traj.status = TrajStatus.REWARDED
+            key = self._protocol_key(traj)
+            if self.groups is not None and traj.group_id >= 0:
+                complete, surplus = self.groups.on_rewarded(traj)
+                if not complete:
+                    return []
+                # proactive filtering (Fig. 8c): e.g. DAPO drops zero-signal
+                # groups (identical rewards carry no learning signal)
+                if self.group_filter is not None:
+                    members = [
+                        self.ts.get(tid)
+                        for tid in self.groups.rewarded_members(traj.group_id)
+                    ]
+                    members = [m for m in members if m is not None]
+                    if not self.group_filter(members):
+                        group = self.ts.groups.get(traj.group_id)
+                        all_ids = list(group.traj_ids) if group else []
+                        self.manager.abort(key)
+                        self._abort_members(all_ids)
+                        self.groups.forget(traj.group_id)
+                        return all_ids  # caller aborts any still running
+                if self.manager.is_tracked(key):
+                    self.manager.occupy(key)
+                self._abort_members(list(surplus))
+                return surplus
+            if self.manager.is_tracked(key):
+                self.manager.occupy(key)
+            return []
+
+    def try_consume(self) -> Optional[List[int]]:
+        """Trainer-side Consume: returns the batch's trajectory IDs or None.
+
+        For grouped entries the returned IDs are the *rewarded members* of
+        each consumed group.
+        """
+        with self._lock:
+            keys = self.manager.consume()
+            if keys is None:
+                return None
+            traj_ids: List[int] = []
+            for key in keys:
+                if key >= GroupBook.GROUP_KEY_BASE and self.groups is not None:
+                    gid = key - GroupBook.GROUP_KEY_BASE
+                    members = sorted(self.groups.rewarded_members(gid))
+                    traj_ids.extend(members)
+                    for tid in members:
+                        self.ts.retire(tid)
+                    self.groups.forget(gid)
+                else:
+                    traj_ids.append(key)
+                    self.ts.retire(key)
+            return traj_ids

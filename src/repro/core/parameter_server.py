@@ -1,0 +1,216 @@
+"""Parameter server (PS) — middleware between training and rollout (§5.1,
+Appendix A).
+
+* Versioned parameter store with database-style read-write locking: Push
+  (exclusive write) blocks Pulls; concurrent Pulls (shared reads) proceed
+  together.
+* Push is triggered by training workers right after a step and is meant to
+  overlap the next training step (the runtime pushes from a background
+  thread; correctness only requires Push to land before the *next* Push).
+* Load-balancing communication planning (Appendix A.2): each parameter
+  slice may come from several candidate senders; the planner greedily
+  assigns each required transfer to the sender with the smallest
+  accumulated estimated latency. The plan is static and reused for every
+  subsequent Push/Pull.
+
+On the TPU target the Pull path maps to ICI/PCIe-local replicas (PS workers
+co-located with rollout hosts, Appendix A.1) while Push crosses DCN; the
+planner is parameterized by a bandwidth function so both fabrics are
+modeled. The same planner drives the simulator's sync-overhead accounting
+and the ``bench_sync_overhead`` benchmark.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class ReadWriteLock:
+    """Writer-preference RW lock (Pull = shared read, Push = exclusive write)."""
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            while self._writer or self._readers:
+                self._cond.wait()
+            self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+    class _Read:
+        def __init__(self, lock: "ReadWriteLock"):
+            self.lock = lock
+
+        def __enter__(self):
+            self.lock.acquire_read()
+
+        def __exit__(self, *exc):
+            self.lock.release_read()
+
+    class _Write:
+        def __init__(self, lock: "ReadWriteLock"):
+            self.lock = lock
+
+        def __enter__(self):
+            self.lock.acquire_write()
+
+        def __exit__(self, *exc):
+            self.lock.release_write()
+
+    def read(self) -> "_Read":
+        return self._Read(self)
+
+    def write(self) -> "_Write":
+        return self._Write(self)
+
+
+class ParameterServer:
+    """Versioned latest-parameter store with RW-locked Push/Pull."""
+
+    def __init__(self, n_workers: int = 1):
+        self.n_workers = n_workers
+        self._rw = ReadWriteLock()
+        self._params: Any = None
+        self._version = -1
+        # telemetry
+        self.push_count = 0
+        self.pull_count = 0
+
+    @property
+    def version(self) -> int:
+        with self._rw.read():
+            return self._version
+
+    def push(self, params: Any, version: int) -> None:
+        with self._rw.write():
+            if version <= self._version:
+                return  # stale push (restart races) — keep the newer one
+            self._params = params
+            self._version = version
+            self.push_count += 1
+
+    def pull(self) -> Tuple[Any, int]:
+        with self._rw.read():
+            self.pull_count += 1
+            return self._params, self._version
+
+
+# --------------------------------------------------------------------- plan
+@dataclass(frozen=True)
+class Transfer:
+    slice_name: str
+    nbytes: int
+    sender: str
+    receiver: str
+    est_latency: float
+
+
+@dataclass
+class CommPlan:
+    transfers: List[Transfer] = field(default_factory=list)
+
+    def per_sender_latency(self) -> Dict[str, float]:
+        acc: Dict[str, float] = {}
+        for t in self.transfers:
+            acc[t.sender] = acc.get(t.sender, 0.0) + t.est_latency
+        return acc
+
+    @property
+    def makespan(self) -> float:
+        """Senders transmit concurrently; total time = max accumulated latency."""
+        lat = self.per_sender_latency()
+        return max(lat.values()) if lat else 0.0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(t.nbytes for t in self.transfers)
+
+
+def plan_transfers(
+    required: Sequence[Tuple[str, int, str, Sequence[str]]],
+    bandwidth: Callable[[str, str], float],
+    fixed_latency: float = 1e-4,
+) -> CommPlan:
+    """Appendix A.2 greedy load-balancing planner.
+
+    ``required``: per transfer ``(slice_name, nbytes, receiver,
+    candidate_senders)``. Estimated latency of assigning a slice to a sender
+    is ``nbytes / bandwidth(sender, receiver) + fixed_latency``; the planner
+    picks, per slice, the candidate sender with the smallest *accumulated*
+    latency so far (greedy bottleneck minimization). The resulting plan is
+    static — reused for every subsequent Push/Pull (paper: 'kept static and
+    reused').
+    """
+    acc: Dict[str, float] = {}
+    transfers: List[Transfer] = []
+    # largest slices first: classic LPT greedy gives a tighter makespan
+    order = sorted(range(len(required)), key=lambda i: -required[i][1])
+    for i in order:
+        name, nbytes, receiver, senders = required[i]
+        if not senders:
+            raise ValueError(f"slice {name!r} has no candidate sender")
+        best, best_cost = None, None
+        for s in senders:
+            est = nbytes / bandwidth(s, receiver) + fixed_latency
+            cost = acc.get(s, 0.0) + est
+            if best_cost is None or cost < best_cost:
+                best, best_cost, best_est = s, cost, est
+        acc[best] = acc.get(best, 0.0) + best_est
+        transfers.append(Transfer(name, nbytes, best, receiver, best_est))
+    return CommPlan(transfers)
+
+
+def replicated_pull_plan(
+    slice_sizes: Dict[str, int],
+    n_rollout_hosts: int,
+    *,
+    local_bw: float = 64e9,     # PCIe DMA / same-host path (App. A.1 Pull)
+) -> CommPlan:
+    """Fully-replicated PS deployment (Fig. 20 right): every rollout host
+    pulls from its co-located PS worker over the local fabric."""
+    required = []
+    for h in range(n_rollout_hosts):
+        for name, nbytes in slice_sizes.items():
+            required.append((f"{name}@host{h}", nbytes, f"rollout{h}", [f"ps{h}"]))
+    return plan_transfers(required, lambda s, r: local_bw)
+
+
+def sharded_push_plan(
+    slice_sizes: Dict[str, int],
+    train_holders: Dict[str, Sequence[str]],
+    n_ps_workers: int,
+    *,
+    cross_bw: float = 25e9,     # RDMA / DCN path (App. A.1 Push)
+) -> CommPlan:
+    """Push: each PS worker (replica holder) needs every slice; candidate
+    senders are the training workers holding that slice (DP replicas)."""
+    required = []
+    for w in range(n_ps_workers):
+        for name, nbytes in slice_sizes.items():
+            required.append(
+                (f"{name}->ps{w}", nbytes, f"ps{w}", list(train_holders[name]))
+            )
+    return plan_transfers(required, lambda s, r: cross_bw)

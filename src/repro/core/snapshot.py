@@ -1,0 +1,66 @@
+"""Per-instance system snapshots (paper §5.2, Fig. 11).
+
+A snapshot ``S`` aggregates five fields per rollout instance:
+``kv_cache`` (bytes of KV cache in use), ``run_trajs``, ``wait_trajs``,
+``complete_trajs`` (completed since last sync) and ``inst_version``.
+
+Snapshots are *plain data*: strategies and the coordinator operate on them
+functionally, which keeps the control plane unit-testable without any
+rollout engine attached.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Set
+
+
+@dataclass
+class InstanceSnapshot:
+    inst_id: int
+    kv_cache: float = 0.0                      # bytes in use
+    run_trajs: Set[int] = field(default_factory=set)
+    wait_trajs: Set[int] = field(default_factory=set)
+    complete_trajs: Set[int] = field(default_factory=set)
+    inst_version: int = 0
+    # per-trajectory current lengths (tokens) — used by the cost model to
+    # estimate KV footprints of routed/migrated trajectories. Not one of the
+    # paper's five fields but carried alongside in every real system.
+    traj_lengths: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def n_run(self) -> int:
+        return len(self.run_trajs)
+
+    @property
+    def n_wait(self) -> int:
+        return len(self.wait_trajs)
+
+    def resident(self) -> Set[int]:
+        return self.run_trajs | self.wait_trajs
+
+    def discard(self, traj_ids: Iterable[int], bytes_per_token: float = 0.0) -> None:
+        """Remove trajectories from run/wait (post-Interrupt bookkeeping).
+
+        ``bytes_per_token`` (the cost model's k5) releases their estimated
+        KV footprint; lengths are tracked in tokens.
+        """
+        ids = set(traj_ids)
+        for t in ids & self.run_trajs:
+            self.kv_cache = max(
+                0.0, self.kv_cache - bytes_per_token * self.traj_lengths.get(t, 0)
+            )
+        self.run_trajs -= ids
+        self.wait_trajs -= ids
+        for t in ids:
+            self.traj_lengths.pop(t, None)
+
+    def clone(self) -> "InstanceSnapshot":
+        return copy.deepcopy(self)
+
+
+Snapshot = Dict[int, InstanceSnapshot]
+
+
+def clone_snapshot(s: Snapshot) -> Snapshot:
+    return {i: inst.clone() for i, inst in s.items()}

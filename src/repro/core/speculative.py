@@ -1,0 +1,72 @@
+"""Speculative state & snapshot validation (paper §5.2, Table 1, Eq. 1).
+
+Commands take a variable time ``Δt`` to take effect; a snapshot captured
+before the effect lands would drive decisions on stale information and
+cause oscillation. The coordinator therefore maintains a *speculative
+state* ``P`` — the expected post-command state — and only accepts a
+snapshot when it matches ``P`` (Eq. 1):
+
+    P[i].inst_version   == S[i].inst_version
+    P[i].accum_traj_num == |resident(i) ∪ complete(i)|
+
+Deviation from the paper: we count ``wait_trajs`` in the accumulated number
+(residency = run ∪ wait ∪ complete). The paper's Eq. 1 writes
+``run ∪ complete``, but instances preempt run→wait autonomously when the KV
+budget fills (Fig. 11), which would falsify Eq. 1 without any outstanding
+command; residency is the quantity commands actually add to / subtract
+from. Recorded in DESIGN.md §assumption-changes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.commands import Abort, Command, Interrupt, Pull, Route
+from repro.core.snapshot import Snapshot
+
+
+@dataclass
+class InstanceExpectation:
+    inst_version: int = 0
+    accum_traj_num: int = 0
+
+
+@dataclass
+class SpeculativeState:
+    expectations: Dict[int, InstanceExpectation] = field(default_factory=dict)
+
+    def ensure(self, inst: int) -> InstanceExpectation:
+        if inst not in self.expectations:
+            self.expectations[inst] = InstanceExpectation()
+        return self.expectations[inst]
+
+    # Table 1: effects on P after issuance
+    def apply(self, cmd: Command, *, ps_version: int = 0) -> None:
+        p = self.ensure(cmd.inst)
+        if isinstance(cmd, Pull):
+            p.inst_version = ps_version
+            p.accum_traj_num = 0
+        elif isinstance(cmd, Route):
+            p.accum_traj_num += len(cmd.traj_ids)
+        elif isinstance(cmd, (Interrupt, Abort)):
+            p.accum_traj_num -= len(cmd.traj_ids)
+        else:  # pragma: no cover
+            raise TypeError(f"unknown command {cmd!r}")
+
+    def validate(self, snapshot: Snapshot) -> bool:
+        """Eq. 1: accept the snapshot only if all commands have landed."""
+        for inst, s in snapshot.items():
+            p = self.ensure(inst)
+            if p.inst_version != s.inst_version:
+                return False
+            observed = len(s.run_trajs | s.wait_trajs | s.complete_trajs)
+            if p.accum_traj_num != observed:
+                return False
+        return True
+
+    def resync(self, snapshot: Snapshot) -> None:
+        """Force P to match an accepted snapshot (startup / failure recovery)."""
+        for inst, s in snapshot.items():
+            p = self.ensure(inst)
+            p.inst_version = s.inst_version
+            p.accum_traj_num = len(s.run_trajs | s.wait_trajs | s.complete_trajs)

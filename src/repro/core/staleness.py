@@ -1,0 +1,462 @@
+"""Global consistency protocol: virtual staleness buffers (paper §4).
+
+The staleness manager enforces a strict staleness bound ``eta`` at
+*trajectory* granularity via three buffer primitives:
+
+* ``Reserve`` — worst-case *backward* scan: when a trajectory (or group)
+  with version ``v`` starts, reserve the latest available empty entry in
+  buffers ``V_buf = v + eta`` down to ``max(v, train_version)``.
+* ``Occupy`` — greedy *forward* scan: when the trajectory completes (and is
+  rewarded), delete its reserved entry (triggering the entry-movement
+  cascade of Fig. 7 right) and occupy the earliest empty entry.
+* ``Consume`` — training retires the earliest buffer once it is Ready
+  (all entries occupied), advancing the train version.
+
+Invariant (checked by ``check_invariants``): every entry in every buffer
+satisfies ``V_traj + eta >= V_buf``.
+
+The manager is *metadata only*: it stores ``(key, version)`` pairs, never
+payloads, and tracks at most ``(eta + 1) * batch_size`` in-flight entries
+regardless of cluster size (paper §4.2 discussion) — this is what makes the
+control plane viable at 1000+ nodes.
+
+Group sampling (§4.3) is supported by using group IDs as keys; redundancy
+expands capacity at batch level (extra entries) or is handled by the caller
+at group level (extra members per entry); ``abort`` implements filtering
+with forward-fill from later buffers.
+
+Thread safety: all public methods take an internal lock, so the manager can
+be shared by the coordinator, reward workers, and the trainer thread.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+class EntryState(enum.Enum):
+    EMPTY = 0
+    RESERVED = 1
+    OCCUPIED = 2
+
+
+class BufferState(enum.Enum):
+    WAITING = "waiting"   # has empty entries -> Reserve may continue
+    READY = "ready"       # all occupied -> consumable
+    STUCK = "stuck"       # full, but >= 1 reserved -> blocked on in-flight data
+
+
+@dataclass
+class Entry:
+    state: EntryState = EntryState.EMPTY
+    key: Optional[int] = None       # traj_id or group_id
+    version: Optional[int] = None   # V_traj (group: min over members)
+
+    def clear(self) -> None:
+        self.state = EntryState.EMPTY
+        self.key = None
+        self.version = None
+
+
+@dataclass
+class StalenessBuffer:
+    """One virtual buffer: trajectories trained as the model goes V_buf -> V_buf+1."""
+
+    v_buf: int
+    capacity: int
+    entries: List[Entry] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.entries:
+            self.entries = [Entry() for _ in range(self.capacity)]
+
+    # -- queries ------------------------------------------------------------
+    def slots(self, state: EntryState) -> List[int]:
+        return [i for i, e in enumerate(self.entries) if e.state == state]
+
+    def first_empty(self) -> Optional[int]:
+        for i, e in enumerate(self.entries):
+            if e.state == EntryState.EMPTY:
+                return i
+        return None
+
+    def last_empty(self) -> Optional[int]:
+        for i in range(len(self.entries) - 1, -1, -1):
+            if self.entries[i].state == EntryState.EMPTY:
+                return i
+        return None
+
+    @property
+    def n_empty(self) -> int:
+        return sum(1 for e in self.entries if e.state == EntryState.EMPTY)
+
+    @property
+    def n_reserved(self) -> int:
+        return sum(1 for e in self.entries if e.state == EntryState.RESERVED)
+
+    @property
+    def n_occupied(self) -> int:
+        return sum(1 for e in self.entries if e.state == EntryState.OCCUPIED)
+
+    @property
+    def state(self) -> BufferState:
+        if self.n_empty > 0:
+            return BufferState.WAITING
+        if self.n_reserved > 0:
+            return BufferState.STUCK
+        return BufferState.READY
+
+
+class StalenessViolation(RuntimeError):
+    """Raised when an operation would break ``V_traj + eta >= V_buf``."""
+
+
+class StalenessManager:
+    """The staleness manager of Fig. 6: discriminator + tracker.
+
+    Parameters
+    ----------
+    batch_size:
+        Entries per buffer (trajectories, or groups under group sampling).
+    eta:
+        The staleness bound. ``eta = 0`` degenerates to fully synchronous.
+    batch_redundancy:
+        Extra entries per buffer (batch-level redundant rollout, §4.3 /
+        Fig. 8b). Only ``batch_size`` occupied entries are consumed; once a
+        buffer holds ``batch_size`` occupied entries its surplus reserved
+        entries are reported via ``surplus_keys`` so the coordinator can
+        Abort them.
+    """
+
+    def __init__(self, batch_size: int, eta: int, *, batch_redundancy: int = 0):
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        if eta < 0:
+            raise ValueError("eta must be >= 0")
+        self.batch_size = batch_size
+        self.eta = eta
+        self.batch_redundancy = batch_redundancy
+        self.capacity = batch_size + batch_redundancy
+        self.train_version = 0          # next buffer to consume
+        self._buffers: Dict[int, StalenessBuffer] = {}
+        self._index: Dict[int, Tuple[int, int]] = {}  # key -> (v_buf, slot)
+        self._lock = threading.RLock()
+        # telemetry: staleness (V_buf - V_traj) histogram per consumed buffer
+        self.consumed_staleness: List[List[int]] = []
+
+    # ------------------------------------------------------------- internals
+    def _buffer(self, v_buf: int) -> StalenessBuffer:
+        if v_buf not in self._buffers:
+            self._buffers[v_buf] = StalenessBuffer(v_buf=v_buf, capacity=self.capacity)
+        return self._buffers[v_buf]
+
+    def _active_range(self, version: int) -> range:
+        """Buffers a trajectory of ``version`` may legally inhabit."""
+        lo = max(version, self.train_version)
+        hi = version + self.eta
+        return range(lo, hi + 1)
+
+    # ---------------------------------------------------------- discriminator
+    def can_reserve(self, version: int) -> bool:
+        """Simulate a Reserve (§4.2 'as a discriminator'): any empty entry in
+        buffers ``[max(version, train_version), version + eta]``?"""
+        with self._lock:
+            if version + self.eta < self.train_version:
+                return False  # already older than anything consumable
+            return any(
+                self._buffer(v).n_empty > 0 for v in self._active_range(version)
+            )
+
+    def min_admissible_version(self, at_least: int = 0) -> Optional[int]:
+        """Smallest ``v >= at_least`` for which a Reserve would succeed.
+
+        Used by the coordinator when an instance's current version is
+        inadmissible: 'a larger V_traj is needed to unlock newer buffers'.
+        Bounded search: beyond ``train_version + eta`` a fresh buffer always
+        has room, so the scan terminates.
+        """
+        with self._lock:
+            v = max(at_least, self.train_version - self.eta)
+            while not self.can_reserve(v):
+                v += 1
+                if v > self.train_version + 10 * (self.eta + 1) + 1:  # safety net
+                    return None
+            return v
+
+    # --------------------------------------------------------------- tracker
+    def reserve(self, key: int, version: int) -> int:
+        """Worst-case backward Reserve. Returns the chosen ``V_buf``.
+
+        Scans from ``version + eta`` (latest legal buffer) *down* to
+        ``max(version, train_version)`` and takes the latest available empty
+        entry — the worst-case position the trajectory could end up in.
+        """
+        with self._lock:
+            if key in self._index:
+                raise KeyError(f"key {key} already tracked at {self._index[key]}")
+            if version + self.eta < self.train_version:
+                raise StalenessViolation(
+                    f"version {version} + eta {self.eta} < train_version "
+                    f"{self.train_version}: cannot reserve"
+                )
+            rng = self._active_range(version)
+            for v_buf in reversed(rng):
+                buf = self._buffer(v_buf)
+                slot = buf.last_empty()
+                if slot is not None:
+                    buf.entries[slot] = Entry(EntryState.RESERVED, key, version)
+                    self._index[key] = (v_buf, slot)
+                    return v_buf
+            raise StalenessViolation(
+                f"no empty entry in buffers {list(rng)} for version {version}"
+            )
+
+    def lower_version(self, key: int, new_version: int) -> bool:
+        """Lower a tracked entry's version (group min dropped, §4.3).
+
+        If the entry's current buffer would violate the bound, try to
+        relocate it (backward scan under the new version). Returns False if
+        impossible — the caller must then refuse the assignment.
+        """
+        with self._lock:
+            v_buf, slot = self._index[key]
+            entry = self._buffers[v_buf].entries[slot]
+            if new_version >= (entry.version if entry.version is not None else new_version):
+                return True  # not actually lower
+            if new_version + self.eta >= v_buf:
+                entry.version = new_version
+                return True
+            # must relocate to an earlier buffer
+            for v in reversed(self._active_range(new_version)):
+                buf = self._buffer(v)
+                s = buf.last_empty()
+                if s is not None:
+                    buf.entries[s] = Entry(entry.state, key, new_version)
+                    self._buffers[v_buf].entries[slot].clear()
+                    self._index[key] = (v, s)
+                    return True
+            return False
+
+    def _cascade_fill(self, v_buf: int, slot: int) -> None:
+        """Entry-movement cascade (Fig. 7 right, steps 2-3).
+
+        An entry at ``(v_buf, slot)`` was just vacated. Pull the *earliest*
+        reserved entry B from a strictly earlier buffer that may legally sit
+        in ``v_buf`` (``V_B + eta >= v_buf``) into the hole; recurse into B's
+        former position. This keeps occupied entries early and pushes
+        reserved entries late, maximizing training readiness.
+        """
+        while True:
+            moved = False
+            for v in sorted(self._buffers):
+                if v >= v_buf or v < self.train_version:
+                    continue
+                buf = self._buffers[v]
+                for s, e in enumerate(buf.entries):
+                    if (
+                        e.state == EntryState.RESERVED
+                        and e.version is not None
+                        and e.version + self.eta >= v_buf
+                    ):
+                        self._buffers[v_buf].entries[slot] = Entry(
+                            EntryState.RESERVED, e.key, e.version
+                        )
+                        self._index[e.key] = (v_buf, slot)
+                        buf.entries[s].clear()
+                        v_buf, slot = v, s
+                        moved = True
+                        break
+                if moved:
+                    break
+            if not moved:
+                return
+
+    def occupy(self, key: int) -> int:
+        """Delete the reserved entry for ``key`` (with movement cascade) and
+        greedily Occupy the earliest empty entry. Returns the final V_buf."""
+        with self._lock:
+            if key not in self._index:
+                raise KeyError(f"key {key} is not tracked (was it aborted?)")
+            v_buf, slot = self._index.pop(key)
+            entry = self._buffers[v_buf].entries[slot]
+            if entry.state != EntryState.RESERVED:
+                raise RuntimeError(f"occupy on non-reserved entry {entry}")
+            version = entry.version
+            assert version is not None
+            entry.clear()
+            # Fig. 7 right: refill A's hole from earlier reserved entries
+            self._cascade_fill(v_buf, slot)
+            # greedy forward Occupy at the earliest legal empty entry
+            for v in self._active_range(version):
+                buf = self._buffer(v)
+                s = buf.first_empty()
+                if s is not None:
+                    buf.entries[s] = Entry(EntryState.OCCUPIED, key, version)
+                    self._index[key] = (v, s)
+                    return v
+            # Cannot happen: deleting our own reservation freed >= 1 slot in range.
+            raise StalenessViolation(f"no empty entry to occupy for {key}")
+
+    def abort(self, key: int) -> None:
+        """Filtering / redundancy abort (§4.3, Fig. 8c): drop an entry.
+
+        Occupied entries from *later* buffers are moved forward into the
+        freed slot so the buffer becomes Ready without waiting for new
+        trajectories; reserved entries cascade as usual.
+        """
+        with self._lock:
+            if key not in self._index:
+                return  # already consumed or never tracked — idempotent
+            v_buf, slot = self._index.pop(key)
+            self._buffers[v_buf].entries[slot].clear()
+            # pull an occupied entry forward from a later buffer if legal
+            for v in sorted(self._buffers):
+                if v <= v_buf:
+                    continue
+                buf = self._buffers[v]
+                for s, e in enumerate(buf.entries):
+                    if (
+                        e.state == EntryState.OCCUPIED
+                        and e.version is not None
+                        and e.version + self.eta >= v_buf
+                        and e.version <= v_buf  # never train on "future" data
+                        and v_buf >= self.train_version
+                    ):
+                        self._buffers[v_buf].entries[slot] = Entry(
+                            EntryState.OCCUPIED, e.key, e.version
+                        )
+                        self._index[e.key] = (v_buf, slot)
+                        buf.entries[s].clear()
+                        self._cascade_fill(v, s)
+                        return
+            self._cascade_fill(v_buf, slot)
+
+    def ready(self) -> bool:
+        with self._lock:
+            buf = self._buffer(self.train_version)
+            return buf.n_occupied >= self.batch_size
+
+    def consume(self) -> Optional[List[int]]:
+        """Retire the earliest buffer if Ready; returns its keys (batch) or None.
+
+        Under batch redundancy a buffer is consumable once ``batch_size``
+        entries are occupied; surplus entries are left for the caller to
+        Abort (they are reported by ``surplus_keys`` *before* consuming).
+        """
+        with self._lock:
+            buf = self._buffer(self.train_version)
+            occupied = [
+                (s, e) for s, e in enumerate(buf.entries) if e.state == EntryState.OCCUPIED
+            ]
+            if len(occupied) < self.batch_size:
+                return None
+            take = occupied[: self.batch_size]
+            keys = [e.key for _, e in take]
+            self.consumed_staleness.append(
+                [self.train_version - e.version for _, e in take]
+            )
+            for s, e in take:
+                self._index.pop(e.key, None)
+                buf.entries[s].clear()
+            # surplus (redundancy) entries and any reserved stragglers must be
+            # re-homed: their buffer is being retired.
+            leftovers = [(s, e) for s, e in enumerate(buf.entries) if e.state != EntryState.EMPTY]
+            del self._buffers[self.train_version]
+            self.train_version += 1
+            for _, e in leftovers:
+                self._index.pop(e.key, None)
+                # Re-insert under the new floor; abort if now illegal.
+                if e.version is not None and e.version + self.eta >= self.train_version:
+                    self._reinsert(e)
+            return keys
+
+    def _reinsert(self, e: Entry) -> None:
+        for v in self._active_range(e.version):
+            buf = self._buffer(v)
+            slot = buf.first_empty() if e.state == EntryState.OCCUPIED else buf.last_empty()
+            if slot is not None:
+                buf.entries[slot] = Entry(e.state, e.key, e.version)
+                self._index[e.key] = (v, slot)
+                return
+        # No room under the advanced floor: the entry is dropped; the
+        # coordinator sees it vanish from tracked_keys and aborts the payload.
+
+    def surplus_keys(self) -> List[int]:
+        """Keys that redundancy has made unnecessary (buffer already has
+        ``batch_size`` occupied entries; these are reserved stragglers)."""
+        with self._lock:
+            out: List[int] = []
+            for v, buf in self._buffers.items():
+                if buf.n_occupied >= self.batch_size:
+                    out.extend(
+                        e.key for e in buf.entries if e.state == EntryState.RESERVED
+                    )
+            return out
+
+    # ------------------------------------------------------------- telemetry
+    def tracked_keys(self) -> List[int]:
+        with self._lock:
+            return list(self._index)
+
+    def is_tracked(self, key: int) -> bool:
+        with self._lock:
+            return key in self._index
+
+    def entry_info(self, key: int) -> Optional[Tuple[int, EntryState, int]]:
+        """(v_buf, state, version) for a tracked key."""
+        with self._lock:
+            if key not in self._index:
+                return None
+            v_buf, slot = self._index[key]
+            e = self._buffers[v_buf].entries[slot]
+            return (v_buf, e.state, e.version)
+
+    def buffer_states(self) -> Dict[int, str]:
+        with self._lock:
+            return {v: b.state.value for v, b in sorted(self._buffers.items())}
+
+    def snapshot(self) -> Dict[int, Dict[str, int]]:
+        with self._lock:
+            return {
+                v: {
+                    "empty": b.n_empty,
+                    "reserved": b.n_reserved,
+                    "occupied": b.n_occupied,
+                }
+                for v, b in sorted(self._buffers.items())
+            }
+
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._index)
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self) -> None:
+        """Property-test hook: raises AssertionError on any protocol breach."""
+        with self._lock:
+            seen: Dict[int, Tuple[int, int]] = {}
+            for v_buf, buf in self._buffers.items():
+                assert len(buf.entries) == self.capacity
+                for slot, e in enumerate(buf.entries):
+                    if e.state == EntryState.EMPTY:
+                        assert e.key is None and e.version is None
+                        continue
+                    assert e.key is not None and e.version is not None
+                    assert e.version + self.eta >= v_buf, (
+                        f"staleness violation: key {e.key} v={e.version} "
+                        f"in buffer {v_buf} with eta={self.eta}"
+                    )
+                    assert e.key not in seen, f"duplicate key {e.key}"
+                    seen[e.key] = (v_buf, slot)
+            assert seen == self._index, "index out of sync with buffers"
+            max_buffers = self.eta + 1
+            live = [v for v, b in self._buffers.items()
+                    if b.n_empty < self.capacity]
+            if live:
+                # in-flight data bound: entries only span eta+1 consecutive
+                # buffers above the train floor plus lookahead to max version
+                assert len(self._index) <= (max_buffers + max(
+                    0, max(live) - self.train_version - self.eta
+                )) * self.capacity

@@ -1,0 +1,258 @@
+"""Staleness-aware, throughput-oriented rollout coordination strategies
+(paper §5.3, Appendix D, Algorithms 2-5) plus the vanilla counterparts used
+by the §6.5 ablation.
+
+All strategies are pure functions over (snapshot, TS contents, cost model,
+verifier) so they can be unit-tested and reused by both the live runtime and
+the discrete-event simulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.snapshot import InstanceSnapshot, Snapshot, clone_snapshot
+from repro.core.types import Trajectory
+
+
+@dataclass(frozen=True)
+class StrategyConfig:
+    """Hyper-parameters (paper §6.1: mu=0.3, phi_wait=3, phi_throughput=5)."""
+
+    mu: float = 0.3
+    phi_wait: int = 3
+    phi_throughput: float = 5.0
+
+
+class Verifier(Protocol):
+    """Staleness-manager facade used by Alg. 2 (check_routable)."""
+
+    def can_assign(self, traj: Trajectory, version: int) -> bool:
+        """Would assigning ``V_traj = version`` to this (possibly grouped)
+        initial trajectory violate eta?"""
+        ...
+
+
+# --------------------------------------------------------------- Algorithm 2
+def check_routable(
+    s_i: InstanceSnapshot, traj: Trajectory, verifier: Verifier
+) -> bool:
+    """Can ``traj`` be routed to instance ``i`` without violating eta?
+
+    * initial trajectory: propose ``V_traj = inst_version`` and ask the
+      staleness manager (discriminator);
+    * partially generated: the re-routed instance must be no older than the
+      already-assigned ``V_traj``.
+    """
+    if traj.v_traj is None:
+        return verifier.can_assign(traj, s_i.inst_version)
+    return s_i.inst_version >= traj.v_traj
+
+
+# --------------------------------------------------------------- Algorithm 3
+def routing_strategy(
+    snapshot: Snapshot,
+    ts_trajs: Sequence[Trajectory],
+    cost_model: CostModel,
+    verifier: Verifier,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[Tuple[int, Trajectory, int]]:
+    """Waterfall routing over a multi-level queue (Fig. 12c).
+
+    Returns ``[(inst_id, trajectory, proposed_v_traj)]``. Mutates a *clone*
+    of the snapshot internally so successive decisions see each other's
+    marginal effects; callers apply the decisions to the real system via
+    Route commands.
+    """
+    s = clone_snapshot(snapshot)
+    routing: List[Tuple[int, Trajectory, int]] = []
+
+    # Multi-level queue: levels ordered by V_traj ascending (staler = higher
+    # priority); initial trajectories (V_traj None) lowest priority.
+    levels: Dict[Optional[int], List[Trajectory]] = {}
+    for t in ts_trajs:
+        levels.setdefault(t.v_traj, []).append(t)
+    keyed = sorted(
+        levels.items(), key=lambda kv: (kv[0] is None, kv[0] if kv[0] is not None else 0)
+    )
+
+    stop = False
+    for _, queue in keyed:
+        if stop:
+            break
+        idx = 0
+        while idx < len(queue):
+            traj = queue[idx]
+            # Step 1: candidate instances
+            candidates = [
+                i for i, si in s.items() if check_routable(si, traj, verifier)
+            ]
+            if not candidates:
+                stop = True
+                break
+            # Step 2: group by inst_version ascending (older versions admit
+            # fewer trajectories -> serve them first)
+            by_version: Dict[int, List[int]] = {}
+            for i in candidates:
+                by_version.setdefault(s[i].inst_version, []).append(i)
+            groups = [by_version[v] for v in sorted(by_version)]
+            # Step 3: ideal gain upper bound
+            ideal = cost_model.ideal_gain(traj.length)
+            # Step 4: waterfall selection
+            selected: Optional[int] = None
+            for group in groups:
+                best_gain, best_inst = -1.0, None
+                for i in group:
+                    g = cost_model.marginal_gain(s[i], traj.length)
+                    if g > best_gain:
+                        best_gain, best_inst = g, i
+                if best_gain >= cfg.mu * ideal:
+                    selected = best_inst
+                    break
+            if selected is None:
+                # withhold: let running work drain for a better gain later
+                stop = True
+                break
+            # Step 5: route + update speculative snapshot
+            v = (
+                traj.v_traj
+                if traj.v_traj is not None
+                else s[selected].inst_version
+            )
+            routing.append((selected, traj, v))
+            s[selected] = cost_model.with_routed(s[selected], traj.traj_id, traj.length)
+            queue.pop(idx)
+    return routing
+
+
+# --------------------------------------------------------------- Algorithm 4
+def synchronization_strategy(
+    snapshot: Snapshot,
+    ts_trajs: Sequence[Trajectory],
+    ps_version: int,
+    cost_model: CostModel,
+    verifier: Verifier,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[int]:
+    """Sync an instance only when (a) it is route-starved at its current
+    version and (b) a tentative update would let the routing strategy place
+    new work on it."""
+    sync: List[int] = []
+    candidates: List[int] = []
+    for i, si in snapshot.items():
+        if ps_version <= si.inst_version:
+            continue
+        if any(check_routable(si, t, verifier) for t in ts_trajs):
+            continue  # still routable at the stale version -> no need
+        candidates.append(i)
+    for i in candidates:
+        s_temp = clone_snapshot(snapshot)
+        s_temp[i].inst_version = ps_version
+        routed = routing_strategy(s_temp, ts_trajs, cost_model, verifier, cfg)
+        if any(inst == i for inst, _, _ in routed):
+            sync.append(i)
+    return sync
+
+
+# --------------------------------------------------------------- Algorithm 5
+def migration_strategy(
+    snapshot: Snapshot,
+    cost_model: CostModel,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[Tuple[int, List[int]]]:
+    """Two triggers: wait-queue overflow (phi_wait) and throughput imbalance
+    (phi_throughput). Returns ``[(inst_id, [traj_ids to interrupt])]``."""
+    migration: List[Tuple[int, List[int]]] = []
+    handled: Dict[int, set] = {}
+
+    # Case 1: excessive waiting trajectories
+    for i, si in snapshot.items():
+        if si.n_wait > cfg.phi_wait:
+            excess = si.n_wait - cfg.phi_wait
+            # interrupt the longest waiters first: they profit most from
+            # landing on an emptier instance
+            waiters = sorted(
+                si.wait_trajs,
+                key=lambda t: si.traj_lengths.get(t, 0),
+                reverse=True,
+            )[:excess]
+            migration.append((i, list(waiters)))
+            handled.setdefault(i, set()).update(waiters)
+
+    # Case 2: throughput gap between fastest and slowest instances
+    if len(snapshot) >= 2:
+        thr = {i: cost_model.throughput(si) for i, si in snapshot.items()}
+        max_inst = max(thr, key=thr.get)
+        min_inst = min(thr, key=thr.get)
+        t_max, t_min = thr[max_inst], thr[min_inst]
+        gap = float("inf") if t_min <= 0 < t_max else (t_max / t_min if t_min > 0 else 0.0)
+        if gap > cfg.phi_throughput:
+            all_trajs = set(snapshot[max_inst].run_trajs)
+            all_trajs -= handled.get(max_inst, set())
+            if all_trajs:
+                migration.append((max_inst, sorted(all_trajs)))
+    return migration
+
+
+# ------------------------------------------------------- vanilla counterparts
+def vanilla_routing(
+    snapshot: Snapshot,
+    ts_trajs: Sequence[Trajectory],
+    cost_model: CostModel,
+    verifier: Verifier,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[Tuple[int, Trajectory, int]]:
+    """§6.5 'vanilla routing': pure count load-balancing — every TS
+    trajectory goes to the routable instance with the fewest resident
+    trajectories."""
+    s = clone_snapshot(snapshot)
+    routing: List[Tuple[int, Trajectory, int]] = []
+    for traj in ts_trajs:
+        candidates = [i for i, si in s.items() if check_routable(si, traj, verifier)]
+        if not candidates:
+            continue
+        tgt = min(candidates, key=lambda i: len(s[i].resident()))
+        v = traj.v_traj if traj.v_traj is not None else s[tgt].inst_version
+        routing.append((tgt, traj, v))
+        s[tgt] = cost_model.with_routed(s[tgt], traj.traj_id, traj.length)
+    return routing
+
+
+def vanilla_synchronization(
+    snapshot: Snapshot,
+    ts_trajs: Sequence[Trajectory],
+    ps_version: int,
+    cost_model: CostModel,
+    verifier: Verifier,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[int]:
+    """§6.5 'vanilla synchronization': greedy — sync as soon as the PS has a
+    newer version, regardless of load."""
+    return [i for i, si in snapshot.items() if ps_version > si.inst_version]
+
+
+def vanilla_migration(
+    snapshot: Snapshot,
+    cost_model: CostModel,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[Tuple[int, List[int]]]:
+    """§6.5 'vanilla migration': none — only passive re-routing on sync."""
+    return []
+
+
+@dataclass(frozen=True)
+class StrategySuite:
+    """Pluggable strategy triple (for the §6.5 ablation grid)."""
+
+    routing: Callable = routing_strategy
+    synchronization: Callable = synchronization_strategy
+    migration: Callable = migration_strategy
+
+    @staticmethod
+    def staleflow() -> "StrategySuite":
+        return StrategySuite(routing_strategy, synchronization_strategy, migration_strategy)
+
+    @staticmethod
+    def vanilla() -> "StrategySuite":
+        return StrategySuite(vanilla_routing, vanilla_synchronization, vanilla_migration)

@@ -1,0 +1,168 @@
+"""Trajectory server (TS) — middleware between dataset and rollout (§5.1).
+
+The TS stores every trajectory involved in rollout generation:
+
+* *initial* trajectories sampled from the dataset (no ``V_traj`` yet),
+  enqueued up to the capacity limit ``(eta + 1) * batch_size`` groups;
+* *interrupted* trajectories returned by Interrupt commands, awaiting
+  re-routing (their ``V_traj`` is already assigned).
+
+It also keeps a registry of all live trajectories (including ones currently
+routed to instances) so the coordinator can resolve IDs from snapshots into
+payload metadata, and so migration can move token state between instances
+through the TS as the paper prescribes (Fig. 10 top).
+
+Group sampling: one dataset prompt expands into ``group_size + redundancy``
+member trajectories sharing a ``group_id``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.core.types import Trajectory, TrajectoryGroup, TrajStatus, next_traj_id
+
+
+class TrajectoryServer:
+    def __init__(
+        self,
+        prompt_source: Iterator[List[int]],
+        *,
+        capacity_groups: int,
+        group_size: int = 1,
+        group_redundancy: int = 0,
+        max_new_tokens: int = 512,
+        clock: Callable[[], float] = lambda: 0.0,
+    ):
+        self._source = prompt_source
+        self.capacity_groups = capacity_groups
+        self.group_size = group_size
+        self.group_redundancy = group_redundancy
+        self.max_new_tokens = max_new_tokens
+        self._clock = clock
+        self._lock = threading.RLock()
+        self._available: Dict[int, Trajectory] = {}   # in TS, routable
+        self.registry: Dict[int, Trajectory] = {}     # all live trajectories
+        self.groups: Dict[int, TrajectoryGroup] = {}
+        self._group_counter = 0
+        self._live_groups = 0
+        self._exhausted = False
+
+    # ------------------------------------------------------------------ fill
+    def refill(self) -> int:
+        """Sample prompts until ``capacity_groups`` groups are live.
+
+        Capacity counts *live* groups (in TS or on instances, not yet
+        consumed/aborted), matching the paper's in-flight bound.
+        """
+        added = 0
+        with self._lock:
+            while self._live_groups < self.capacity_groups and not self._exhausted:
+                try:
+                    prompt = next(self._source)
+                except StopIteration:
+                    self._exhausted = True
+                    break
+                gid = self._group_counter
+                self._group_counter += 1
+                group = TrajectoryGroup(
+                    group_id=gid,
+                    group_size=self.group_size,
+                    redundancy=self.group_redundancy,
+                )
+                for _ in range(group.total_members):
+                    t = Trajectory(
+                        traj_id=next_traj_id(),
+                        prompt=list(prompt),
+                        group_id=gid,
+                        max_new_tokens=self.max_new_tokens,
+                        created_at=self._clock(),
+                    )
+                    group.traj_ids.append(t.traj_id)
+                    self._available[t.traj_id] = t
+                    self.registry[t.traj_id] = t
+                self.groups[gid] = group
+                self._live_groups += 1
+                added += 1
+        return added
+
+    # ----------------------------------------------------------------- queues
+    def peek(self) -> List[Trajectory]:
+        """Routable trajectories (initial + interrupted), insertion order."""
+        with self._lock:
+            return list(self._available.values())
+
+    def take(self, traj_id: int) -> Trajectory:
+        """Remove from the available queue (being routed); stays registered."""
+        with self._lock:
+            t = self._available.pop(traj_id)
+            t.status = TrajStatus.RUNNING
+            return t
+
+    def put_back(self, traj_id: int) -> Trajectory:
+        """An Interrupt returned this trajectory (partial rollout state kept)."""
+        with self._lock:
+            t = self.registry[traj_id]
+            t.status = TrajStatus.INTERRUPTED
+            t.instance = None
+            self._available[traj_id] = t
+            return t
+
+    def complete(self, traj_id: int) -> Trajectory:
+        """Rollout finished; the trajectory leaves the routable pool for the
+        reward phase (still registered until consumed)."""
+        with self._lock:
+            t = self.registry[traj_id]
+            t.status = TrajStatus.GENERATED
+            t.instance = None
+            t.completed_at = self._clock()
+            self._available.pop(traj_id, None)
+            return t
+
+    def drop(self, traj_id: int) -> None:
+        """Abort: remove everywhere; retire the group slot when empty."""
+        with self._lock:
+            self._available.pop(traj_id, None)
+            t = self.registry.pop(traj_id, None)
+            if t is None:
+                return
+            t.status = TrajStatus.ABORTED
+            self._maybe_retire_group(t.group_id)
+
+    def retire(self, traj_id: int) -> None:
+        """Consumed by training: free the registry slot."""
+        with self._lock:
+            t = self.registry.pop(traj_id, None)
+            self._available.pop(traj_id, None)
+            if t is None:
+                return
+            t.status = TrajStatus.CONSUMED
+            self._maybe_retire_group(t.group_id)
+
+    def _maybe_retire_group(self, gid: int) -> None:
+        group = self.groups.get(gid)
+        if group is None:
+            return
+        if not any(tid in self.registry for tid in group.traj_ids):
+            del self.groups[gid]
+            self._live_groups -= 1
+
+    # ------------------------------------------------------------------ stats
+    def get(self, traj_id: int) -> Optional[Trajectory]:
+        with self._lock:
+            return self.registry.get(traj_id)
+
+    @property
+    def n_available(self) -> int:
+        with self._lock:
+            return len(self._available)
+
+    @property
+    def n_live(self) -> int:
+        with self._lock:
+            return len(self.registry)
+
+    @property
+    def exhausted(self) -> bool:
+        with self._lock:
+            return self._exhausted and not self._available

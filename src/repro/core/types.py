@@ -1,0 +1,114 @@
+"""Shared data types for the StaleFlow control plane.
+
+The protocol layer (``staleness.py``) tracks only *metadata* (IDs and
+versions); trajectory payloads (tokens) live in the trajectory server and
+rollout instances. These types are the common vocabulary.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class TrajStatus(enum.Enum):
+    """Lifecycle of one trajectory (Fig. 1 / Fig. 6 data flow)."""
+
+    PENDING = "pending"        # in TS, not yet routed / never started
+    RUNNING = "running"        # on a rollout instance, generating
+    INTERRUPTED = "interrupted"  # returned to TS mid-generation (partial rollout)
+    GENERATED = "generated"    # rollout complete, awaiting reward
+    REWARDED = "rewarded"      # reward computed -> protocol Occupy
+    CONSUMED = "consumed"      # retired by a training Consume
+    ABORTED = "aborted"        # discarded (redundancy surplus / filtering)
+
+
+_traj_counter = itertools.count()
+
+
+def next_traj_id() -> int:
+    return next(_traj_counter)
+
+
+def reset_traj_ids() -> None:
+    """Test/benchmark helper: restart the global trajectory ID counter."""
+    global _traj_counter
+    _traj_counter = itertools.count()
+
+
+@dataclass
+class Trajectory:
+    """One RL trajectory: a prompt plus its (possibly partial) response.
+
+    ``v_traj`` is the paper's trajectory version identifier: the *oldest
+    tolerated model version* over the whole generation. ``None`` until the
+    coordinator routes the trajectory for the first time (initial
+    trajectories carry no version, Fig. 10 top).
+
+    ``segments`` records (model_version, n_tokens) per generation segment so
+    partial rollout / migration provenance is auditable and the staleness
+    importance-sampling correction in ``repro.rl`` can weight tokens by the
+    version that produced them.
+    """
+
+    traj_id: int
+    prompt: List[int]
+    group_id: int = -1                  # group sampling (GRPO/DAPO): -1 = ungrouped
+    response: List[int] = field(default_factory=list)
+    v_traj: Optional[int] = None
+    status: TrajStatus = TrajStatus.PENDING
+    instance: Optional[int] = None      # rollout instance currently hosting it
+    segments: List[tuple] = field(default_factory=list)  # [(version, n_tokens)]
+    reward: Optional[float] = None
+    finished: bool = False              # hit EOS / max length
+    max_new_tokens: int = 0             # generation budget
+    # per-token logprobs under the version that generated each token —
+    # the importance-sampling denominator for staleness correction
+    behavior_logprobs: List[float] = field(default_factory=list)
+    # bookkeeping for benchmarks
+    created_at: float = 0.0
+    completed_at: float = 0.0
+    # discrete-event simulator: generated tokens tracked as a count instead
+    # of materialized token lists (cluster-scale runs would need GBs)
+    sim_generated: int = 0
+    sim_target_len: int = 0
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt) + len(self.response) + self.sim_generated
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.response)
+
+    def record_segment(self, version: int, n_tokens: int) -> None:
+        """Append/extend the (version, n_tokens) provenance log."""
+        if n_tokens <= 0:
+            return
+        if self.segments and self.segments[-1][0] == version:
+            self.segments[-1] = (version, self.segments[-1][1] + n_tokens)
+        else:
+            self.segments.append((version, n_tokens))
+
+    def oldest_segment_version(self) -> Optional[int]:
+        return min((v for v, _ in self.segments), default=None)
+
+
+@dataclass
+class TrajectoryGroup:
+    """Group sampling unit (§4.3): ``group_size`` responses to one prompt.
+
+    The protocol entry lives at group granularity; the group version is
+    ``min(v_traj)`` over members (maximum staleness tolerated by the whole
+    group).
+    """
+
+    group_id: int
+    traj_ids: List[int] = field(default_factory=list)
+    group_size: int = 1                 # required completions
+    redundancy: int = 0                 # surplus members (group-level redundant rollout)
+
+    @property
+    def total_members(self) -> int:
+        return self.group_size + self.redundancy

@@ -1,0 +1,68 @@
+"""Synthetic verifiable tasks + prompt sources for the trajectory server.
+
+``arithmetic_task`` mirrors the DAPO-Math-17k setup at toy scale: prompts
+are arithmetic questions, rewards are rule-verifiable (exact answer match).
+``heavy_tail_lengths`` draws response lengths from a lognormal to reproduce
+the long-tail skewness of Fig. 4 in the simulator and skewness benchmarks.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+from repro.data import tokenizer as tok
+
+
+@dataclass(frozen=True)
+class ArithmeticProblem:
+    prompt_ids: Tuple[int, ...]
+    answer: str
+
+
+def make_problem(rng: random.Random, max_operand: int = 99) -> ArithmeticProblem:
+    a = rng.randint(0, max_operand)
+    b = rng.randint(0, max_operand)
+    op = rng.choice("+-*")
+    result = {"+": a + b, "-": a - b, "*": a * b}[op]
+    text = f"{a}{op}{b}="
+    return ArithmeticProblem(tuple(tok.encode(text)), str(result))
+
+
+def arithmetic_prompts(
+    n: int, seed: int = 0, max_operand: int = 99
+) -> Iterator[List[int]]:
+    """Prompt source for the TrajectoryServer (IDs only)."""
+    rng = random.Random(seed)
+    for _ in range(n):
+        yield list(make_problem(rng, max_operand).prompt_ids)
+
+
+class ArithmeticDataset:
+    """Prompt source that also remembers answers for the reward phase."""
+
+    def __init__(self, n: int, seed: int = 0, max_operand: int = 99):
+        rng = random.Random(seed)
+        self.problems = [make_problem(rng, max_operand) for _ in range(n)]
+        self._by_prompt = {p.prompt_ids: p.answer for p in self.problems}
+
+    def prompt_source(self) -> Iterator[List[int]]:
+        for p in self.problems:
+            yield list(p.prompt_ids)
+
+    def answer_for(self, prompt_ids: List[int]) -> str:
+        return self._by_prompt[tuple(prompt_ids)]
+
+
+def heavy_tail_lengths(
+    n: int, *, mean: float = 2000.0, sigma: float = 1.0, cap: int = 20000,
+    seed: int = 0,
+) -> np.ndarray:
+    """Lognormal response lengths (tokens) reproducing RL's long-tail
+    skewness (Fig. 4): most responses short, a few near the cap."""
+    rng = np.random.default_rng(seed)
+    mu = np.log(mean) - sigma ** 2 / 2
+    out = rng.lognormal(mu, sigma, size=n)
+    return np.clip(out, 1, cap).astype(np.int64)

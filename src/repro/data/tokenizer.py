@@ -1,0 +1,35 @@
+"""Toy character tokenizer for the synthetic arithmetic RL task.
+
+The paper's contribution is orthogonal to tokenization; this minimal
+vocabulary keeps the end-to-end convergence benchmarks (Fig. 3/14 analogs)
+fast on CPU while exercising the full rollout->reward->training loop.
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD = 0
+BOS = 1
+EOS = 2
+
+_CHARS = "0123456789+-*= "
+CHAR_BASE = 3
+VOCAB_SIZE = CHAR_BASE + len(_CHARS)
+
+_C2I = {c: CHAR_BASE + i for i, c in enumerate(_CHARS)}
+_I2C = {v: k for k, v in _C2I.items()}
+
+
+def encode(text: str, *, bos: bool = True) -> List[int]:
+    ids = [_C2I[c] for c in text]
+    return ([BOS] if bos else []) + ids
+
+
+def decode(ids: List[int]) -> str:
+    return "".join(_I2C.get(i, "") for i in ids if i >= CHAR_BASE)
+
+
+def pad_to(ids: List[int], length: int) -> List[int]:
+    if len(ids) > length:
+        return ids[:length]
+    return ids + [PAD] * (length - len(ids))

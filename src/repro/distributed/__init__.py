@@ -1,0 +1,13 @@
+"""Distribution layer: GSPMD sharding rules, activation-sharding context,
+pipeline parallelism, and compressed collectives."""
+from repro.distributed.collectives import make_dp_allreduce, psum_compressed
+from repro.distributed.ctx import activation_sharding, constrain
+from repro.distributed.pipeline import bubble_fraction, gpipe_apply
+from repro.distributed.sharding import (
+    cache_shardings,
+    opt_shardings,
+    param_spec,
+    params_shardings,
+    replicated,
+    train_batch_shardings,
+)

@@ -1,0 +1,84 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher activates a context and the model
+calls ``constrain(x, kind)`` at a few strategic points. Outside a context
+(CPU smoke tests, single-host runtime) the calls are no-ops.
+
+Kinds:
+* ``"boundary"`` — (B, S, D) per-block boundary activations. Sharded
+  batch -> (pod, data) and sequence -> "model" (Megatron-style sequence
+  parallelism): the lever that keeps 76B-class training under HBM.
+* ``"logits"``   — (B, S, V) output logits. vocab -> "model": the
+  log-softmax then runs on vocab shards with tiny cross-shard reductions
+  instead of materializing the full vocab per device.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _active():
+    return getattr(_state, "ctx", None)
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, *, sp: bool = True, logits_tp: bool = True):
+    prev = _active()
+    _state.ctx = {"mesh": mesh, "sp": sp, "logits_tp": logits_tp}
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _fit(mesh: Mesh, dim: int, axis) -> Optional[str]:
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        import numpy as np
+
+        size = int(np.prod([mesh.shape.get(a, 1) for a in axis]))
+    else:
+        size = mesh.shape.get(axis, 1)
+    return axis if dim % size == 0 else None
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    batch = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if kind == "boundary" and ctx["sp"] and x.ndim == 3:
+        spec = P(
+            _fit(mesh, x.shape[0], batch),
+            _fit(mesh, x.shape[1], "model"),
+            None,
+        )
+    elif kind == "logits" and ctx["logits_tp"] and x.ndim == 3:
+        spec = P(
+            _fit(mesh, x.shape[0], batch),
+            None,
+            _fit(mesh, x.shape[2], "model"),
+        )
+    elif kind == "heads" and x.ndim == 4:
+        # (B, S, H, hd): pin head-parallel attention (q/k/v and scores stay
+        # head-sharded; without this GSPMD may replicate the O(S^2) score
+        # tensor across "model" and all-reduce it — observed 46 GB/layer on
+        # internvl2-76b prefill_32k, EXPERIMENTS.md §Perf)
+        spec = P(
+            _fit(mesh, x.shape[0], batch),
+            None,
+            _fit(mesh, x.shape[2], "model"),
+            None,
+        )
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,210 @@
+"""GSPMD sharding rules for the production mesh.
+
+Mesh axes (launch/mesh.py): single-pod ``(data=16, model=16)``; multi-pod
+``(pod=2, data=16, model=16)`` — "pod" is pure data parallelism across the
+DCN (params replicated per pod, gradients all-reduced over pod+data).
+
+Parameter layout (FSDP x TP, ZeRO-3 style):
+* matmul weights:  input-feature dim -> "data" (FSDP), output-feature /
+  head / expert dim -> "model" (TP / EP);
+* embeddings & LM head: vocab -> "model", d_model -> "data";
+* MoE experts: expert dim -> "model" (expert parallelism), inner dims ->
+  "data";
+* norms / small vectors: replicated.
+
+Every rule validates divisibility: a dimension that does not divide the
+mesh axis falls back to replication on that dim (e.g. granite's vocab
+49155 is not 16-divisible -> vocab stays unsharded rather than relying on
+GSPMD padding). Optimizer states reuse the parameter specs (m/v mirror the
+param tree).
+
+Activation/cache policy:
+* training batch -> ("pod","data"); sequence-parallel boundary constraint
+  (d_model activations sharded over "model") is applied inside the scanned
+  block when ``sp=True`` — the memory lever that fits 76B+ training;
+* decode caches: batch -> ("pod","data") when divisible, cache sequence ->
+  "model" (flash-decode style partial-softmax partitioning);
+* recurrent states: head/inner dims -> "model".
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fit(mesh: Mesh, dim: int, axis) -> Optional[str]:
+    """Return ``axis`` if ``dim`` divides its size, else None (replicate)."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+# ------------------------------------------------------------------- params
+def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for one parameter leaf, keyed by its tree path.
+
+    ``path`` is a ``jax.tree_util.keystr`` string like ``['blocks']['wq']``;
+    the rule dispatches on the LAST quoted segment, so optimizer-state paths
+    (``['m']['blocks']['wq']``) resolve to the same spec as their params.
+    """
+    name = path.split("'")[-2] if "'" in path else path
+
+    def spec(*dims):
+        """dims: one axis proposal per trailing dimension (right-aligned)."""
+        lead = len(shape) - len(dims)
+        out = [None] * lead
+        for size, ax in zip(shape[lead:], dims):
+            out.append(_fit(mesh, size, ax))
+        return P(*out)
+
+    if name in ("embed",):
+        return spec("model", "data")           # (V, D)
+    if name in ("lm_head",):
+        return spec("data", "model")           # (D, V)
+    if name in ("wq", "wk", "wv"):
+        return spec("data", "model")           # (..., D, H*hd)
+    if name in ("bq", "bk", "bv"):
+        return spec("model")
+    if name == "wo":
+        return spec("model", "data")           # (..., H*hd, D)
+    if name in ("w_gate", "w_up"):
+        return spec("data", "model")           # (..., D, F)
+    if name == "w_down":
+        return spec("model", "data")           # (..., F, D)
+    if name in ("ws_gate", "ws_up"):
+        return spec("data", "model")
+    if name == "ws_down":
+        return spec("model", "data")
+    if name == "router":
+        return spec("data", None)              # (..., D, E) E small
+    if name in ("we_gate", "we_up"):
+        return spec("model", "data", None)     # (..., E, D, F): EP on E
+    if name == "we_down":
+        return spec("model", None, "data")     # (..., E, F, D)
+    # --- mamba (hybrid) ---
+    if name == "w_in":
+        return spec("data", "model")           # (..., D, 2I)
+    if name == "w_out":
+        return spec("model", "data")           # (..., I, D)
+    if name == "conv_w":
+        return spec(None, "model")             # (..., W, I)
+    if name == "w_bc":
+        return spec("model", None)             # (..., I, 2N)
+    if name in ("w_dt", "d_skip", "dt_bias"):
+        return spec("model")                   # (..., I)
+    if name == "a_log":
+        return spec("model", None)             # (..., I, N)
+    # --- xlstm ---
+    if name == "w_gates":
+        return spec("data", "model")           # (..., D, 4*H*hd)
+    if name == "w_if":
+        return spec("data", "model")           # (..., D, 2H)
+    if name == "r_weights":
+        return spec(None, None, "model")       # (..., 4, H, hd, hd)
+    # norms & everything small: replicated
+    return P()
+
+
+def params_shardings(mesh: Mesh, params: Any) -> Any:
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(mesh, jax.tree_util.keystr(path), np.shape(leaf))
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_shardings(mesh: Mesh, opt_state: Any) -> Any:
+    """m/v mirror the params; scalar step is replicated."""
+
+    def one(path, leaf):
+        if np.ndim(leaf) == 0:
+            return NamedSharding(mesh, P())
+        key = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, param_spec(mesh, key, np.shape(leaf)))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+# ------------------------------------------------------------------- batches
+def train_batch_shardings(mesh: Mesh, batch: Any) -> Any:
+    b_axes = batch_axes(mesh)
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = np.shape(leaf)
+        if not shape:
+            return NamedSharding(mesh, P())
+        first = _fit(mesh, shape[0], b_axes)
+        if "frontend" in key and len(shape) == 3:
+            # patch/frame embeddings: d_model -> "model" (batch uses "data")
+            return NamedSharding(mesh, P(first, None, _fit(mesh, shape[2], "model")))
+        return NamedSharding(mesh, P(first, *([None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: Any) -> Any:
+    """Decode caches: batch -> (pod,data); cache sequence -> model; recurrent
+    inner dims -> model."""
+    b_axes = batch_axes(mesh)
+
+    def kv(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = np.shape(leaf)
+        name = key.split("'")[-2] if "'" in key else key
+        if name == "pos" or not shape:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # (L, B, S, Hkv, hd)
+            return NamedSharding(mesh, P(
+                None,
+                _fit(mesh, shape[1], b_axes),
+                _fit(mesh, shape[2], "model"),
+                None,
+                None,
+            ))
+        if name == "conv" and len(shape) == 4:   # (L, B, W-1, I)
+            return NamedSharding(mesh, P(
+                None, _fit(mesh, shape[1], b_axes), None,
+                _fit(mesh, shape[3], "model"),
+            ))
+        if name == "ssm" and len(shape) == 4:    # (L, B, I, N)
+            return NamedSharding(mesh, P(
+                None, _fit(mesh, shape[1], b_axes),
+                _fit(mesh, shape[2], "model"), None,
+            ))
+        if name == "mlstm":                      # (G, p-1, B, H, dk[, dv])
+            rest = [None] * (len(shape) - 3)
+            if len(shape) >= 5:
+                rest[-1] = _fit(mesh, shape[-1], "model")
+            return NamedSharding(mesh, P(
+                None, None, _fit(mesh, shape[2], b_axes), *rest
+            ))
+        if name == "slstm":                      # (G, B, H, dh)
+            return NamedSharding(mesh, P(
+                None, _fit(mesh, shape[1], b_axes), None,
+                _fit(mesh, shape[-1], "model"),
+            ))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(kv, cache)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, P()), tree
+    )

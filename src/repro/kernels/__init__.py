@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``flash_attention``  — training/prefill attention (online softmax, GQA)
+* ``decode_attention`` — rollout decode vs KV cache (paper Table 3: 89.9%
+                         of rollout step time is per-token decode)
+* ``moe_gmm``          — grouped expert matmul (MoE FFN)
+* ``dapo_loss``        — fused token-level clipped PG loss + reduction
+
+``ops`` is the dispatch layer (ref | pallas | interpret); ``ref`` holds the
+pure-jnp oracles the tests validate against.
+"""

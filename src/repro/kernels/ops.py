@@ -1,0 +1,182 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+Select the execution path per call site:
+
+* ``"ref"``       — pure-jnp oracle (default on CPU: fast under XLA:CPU,
+                    and what the dry-run lowers when kernels are disabled);
+* ``"pallas"``    — compiled Pallas kernel (TPU target);
+* ``"interpret"`` — Pallas kernel body interpreted in Python (CPU
+                    correctness validation; used by the kernel tests).
+
+The global default is resolved from the backend: TPU -> pallas, anything
+else -> ref; override per-process with ``set_default_impl`` or per-call
+with ``impl=``. Model code calls these entry points only — swapping a
+kernel never touches model definitions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dapo_loss import dapo_loss as _dapo_pallas
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention import (
+    decode_attention_update as _decode_update_pallas,
+)
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.moe_gmm import grouped_matmul as _gmm_pallas
+from repro.kernels.moe_gmm import moe_expert_ffn as _moe_ffn_pallas
+from repro.kernels.selective_scan import selective_scan as _selective_scan_pallas
+from repro.kernels.selective_scan import (
+    selective_scan_ref as _ref_selective_scan,
+)
+
+_DEFAULT_IMPL: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    """Force an implementation globally (None -> auto by backend)."""
+    global _DEFAULT_IMPL
+    if impl not in (None, "ref", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    _DEFAULT_IMPL = impl
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    if impl is not None:
+        return impl
+    if _DEFAULT_IMPL is not None:
+        return _DEFAULT_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ------------------------------------------------------------------ attention
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int = 0, q_offset: int = 0,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        from repro.models import runmode
+
+        if runmode.attention_chunked(k.shape[1]):
+            return _ref.flash_attention_chunked_ref(
+                q, k, v, causal=causal, window=window, q_offset=q_offset
+            )
+        return _ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    return _flash_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        interpret=(mode == "interpret"),
+    )
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, lengths: jax.Array,
+    *, impl: Optional[str] = None,
+) -> jax.Array:
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode_pallas(
+        q, k_cache, v_cache, lengths, interpret=(mode == "interpret")
+    )
+
+
+def decode_attention_update(
+    q: jax.Array,            # (B, H, hd)
+    k_cache: jax.Array,      # (B, S, Hkv, hd)
+    v_cache: jax.Array,      # (B, S, Hkv, hd)
+    k_new: jax.Array,        # (B, Hkv, hd)
+    v_new: jax.Array,        # (B, Hkv, hd)
+    write_pos: jax.Array,    # (B,) ring slot
+    lengths: jax.Array,      # (B,) valid entries incl. the new token
+    *, impl: Optional[str] = None,
+):
+    """Fused decode attention + ring-cache row write.
+
+    Returns (out (B, H, hd), new_k, new_v). Pallas path writes the row
+    in place (only the touched block moves); the ref path lowers the
+    partition-friendly one-hot select (EXPERIMENTS.md §Perf A1/A3)."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        s = k_cache.shape[1]
+        hit = (
+            jnp.arange(s, dtype=jnp.int32)[None, :] == write_pos[:, None]
+        )[..., None, None]
+        new_k = jnp.where(hit, k_new[:, None].astype(k_cache.dtype), k_cache)
+        new_v = jnp.where(hit, v_new[:, None].astype(v_cache.dtype), v_cache)
+        out = _ref.decode_attention_ref(q, new_k, new_v, lengths)
+        return out, new_k, new_v
+    return _decode_update_pallas(
+        q, k_cache, v_cache, k_new, v_new, write_pos, lengths,
+        interpret=(mode == "interpret"),
+    )
+
+
+# ------------------------------------------------------------------------ MoE
+def grouped_matmul(
+    x: jax.Array, w: jax.Array, *, impl: Optional[str] = None
+) -> jax.Array:
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return jnp.einsum("ecd,edf->ecf", x, w,
+                          preferred_element_type=jnp.float32)
+    return _gmm_pallas(x, w, interpret=(mode == "interpret"))
+
+
+def moe_expert_ffn(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+    *, impl: Optional[str] = None,
+) -> jax.Array:
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref.moe_gmm_ref(x, w_gate, w_up, w_down)
+    # pad the token dim to the kernel's 128-aligned tile (zero rows are
+    # inert through SwiGLU: silu(0)*0 @ w = 0)
+    c = x.shape[1]
+    pad = (-c) % 128
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    out = _moe_ffn_pallas(
+        x, w_gate, w_up, w_down, interpret=(mode == "interpret")
+    )
+    return out[:, :c] if pad else out
+
+
+# ------------------------------------------------------------ selective scan
+def selective_scan(
+    dt: jax.Array, x: jax.Array, bmat: jax.Array, cmat: jax.Array,
+    a: jax.Array, h0: jax.Array, *, impl: Optional[str] = None,
+):
+    """Fused Mamba/S6 recurrence. Returns (y (B,S,I), h_final (B,I,N))."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref_selective_scan(dt, x, bmat, cmat, a, h0)
+    return _selective_scan_pallas(
+        dt, x, bmat, cmat, a, h0, interpret=(mode == "interpret")
+    )
+
+
+# ----------------------------------------------------------------------- loss
+def dapo_loss(
+    logprobs: jax.Array, old_logprobs: jax.Array,
+    advantages: jax.Array, mask: jax.Array,
+    *, eps_low: float = 0.2, eps_high: float = 0.28,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref.dapo_loss_ref(
+            logprobs, old_logprobs, advantages, mask,
+            eps_low=eps_low, eps_high=eps_high,
+        )
+    return _dapo_pallas(
+        logprobs, old_logprobs, advantages, mask,
+        eps_low=eps_low, eps_high=eps_high, interpret=(mode == "interpret"),
+    )

@@ -1,0 +1,178 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert ``allclose`` against these functions (interpret mode on CPU). They
+are also the default execution path on non-TPU backends.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ flash attention
+def flash_attention_ref(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Skv, Hkv, hd)
+    v: jax.Array,            # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference multi-head GQA attention (materializes the score matrix)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def flash_attention_chunked_ref(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Skv, Hkv, hd)
+    v: jax.Array,            # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk: int = 2048,
+) -> jax.Array:
+    """Online-softmax attention chunked over KV (pure jnp lax.scan).
+
+    Memory O(Sq * chunk) instead of O(Sq * Skv) — the long-sequence
+    execution path on non-TPU backends (the Pallas kernel's role on TPU).
+    Numerically equivalent to ``flash_attention_ref``.
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        return flash_attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    rep = h // hkv
+    nc = skv // chunk
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    kc = k.reshape(b, nc, chunk, hkv, hd).swapaxes(0, 1)
+    vc = v.reshape(b, nc, chunk, hkv, hd).swapaxes(0, 1)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry                       # (B,H,Sq),(B,H,Sq),(B,H,Sq,hd)
+        idx, kb, vb = inp
+        if rep > 1:
+            kb = jnp.repeat(kb, rep, axis=2)
+            vb = jnp.repeat(vb, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        kpos = idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nc), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ----------------------------------------------------------- decode attention
+def decode_attention_ref(
+    q: jax.Array,            # (B, H, hd) single new token per sequence
+    k_cache: jax.Array,      # (B, S, Hkv, hd)
+    v_cache: jax.Array,      # (B, S, Hkv, hd)
+    lengths: jax.Array,      # (B,) int32 valid cache lengths (incl. new token)
+) -> jax.Array:
+    """One-token decode attention against a (ring) KV cache.
+
+    GQA folds the query-head group into the einsum (q reshaped to
+    (B, Hkv, rep, hd)) instead of ``jnp.repeat``-ing the cache: identical
+    math, rep-x less cache traffic (decode streams the full KV every step,
+    so this is the dominant-byte path — EXPERIMENTS.md §Perf)."""
+    b, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, hkv, rep, hd)
+    logits = (
+        jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache).astype(jnp.float32) * scale
+    )                                                       # (B, Hkv, rep, S)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]       # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs, v_cache)     # (B, Hkv, rep, hd)
+    return out.reshape(b, h, hd)
+
+
+# -------------------------------------------------------------------- MoE GMM
+def moe_gmm_ref(
+    x: jax.Array,            # (E, C, D) dispatched tokens per expert
+    w_gate: jax.Array,       # (E, D, F)
+    w_up: jax.Array,         # (E, D, F)
+    w_down: jax.Array,       # (E, F, D)
+) -> jax.Array:
+    """Grouped expert FFN (SwiGLU): per-expert batched matmul."""
+    h = jnp.einsum("ecd,edf->ecf", x, w_gate)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+# ------------------------------------------------------------------ DAPO loss
+def dapo_loss_ref(
+    logprobs: jax.Array,       # (B, T) new-policy token logprobs
+    old_logprobs: jax.Array,   # (B, T) behavior-policy token logprobs
+    advantages: jax.Array,     # (B,)  trajectory advantages (broadcast to tokens)
+    mask: jax.Array,           # (B, T) response-token mask
+    *,
+    eps_low: float = 0.2,
+    eps_high: float = 0.28,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-level clipped policy-gradient loss with DAPO's decoupled clip
+    range ('clip-higher') and token-mean normalization.
+
+    Returns (scalar loss, scalar mean ratio) — the ratio is a training
+    diagnostic (off-policy drift, §2.2 staleness analysis).
+    """
+    lp = logprobs.astype(jnp.float32)
+    olp = old_logprobs.astype(jnp.float32)
+    adv = advantages.astype(jnp.float32)[:, None]
+    m = mask.astype(jnp.float32)
+    ratio = jnp.exp(lp - olp)
+    clipped = jnp.clip(ratio, 1.0 - eps_low, 1.0 + eps_high)
+    obj = jnp.minimum(ratio * adv, clipped * adv)
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = -(obj * m).sum() / denom
+    mean_ratio = (ratio * m).sum() / denom
+    return loss, mean_ratio

@@ -1,0 +1,103 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for
+every model input — weak-type-correct, shardable, zero allocation.
+
+Cell semantics (assignment spec):
+* ``train_4k``    — lowers the RL ``train_step`` (DAPO objective over a
+                    consumed staleness-buffer batch, fwd+bwd+AdamW);
+* ``prefill_32k`` — lowers ``prefill_step`` (inference prefill building the
+                    KV cache);
+* ``decode_32k`` / ``long_500k`` — lower ``serve_step`` (ONE new token
+                    against a seq_len-sized cache / recurrent state).
+
+Frontend stubs per the assignment: vlm cells carry precomputed patch
+embeddings, audio cells precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.training.optimizer import init_opt_state
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def abstract_params(cfg: ArchConfig) -> Any:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(M.init_params, cfg, dtype=PARAM_DTYPE), key)
+
+
+def abstract_opt(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(init_opt_state, abstract_params(cfg))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        partial(M.init_cache, cfg, batch, max_len, PARAM_DTYPE)
+    )
+
+
+def _frontend_spec(cfg: ArchConfig, batch: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), PARAM_DTYPE)
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), PARAM_DTYPE)
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the step function this cell lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "behavior_logprobs": jax.ShapeDtypeStruct((b, s), jnp.float32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+            "advantages": jax.ShapeDtypeStruct((b,), jnp.float32),
+        }
+        fe = _frontend_spec(cfg, b)
+        if fe is not None:
+            batch["frontend_embeds"] = fe
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "cache": abstract_cache(cfg, b, _cache_len(cfg, s)),
+        }
+        fe = _frontend_spec(cfg, b)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+        return out
+    # decode: one new token against a seq_len-sized cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": abstract_cache(cfg, b, _cache_len(cfg, s)),
+    }
+
+
+def _cache_len(cfg: ArchConfig, s: int) -> int:
+    # vlm caches hold the patch positions too
+    return s + (cfg.n_patches if cfg.family == "vlm" else 0)
+
+
+# ------------------------------------------------------------ step functions
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, lengths, cache, frontend_embeds=None):
+        return M.prefill(
+            cfg, params, tokens, lengths, cache, frontend_embeds=frontend_embeds
+        )
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, tokens, cache):
+        return M.decode_step(cfg, params, tokens, cache)
+
+    return serve_step

@@ -1,0 +1,382 @@
+"""Neural-net building blocks shared by the architecture zoo.
+
+Pure-jnp implementations; perf-critical paths (flash attention, decode
+attention, MoE grouped matmul, DAPO loss) have Pallas TPU kernels in
+``repro.kernels`` selected via ``repro.kernels.ops`` dispatch.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]  # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def _gqa_repeat(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B,S,Hkv,hd) -> (B,S,Hkv*n_rep,hd) by broadcast (no copy under XLA)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d))
+    return k.reshape(b, s, h * n_rep, d)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference multi-head attention. q: (B,Sq,H,hd), k/v: (B,Skv,Hkv,hd).
+
+    ``window > 0`` restricts each query to the last ``window`` keys
+    (sliding-window / sub-quadratic mode). ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (used at decode: Sq=1, offset=pos).
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    k = _gqa_repeat(k, h // hkv)
+    v = _gqa_repeat(v, h // hkv)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_mask is not None:  # (B, Skv) valid-key mask (decode ring caches)
+        mask = mask[None, None] & kv_mask[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+    else:
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# --------------------------------------------------------------------- MLPs
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def moe_ffn(
+    x: jax.Array,
+    router_w: jax.Array,   # (D, E)
+    w_gate: jax.Array,     # (E, D, F)
+    w_up: jax.Array,       # (E, D, F)
+    w_down: jax.Array,     # (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    expert_fn=None,        # optional (B,E,C,D)->(B,E,C,D) override (Pallas gmm)
+) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based token-choice MoE (GShard/MaxText-style dispatch einsum).
+
+    x: (B, S, D). Tokens route within their own batch row; capacity
+    C = ceil(S * top_k / E * factor). Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e = router_w.shape[-1]
+    cap = int(math.ceil(s * top_k / e * capacity_factor))
+    cap = max(cap, top_k)
+
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (B,S,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)  # (B,S,K,E)
+    # position of each (token, k) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(b, s * top_k, e), axis=1).reshape(b, s, top_k, e) - 1.0
+    pos = jnp.sum(pos * onehot, axis=-1)  # (B,S,K)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch/combine tensors: (B,S,K,E,C) one-hots contracted immediately
+    pos_onehot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) * keep[..., None]  # (B,S,K,C)
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_onehot)  # (B,S,E,C)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals.astype(jnp.float32), onehot, pos_onehot)
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)  # (B,E,C,D)
+    if expert_fn is not None:
+        xout = expert_fn(xin)                           # (B,E,C,D)
+    else:
+        h = jnp.einsum("becd,edf->becf", xin, w_gate)
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", xin, w_up)
+        xout = jnp.einsum("becf,efd->becd", h, w_down)  # (B,E,C,D)
+    out = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), xout)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))               # (E,) fraction routed
+    aux = e * jnp.sum(me * ce) / top_k
+    return out, aux
+
+
+# -------------------------------------------------------------------- Mamba
+def mamba_scan_chunked(
+    dA: jax.Array,    # (B, S, I, N)  discrete state transition exp(dt*A)
+    dBx: jax.Array,   # (B, S, I, N)  discrete input  dt*B*x
+    cmat: jax.Array,  # (B, S, N)     output projection C
+    h0: jax.Array,    # (B, I, N)     initial state
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Selective-scan h_t = dA_t * h_{t-1} + dBx_t with the C-contraction
+    FUSED into each chunk, so the (B, S, I, N) state sequence is never
+    materialized (per-chunk working set only — the memory property real
+    Mamba kernels provide). Outer lax.scan over chunks (carry = boundary
+    state, rematerialized on backward); inner associative scan.
+    Returns (y (B, S, I), h_final (B, I, N))."""
+    b, s, i, n = dA.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nchunks = s // chunk
+    dA_c = dA.reshape(b, nchunks, chunk, i, n).swapaxes(0, 1)
+    dBx_c = dBx.reshape(b, nchunks, chunk, i, n).swapaxes(0, 1)
+    cm_c = cmat.reshape(b, nchunks, chunk, n).swapaxes(0, 1).astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(h, inputs):
+        da, dbx, cm = inputs  # (B, chunk, I, N), (B, chunk, N)
+
+        def combine(a, b_):
+            a1, b1 = a
+            a2, b2 = b_
+            return a1 * a2, b1 * a2 + b2
+
+        acc_a, acc_b = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        states = acc_a * h[:, None] + acc_b  # (B, chunk, I, N)
+        y = jnp.einsum("bsin,bsn->bsi", states, cm)
+        return states[:, -1], y
+
+    h_final, ys = jax.lax.scan(body, h0, (dA_c, dBx_c, cm_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, i)
+    return y, h_final
+
+
+def mamba_block(
+    x: jax.Array,               # (B, S, D)
+    p: dict,                    # params
+    *,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (conv_state, ssm_state)
+    decode: bool = False,
+    impl: Optional[str] = None,  # kernels.ops dispatch for the scan
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Simplified Mamba(S6) mixer. Returns (out (B,S,D), (conv_state, ssm_state)).
+
+    conv_state: (B, W-1, I) last inputs; ssm_state: (B, I, N).
+    """
+    b, s, d = x.shape
+    w_in, w_out = p["w_in"], p["w_out"]           # (D, 2I), (I, D)
+    conv_w = p["conv_w"]                          # (W, I) depthwise
+    w_bc, w_dt = p["w_bc"], p["w_dt"]             # (I, 2N), (I, I? -> use (I,)) low-rank simplified
+    a_log, d_skip, dt_bias = p["a_log"], p["d_skip"], p["dt_bias"]  # (I,N),(I,),(I,)
+    inner = w_in.shape[-1] // 2
+    nstate = a_log.shape[-1]
+    width = conv_w.shape[0]
+
+    xz = x @ w_in
+    xi, z = jnp.split(xz, 2, axis=-1)             # (B,S,I) each
+
+    if state is None:
+        conv_state = jnp.zeros((b, width - 1, inner), x.dtype)
+        ssm_state = jnp.zeros((b, inner, nstate), jnp.float32)
+    else:
+        conv_state, ssm_state = state
+
+    # depthwise causal conv over sequence
+    xpad = jnp.concatenate([conv_state, xi], axis=1)  # (B, S+W-1, I)
+    idx = jnp.arange(s)[:, None] + jnp.arange(width)[None, :]  # (S, W)
+    windows = xpad[:, idx]                         # (B, S, W, I)
+    xc = jnp.einsum("bswi,wi->bsi", windows, conv_w)
+    xc = jax.nn.silu(xc)
+    new_conv_state = xpad[:, s:]                   # last W-1 inputs
+
+    bc = xc @ w_bc                                 # (B,S,2N)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)         # (B,S,N)
+    dt = jax.nn.softplus(xc * w_dt + dt_bias)      # (B,S,I) elementwise dt
+    a = -jnp.exp(a_log.astype(jnp.float32))        # (I,N)
+
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * a)            # (B,S,I,N)
+    dBx = (dt * xc)[..., None].astype(jnp.float32) * bmat[:, :, None, :].astype(jnp.float32)
+
+    if decode:  # S == 1 single step
+        h = dA[:, 0] * ssm_state + dBx[:, 0]       # (B,I,N)
+        y = jnp.einsum("bin,bsn->bsi", h, cmat.astype(jnp.float32))
+        new_ssm_state = h
+    else:
+        from repro.kernels import ops
+        from repro.models import runmode
+
+        if ops.resolve_impl(impl) != "ref":
+            # fused Pallas selective scan: the (B,S,I,N) discretized state
+            # tensors never leave VMEM (the 16x memory amplifier behind
+            # hymba's worst-in-zoo roofline fraction)
+            y, new_ssm_state = ops.selective_scan(
+                dt, xc, bmat, cmat, a, ssm_state, impl=impl
+            )
+        else:
+            y, new_ssm_state = mamba_scan_chunked(
+                dA, dBx, cmat, ssm_state, chunk=runmode.mamba_chunk(s)
+            )
+
+    y = y.astype(x.dtype)
+    y = y + xc * d_skip
+    y = y * jax.nn.silu(z)
+    return y @ w_out, (new_conv_state, new_ssm_state)
+
+
+# -------------------------------------------------------------------- xLSTM
+def mlstm_recurrent_step(c, n, m, q, k, v, i_raw, f_raw):
+    """One stabilized mLSTM step (reference semantics).
+
+    c: (B,H,dk,dv), n: (B,H,dk), m: (B,H); q,k,v: (B,H,dk|dv); gates: (B,H).
+    """
+    log_f = -jax.nn.softplus(-f_raw)               # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g[..., None, None] * c + i_g[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), jnp.exp(-m_new))
+    h = jnp.einsum("bhkv,bhk->bhv", c_new, q) / denom[..., None]
+    return c_new, n_new, m_new, h
+
+
+def mlstm_sequence(q, k, v, i_raw, f_raw, state=None, chunk: int = 256):
+    """Chunkwise-parallel stabilized mLSTM (official xLSTM parallel form).
+
+    q,k,v: (B,S,H,dk|dv); gates i_raw/f_raw: (B,S,H). Only chunk-boundary
+    states are materialized (O(S/chunk) memory); within-chunk outputs use the
+    quadratic attention-like formulation. State is the *stabilized* triple
+    (C_hat = C*exp(-m), n_hat = n*exp(-m), m), matching
+    ``mlstm_recurrent_step`` (the decode/reference path).
+    Returns (h (B,S,H,dv), final_state).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+    scale = 1.0 / math.sqrt(dk)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    def to_chunks(x):
+        return x.reshape((b, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        c_hat, n_hat, m_prev = carry           # (B,H,dk,dv), (B,H,dk), (B,H)
+        qc, kc, vc, ic, fc = [x.astype(jnp.float32) for x in inp]  # (B,L,H,*)
+        qc = qc * scale
+        log_f = -jax.nn.softplus(-fc)           # (B,L,H)
+        bcum = jnp.cumsum(log_f, axis=1)        # (B,L,H)
+        # intra-chunk exponents w[t,s] = b_t - b_s + i_s   (s <= t)
+        w = bcum[:, :, None, :] - bcum[:, None, :, :] + ic[:, None, :, :]  # (B,L,L,H)
+        w = jnp.where(causal[None, :, :, None], w, -jnp.inf)
+        a = bcum + m_prev[:, None, :]           # (B,L,H) initial-state exponent
+        m_t = jnp.maximum(jnp.max(w, axis=2), a)  # (B,L,H)
+        sc = jnp.exp(w - m_t[:, :, None, :])    # (B,L,L,H); exp(-inf)=0 on mask
+        e0 = jnp.exp(a - m_t)                   # (B,L,H)
+        qk = jnp.einsum("blhd,bshd->blsh", qc, kc) * sc
+        h_num = (jnp.einsum("blh,blhd,bhdv->blhv", e0, qc, c_hat)
+                 + jnp.einsum("blsh,bshv->blhv", qk, vc))
+        n_vec = (jnp.einsum("blh,bhd->blhd", e0, n_hat)
+                 + jnp.einsum("blsh,bshd->blhd", sc, kc))
+        denom = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", qc, n_vec)),
+                            jnp.exp(-m_t))
+        h_out = h_num / denom[..., None]
+        # chunk-final stabilized state
+        b_last = bcum[:, -1]                    # (B,H)
+        w_last = b_last[:, None, :] - bcum + ic  # (B,L,H) coefficient exponents
+        m_new = jnp.maximum(b_last + m_prev, jnp.max(w_last, axis=1))
+        coef = jnp.exp(w_last - m_new[:, None, :])
+        carry_c = (jnp.exp(b_last + m_prev - m_new)[:, :, None, None] * c_hat
+                   + jnp.einsum("bsh,bshd,bshv->bhdv", coef, kc, vc))
+        carry_n = (jnp.exp(b_last + m_prev - m_new)[:, :, None] * n_hat
+                   + jnp.einsum("bsh,bshd->bhd", coef, kc))
+        return (carry_c, carry_n, m_new), h_out
+
+    xs = tuple(to_chunks(x) for x in (q, k, v, i_raw, f_raw))
+    (c, n, m), hs = jax.lax.scan(body, (c0, n0, m0), xs)
+    hs = hs.swapaxes(0, 1).reshape(b, s, h, dv)
+    return hs.astype(q.dtype), (c, n, m)
+
+
+def slstm_sequence(x_gates, r_weights, state=None):
+    """sLSTM with per-head recurrent gating.
+
+    x_gates: (B,S,4,H,dh) precomputed input contributions for (i,f,z,o);
+    r_weights: (4,H,dh,dh) recurrent weights. Returns (h (B,S,H,dh), state).
+    """
+    b, s, _, h, dh = x_gates.shape
+    if state is None:
+        hh = jnp.zeros((b, h, dh), jnp.float32)
+        cc = jnp.zeros((b, h, dh), jnp.float32)
+        nn = jnp.ones((b, h, dh), jnp.float32)
+        mm = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        hh, cc, nn, mm = state
+    rw = r_weights.astype(jnp.float32)
+
+    def step(carry, xg):
+        hh, cc, nn, mm = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", hh, rw)       # (4,B,H,dh)
+        i_raw = xg[:, 0].astype(jnp.float32) + rec[0]
+        f_raw = xg[:, 1].astype(jnp.float32) + rec[1]
+        z = jnp.tanh(xg[:, 2].astype(jnp.float32) + rec[2])
+        o = jax.nn.sigmoid(xg[:, 3].astype(jnp.float32) + rec[3])
+        log_f = -jax.nn.softplus(-f_raw)
+        m_new = jnp.maximum(log_f + mm, i_raw)
+        i_g = jnp.exp(i_raw - m_new)
+        f_g = jnp.exp(log_f + mm - m_new)
+        c_new = f_g * cc + i_g * z
+        n_new = f_g * nn + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (hh, cc, nn, mm), hs = jax.lax.scan(jax.checkpoint(step), (hh, cc, nn, mm),
+                                        x_gates.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(x_gates.dtype), (hh, cc, nn, mm)

@@ -1,0 +1,769 @@
+"""Unified architecture zoo: init / train-forward / prefill / decode for all
+assigned families.
+
+families (``ArchConfig.family``):
+  dense   — GQA transformer (qwen2.5-14b, granite-3-8b, qwen2-1.5b, glm4-9b)
+  moe     — MoE FFN (llama4-scout top-1+shared, dbrx top-4, qwen3-30b-a3b)
+  hybrid  — parallel attention + Mamba heads per block (hymba-1.5b)
+  ssm     — alternating mLSTM/sLSTM blocks, no KV cache (xlstm-1.3b)
+  vlm     — dense backbone, stub patch embeddings prepended (internvl2-76b)
+  audio   — encoder-decoder, stub frame embeddings (whisper-tiny)
+
+Design rules:
+* params are pytrees with layer-stacked leaves; layers execute under
+  ``lax.scan`` so the lowered HLO stays O(1) in depth (critical for the
+  40-cell x 2-mesh dry-run compile budget);
+* attention and MoE matmuls route through ``repro.kernels.ops`` so the
+  Pallas kernels slot in on TPU without touching model code;
+* decode carries an explicit cache pytree — KV ring caches for attention
+  families, recurrent states for SSM/hybrid — and per-sequence positions,
+  so the rollout engine can interrupt/migrate/re-prefill trajectories
+  (StaleFlow partial rollout) by exporting tokens only;
+* modality frontends are stubs per the assignment: ``vlm`` consumes
+  precomputed patch embeddings, ``audio`` precomputed frame embeddings.
+
+Documented simplifications (systems-equivalent; DESIGN.md §4): GLM partial
+rotary -> full rotary; whisper GELU MLP -> SwiGLU and learned positions ->
+sinusoidal; hymba meta tokens omitted; xLSTM block internals reduced to
+q/k/v + gates + out-proj (cell math follows the stabilized formulation in
+``layers.py``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.ctx import constrain
+from repro.models import runmode
+from repro.kernels import ops
+from repro.models import layers
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# =============================================================== param init
+def _norm_init(key, d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+def _attn_init(cfg: ArchConfig, key, dtype, n_heads=None, n_kv=None) -> Params:
+    h = n_heads or cfg.n_heads
+    hkv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    d = cfg.d_model
+    ks = _split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _ffn_init(cfg: ArchConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = _split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, f), dtype),
+        "w_up": _dense_init(ks[1], (d, f), dtype),
+        "w_down": _dense_init(ks[2], (f, d), dtype),
+    }
+
+
+def _moe_init(cfg: ArchConfig, key, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = _split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e), dtype),
+        "we_gate": _dense_init(ks[1], (e, d, f), dtype, fan_in=d),
+        "we_up": _dense_init(ks[2], (e, d, f), dtype, fan_in=d),
+        "we_down": _dense_init(ks[3], (e, f, d), dtype, fan_in=f),
+    }
+    if cfg.shared_expert:
+        sk = _split(ks[4], 3)
+        p["ws_gate"] = _dense_init(sk[0], (d, f), dtype)
+        p["ws_up"] = _dense_init(sk[1], (d, f), dtype)
+        p["ws_down"] = _dense_init(sk[2], (f, d), dtype)
+    return p
+
+
+def _mamba_init(cfg: ArchConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    w = cfg.ssm_conv
+    ks = _split(key, 5)
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * inner), dtype),
+        "w_out": _dense_init(ks[1], (inner, d), dtype),
+        "conv_w": _dense_init(ks[2], (w, inner), dtype, fan_in=w),
+        "w_bc": _dense_init(ks[3], (inner, 2 * n), dtype),
+        "w_dt": (jax.random.uniform(ks[4], (inner,)) * 0.1).astype(dtype),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (inner, n))
+        ).astype(dtype),
+        "d_skip": jnp.ones((inner,), dtype),
+        "dt_bias": jnp.full((inner,), -4.6, dtype),  # softplus^-1(0.01)
+    }
+
+
+def _mlstm_init(cfg: ArchConfig, key, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = _split(key, 6)
+    return {
+        "norm": _norm_init(ks[0], d, dtype),
+        "wq": _dense_init(ks[1], (d, h * hd), dtype),
+        "wk": _dense_init(ks[2], (d, h * hd), dtype),
+        "wv": _dense_init(ks[3], (d, h * hd), dtype),
+        "w_if": _dense_init(ks[4], (d, 2 * h), dtype),
+        "wo": _dense_init(ks[5], (h * hd, d), dtype),
+    }
+
+
+def _slstm_init(cfg: ArchConfig, key, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = _split(key, 3)
+    return {
+        "norm": _norm_init(ks[0], d, dtype),
+        "w_gates": _dense_init(ks[1], (d, 4 * h * hd), dtype),
+        "r_weights": _dense_init(
+            ks[2], (4, h, hd, hd), dtype, fan_in=hd
+        ),
+        "wo": _dense_init(jax.random.fold_in(ks[2], 1), (h * hd, d), dtype),
+    }
+
+
+def _block_init(cfg: ArchConfig, key, dtype) -> Params:
+    """One transformer block (dense / moe / vlm / hybrid / audio-decoder)."""
+    ks = _split(key, 4)
+    p: Params = {"attn_norm": _norm_init(ks[0], cfg.d_model, dtype)}
+    p.update(_attn_init(cfg, ks[1], dtype))
+    p["ffn_norm"] = _norm_init(ks[2], cfg.d_model, dtype)
+    if cfg.family == "moe":
+        p.update(_moe_init(cfg, ks[3], dtype))
+    else:
+        p.update(_ffn_init(cfg, ks[3], dtype))
+    if cfg.family == "hybrid":
+        p["mamba"] = _mamba_init(cfg, jax.random.fold_in(key, 99), dtype)
+    if cfg.cross_attention:
+        ck = jax.random.fold_in(key, 7)
+        p["cross_norm"] = _norm_init(ck, cfg.d_model, dtype)
+        p["cross"] = _attn_init(cfg, ck, dtype, n_kv=cfg.n_heads)
+    return p
+
+
+def _stacked(fn, key, n):
+    """Initialize ``n`` layers with independent keys, stacking the leaves."""
+    keys = jnp.stack(jax.random.split(key, n))
+    return jax.vmap(fn)(keys)
+
+
+def xlstm_period(cfg: ArchConfig) -> int:
+    """sLSTM placement period: 1 sLSTM per ``p`` blocks (xLSTM 7:1 ratio for
+    48-layer configs; 3:1 for the reduced 4-layer smoke variant)."""
+    for p in (8, 4, 2):
+        if cfg.n_layers % p == 0 and cfg.n_layers >= p:
+            return p
+    return 1
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    ks = _split(key, 8)
+    d, v = cfg.d_model, cfg.padded_vocab
+    params: Params = {
+        "embed": _dense_init(ks[0], (v, d), dtype, fan_in=d),
+        "final_norm": _norm_init(ks[1], d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(ks[2], (d, v), dtype)
+
+    if cfg.family == "ssm":
+        p = xlstm_period(cfg)
+        groups = cfg.n_layers // p
+        params["mlstm"] = _stacked(
+            lambda k: _stacked(lambda k2: _mlstm_init(cfg, k2, dtype), k, p - 1),
+            ks[3],
+            groups,
+        )
+        params["slstm"] = _stacked(
+            lambda k: _slstm_init(cfg, k, dtype), ks[4], groups
+        )
+    else:
+        params["blocks"] = _stacked(
+            lambda k: _block_init(cfg, k, dtype), ks[3], cfg.n_layers
+        )
+
+    if cfg.encoder_layers:
+        enc_cfg = cfg  # same width; bidirectional attention, no cross
+        params["enc_blocks"] = _stacked(
+            lambda k: {
+                "attn_norm": _norm_init(k, d, dtype),
+                **_attn_init(enc_cfg, k, dtype, n_kv=cfg.n_heads),
+                "ffn_norm": _norm_init(jax.random.fold_in(k, 1), d, dtype),
+                **_ffn_init(enc_cfg, jax.random.fold_in(k, 2), dtype),
+            },
+            ks[5],
+            cfg.encoder_layers,
+        )
+        params["enc_final_norm"] = _norm_init(ks[6], d, dtype)
+    return params
+
+
+# ============================================================ forward pieces
+def _project_qkv(x, p, cfg: ArchConfig, positions, *, rope=True, n_heads=None,
+                 n_kv=None):
+    b, s, _ = x.shape
+    h = n_heads or cfg.n_heads
+    hkv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(b, s, h, hd), "heads")
+    k = constrain(k.reshape(b, s, hkv, hd), "heads")
+    v = constrain(v.reshape(b, s, hkv, hd), "heads")
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_train(x, p, cfg: ArchConfig, positions, *, window=0, causal=True,
+                impl=None):
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window, impl=impl)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def _ffn(x, p):
+    return layers.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _moe(x, p, cfg: ArchConfig, impl=None):
+    def expert_fn(xin):  # (B, E, C, D) -> (B, E, C, D) via grouped matmul
+        b, e, c, d = xin.shape
+        flat = xin.transpose(1, 0, 2, 3).reshape(e, b * c, d)
+        out = ops.moe_expert_ffn(
+            flat, p["we_gate"], p["we_up"], p["we_down"], impl=impl
+        )
+        return out.reshape(e, b, c, d).transpose(1, 0, 2, 3)
+
+    out, aux = layers.moe_ffn(
+        x,
+        p["router"],
+        p["we_gate"],
+        p["we_up"],
+        p["we_down"],
+        top_k=cfg.top_k,
+        capacity_factor=cfg.moe_capacity_factor,
+        expert_fn=expert_fn,
+    )
+    if cfg.shared_expert:
+        out = out + layers.swiglu(x, p["ws_gate"], p["ws_up"], p["ws_down"])
+    return out, aux
+
+
+def _block_train(cfg: ArchConfig, x, p, positions, *, window=0, impl=None,
+                 enc_out=None):
+    """One block, training/prefill form. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    attn = _attn_train(h, p, cfg, positions, window=window, impl=impl)
+    if cfg.family == "hybrid":
+        ssm, _ = layers.mamba_block(h, p["mamba"], impl=impl)
+        x = x + 0.5 * (attn + ssm)
+    else:
+        x = x + attn
+    if enc_out is not None and "cross" in p:
+        hc = layers.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        b, s, _ = hc.shape
+        q = (hc @ p["cross"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        kk = (enc_out @ p["cross"]["wk"]).reshape(b, -1, cfg.n_heads, cfg.hd)
+        vv = (enc_out @ p["cross"]["wv"]).reshape(b, -1, cfg.n_heads, cfg.hd)
+        o = ops.flash_attention(q, kk, vv, causal=False, impl=impl)
+        x = x + o.reshape(b, s, -1) @ p["cross"]["wo"]
+    h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = _moe(h2, p, cfg, impl=impl)
+    else:
+        f = _ffn(h2, p)
+    return x + f, aux
+
+
+def _mlstm_forward(cfg: ArchConfig, x, p, state=None, *, decode=False):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xin = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (xin @ p["wq"]).reshape(b, s, h, hd)
+    k = (xin @ p["wk"]).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = (xin @ p["wv"]).reshape(b, s, h, hd)
+    gates = (xin @ p["w_if"]).reshape(b, s, 2, h)
+    i_raw, f_raw = gates[:, :, 0], gates[:, :, 1]
+    if decode:
+        c, n, m = state
+        c2, n2, m2, out = layers.mlstm_recurrent_step(
+            c, n, m, q[:, 0] / math.sqrt(hd), k[:, 0], v[:, 0],
+            i_raw[:, 0].astype(jnp.float32), f_raw[:, 0].astype(jnp.float32),
+        )
+        out = out[:, None].astype(x.dtype)
+        new_state = (c2, n2, m2)
+    else:
+        out, new_state = layers.mlstm_sequence(q, k, v, i_raw, f_raw, state)
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return x + y, new_state
+
+
+def _slstm_forward(cfg: ArchConfig, x, p, state=None):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xin = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    xg = (xin @ p["w_gates"]).reshape(b, s, 4, h, hd)
+    out, new_state = layers.slstm_sequence(xg, p["r_weights"], state)
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return x + y, new_state
+
+
+def _logits(cfg: ArchConfig, params, x):
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out = x @ head
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padded vocab columns out of the softmax
+        col = jax.lax.broadcasted_iota(jnp.int32, out.shape, out.ndim - 1)
+        out = jnp.where(col < cfg.vocab_size, out, -1e9)
+    if out.ndim == 3:
+        out = constrain(out, "logits")
+    return out
+
+
+def _encode(cfg: ArchConfig, params, frames, impl=None):
+    """Whisper-style encoder over stub frame embeddings (B, Senc, D)."""
+    senc = frames.shape[1]
+    pos = _sinusoidal(senc, cfg.d_model, frames.dtype)
+    x = frames + pos[None]
+
+    def body(x, p):
+        # bidirectional attention, full heads (no GQA on the encoder)
+        h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        b, s, _ = h.shape
+        q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        k = (h @ p["wk"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        v = (h @ p["wv"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        o = ops.flash_attention(q, k, v, causal=False, impl=impl)
+        x = x + o.reshape(b, s, -1) @ p["wo"]
+        h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        return x + _ffn(h2, p), None
+
+    x, _ = jax.lax.scan(
+        body, x, params["enc_blocks"], unroll=runmode.inner_unroll()
+    )
+    return layers.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _sinusoidal(length: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ================================================================== forward
+def forward(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,                       # (B, S) int32
+    *,
+    frontend_embeds: Optional[jax.Array] = None,  # vlm patches / audio frames
+    impl: Optional[str] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence training forward. Returns (logits (B,S,V), aux)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+
+    enc_out = None
+    if cfg.family == "audio":
+        assert frontend_embeds is not None, "audio needs stub frame embeddings"
+        enc_out = _encode(cfg, params, frontend_embeds.astype(x.dtype), impl=impl)
+        x = x + _sinusoidal(s, cfg.d_model, x.dtype)[None]
+        positions = jnp.arange(s)
+    elif cfg.family == "vlm":
+        assert frontend_embeds is not None, "vlm needs stub patch embeddings"
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])
+    else:
+        positions = jnp.arange(s)
+
+    window = (
+        cfg.sliding_window
+        if cfg.sliding_window and x.shape[1] > cfg.long_context_threshold
+        else 0
+    )
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        p_period = xlstm_period(cfg)
+
+        def group_body(x, gp):
+            def m_body(x, mp):
+                x, _ = _mlstm_forward(cfg, x, mp)
+                return x, None
+
+            x, _ = jax.lax.scan(
+                m_body, x, gp["mlstm"], unroll=runmode.inner_unroll()
+            )
+            x, _ = _slstm_forward(cfg, x, gp["slstm"])
+            return x, None
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        x, _ = jax.lax.scan(
+            body, x, {"mlstm": params["mlstm"], "slstm": params["slstm"]},
+            unroll=runmode.outer_unroll(),
+        )
+    else:
+        def body(carry, p):
+            x, aux = carry
+            x, a = _block_train(
+                cfg, x, p, positions, window=window, impl=impl, enc_out=enc_out
+            )
+            x = constrain(x, "boundary")  # SP: boundary activations
+            return (x, aux + a), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(
+            body_fn, (x, aux_total), params["blocks"],
+            unroll=runmode.outer_unroll(),
+        )
+
+    if cfg.family == "vlm":
+        x = x[:, -s:]  # only text positions produce logits
+    logits = _logits(cfg, params, x)
+    return logits, {"moe_aux": aux_total}
+
+
+# ==================================================================== cache
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32
+) -> Cache:
+    """Decode cache sized for ``max_len`` total positions (prompt+generated).
+
+    Sub-quadratic archs cap their attention cache at the sliding window once
+    ``max_len`` crosses the long-context threshold; SSM state is O(1).
+    NOTE: for ``vlm`` archs, ``max_len`` must include ``cfg.n_patches``
+    (patch embeddings occupy the leading cache positions).
+    """
+    cache: Cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    l, hkv, hd, h = cfg.n_layers, cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    if cfg.family == "ssm":
+        p = xlstm_period(cfg)
+        g = cfg.n_layers // p
+        dk = hd
+        cache["mlstm"] = (
+            jnp.zeros((g, p - 1, batch, h, dk, dk), jnp.float32),
+            jnp.zeros((g, p - 1, batch, h, dk), jnp.float32),
+            jnp.full((g, p - 1, batch, h), -1e30, jnp.float32),
+        )
+        cache["slstm"] = (
+            jnp.zeros((g, batch, h, hd), jnp.float32),
+            jnp.zeros((g, batch, h, hd), jnp.float32),
+            jnp.ones((g, batch, h, hd), jnp.float32),
+            jnp.zeros((g, batch, h, hd), jnp.float32),
+        )
+        return cache
+
+    kv_len = max_len
+    if cfg.sliding_window and max_len > cfg.long_context_threshold:
+        kv_len = cfg.sliding_window
+    cache["k"] = jnp.zeros((l, batch, kv_len, hkv, hd), dtype)
+    cache["v"] = jnp.zeros((l, batch, kv_len, hkv, hd), dtype)
+
+    if cfg.family == "hybrid":
+        inner = cfg.ssm_expand * cfg.d_model
+        cache["conv"] = jnp.zeros((l, batch, cfg.ssm_conv - 1, inner), dtype)
+        cache["ssm"] = jnp.zeros((l, batch, inner, cfg.ssm_state), jnp.float32)
+    if cfg.family == "audio":
+        cache["xk"] = jnp.zeros((l, batch, cfg.encoder_seq, h, hd), dtype)
+        cache["xv"] = jnp.zeros((l, batch, cfg.encoder_seq, h, hd), dtype)
+    return cache
+
+
+# ================================================================== prefill
+def prefill(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,                 # (B, S) right-padded prompts
+    prompt_lengths: jax.Array,         # (B,) valid lengths
+    cache: Cache,
+    *,
+    frontend_embeds: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Cache]:
+    """Run the prompt through the model, filling the cache. Returns
+    (next-token logits (B, V) at each prompt's last valid position, cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    offset = 0
+
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _encode(cfg, params, frontend_embeds.astype(x.dtype), impl=impl)
+        x = x + _sinusoidal(s, cfg.d_model, x.dtype)[None]
+    elif cfg.family == "vlm":
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        offset = frontend_embeds.shape[1]
+
+    positions = jnp.arange(x.shape[1])
+    seq = x.shape[1]
+
+    if cfg.family == "ssm":
+        def group_body(x, gp_and_state):
+            gp, (mc, sc) = gp_and_state
+
+            def m_body(x, pstate):
+                mp, st = pstate
+                x, new_st = _mlstm_forward(cfg, x, mp, state=st)
+                return x, new_st
+
+            x, new_m = jax.lax.scan(
+                m_body, x, (gp["mlstm"], mc), unroll=runmode.inner_unroll()
+            )
+            x, new_s = _slstm_forward(cfg, x, gp["slstm"], state=sc)
+            return x, (new_m, new_s)
+
+        mc0 = cache["mlstm"]
+        sc0 = cache["slstm"]
+        # regroup stacked states as scan xs
+        x, states = jax.lax.scan(
+            group_body,
+            x,
+            (
+                {"mlstm": params["mlstm"], "slstm": params["slstm"]},
+                (mc0, sc0),
+            ),
+            unroll=runmode.outer_unroll(),
+        )
+        new_cache = dict(cache)
+        new_cache["mlstm"], new_cache["slstm"] = states
+        new_cache["pos"] = prompt_lengths.astype(jnp.int32)
+        # NOTE: recurrent prefill processes padded positions too; for the
+        # smoke/runtime path all prompts in a batch share a length (the
+        # rollout engine pads per-instance batches to a common prompt len).
+        idx = prompt_lengths - 1
+        last = x[jnp.arange(b), idx]
+        return _logits(cfg, params, last), new_cache
+
+    kv_len = cache["k"].shape[2]  # static (shape-derived), never a tracer
+    window = cfg.sliding_window if kv_len == cfg.sliding_window else 0
+
+    def body(carry, pc):
+        x, aux = carry
+        p, (k_slot, v_slot, conv_slot, ssm_slot, xk_slot, xv_slot) = pc
+        h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(h, p, cfg, positions)
+        o = ops.flash_attention(q, k, v, causal=True, window=window, impl=impl)
+        attn = o.reshape(b, seq, -1) @ p["wo"]
+        new_conv, new_ssm = conv_slot, ssm_slot
+        if cfg.family == "hybrid":
+            ssm_out, (new_conv, new_ssm) = layers.mamba_block(
+                h, p["mamba"], impl=impl
+            )
+            x = x + 0.5 * (attn + ssm_out)
+        else:
+            x = x + attn
+        new_xk, new_xv = xk_slot, xv_slot
+        if enc_out is not None and "cross" in p:
+            hc = layers.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+            qc = (hc @ p["cross"]["wq"]).reshape(b, seq, cfg.n_heads, cfg.hd)
+            new_xk = (enc_out @ p["cross"]["wk"]).reshape(
+                b, -1, cfg.n_heads, cfg.hd
+            ).astype(xk_slot.dtype)
+            new_xv = (enc_out @ p["cross"]["wv"]).reshape(
+                b, -1, cfg.n_heads, cfg.hd
+            ).astype(xv_slot.dtype)
+            oc = ops.flash_attention(qc, new_xk, new_xv, causal=False, impl=impl)
+            x = x + oc.reshape(b, seq, -1) @ p["cross"]["wo"]
+        h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            f, a = _moe(h2, p, cfg, impl=impl)
+            aux = aux + a
+        else:
+            f = _ffn(h2, p)
+        x = constrain(x + f, "boundary")  # SP: RS+AG instead of all-reduce
+        # write KV into the cache (ring-aware for windowed caches)
+        if kv_len >= seq:
+            new_k = jax.lax.dynamic_update_slice(
+                k_slot, k.astype(k_slot.dtype), (0, 0, 0, 0)
+            )
+            new_v = jax.lax.dynamic_update_slice(
+                v_slot, v.astype(v_slot.dtype), (0, 0, 0, 0)
+            )
+        else:
+            # windowed long-context: keep the last kv_len positions, placed
+            # at their ring slots (position p -> index p % kv_len) so decode
+            # continues writing consistently. Requires uniform prompt
+            # lengths within the batch (the rollout engine guarantees this).
+            shift = seq % kv_len
+            new_k = jnp.roll(k[:, -kv_len:], shift, axis=1).astype(k_slot.dtype)
+            new_v = jnp.roll(v[:, -kv_len:], shift, axis=1).astype(v_slot.dtype)
+        return (x, aux), (new_k, new_v, new_conv, new_ssm, new_xk, new_xv)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    slots = (
+        cache["k"], cache["v"],
+        cache.get("conv", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("ssm", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("xk", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("xv", jnp.zeros((cfg.n_layers, 0))),
+    )
+    (x, _), outs = jax.lax.scan(
+        body, (x, aux0), (params["blocks"], slots),
+        unroll=runmode.outer_unroll(),
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = outs[0], outs[1]
+    if cfg.family == "hybrid":
+        new_cache["conv"], new_cache["ssm"] = outs[2], outs[3]
+    if cfg.family == "audio":
+        new_cache["xk"], new_cache["xv"] = outs[4], outs[5]
+    new_cache["pos"] = (prompt_lengths + offset).astype(jnp.int32)
+
+    idx = prompt_lengths - 1 + offset
+    last = x[jnp.arange(b), idx]
+    return _logits(cfg, params, last), new_cache
+
+
+# =============================================================== decode step
+def decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,        # (B,) next input token per sequence
+    cache: Cache,
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Cache]:
+    """One autoregressive step. Returns (logits (B, V), updated cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None]          # (B, 1, D)
+    pos = cache["pos"]                            # (B,)
+
+    if cfg.family == "audio":
+        # sinusoidal positional encoding at dynamic positions
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(x.dtype)
+        x = x + pe[:, None]
+
+    if cfg.family == "ssm":
+        def group_body(x, gp_state):
+            gp, (mc, sc) = gp_state
+
+            def m_body(x, pstate):
+                mp, st = pstate
+                x, new_st = _mlstm_forward(cfg, x, mp, state=st, decode=True)
+                return x, new_st
+
+            x, new_m = jax.lax.scan(
+                m_body, x, (gp["mlstm"], mc), unroll=runmode.inner_unroll()
+            )
+            x, new_s = _slstm_forward(cfg, x, gp["slstm"], state=sc)
+            return x, (new_m, new_s)
+
+        x, states = jax.lax.scan(
+            group_body,
+            x,
+            (
+                {"mlstm": params["mlstm"], "slstm": params["slstm"]},
+                (cache["mlstm"], cache["slstm"]),
+            ),
+            unroll=runmode.outer_unroll(),
+        )
+        new_cache = dict(cache)
+        new_cache["mlstm"], new_cache["slstm"] = states
+        new_cache["pos"] = pos + 1
+        return _logits(cfg, params, x[:, 0]), new_cache
+
+    kv_len = cache["k"].shape[2]  # static (shape-derived)
+    ring = kv_len == cfg.sliding_window and bool(cfg.sliding_window)
+    write_pos = (pos % kv_len) if ring else pos
+    lengths = jnp.minimum(pos + 1, kv_len).astype(jnp.int32)
+
+    def body(x, pc):
+        p, (k_slot, v_slot, conv_slot, ssm_slot, xk_slot, xv_slot) = pc
+        h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(h, p, cfg, pos[:, None])
+        # fused attention + ring write (ops dispatch): the Pallas path
+        # writes the row in place; the XLA path lowers a one-hot select —
+        # a per-row scatter cannot be partitioned across the sharded cache
+        # sequence axis (GSPMD replicates the cache: 431 GB/chip/step
+        # observed) while the select partitions on every axis. See
+        # EXPERIMENTS.md §Perf A1/A3.
+        o, new_k, new_v = ops.decode_attention_update(
+            q[:, 0], k_slot, v_slot, k[:, 0], v[:, 0], write_pos, lengths,
+            impl=impl,
+        )
+        attn = o.reshape(b, 1, -1) @ p["wo"]
+        new_conv, new_ssm = conv_slot, ssm_slot
+        if cfg.family == "hybrid":
+            ssm_out, (new_conv, new_ssm) = layers.mamba_block(
+                h, p["mamba"], state=(conv_slot, ssm_slot), decode=True
+            )
+            x = x + 0.5 * (attn + ssm_out)
+        else:
+            x = x + attn
+        if cfg.cross_attention and xk_slot.ndim > 2:
+            hc = layers.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+            qc = (hc @ p["cross"]["wq"]).reshape(b, cfg.n_heads, cfg.hd)
+            senc = xk_slot.shape[1]
+            oc = ops.decode_attention(
+                qc, xk_slot, xv_slot,
+                jnp.full((b,), senc, jnp.int32), impl=impl,
+            )
+            x = x + oc.reshape(b, 1, -1) @ p["cross"]["wo"]
+        h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = _moe(h2, p, cfg, impl=impl)
+        else:
+            f = _ffn(h2, p)
+        return x + f, (new_k, new_v, new_conv, new_ssm, xk_slot, xv_slot)
+
+    slots = (
+        cache["k"], cache["v"],
+        cache.get("conv", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("ssm", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("xk", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("xv", jnp.zeros((cfg.n_layers, 0))),
+    )
+    x, outs = jax.lax.scan(
+        body, x, (params["blocks"], slots), unroll=runmode.outer_unroll()
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = outs[0], outs[1]
+    if cfg.family == "hybrid":
+        new_cache["conv"], new_cache["ssm"] = outs[2], outs[3]
+    new_cache["pos"] = pos + 1
+    return _logits(cfg, params, x[:, 0]), new_cache

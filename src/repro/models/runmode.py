@@ -1,0 +1,61 @@
+"""Execution-mode context for lowering.
+
+Default mode lowers the deployment-faithful program: layers under
+``lax.scan`` (O(1) HLO in depth), chunked mamba scan, chunked long-sequence
+reference attention. That program is what the memory gate measures.
+
+``roofline_mode(outer_unroll=u)`` changes lowering for COST ACCOUNTING:
+XLA's HloCostAnalysis counts a while-loop body ONCE (not x trip count), so
+the dry-run lowers twice (u=1, u=2) and linearly extrapolates
+``total = f(1) + (trip - 1) * (f(2) - f(1))`` to recover true FLOPs /
+bytes / collective totals. For that to isolate exactly one layer body:
+
+* inner loops (mLSTM stack inside an xLSTM group, whisper encoder, mamba
+  chunk scan, chunked attention) are fully unrolled/disabled in BOTH
+  passes, leaving the outer layer scan as the only trip-counted loop.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+_state = threading.local()
+
+
+def _ctx():
+    return getattr(_state, "mode", None)
+
+
+@contextmanager
+def roofline_mode(outer_unroll: int = 1):
+    prev = _ctx()
+    _state.mode = {"outer_unroll": outer_unroll}
+    try:
+        yield
+    finally:
+        _state.mode = prev
+
+
+def active() -> bool:
+    return _ctx() is not None
+
+
+def outer_unroll() -> int:
+    c = _ctx()
+    return c["outer_unroll"] if c else 1
+
+
+def inner_unroll():
+    """Inner scans: fully unrolled under roofline mode, scanned otherwise."""
+    return True if active() else 1
+
+
+def mamba_chunk(seq_len: int, default: int = 256) -> int:
+    """Roofline mode: single chunk so the selective scan is fully counted."""
+    return seq_len if active() else min(default, seq_len)
+
+
+def attention_chunked(skv: int, threshold: int = 16384) -> bool:
+    """Long-KV reference attention runs chunked... except under roofline
+    mode, where the unchunked einsum keeps all FLOPs visible."""
+    return (not active()) and skv >= threshold

@@ -1,0 +1,37 @@
+"""Rule-based verifiable reward (paper's reward phase, §2.1).
+
+CPU-only, stateless: score = 1.0 iff the decoded response begins with the
+exact expected answer (everything after '=' up to EOS). Mirrors the
+verifiable-reward setting (DAPO-Math / AIME) at toy scale. The reward
+server in ``repro.runtime`` wraps this with a worker pool and (optionally)
+a simulated verification latency so the overlap behavior of the
+disaggregated architecture is observable in benchmarks.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.data import tokenizer as tok
+
+
+def verify_arithmetic(response_ids: List[int], answer: str) -> float:
+    text = tok.decode(response_ids)
+    text = text.strip()
+    if not text:
+        return 0.0
+    # accept the exact answer, optionally followed by whitespace/EOS garbage
+    candidate = text.split()[0] if text.split() else ""
+    return 1.0 if candidate == answer else 0.0
+
+
+class RewardModel:
+    """Pluggable scorer: rule-based by default; subclass for other tasks."""
+
+    def __init__(self, answer_lookup):
+        self._lookup = answer_lookup  # prompt_ids -> answer string
+
+    def score(self, prompt_ids: List[int], response_ids: List[int]) -> float:
+        answer = self._lookup(prompt_ids)
+        if answer is None:
+            return 0.0
+        return verify_arithmetic(response_ids, answer)

@@ -1,0 +1,42 @@
+"""Advantage estimation for group-sampled RL (GRPO / DAPO, §2.1).
+
+Group-relative advantages: for a group G of responses to one prompt,
+``A_i = (r_i - mean(r_G)) / (std(r_G) + eps)`` (GRPO). DAPO additionally
+*filters* zero-signal groups (all rewards identical -> no gradient), which
+is exactly the proactive-filtering hook of the staleness protocol (§4.3
+Fig. 8c): the runtime aborts such groups instead of training on them.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def group_advantages(
+    rewards: Sequence[float], group_ids: Sequence[int], *, eps: float = 1e-6,
+    normalize_std: bool = True,
+) -> np.ndarray:
+    r = np.asarray(rewards, dtype=np.float64)
+    g = np.asarray(group_ids)
+    adv = np.zeros_like(r)
+    for gid in np.unique(g):
+        m = g == gid
+        mean = r[m].mean()
+        std = r[m].std() if normalize_std else 1.0
+        adv[m] = (r[m] - mean) / (std + eps)
+    return adv.astype(np.float32)
+
+
+def zero_signal_groups(
+    rewards: Sequence[float], group_ids: Sequence[int]
+) -> List[int]:
+    """Groups whose rewards are all identical (DAPO filtering candidates)."""
+    r = np.asarray(rewards, dtype=np.float64)
+    g = np.asarray(group_ids)
+    out = []
+    for gid in np.unique(g):
+        m = g == gid
+        if np.ptp(r[m]) == 0.0:
+            out.append(int(gid))
+    return out

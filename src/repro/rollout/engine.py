@@ -1,0 +1,279 @@
+"""Rollout instance: a model replica with slot-based continuous batching.
+
+This is the JAX stand-in for a vLLM instance in the paper's rollout service
+(DESIGN.md hardware-adaptation table). One instance owns:
+
+* a parameter snapshot + its model version (``inst_version``),
+* a decode cache with ``max_slots`` rows (continuous batching: trajectories
+  occupy slots; finished/interrupted slots are reused),
+* an engine-internal waiting queue (the paper's ``wait_trajs``, Fig. 11) —
+  trajectories routed to the instance but not yet admitted to a slot
+  (KV budget or slot exhaustion), and
+* a jit'd single-row prefill + batched decode step.
+
+Command execution (the data-plane side of §5.1):
+* ``route``     — enqueue; admit into a free slot if the KV budget allows
+                  (re-)prefilling prompt+partial response (partial rollout
+                  re-prefill, Fig. 5a).
+* ``interrupt`` — release slots/queue entries; the Trajectory object already
+                  carries its generated tokens + behavior logprobs, so
+                  returning it to the TS is metadata-only.
+* ``abort``     — like interrupt, but the trajectory is discarded upstream.
+* ``pull``      — swap parameters/version. The coordinator interrupts
+                  residents first (Alg. 1), so slots are empty by contract.
+
+Behavior logprobs: every sampled token's logprob under the *generating*
+version is recorded on the trajectory — this is the importance-sampling
+denominator for staleness correction (``repro.rl.losses``) and survives
+interrupts/migrations untouched.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.snapshot import InstanceSnapshot
+from repro.core.types import Trajectory, TrajStatus
+from repro.data.tokenizer import EOS
+from repro.models import model as M
+from repro.rollout.sampler import sample
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+class RolloutInstance:
+    def __init__(
+        self,
+        inst_id: int,
+        cfg: ArchConfig,
+        params: Any,
+        version: int,
+        *,
+        max_slots: int = 4,
+        max_len: int = 256,
+        kv_bytes_per_token: float = 0.0,
+        kv_budget: float = float("inf"),
+        temperature: float = 1.0,
+        eos_id: int = EOS,
+        seed: int = 0,
+        prefill_bucket: int = 16,
+        frontend_fn: Optional[Callable[[int], jax.Array]] = None,
+    ):
+        self.inst_id = inst_id
+        self.cfg = cfg
+        self.params = params
+        self.inst_version = version
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.k5 = kv_bytes_per_token or (
+            2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
+        )
+        self.kv_budget = kv_budget
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.prefill_bucket = prefill_bucket
+        self.frontend_fn = frontend_fn
+        self._key = jax.random.PRNGKey(seed + 7919 * inst_id)
+
+        self.cache = M.init_cache(cfg, max_slots, max_len)
+        self.slots: List[Optional[Trajectory]] = [None] * max_slots
+        self.waiting: List[Trajectory] = []
+        self.complete_since_sync: set = set()
+        self._last_tokens = jnp.zeros((max_slots,), jnp.int32)
+        # telemetry
+        self.decode_steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+
+        self._jit_decode = jax.jit(partial(M.decode_step, cfg))
+        self._jit_prefill = jax.jit(partial(M.prefill, cfg))
+        self._overflow_done: List[Trajectory] = []
+
+    # ------------------------------------------------------------- geometry
+    def _slot_len(self, t: Trajectory) -> int:
+        return t.length
+
+    def kv_bytes(self) -> float:
+        return sum(
+            self.k5 * self._slot_len(t) for t in self.slots if t is not None
+        )
+
+    def n_active(self) -> int:
+        return sum(1 for t in self.slots if t is not None)
+
+    # ------------------------------------------------------------- commands
+    def route(self, traj: Trajectory) -> None:
+        traj.instance = self.inst_id
+        self.waiting.append(traj)
+        self._admit()
+
+    def interrupt(self, traj_ids) -> List[Trajectory]:
+        ids = set(traj_ids)
+        out: List[Trajectory] = []
+        for i, t in enumerate(self.slots):
+            if t is not None and t.traj_id in ids:
+                self.slots[i] = None
+                t.status = TrajStatus.INTERRUPTED
+                out.append(t)
+        keep = []
+        for t in self.waiting:
+            if t.traj_id in ids:
+                t.status = TrajStatus.INTERRUPTED
+                out.append(t)
+            else:
+                keep.append(t)
+        self.waiting = keep
+        self._admit()
+        return out
+
+    def abort(self, traj_ids) -> List[Trajectory]:
+        out = self.interrupt(traj_ids)
+        for t in out:
+            t.status = TrajStatus.ABORTED
+        return out
+
+    def pull(self, params: Any, version: int) -> None:
+        self.params = params
+        self.inst_version = version
+        self.complete_since_sync.clear()
+        # residents were interrupted by the coordinator beforehand (Alg. 1);
+        # anything left is re-prefilled lazily on its next admit
+        self._admit()
+
+    # ---------------------------------------------------------------- admit
+    def _admit(self) -> None:
+        """Move waiting trajectories into free slots within the KV budget."""
+        for i in range(self.max_slots):
+            if not self.waiting:
+                return
+            if self.slots[i] is not None:
+                continue
+            nxt = self.waiting[0]
+            need = self.k5 * min(self._slot_len(nxt) + 16, self.max_len)
+            if self.kv_bytes() + need > self.kv_budget:
+                return
+            self.waiting.pop(0)
+            self._prefill_slot(i, nxt)
+
+    # batch-axis index per cache entry (single-row scatter targets)
+    _BATCH_AXIS = {
+        "pos": 0, "k": 1, "v": 1, "conv": 1, "ssm": 1, "xk": 1, "xv": 1,
+        "mlstm": 2, "slstm": 1,
+    }
+
+    def _scatter_row(self, row_cache: Dict[str, Any], slot: int) -> None:
+        """Write a freshly prefilled single-row cache into batch ``slot``."""
+        for name, row_val in row_cache.items():
+            axis = self._BATCH_AXIS[name]
+
+            def put(full, row):
+                idx = (slice(None),) * axis + (slot,)
+                ridx = (slice(None),) * axis + (0,)
+                return full.at[idx].set(row[ridx])
+
+            self.cache[name] = jax.tree_util.tree_map(
+                put, self.cache[name], row_val
+            )
+
+    def _prefill_slot(self, slot: int, traj: Trajectory) -> None:
+        """(Re-)prefill prompt + already-generated response into ``slot``."""
+        tokens = list(traj.prompt) + list(traj.response)
+        if len(tokens) >= self.max_len - 1:
+            # no room to generate: finish immediately (engine-level cap)
+            traj.finished = True
+            traj.status = TrajStatus.GENERATED
+            self.complete_since_sync.add(traj.traj_id)
+            self._overflow_done.append(traj)
+            return
+        bucket = min(_round_up(len(tokens), self.prefill_bucket), self.max_len)
+        padded = tokens + [0] * (bucket - len(tokens))
+        row_tokens = jnp.asarray([padded], jnp.int32)
+        lengths = jnp.asarray([len(tokens)], jnp.int32)
+        fe = self.frontend_fn(1) if self.frontend_fn is not None else None
+        row_cache = M.init_cache(self.cfg, 1, self.max_len)
+        logits, row_cache = self._jit_prefill(
+            self.params, row_tokens, lengths, row_cache, frontend_embeds=fe
+        )
+        self._scatter_row(row_cache, slot)
+        self._key, sub = jax.random.split(self._key)
+        tok, blp = sample(logits, sub, temperature=self.temperature)
+        self._record_token(traj, int(tok[0]), float(blp[0]))
+        self._last_tokens = self._last_tokens.at[slot].set(tok[0])
+        self.prefill_tokens += len(tokens)
+        traj.status = TrajStatus.RUNNING
+        self.slots[slot] = traj
+
+    # ----------------------------------------------------------------- step
+    def _record_token(self, traj: Trajectory, token: int, blp: float) -> None:
+        traj.response.append(token)
+        traj.behavior_logprobs.append(blp)
+        traj.record_segment(self.inst_version, 1)
+        if token == self.eos_id or traj.n_generated >= traj.max_new_tokens:
+            traj.finished = True
+
+    def step(self) -> List[Trajectory]:
+        """One batched decode step for all active slots. Returns completed
+        trajectories (removed from their slots)."""
+        done: List[Trajectory] = []
+        if self._overflow_done:
+            done.extend(self._overflow_done)
+            self._overflow_done.clear()
+        active = [i for i, t in enumerate(self.slots) if t is not None]
+        if not active:
+            return done
+        prev_pos = self.cache["pos"]
+        logits, new_cache = self._jit_decode(
+            self.params, self._last_tokens, self.cache
+        )
+        # only active slots advance; inactive rows keep their old position
+        mask = np.zeros((self.max_slots,), bool)
+        mask[active] = True
+        mask_j = jnp.asarray(mask)
+        new_cache["pos"] = jnp.where(mask_j, new_cache["pos"], prev_pos)
+        self.cache = new_cache
+        self._key, sub = jax.random.split(self._key)
+        tokens, blps = sample(logits, sub, temperature=self.temperature)
+        self._last_tokens = jnp.where(mask_j, tokens, self._last_tokens)
+        self.decode_steps += 1
+        self.decode_tokens += len(active)
+
+        tokens_np = np.asarray(tokens)
+        blps_np = np.asarray(blps)
+        for i in active:
+            traj = self.slots[i]
+            self._record_token(traj, int(tokens_np[i]), float(blps_np[i]))
+            if traj.finished or int(self.cache["pos"][i]) >= self.max_len - 1:
+                traj.finished = True
+                traj.status = TrajStatus.GENERATED
+                self.complete_since_sync.add(traj.traj_id)
+                done.append(traj)
+                self.slots[i] = None
+        if done:
+            self._admit()
+        return done
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot(self) -> InstanceSnapshot:
+        run = {t.traj_id for t in self.slots if t is not None}
+        lengths = {
+            t.traj_id: self._slot_len(t)
+            for t in list(self.slots) + list(self.waiting)
+            if t is not None
+        }
+        return InstanceSnapshot(
+            inst_id=self.inst_id,
+            kv_cache=self.kv_bytes(),
+            run_trajs=run,
+            wait_trajs={t.traj_id for t in self.waiting},
+            complete_trajs=set(self.complete_since_sync),
+            inst_version=self.inst_version,
+            traj_lengths=lengths,
+        )

@@ -1,0 +1,33 @@
+"""Token sampling for the rollout engine."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,          # (B, V)
+    key: jax.Array,
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (tokens (B,), behavior logprobs (B,)).
+
+    Behavior logprobs are ALWAYS from the untempered distribution the policy
+    gradient targets (log softmax of raw logits at the sampled token) — the
+    temperature only shapes exploration, matching standard RLHF practice.
+    """
+    lp_raw = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if temperature <= 0.0:
+        tokens = jnp.argmax(logits, axis=-1)
+    else:
+        scaled = logits.astype(jnp.float32) / temperature
+        if top_k > 0:
+            kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        tokens = jax.random.categorical(key, scaled, axis=-1)
+    blp = jnp.take_along_axis(lp_raw, tokens[:, None], axis=-1)[:, 0]
+    return tokens.astype(jnp.int32), blp

@@ -1,0 +1,189 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+This container is CPU-only; TPU v5e is the TARGET. Wall-clock MFU cannot be
+measured, so the report derives the three roofline terms from the compiled
+module (per §Roofline of the assignment):
+
+    compute    = FLOPs_per_chip / peak_FLOPs        [s]
+    memory     = HBM_bytes_per_chip / HBM_bw        [s]
+    collective = collective_bytes_per_chip / ICI_bw [s]
+
+Sources: ``compiled.cost_analysis()`` supplies FLOPs and bytes accessed of
+the (SPMD-partitioned, hence per-chip) module; collective bytes are parsed
+from ``compiled.as_text()`` by summing operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+The dominant term is the bottleneck the perf loop (§Perf) iterates on.
+``MODEL_FLOPS`` (6·N·D dense / 6·N_active·D MoE for training; 2·N·D for
+inference) over total HLO FLOPs measures how much compiled compute is
+"useful" — catching remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# matches a typed operand like  bf16[8,128,4096]{2,1,0}  or  f32[]
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COLL_LINE_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<variant>-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=iota
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, *, n_devices: int = 1) -> Dict[str, int]:
+    """Per-device collective operand bytes, from post-partitioning HLO.
+
+    Post-optimization HLO prints operands as bare names, so sizes come from
+    the RESULT type + the replica group size:
+      all-gather:         operand = result / group
+      reduce-scatter:     operand = result * group
+      all-reduce / all-to-all / collective-permute: operand = result.
+    Async (-start/-done) pairs are counted once (at -start).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if not m or m.group("variant") == "-done":
+            continue
+        kind = m.group("kind")
+        result_bytes = sum(
+            _shape_bytes(d, dims) for d, dims in _TYPE_RE.findall(m.group("result"))
+        )
+        group = _group_size(line, n_devices)
+        if kind == "all-gather":
+            nbytes = result_bytes // max(group, 1)
+        elif kind == "reduce-scatter":
+            nbytes = result_bytes * group
+        else:
+            nbytes = result_bytes
+        out[kind] += nbytes
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops_total: float = 0.0
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap execution: bounded by the max term."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close perfect execution of the *useful* math would be to the
+        dominant-resource bound: useful_time / step_lower_bound."""
+        useful_t = (self.model_flops_total / self.chips) / self.peak_flops
+        lb = self.step_time_lower_bound
+        return useful_t / lb if lb else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_total": self.model_flops_total,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, kind: str, global_batch: int, seq_len: int) -> float:
+    """6·N_active·D train; 2·N_active·D prefill; 2·N_active·B decode."""
+    n = cfg.n_active_params
+    if kind == "train":
+        return 6.0 * n * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n * global_batch * seq_len
+    return 2.0 * n * global_batch  # decode: one token per sequence

@@ -1,0 +1,104 @@
+"""Render the §Dry-run / §Roofline markdown tables from dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun_final
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(out_dir: str) -> List[Dict]:
+    recs = []
+    for name in sorted(os.listdir(out_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(out_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}KB"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | status | compile | temp/chip | args/chip | fits 16GB | accum |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "unsupported":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip (documented) "
+                f"| - | - | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAILED** | - | - | - | - | - |"
+            )
+            continue
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('compile_s','-')}s "
+            f"| {fmt_bytes(m.get('temp_bytes', 0))} "
+            f"| {fmt_bytes(m.get('argument_bytes', 0))} "
+            f"| {'yes' if r.get('fits_hbm') else 'NO'} "
+            f"| {r.get('options', {}).get('accum_steps', 1)} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant "
+        "| useful FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok" or not r.get("roofline"):
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['t_compute']*1e3:.1f}ms "
+            f"| {rl['t_memory']*1e3:.1f}ms "
+            f"| {rl['t_collective']*1e3:.1f}ms "
+            f"| {rl['dominant']} "
+            f"| {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "unsupported")
+    fail = sum(1 for r in recs if r["status"] not in ("ok", "unsupported"))
+    fits = sum(1 for r in recs if r.get("fits_hbm"))
+    return (
+        f"cells: {ok} ok, {skip} documented skips, {fail} failed; "
+        f"{fits}/{ok} fit the 16 GB/chip gate"
+    )
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Dry-run table (both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline table (single-pod, per-chip terms)\n")
+    print(roofline_table([r for r in recs if r.get("mesh") == "single"]))
+
+
+if __name__ == "__main__":
+    main()

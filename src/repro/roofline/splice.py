@@ -1,0 +1,43 @@
+"""Splice generated dry-run/roofline tables into EXPERIMENTS.md markers.
+
+    PYTHONPATH=src python -m repro.roofline.splice results/dryrun_final
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+from repro.roofline.report import dryrun_table, load, roofline_table, summary
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final"
+    path = sys.argv[2] if len(sys.argv) > 2 else "EXPERIMENTS.md"
+    recs = load(out_dir)
+    singles = [r for r in recs if r.get("mesh") == "single"]
+
+    with open(path) as f:
+        text = f.read()
+
+    dr = (
+        f"**{summary(recs)}** (source: `{out_dir}/`)\n\n"
+        + dryrun_table(recs)
+    )
+    rl = roofline_table(singles)
+    text = re.sub(
+        r"<!-- DRYRUN_TABLE -->(.|\n)*?(?=\n## §Roofline)",
+        "<!-- DRYRUN_TABLE -->\n" + dr + "\n",
+        text,
+    )
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->(.|\n)*?(?=\n---\n\n## §Perf)",
+        "<!-- ROOFLINE_TABLE -->\n" + rl + "\n",
+        text,
+    )
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"spliced tables from {out_dir} into {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Baseline RL systems for the Fig. 13/15 comparisons.
+
+* ``SyncSim``     — VeRL-style synchronous shared-resource execution:
+                    rollout the whole step batch to completion (training
+                    waits for the longest trajectory), then train, then
+                    sync every instance. No staleness (eta = 0 by
+                    construction).
+* ``OneStepSim``  — VeRL-Pipeline-style one-step asynchrony: disaggregated;
+                    rollout generates batch k+1 while the trainer consumes
+                    batch k (exactly one version behind). Global instance
+                    sync at batch boundaries.
+* in-flight-limit (VeRL-Async / AReaL / ROLL Flash) — NOT here: per the
+  paper's own ablation (Fig. 16, all-vanilla == VeRL-Async), it is
+  ``StaleFlowSim`` with ``suite=StrategySuite.vanilla()``.
+
+All baselines share ``SimInstance`` and the heavy-tail length sampler so
+differences come from coordination, not engine modeling.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.types import Trajectory
+from repro.sim.engine import SimConfig, SimInstance, SimResult, _length_sampler
+
+
+def _make_batch(cfg: SimConfig, sampler, start_id: int) -> List[Trajectory]:
+    out = []
+    n = cfg.batch_size * cfg.group_size
+    for i in range(n):
+        t = Trajectory(
+            traj_id=start_id + i,
+            prompt=[0] * cfg.prompt_len,
+            group_id=(start_id + i) // max(cfg.group_size, 1),
+        )
+        t.sim_target_len = sampler()
+        out.append(t)
+    return out
+
+
+def _rollout_to_completion(
+    cfg: SimConfig,
+    instances: Dict[int, SimInstance],
+    batch: List[Trajectory],
+    t_start: float,
+) -> float:
+    """Round-robin assign and advance until every trajectory completes.
+    Returns the finish time (>= t_start). Within-instance waiting queues
+    model the KV budget exactly as the StaleFlow sim does."""
+    for i, traj in enumerate(batch):
+        instances[i % len(instances)].route(traj, t_start)
+    now = t_start
+    remaining = len(batch)
+    while remaining > 0:
+        for inst in instances.values():
+            done = inst.advance(now, cfg.dt)
+            remaining -= len(done)
+        now += cfg.dt
+        if now - t_start > cfg.max_sim_time:
+            raise RuntimeError("rollout did not converge")
+    return now
+
+
+def _batch_tokens(cfg: SimConfig, batch: List[Trajectory]) -> int:
+    return sum(cfg.prompt_len + t.sim_target_len for t in batch)
+
+
+class SyncSim:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        sampler = _length_sampler(cfg)
+        instances = {
+            i: SimInstance(i, cfg.cost_model, prefill_tps=cfg.prefill_tps)
+            for i in range(cfg.n_instances)
+        }
+        now, tokens, next_id = 0.0, 0, 0
+        loads = []
+        for step in range(cfg.total_steps):
+            batch = _make_batch(cfg, sampler, next_id)
+            next_id += len(batch)
+            end = _rollout_to_completion(cfg, instances, batch, now)
+            loads.append((now, {i: len(inst.running) for i, inst in instances.items()}))
+            bt = _batch_tokens(cfg, batch)
+            train = cfg.train_fixed + cfg.train_per_token * bt
+            # shared resources: training is sequential with rollout, plus a
+            # full (non-overlapped) weight sync back into the rollout engine
+            now = end + train + cfg.pull_time
+            tokens += bt
+            for inst in instances.values():
+                inst.pull(step + 1, now, 0.0)
+        return SimResult(
+            total_time=now,
+            total_tokens=tokens,
+            steps=cfg.total_steps,
+            throughput=tokens / now,
+            staleness_hists=[[0] * cfg.batch_size] * cfg.total_steps,
+            instance_load=loads,
+            sync_events=[],
+        )
+
+
+class OneStepSim:
+    def run_impl(self, cfg: SimConfig) -> SimResult:
+        sampler = _length_sampler(cfg)
+        instances = {
+            i: SimInstance(i, cfg.cost_model, prefill_tps=cfg.prefill_tps)
+            for i in range(cfg.n_instances)
+        }
+        now, tokens, next_id = 0.0, 0, 0
+        loads = []
+        pending = None  # completed batch awaiting training (one step behind)
+        for step in range(cfg.total_steps):
+            batch = _make_batch(cfg, sampler, next_id)
+            next_id += len(batch)
+            # rollout of batch k overlaps training of batch k-1
+            roll_end = _rollout_to_completion(cfg, instances, batch, now)
+            train_end = now
+            if pending is not None:
+                bt = _batch_tokens(cfg, pending)
+                train_end = now + cfg.train_fixed + cfg.train_per_token * bt
+                tokens += bt
+            # batch boundary: both sides barrier, then a global sync
+            # (rollout stays exactly one version behind)
+            now = max(roll_end, train_end) + cfg.pull_time
+            loads.append(
+                (now, {i: len(inst.running) for i, inst in instances.items()})
+            )
+            for inst in instances.values():
+                inst.pull(step + 1, now, 0.0)
+            pending = batch
+        # drain: train the final rolled-out batch with nothing to overlap
+        bt = _batch_tokens(cfg, pending)
+        now += cfg.train_fixed + cfg.train_per_token * bt
+        tokens += bt
+        return SimResult(
+            total_time=now,
+            total_tokens=tokens,
+            steps=cfg.total_steps,
+            throughput=tokens / now,
+            staleness_hists=[[1] * cfg.batch_size] * cfg.total_steps,
+            instance_load=loads,
+            sync_events=[],
+        )
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+
+    def run(self) -> SimResult:
+        return self.run_impl(self.cfg)
+
+
+SYSTEMS = {
+    "staleflow": "StaleFlowSim (suite=staleflow)",
+    "inflight": "StaleFlowSim (suite=vanilla) == VeRL-Async/AReaL/ROLL-Flash",
+    "onestep": "OneStepSim == VeRL-Pipeline",
+    "sync": "SyncSim == VeRL",
+}

@@ -1,0 +1,370 @@
+"""Discrete-event (time-stepped) cluster simulator.
+
+The control plane is REAL: the simulator drives the actual
+``StalenessManager``, ``TrajectoryServer`` and ``RolloutCoordinator`` with
+their strategies — only the data-plane timing is simulated:
+
+* decode progress per instance follows the paper's cost model (Eq. 2 with
+  the H20-profiled Table 4 coefficients by default),
+* trajectory response lengths are drawn from the heavy-tail lognormal that
+  reproduces Fig. 4's skewness,
+* training occupies a dedicated trainer for ``train_time(batch_tokens)``,
+* Pull stalls an instance for ``pull_time`` (Fig. 19 / Table 3); re-prefill
+  after routing/migration stalls for ``tokens / prefill_tps`` (Table 3:
+  prefill is 7.9% of step time),
+* Push overlaps training (Appendix A) — the new version becomes pullable
+  ``push_time`` after the optimizer step, without blocking the trainer.
+
+This is the engine behind the Fig. 13/15/16/17/18 reproductions
+(``benchmarks/``). StaleFlow vs the strict-staleness in-flight-limit
+baseline (VeRL-Async) differ ONLY in the strategy suite — matching the
+paper's observation (Fig. 16) that all-vanilla strategies reduce StaleFlow
+to VeRL-Async. Sync (VeRL) and one-step (VeRL-Pipeline) baselines live in
+``sim.baselines``.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    Abort,
+    CostModel,
+    Interrupt,
+    PAPER_H20_QWEN3_30B,
+    Pull,
+    RolloutCoordinator,
+    Route,
+    StalenessManager,
+    StrategyConfig,
+    StrategySuite,
+    TrajectoryServer,
+)
+from repro.core.snapshot import InstanceSnapshot
+from repro.core.types import Trajectory, TrajStatus
+
+
+@dataclass
+class SimConfig:
+    n_instances: int = 8
+    batch_size: int = 128            # groups per training step
+    group_size: int = 16
+    eta: int = 1
+    prompt_len: int = 2048
+    response_mean: float = 4000.0
+    response_sigma: float = 1.0
+    response_cap: int = 20000
+    total_steps: int = 8
+    seed: int = 0
+    cost_model: CostModel = field(default_factory=lambda: PAPER_H20_QWEN3_30B)
+    # training: time = train_fixed + train_per_token * batch_tokens
+    train_fixed: float = 5.0
+    train_per_token: float = 6e-6
+    pull_time: float = 7.8 / 4       # Table 3 per-step pull cost, amortized
+    push_time: float = 2.0
+    prefill_tps: float = 50000.0     # re-prefill throughput (tokens/s)
+    coordinator_interval: float = 2.0
+    dt: float = 0.5
+    suite: StrategySuite = field(default_factory=StrategySuite.staleflow)
+    strategy_cfg: StrategyConfig = field(default_factory=StrategyConfig)
+    group_redundancy: int = 0
+    batch_redundancy: int = 0
+    max_sim_time: float = 1e7
+
+
+@dataclass
+class SimResult:
+    total_time: float
+    total_tokens: int               # tokens consumed by training
+    steps: int
+    throughput: float               # tokens / s
+    staleness_hists: List[List[int]]
+    instance_load: List[Tuple[float, Dict[int, int]]]  # (t, inst -> n_run)
+    sync_events: List[Tuple[float, int, int]]          # (t, inst, version)
+    pull_total: float = 0.0
+    interrupt_count: int = 0
+    route_count: int = 0
+    train_busy: float = 0.0
+    decode_tokens: float = 0.0
+    prefill_tokens: float = 0.0
+
+
+class SimInstance:
+    """Cost-model-driven rollout replica."""
+
+    def __init__(
+        self, inst_id: int, cm: CostModel, version: int = 0,
+        prefill_tps: float = 50000.0,
+    ):
+        self.inst_id = inst_id
+        self.cm = cm
+        self.version = version
+        self._prefill_tps = prefill_tps
+        self.running: Dict[int, Trajectory] = {}
+        self.progress: Dict[int, float] = {}   # fractional generated tokens
+        self.waiting: List[Trajectory] = []
+        self.stall_until = 0.0
+        self.complete_since_sync: set = set()
+        self.decode_tokens = 0.0
+        self.prefill_tokens = 0.0
+
+    # ------------------------------------------------------------- geometry
+    def kv_bytes(self) -> float:
+        return sum(self.cm.k5 * t.length for t in self.running.values())
+
+    def _admit(self, now: float) -> None:
+        while self.waiting:
+            nxt = self.waiting[0]
+            if self.kv_bytes() + self.cm.k5 * (nxt.length + 64) > self.cm.kv_budget:
+                return
+            self.waiting.pop(0)
+            self.running[nxt.traj_id] = nxt
+            self.progress[nxt.traj_id] = float(nxt.sim_generated)
+            # re-prefill stall (prompt + already-generated tokens)
+            self.stall_until = (
+                max(self.stall_until, now) + nxt.length / self._prefill_tps
+            )
+            self.prefill_tokens += nxt.length
+
+    # ------------------------------------------------------------- commands
+    def route(self, traj: Trajectory, now: float) -> None:
+        traj.instance = self.inst_id
+        traj.status = TrajStatus.RUNNING
+        self.waiting.append(traj)
+        self._admit(now)
+
+    def remove(self, traj_ids, now: float) -> List[Trajectory]:
+        out = []
+        for tid in list(traj_ids):
+            if tid in self.running:
+                t = self.running.pop(tid)
+                t.sim_generated = int(self.progress.pop(tid))
+                out.append(t)
+            else:
+                for i, t in enumerate(self.waiting):
+                    if t.traj_id == tid:
+                        out.append(self.waiting.pop(i))
+                        break
+        self._admit(now)
+        return out
+
+    def pull(self, version: int, now: float, pull_time: float) -> None:
+        self.version = version
+        self.complete_since_sync.clear()
+        self.stall_until = max(self.stall_until, now) + pull_time
+
+    # ----------------------------------------------------------------- step
+    def advance(self, now: float, dt: float) -> List[Trajectory]:
+        """Generate tokens for ``dt`` sim-seconds; return completed trajs."""
+        if not self.running:
+            return []
+        t0 = max(now, self.stall_until)
+        avail = now + dt - t0
+        if avail <= 0:
+            return []
+        lat = self.cm.step_latency(self.kv_bytes(), len(self.running))
+        steps = avail / lat
+        done = []
+        for tid, traj in list(self.running.items()):
+            self.progress[tid] += steps
+            self.decode_tokens += steps
+            traj.sim_generated = int(self.progress[tid])
+            if self.progress[tid] >= traj.sim_target_len:
+                traj.sim_generated = traj.sim_target_len
+                traj.finished = True
+                del self.running[tid]
+                del self.progress[tid]
+                self.complete_since_sync.add(tid)
+                done.append(traj)
+        if done:
+            self._admit(now + dt)
+        return done
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot(self) -> InstanceSnapshot:
+        lengths = {t.traj_id: t.length for t in self.running.values()}
+        lengths.update({t.traj_id: t.length for t in self.waiting})
+        return InstanceSnapshot(
+            inst_id=self.inst_id,
+            kv_cache=self.kv_bytes(),
+            run_trajs=set(self.running),
+            wait_trajs={t.traj_id for t in self.waiting},
+            complete_trajs=set(self.complete_since_sync),
+            inst_version=self.version,
+            traj_lengths=lengths,
+        )
+
+
+def _length_sampler(cfg: SimConfig):
+    rng = np.random.default_rng(cfg.seed + 1)
+    mu = np.log(cfg.response_mean) - cfg.response_sigma ** 2 / 2
+
+    def sample() -> int:
+        return int(np.clip(rng.lognormal(mu, cfg.response_sigma), 16, cfg.response_cap))
+
+    return sample
+
+
+def _prompt_source(cfg: SimConfig):
+    proto = [0] * cfg.prompt_len
+    return iter(lambda: list(proto), None)  # infinite
+
+
+class StaleFlowSim:
+    """StaleFlow (or, with ``suite=vanilla``, the in-flight-limit baseline)."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        cm = cfg.cost_model
+        self.manager = StalenessManager(
+            batch_size=cfg.batch_size, eta=cfg.eta,
+            batch_redundancy=cfg.batch_redundancy,
+        )
+        self.ts = TrajectoryServer(
+            _prompt_source(cfg),
+            capacity_groups=(cfg.eta + 1) * cfg.batch_size + cfg.batch_redundancy,
+            group_size=cfg.group_size,
+            group_redundancy=cfg.group_redundancy,
+            max_new_tokens=cfg.response_cap,
+        )
+        self.coordinator = RolloutCoordinator(
+            self.manager, self.ts, cost_model=cm, cfg=cfg.strategy_cfg,
+            suite=cfg.suite, group_sampling=cfg.group_size > 1,
+        )
+        self.instances = {
+            i: SimInstance(i, cm, prefill_tps=cfg.prefill_tps)
+            for i in range(cfg.n_instances)
+        }
+        self._sample_len = _length_sampler(cfg)
+        self._completed_len: Dict[int, int] = {}
+        self.now = 0.0
+        self.trainer_busy_until = 0.0
+        self.pending_version: Optional[int] = None  # lands at push completion
+        self.version_available_at = 0.0
+        self.ps_version = 0
+        self.result = SimResult(0, 0, 0, 0.0, [], [], [])
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        self.ts.refill()
+        self._assign_targets()
+        next_coord = 0.0
+        next_load_sample = 0.0
+        while (
+            self.result.steps < cfg.total_steps and self.now < cfg.max_sim_time
+        ):
+            # 1) decode
+            for inst in self.instances.values():
+                for traj in inst.advance(self.now, cfg.dt):
+                    self._on_complete(traj)
+            # 2) coordinator cycle
+            if self.now >= next_coord:
+                self._coordinate()
+                next_coord = self.now + cfg.coordinator_interval
+            # 3) trainer
+            self._trainer()
+            # 4) refill + assign target lengths to new trajectories
+            self.ts.refill()
+            self._assign_targets()
+            # telemetry
+            if self.now >= next_load_sample:
+                self.result.instance_load.append(
+                    (self.now, {i: len(inst.running) for i, inst in self.instances.items()})
+                )
+                next_load_sample = self.now + 10.0
+            self.now += cfg.dt
+
+        r = self.result
+        r.total_time = self.now
+        r.throughput = r.total_tokens / max(self.now, 1e-9)
+        r.staleness_hists = [list(h) for h in self.manager.consumed_staleness]
+        r.decode_tokens = sum(i.decode_tokens for i in self.instances.values())
+        r.prefill_tokens = sum(i.prefill_tokens for i in self.instances.values())
+        return r
+
+    def _assign_targets(self) -> None:
+        for t in self.ts.peek():
+            if t.sim_target_len == 0:
+                t.sim_target_len = self._sample_len()
+
+    def _on_complete(self, traj: Trajectory) -> None:
+        if self.ts.get(traj.traj_id) is None:
+            return  # aborted earlier this tick (redundancy surplus)
+        self.ts.complete(traj.traj_id)
+        self._completed_len[traj.traj_id] = traj.sim_generated
+        traj.reward = 1.0  # rule-based reward, instant & overlapped
+        to_abort = self.coordinator.on_trajectory_rewarded(traj)
+        for tid in to_abort:
+            for inst in self.instances.values():
+                inst.remove([tid], self.now)
+            self.ts.drop(tid)
+
+    def _coordinate(self) -> None:
+        # new version becomes visible once Push lands
+        if self.pending_version is not None and self.now >= self.version_available_at:
+            self.ps_version = self.pending_version
+            self.pending_version = None
+        snaps = {i: inst.snapshot() for i, inst in self.instances.items()}
+        commands = self.coordinator.step(snaps, self.ps_version)
+        for cmd in commands:
+            inst = self.instances[cmd.inst]
+            if isinstance(cmd, Route):
+                for tid in cmd.traj_ids:
+                    traj = self.ts.take(tid)
+                    if traj.v_traj is None:
+                        traj.v_traj = cmd.v_traj
+                    inst.route(traj, self.now)
+                self.result.route_count += len(cmd.traj_ids)
+            elif isinstance(cmd, Interrupt):
+                for traj in inst.remove(cmd.traj_ids, self.now):
+                    self.ts.put_back(traj.traj_id)
+                self.result.interrupt_count += len(cmd.traj_ids)
+            elif isinstance(cmd, Abort):
+                inst.remove(cmd.traj_ids, self.now)
+                for tid in cmd.traj_ids:
+                    self.ts.drop(tid)
+            elif isinstance(cmd, Pull):
+                inst.pull(self.ps_version, self.now, self.cfg.pull_time)
+                self.result.pull_total += self.cfg.pull_time
+                self.result.sync_events.append(
+                    (self.now, cmd.inst, self.ps_version)
+                )
+
+    def _trainer(self) -> None:
+        if self.now < self.trainer_busy_until:
+            return
+        if not self.manager.ready():
+            return
+        ids = self.coordinator.try_consume()
+        if ids is None:
+            return
+        # batch token count: look up retired trajectories' final lengths
+        tokens = 0
+        for tid in ids:
+            # retired from registry; approximate with target lengths stored
+            # on the consumed trajectories via the groups' members
+            tokens += self.cfg.prompt_len  # prompt
+        # responses: consumed trajs are gone from the registry; track their
+        # lengths through the completion hook instead
+        tokens += self._consumed_response_tokens(ids)
+        dur = self.cfg.train_fixed + self.cfg.train_per_token * tokens
+        self.trainer_busy_until = self.now + dur
+        self.result.train_busy += dur
+        self.result.total_tokens += tokens
+        self.result.steps += 1
+        new_version = (
+            self.ps_version + 1
+            if self.pending_version is None
+            else self.pending_version + 1
+        )
+        self.pending_version = new_version
+        self.version_available_at = self.trainer_busy_until + self.cfg.push_time
+
+    def _consumed_response_tokens(self, ids) -> int:
+        # consume retires payloads from the TS registry; lengths were
+        # recorded at completion time
+        return sum(self._completed_len.pop(tid, 0) for tid in ids)

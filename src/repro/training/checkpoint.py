@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpoint/restore.
+
+Design points for 1000+-node deployments (DESIGN.md §3):
+
+* **Mesh-agnostic**: leaves are gathered to host numpy before writing, and
+  restore returns host arrays the launcher re-shards under whatever mesh the
+  *restarted* job has — a restart may change topology (elastic scaling,
+  failed pod excluded) without invalidating checkpoints.
+* **Atomic**: written to ``<dir>.tmp`` then renamed, so a crash mid-write
+  never corrupts the latest checkpoint; ``latest_step`` scans for the newest
+  complete one.
+* **Complete system state**: params + optimizer + model version + the
+  staleness-protocol state (buffer entries and train_version) + TS payloads
+  (in-flight trajectories), so an interrupted async run resumes with its
+  staleness guarantees intact rather than dropping in-flight work.
+
+Format: one ``.npz`` for array leaves (pytree paths as keys) + ``meta.json``
+(orjson) for structure and scalar state.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+import orjson
+
+
+def _flatten_with_paths(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    flat = {}
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in paths_leaves:
+        key = prefix + jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    params: Any,
+    opt_state: Any,
+    *,
+    extra_meta: Optional[Dict[str, Any]] = None,
+    protocol_state: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Write checkpoint for ``step``; returns the final path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    arrays = _flatten_with_paths(params, "params")
+    arrays.update(_flatten_with_paths(opt_state, "opt"))
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+
+    treedefs = {
+        "params_treedef": jax.tree_util.tree_structure(params),
+        "opt_treedef": jax.tree_util.tree_structure(opt_state),
+    }
+    meta = {
+        "step": step,
+        "params_keys": sorted(_flatten_with_paths(params, "params")),
+        "opt_keys": sorted(_flatten_with_paths(opt_state, "opt")),
+        "extra": extra_meta or {},
+        "protocol": protocol_state or {},
+    }
+    with open(os.path.join(tmp, "meta.json"), "wb") as f:
+        f.write(orjson.dumps(meta, option=orjson.OPT_SERIALIZE_NUMPY))
+    # treedefs are reproducible from the same code version; store reprs for
+    # sanity checking on restore
+    with open(os.path.join(tmp, "treedef.txt"), "w") as f:
+        f.write(str(treedefs["params_treedef"]) + "\n")
+        f.write(str(treedefs["opt_treedef"]) + "\n")
+
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "meta.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    params_template: Any,
+    opt_template: Any,
+    *,
+    step: Optional[int] = None,
+) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Restore into the *templates'* tree structure (host numpy leaves).
+
+    Templates come from ``init_params``/``init_opt_state`` under the NEW
+    topology — leaf shapes must match, shardings need not.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json"), "rb") as f:
+        meta = orjson.loads(f.read())
+
+    def fill(template: Any, prefix: str) -> Any:
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in paths_leaves:
+            key = prefix + jax.tree_util.keystr(p)
+            arr = arrays[key]
+            if arr.shape != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"template {np.shape(leaf)}"
+                )
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = fill(params_template, "params")
+    opt_state = fill(opt_template, "opt")
+    return params, opt_state, meta
+
+
+# ------------------------------------------------- protocol state (de)hydrate
+def dump_protocol_state(manager) -> Dict[str, Any]:
+    """Serialize a StalenessManager for exact-resume restarts."""
+    with manager._lock:
+        return {
+            "batch_size": manager.batch_size,
+            "eta": manager.eta,
+            "batch_redundancy": manager.batch_redundancy,
+            "train_version": manager.train_version,
+            "buffers": {
+                str(v): [
+                    {"state": e.state.value, "key": e.key, "version": e.version}
+                    for e in buf.entries
+                ]
+                for v, buf in manager._buffers.items()
+            },
+        }
+
+
+def load_protocol_state(state: Dict[str, Any]):
+    from repro.core.staleness import Entry, EntryState, StalenessBuffer, StalenessManager
+
+    m = StalenessManager(
+        batch_size=state["batch_size"],
+        eta=state["eta"],
+        batch_redundancy=state.get("batch_redundancy", 0),
+    )
+    m.train_version = state["train_version"]
+    for v_str, entries in state["buffers"].items():
+        v = int(v_str)
+        buf = StalenessBuffer(v_buf=v, capacity=m.capacity)
+        for slot, e in enumerate(entries):
+            entry = Entry(EntryState(e["state"]), e["key"], e["version"])
+            buf.entries[slot] = entry
+            if entry.key is not None:
+                m._index[entry.key] = (v, slot)
+        m._buffers[v] = buf
+    m.check_invariants()
+    return m

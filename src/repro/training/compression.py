@@ -1,0 +1,97 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization
+trick for scale-out; DESIGN.md §3).
+
+Two schemes, both with error feedback (the residual is carried and added to
+the next step's gradient so compression bias does not accumulate):
+
+* ``int8``  — per-tensor symmetric quantization: 4x wire reduction vs f32
+              (2x vs bf16), cheap (one amax pass).
+* ``topk``  — magnitude sparsification at rate ``k``: transmit only the
+              top-k fraction (values + indices).
+
+On the TPU target these run *inside* shard_map around the DP psum
+(``repro.distributed.collectives``): quantize -> all-reduce int32-safe
+accumulation -> dequantize. Host-level reference + error-feedback algebra
+live here so they are unit-testable without a mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- int8
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ----------------------------------------------------------------- top-k
+def sparsify_topk(x: jax.Array, rate: float) -> Tuple[jax.Array, jax.Array]:
+    """Returns (values, flat indices); keeps ceil(rate * size) entries."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * rate))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def densify_topk(values: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+# -------------------------------------------------------- error feedback
+class ErrorFeedback:
+    """Carries per-leaf compression residuals across steps."""
+
+    def __init__(self, params_template: Any):
+        self.residual = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_template
+        )
+
+    def compress_grads(
+        self, grads: Any, *, scheme: str = "int8", topk_rate: float = 0.01
+    ) -> Any:
+        """Compress+decompress grads (simulating the wire), tracking error."""
+
+        def one(g, r):
+            g32 = g.astype(jnp.float32) + r
+            if scheme == "int8":
+                q, s = quantize_int8(g32)
+                out = dequantize_int8(q, s)
+            elif scheme == "topk":
+                v, i = sparsify_topk(g32, topk_rate)
+                out = densify_topk(v, i, g32.shape)
+            else:
+                raise ValueError(scheme)
+            return out, g32 - out
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = treedef.flatten_up_to(self.residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        self.residual = treedef.unflatten([o[1] for o in outs])
+        return treedef.unflatten([o[0] for o in outs])
+
+
+def compressed_bytes(grads: Any, *, scheme: str, topk_rate: float = 0.01) -> int:
+    """Wire bytes for a compressed gradient pytree (for the roofline and
+    sync-overhead accounting)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        if scheme == "int8":
+            total += n + 4
+        elif scheme == "topk":
+            k = max(1, int(n * topk_rate))
+            total += k * (4 + 4)
+        else:
+            total += n * 4
+    return total

@@ -1,0 +1,409 @@
+"""Unit tests: cost model (Eq. 2-4), strategies (Alg. 2-5), speculative
+state (Eq. 1), TS/PS middleware, and the coordinator cycle (Alg. 1)."""
+import itertools
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Abort,
+    CostModel,
+    InstanceSnapshot,
+    Interrupt,
+    ParameterServer,
+    Pull,
+    RolloutCoordinator,
+    Route,
+    SpeculativeState,
+    StalenessManager,
+    StalenessVerifier,
+    StrategyConfig,
+    StrategySuite,
+    Trajectory,
+    TrajectoryServer,
+    migration_strategy,
+    plan_transfers,
+    routing_strategy,
+    synchronization_strategy,
+    vanilla_routing,
+)
+from repro.core.types import reset_traj_ids
+
+CM = CostModel(k1=1e-9, k2=2e-3, k3=1e-4, k4=1e-2, k5=1000.0, kv_budget=1e9)
+
+
+def snap(inst_id, *, kv=0.0, run=(), wait=(), complete=(), version=0, lengths=None):
+    return InstanceSnapshot(
+        inst_id=inst_id,
+        kv_cache=kv,
+        run_trajs=set(run),
+        wait_trajs=set(wait),
+        complete_trajs=set(complete),
+        inst_version=version,
+        traj_lengths=dict(lengths or {}),
+    )
+
+
+def traj(tid, length=100, v=None, group=-1):
+    t = Trajectory(traj_id=tid, prompt=[1] * length, group_id=group)
+    t.v_traj = v
+    return t
+
+
+# ------------------------------------------------------------- cost model
+def test_cost_model_throughput_monotonic_in_load():
+    s0 = snap(0)
+    assert CM.throughput(s0) == 0.0
+    s1 = snap(0, kv=1e6, run={1})
+    s2 = snap(0, kv=2e6, run={1, 2})
+    assert CM.throughput(s2) > CM.throughput(s1) > 0  # batching wins pre-knee
+
+
+def test_cost_model_memory_vs_compute_regime():
+    # knee at n = k2/k3 = 20
+    lat_small = CM.step_latency(0, 10)
+    lat_knee = CM.step_latency(0, 20)
+    assert lat_small == lat_knee  # memory-bound floor
+    assert CM.step_latency(0, 40) > lat_knee
+
+
+def test_marginal_gain_zero_when_budget_exceeded():
+    s = snap(0, kv=CM.kv_budget - 10.0, run={1})
+    assert CM.marginal_gain(s, length=100) == 0.0
+    assert not CM.admit(s, 100)
+
+
+def test_marginal_gain_zero_when_waiters_exist():
+    s = snap(0, wait={9})
+    assert CM.marginal_gain(s, 10) == 0.0
+
+
+def test_ideal_gain_matches_eq4():
+    l = 123
+    expect = 1.0 / (CM.k1 * CM.k5 * l + max(CM.k2, CM.k3) + CM.k4)
+    assert CM.ideal_gain(l) == pytest.approx(expect)
+
+
+# ------------------------------------------------------------- strategies
+class _AlwaysYes:
+    def can_assign(self, traj, version):
+        return True
+
+
+class _ManagerVerifier(StalenessVerifier):
+    pass
+
+
+def test_routing_prefers_emptier_instance():
+    s = {0: snap(0, kv=5e8, run=set(range(30)), lengths={i: 100 for i in range(30)}),
+         1: snap(1)}
+    routed = routing_strategy(s, [traj(100)], CM, _AlwaysYes())
+    assert routed and routed[0][0] == 1
+
+
+def test_routing_mlq_prioritizes_staler_trajectories():
+    s = {0: snap(0, version=3)}
+    ts = [traj(1, v=None), traj(2, v=3), traj(3, v=1)]
+    routed = routing_strategy(s, ts, CM, _AlwaysYes())
+    order = [t.traj_id for _, t, _ in routed]
+    assert order[:2] == [3, 2]  # v=1 first, then v=3, initial last
+
+
+def test_routing_stops_entirely_when_front_is_unroutable():
+    """Alg. 3 lines 13-15: an unroutable front trajectory halts the cycle
+    (the synchronization strategy is responsible for unblocking it)."""
+    s = {0: snap(0, version=0)}
+    ts = [traj(3, v=1), traj(1, v=None)]
+    assert routing_strategy(s, ts, CM, _AlwaysYes()) == []
+
+
+def test_routing_waterfall_withholds_when_gain_low():
+    # both instances heavily loaded -> marginal gain below mu * ideal
+    heavy = set(range(200))
+    lengths = {i: 5000 for i in heavy}
+    s = {
+        0: snap(0, kv=9.9e8, run=heavy, lengths=lengths),
+        1: snap(1, kv=9.9e8, run=set(range(200, 400)),
+                lengths={i: 5000 for i in range(200, 400)}),
+    }
+    routed = routing_strategy(s, [traj(1, length=50000)], CM, _AlwaysYes(),
+                              StrategyConfig(mu=0.9))
+    assert routed == []
+
+
+def test_routing_respects_version_floor_for_partial_trajs():
+    s = {0: snap(0, version=0), 1: snap(1, version=2)}
+    t = traj(1, v=2)  # partially generated at version 2
+    routed = routing_strategy(s, [t], CM, _AlwaysYes())
+    assert routed and routed[0][0] == 1  # only instance 1 qualifies
+
+
+def test_sync_strategy_only_when_starved_and_useful():
+    mgr = StalenessManager(batch_size=4, eta=1)
+    ver = StalenessVerifier(mgr, None)
+    # instance 0 behind PS and starved (trajectory needs version >= 1)
+    s = {0: snap(0, version=0)}
+    t = traj(1, v=1)
+    out = synchronization_strategy(s, [t], 1, CM, ver)
+    assert out == [0]
+    # not starved: an initial trajectory is routable at version 0
+    out2 = synchronization_strategy(s, [traj(2, v=None)], 1, CM, ver)
+    assert out2 == []
+    # up to date: nothing to do
+    out3 = synchronization_strategy({0: snap(0, version=1)}, [t], 1, CM, ver)
+    assert out3 == []
+
+
+def test_migration_wait_overflow():
+    cfg = StrategyConfig(phi_wait=2)
+    s = {0: snap(0, wait={1, 2, 3, 4}, lengths={1: 10, 2: 20, 3: 30, 4: 40}),
+         1: snap(1)}
+    out = migration_strategy(s, CM, cfg)
+    insts = [i for i, _ in out]
+    assert 0 in insts
+    moved = [set(ts) for i, ts in out if i == 0][0]
+    assert len(moved) == 2 and moved == {4, 3}  # longest waiters first
+
+
+def test_migration_throughput_gap():
+    cfg = StrategyConfig(phi_throughput=2.0)
+    fast = snap(0, kv=1e6, run=set(range(10)), lengths={i: 100 for i in range(10)})
+    slow = snap(1, kv=5e8, run={99}, lengths={99: 500000})
+    out = migration_strategy({0: fast, 1: slow}, CM, cfg)
+    assert out and out[0][0] == 0 and set(out[0][1]) == set(range(10))
+
+
+def test_vanilla_routing_balances_counts():
+    s = {0: snap(0, run={1, 2}), 1: snap(1)}
+    routed = vanilla_routing(s, [traj(10), traj(11), traj(12)], CM, _AlwaysYes())
+    targets = [i for i, _, _ in routed]
+    assert targets.count(1) >= 2  # emptier instance takes more
+
+
+# ------------------------------------------------------- speculative state
+def test_speculative_state_eq1_cycle():
+    p = SpeculativeState()
+    s0 = {0: snap(0)}
+    p.resync(s0)
+    assert p.validate(s0)
+    p.apply(Route(0, (1, 2)), ps_version=0)
+    assert not p.validate(s0)  # commands not yet landed
+    s1 = {0: snap(0, run={1, 2}, lengths={1: 1, 2: 1})}
+    assert p.validate(s1)
+    p.apply(Interrupt(0, (1,)), ps_version=0)
+    s2 = {0: snap(0, run={2}, lengths={2: 1})}
+    assert p.validate(s2)
+    p.apply(Pull(0), ps_version=5)
+    s3 = {0: snap(0, version=5)}
+    assert p.validate(s3)
+
+
+def test_speculative_counts_wait_and_complete():
+    p = SpeculativeState()
+    p.apply(Route(0, (1, 2, 3)), ps_version=0)
+    # one running, one preempted to wait, one completed -> still accounted
+    s = {0: snap(0, run={1}, wait={2}, complete={3}, lengths={1: 1, 2: 1})}
+    assert p.validate(s)
+
+
+# ----------------------------------------------------------------- TS / PS
+def _prompts(n=100, length=8):
+    return iter([[1] * length for _ in range(n)])
+
+
+def test_ts_refill_respects_capacity_and_groups():
+    reset_traj_ids()
+    ts = TrajectoryServer(_prompts(), capacity_groups=3, group_size=2)
+    assert ts.refill() == 3
+    assert ts.n_available == 6  # 3 groups x 2 members
+    assert ts.refill() == 0    # at capacity
+    t = ts.peek()[0]
+    ts.take(t.traj_id)
+    assert ts.n_available == 5
+    ts.put_back(t.traj_id)
+    assert ts.n_available == 6
+
+
+def test_ts_group_retirement_frees_capacity():
+    reset_traj_ids()
+    ts = TrajectoryServer(_prompts(), capacity_groups=1, group_size=2)
+    ts.refill()
+    ids = [t.traj_id for t in ts.peek()]
+    for tid in ids:
+        ts.take(tid)
+        ts.complete(tid)
+        ts.retire(tid)
+    assert ts.refill() == 1  # slot freed -> new group sampled
+
+
+def test_ps_push_pull_versioning():
+    ps = ParameterServer()
+    ps.push({"w": 1}, 0)
+    ps.push({"w": 2}, 1)
+    ps.push({"w": 0}, 0)  # stale push ignored
+    params, v = ps.pull()
+    assert v == 1 and params == {"w": 2}
+
+
+def test_ps_rw_lock_concurrent_reads():
+    ps = ParameterServer()
+    ps.push({"w": 1}, 0)
+    results = []
+    barrier = threading.Barrier(4)
+
+    def reader():
+        barrier.wait(timeout=5)
+        results.append(ps.pull()[1])
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=5)
+    assert results == [0, 0, 0, 0]
+
+
+def test_comm_plan_balances_senders():
+    required = [(f"s{i}", 100, "r", ["a", "b"]) for i in range(10)]
+    plan = plan_transfers(required, lambda s, r: 100.0)
+    lat = plan.per_sender_latency()
+    assert set(lat) == {"a", "b"}
+    assert abs(lat["a"] - lat["b"]) < 1.1 * (100 / 100.0 + 1e-4)
+    assert plan.total_bytes == 1000
+
+
+# ------------------------------------------------------------- coordinator
+def _mk_coordinator(*, batch_size=2, eta=1, group_size=1, n_prompts=64):
+    reset_traj_ids()
+    mgr = StalenessManager(batch_size=batch_size, eta=eta)
+    ts = TrajectoryServer(
+        _prompts(n_prompts),
+        capacity_groups=(eta + 1) * batch_size,
+        group_size=group_size,
+    )
+    ts.refill()
+    coord = RolloutCoordinator(
+        mgr, ts, cost_model=CM, group_sampling=group_size > 1
+    )
+    return mgr, ts, coord
+
+
+def test_coordinator_routes_and_reserves():
+    mgr, ts, coord = _mk_coordinator()
+    s = {0: snap(0), 1: snap(1)}
+    coord.spec.resync(s)
+    cmds = coord.step(s, ps_version=0)
+    routes = [c for c in cmds if isinstance(c, Route)]
+    assert routes, "expected routing commands"
+    assert mgr.in_flight() == len(routes)
+    for c in routes:
+        assert c.v_traj == 0
+
+
+def test_coordinator_rejects_unvalidated_snapshot():
+    mgr, ts, coord = _mk_coordinator()
+    s = {0: snap(0)}
+    coord.spec.resync(s)
+    coord.step(s, ps_version=0)          # issues routes -> P moves ahead
+    cmds = coord.step(s, ps_version=0)   # same (stale) snapshot again
+    assert cmds == []
+    assert coord.stats.snapshots_rejected == 1
+
+
+def test_coordinator_full_cycle_to_consume():
+    mgr, ts, coord = _mk_coordinator(batch_size=2, eta=1)
+    s = {0: snap(0)}
+    coord.spec.resync(s)
+    cmds = coord.step(s, ps_version=0)
+    routed = [c for c in cmds if isinstance(c, Route)]
+    # simulate instances finishing those trajectories
+    for c in routed:
+        for tid in c.traj_ids:
+            t = ts.take(tid)
+            t.response = [5] * 4
+            ts.complete(tid)
+            t.reward = 1.0
+            coord.on_trajectory_rewarded(t)
+    batch = coord.try_consume()
+    assert batch is not None and len(batch) == 2
+    assert mgr.train_version == 1
+
+
+def test_coordinator_group_occupy_and_surplus_abort():
+    mgr, ts, coord = _mk_coordinator(batch_size=1, eta=0, group_size=2)
+    # group redundancy via TS config is separate; emulate surplus by marking
+    # group complete after group_size rewards
+    s = {0: snap(0)}
+    coord.spec.resync(s)
+    cmds = coord.step(s, ps_version=0)
+    routed = [tid for c in cmds if isinstance(c, Route) for tid in c.traj_ids]
+    group = ts.get(routed[0]).group_id
+    members = [tid for tid in routed if ts.get(tid).group_id == group]
+    assert len(members) >= 1
+    done = 0
+    for tid in members:
+        t = ts.take(tid)
+        t.response = [5]
+        ts.complete(tid)
+        t.reward = 1.0
+        coord.on_trajectory_rewarded(t)
+        done += 1
+        if done == 2:
+            break
+    batch = coord.try_consume()
+    assert batch is not None and len(batch) == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    batch_size=st.integers(1, 3),
+    eta=st.integers(0, 2),
+    n_inst=st.integers(1, 3),
+)
+def test_coordinator_never_violates_staleness(batch_size, eta, n_inst):
+    """Drive full async cycles; the protocol invariant must hold throughout
+    and consumed staleness never exceeds eta."""
+    mgr, ts, coord = _mk_coordinator(batch_size=batch_size, eta=eta, n_prompts=200)
+    snaps = {i: snap(i) for i in range(n_inst)}
+    coord.spec.resync(snaps)
+    ps_version = 0
+    for _ in range(12):
+        cmds = coord.step(snaps, ps_version)
+        for c in cmds:
+            if isinstance(c, Route):
+                for tid in c.traj_ids:
+                    t = ts.take(tid)
+                    snaps[c.inst].run_trajs.add(tid)
+                    snaps[c.inst].traj_lengths[tid] = t.length
+                    snaps[c.inst].kv_cache += CM.k5 * t.length
+            elif isinstance(c, Interrupt):
+                snaps[c.inst].discard(c.traj_ids, bytes_per_token=CM.k5)
+                for tid in c.traj_ids:
+                    if ts.get(tid) is not None:
+                        ts.put_back(tid)
+            elif isinstance(c, Pull):
+                snaps[c.inst].inst_version = ps_version
+                snaps[c.inst].complete_trajs = set()
+            elif isinstance(c, Abort):
+                snaps[c.inst].discard(c.traj_ids, bytes_per_token=CM.k5)
+        # instances finish everything they run
+        for i, si in snaps.items():
+            for tid in sorted(si.run_trajs):
+                t = ts.get(tid)
+                if t is None:
+                    si.discard([tid], bytes_per_token=CM.k5)
+                    continue
+                t.response = [7] * 3
+                ts.complete(tid)
+                t.reward = 1.0
+                coord.on_trajectory_rewarded(t)
+                si.complete_trajs.add(tid)
+                si.run_trajs.discard(tid)
+            mgr.check_invariants()
+        batch = coord.try_consume()
+        if batch is not None:
+            ps_version += 1
+        ts.refill()
+    for hist in mgr.consumed_staleness:
+        assert all(0 <= x <= eta for x in hist)

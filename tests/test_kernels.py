@@ -1,0 +1,260 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+sweeping shapes and dtypes (CPU container; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dapo_loss import dapo_loss
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import grouped_matmul, moe_expert_ffn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(shape, dtype=jnp.float32, scale=1.0, salt=0):
+    return (jax.random.normal(jax.random.fold_in(KEY, salt), shape) * scale).astype(dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,hkv,hd,bq,bk",
+    [
+        (1, 128, 2, 2, 64, 64, 64),     # MHA
+        (2, 256, 4, 2, 64, 128, 64),    # GQA 2:1
+        (1, 256, 8, 2, 128, 64, 128),   # GQA 4:1, wide head
+        (2, 128, 4, 1, 32, 128, 128),   # MQA, single block
+    ],
+)
+def test_flash_attention_matches_ref(dtype, b, s, h, hkv, hd, bq, bk):
+    q = rnd((b, s, h, hd), dtype, salt=1)
+    k = rnd((b, s, hkv, hd), dtype, salt=2)
+    v = rnd((b, s, hkv, hd), dtype, salt=3)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_sliding_window(window):
+    q, k, v = (rnd((1, 256, 4, 64), salt=i) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          bq=64, bk=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    q, k, v = (rnd((2, 128, 2, 64), salt=i + 7) for i in range(3))
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_cross_lengths():
+    """Sq != Skv (cross attention / chunked prefill)."""
+    q = rnd((1, 64, 4, 64), salt=11)
+    k = rnd((1, 256, 4, 64), salt=12)
+    v = rnd((1, 256, 4, 64), salt=13)
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_q_offset_decode_chunk():
+    """Chunked prefill: queries continue at an offset into the KV."""
+    full_q = rnd((1, 256, 2, 64), salt=21)
+    k = rnd((1, 256, 2, 64), salt=22)
+    v = rnd((1, 256, 2, 64), salt=23)
+    out = flash_attention(full_q[:, 128:], k, v, causal=True, q_offset=128,
+                          bq=64, bk=64, interpret=True)
+    expect = ref.flash_attention_ref(full_q, k, v, causal=True)[:, 128:]
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------- decode attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,hkv,hd,bk",
+    [
+        (1, 128, 4, 4, 64, 64),
+        (3, 256, 8, 2, 64, 64),
+        (2, 512, 8, 1, 128, 128),
+        (4, 256, 25, 5, 64, 256),      # hymba-style 5:1 GQA
+    ],
+)
+def test_decode_attention_matches_ref(dtype, b, s, h, hkv, hd, bk):
+    q = rnd((b, h, hd), dtype, salt=31)
+    k = rnd((b, s, hkv, hd), dtype, salt=32)
+    v = rnd((b, s, hkv, hd), dtype, salt=33)
+    lengths = jnp.arange(1, b + 1) * (s // (b + 1)) + 1
+    out = decode_attention(q, k, v, lengths.astype(jnp.int32), bk=bk, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_update_fused(dtype):
+    """Fused decode + in-place ring write (the TPU answer to §Perf A1):
+    output must equal where-update followed by plain decode attention, and
+    the returned caches must contain exactly the written rows."""
+    from repro.kernels.decode_attention import decode_attention_update
+
+    b, s, h, hkv, hd, bk = 3, 256, 8, 2, 64, 64
+    q = rnd((b, h, hd), dtype, salt=91)
+    kc = rnd((b, s, hkv, hd), dtype, salt=92)
+    vc = rnd((b, s, hkv, hd), dtype, salt=93)
+    kn = rnd((b, hkv, hd), dtype, salt=94)
+    vn = rnd((b, hkv, hd), dtype, salt=95)
+    # append mid-cache, ring-overwrite slot 0, append at the last slot
+    write_pos = jnp.array([100, 0, 255], jnp.int32)
+    lengths = jnp.array([101, 256, 256], jnp.int32)
+    # caches are donated (in-place on TPU) — pass copies, keep originals
+    out, nk, nv = decode_attention_update(
+        q, jnp.array(kc), jnp.array(vc), kn, vn, write_pos, lengths,
+        bk=bk, interpret=True,
+    )
+    hit = (jnp.arange(s)[None, :] == write_pos[:, None])[..., None, None]
+    ek = jnp.where(hit, kn[:, None], kc)
+    ev = jnp.where(hit, vn[:, None], vc)
+    expect = ref.decode_attention_ref(q, ek, ev, lengths)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **tol(dtype)
+    )
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(ek))
+    np.testing.assert_array_equal(np.asarray(nv), np.asarray(ev))
+
+
+def test_decode_attention_full_cache():
+    b, s = 2, 256
+    q = rnd((b, 4, 64), salt=41)
+    k = rnd((b, s, 4, 64), salt=42)
+    v = rnd((b, s, 4, 64), salt=43)
+    lengths = jnp.full((b,), s, jnp.int32)
+    out = decode_attention(q, k, v, lengths, bk=64, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+# -------------------------------------------------------------------- MoE GMM
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "e,c,d,f",
+    [(2, 128, 128, 128), (4, 128, 256, 512), (8, 256, 128, 384)],
+)
+def test_grouped_matmul_matches_einsum(dtype, e, c, d, f):
+    x = rnd((e, c, d), dtype, 0.1, salt=51)
+    w = rnd((e, d, f), dtype, 0.1, salt=52)
+    out = grouped_matmul(x, w, interpret=True)
+    expect = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(out, expect, **tol(dtype))
+
+
+def test_moe_expert_ffn_matches_ref():
+    e, c, d, f = 4, 128, 256, 512
+    x = rnd((e, c, d), scale=0.1, salt=61)
+    wg = rnd((e, d, f), scale=0.05, salt=62)
+    wu = rnd((e, d, f), scale=0.05, salt=63)
+    wd = rnd((e, f, d), scale=0.05, salt=64)
+    out = moe_expert_ffn(x, wg, wu, wd, interpret=True)
+    expect = ref.moe_gmm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-4)
+
+
+# -------------------------------------------------------------- selective scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,i,n,bi", [(2, 64, 256, 16, 128), (1, 32, 128, 8, 128)])
+def test_selective_scan_matches_ref(dtype, b, s, i, n, bi):
+    """Fused Mamba recurrence: the (B,S,I,N) state tensors never hit HBM."""
+    from repro.kernels.selective_scan import selective_scan, selective_scan_ref
+
+    dt = jax.nn.softplus(rnd((b, s, i), salt=101) - 3).astype(dtype)
+    x = rnd((b, s, i), dtype, 0.5, salt=102)
+    bm = rnd((b, s, n), dtype, 0.5, salt=103)
+    cm = rnd((b, s, n), dtype, 0.5, salt=104)
+    a = -jnp.exp(rnd((i, n), scale=0.3, salt=105))
+    h0 = rnd((b, i, n), scale=0.1, salt=106)
+    y, hf = selective_scan(dt, x, bm, cm, a, h0, bi=bi, interpret=True)
+    ey, ehf = selective_scan_ref(dt, x, bm, cm, a, h0)
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), ey.astype(jnp.float32), **tol(dtype)
+    )
+    np.testing.assert_allclose(hf, ehf, **tol(dtype))
+
+
+def test_mamba_block_interpret_matches_ref_path():
+    """The hybrid block produces identical outputs via the XLA chunked path
+    and the fused Pallas selective-scan path."""
+    import jax as _jax
+    from repro.models import layers as L
+
+    key = _jax.random.PRNGKey(3)
+    d, inner, n, w, b, s = 64, 128, 8, 4, 2, 32
+    p = {
+        "w_in": _jax.random.normal(key, (d, 2 * inner)) * 0.1,
+        "w_out": _jax.random.normal(_jax.random.fold_in(key, 1), (inner, d)) * 0.1,
+        "conv_w": _jax.random.normal(_jax.random.fold_in(key, 2), (w, inner)) * 0.2,
+        "w_bc": _jax.random.normal(_jax.random.fold_in(key, 3), (inner, 2 * n)) * 0.2,
+        "w_dt": jnp.full((inner,), 0.05),
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1.0, n + 1), (inner, n))),
+        "d_skip": jnp.ones((inner,)),
+        "dt_bias": jnp.full((inner,), -4.6),
+    }
+    x = _jax.random.normal(_jax.random.fold_in(key, 4), (b, s, d)) * 0.3
+    y_ref, (c_ref, s_ref) = L.mamba_block(x, p, impl="ref")
+    y_plk, (c_plk, s_plk) = L.mamba_block(x, p, impl="interpret")
+    np.testing.assert_allclose(y_ref, y_plk, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(s_ref, s_plk, atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------ DAPO loss
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,bb,bt", [(8, 512, 8, 512), (16, 1024, 8, 256)])
+def test_dapo_loss_matches_ref(dtype, b, t, bb, bt):
+    lp = (rnd((b, t), scale=0.1, salt=71) - 2.0).astype(dtype)
+    olp = (lp.astype(jnp.float32) + rnd((b, t), scale=0.05, salt=72)).astype(dtype)
+    adv = rnd((b,), salt=73)
+    mask = (jax.random.uniform(jax.random.fold_in(KEY, 74), (b, t)) > 0.3).astype(jnp.float32)
+    loss, ratio = dapo_loss(lp, olp, adv, mask, bb=bb, bt=bt, interpret=True)
+    eloss, eratio = ref.dapo_loss_ref(lp, olp, adv, mask)
+    np.testing.assert_allclose(loss, eloss, **tol(dtype))
+    np.testing.assert_allclose(ratio, eratio, **tol(dtype))
+
+
+def test_dapo_loss_clip_higher_asymmetry():
+    """DAPO's eps_high > eps_low: upside ratios clip later than downside."""
+    lp = jnp.log(jnp.full((1, 4), 0.5))
+    olp = jnp.log(jnp.full((1, 4), 0.4))       # ratio = 1.25
+    adv = jnp.ones((1,))
+    mask = jnp.ones((1, 4))
+    loss_sym, _ = ref.dapo_loss_ref(lp, olp, adv, mask, eps_low=0.2, eps_high=0.2)
+    loss_dapo, _ = ref.dapo_loss_ref(lp, olp, adv, mask, eps_low=0.2, eps_high=0.28)
+    assert loss_dapo < loss_sym  # higher clip ceiling -> larger kept objective
+
+
+# ------------------------------------------------------------------- dispatch
+def test_ops_dispatch_ref_equals_interpret():
+    q, k, v = (rnd((1, 128, 2, 64), salt=81 + i) for i in range(3))
+    a = ops.flash_attention(q, k, v, impl="ref")
+    b = ops.flash_attention(q, k, v, impl="interpret")
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_ops_default_is_ref_on_cpu():
+    assert ops.resolve_impl() == "ref"
+    ops.set_default_impl("interpret")
+    try:
+        assert ops.resolve_impl() == "interpret"
+    finally:
+        ops.set_default_impl(None)

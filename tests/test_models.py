@@ -1,0 +1,145 @@
+"""Architecture-zoo smoke tests: reduced config of every assigned arch runs
+one forward/train step on CPU, asserts shapes + no NaNs, and checks
+prefill+decode consistency against the training forward (the invariant the
+rollout engine relies on for partial rollout / migration re-prefill)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, QWEN3_30B_A3B, get_arch
+from repro.models import model
+
+ALL = list(ASSIGNED) + [QWEN3_30B_A3B]
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b=2, s=32):
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 1), (b, s), 0, cfg.vocab_size)
+    fe = None
+    if cfg.family == "vlm":
+        fe = jax.random.normal(
+            jax.random.fold_in(KEY, 2), (b, cfg.n_patches, cfg.d_model)
+        ) * 0.02
+    elif cfg.family == "audio":
+        fe = jax.random.normal(
+            jax.random.fold_in(KEY, 3), (b, cfg.encoder_seq, cfg.d_model)
+        ) * 0.02
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ALL])
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = get_arch(arch).reduced()
+    params = model.init_params(cfg, KEY)
+    tokens, fe = _inputs(cfg)
+    logits, aux = model.forward(cfg, params, tokens, frontend_embeds=fe)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux["moe_aux"]))
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ALL])
+def test_reduced_train_step_grads_finite(arch):
+    cfg = get_arch(arch).reduced()
+    params = model.init_params(cfg, KEY)
+    tokens, fe = _inputs(cfg, b=1, s=16)
+
+    def loss_fn(p):
+        logits, aux = model.forward(cfg, p, tokens, frontend_embeds=fe)
+        tgt = jnp.roll(tokens, -1, axis=1)
+        ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1).mean()
+        return nll + 0.01 * aux["moe_aux"]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ALL])
+def test_prefill_decode_matches_forward(arch):
+    """prefill(prompt) + N decode steps must reproduce the training forward's
+    next-token logits at every step (teacher forcing)."""
+    cfg = get_arch(arch).reduced()
+    if cfg.is_moe:
+        # capacity drops depend on sequence length; a no-drop factor makes
+        # prefill+decode exactly equivalent to the full forward
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=cfg.n_experts / cfg.top_k
+        )
+    params = model.init_params(cfg, KEY)
+    b, prompt_len, total = 2, 8, 12
+    tokens, fe = _inputs(cfg, b=b, s=total)
+
+    # ground truth: full forward, logits at positions prompt_len-1 .. total-2
+    full_logits, _ = model.forward(cfg, params, tokens, frontend_embeds=fe)
+
+    # vlm caches must cover the prepended patch positions too
+    extra = cfg.n_patches if cfg.family == "vlm" else 0
+    cache = model.init_cache(cfg, b, max_len=total + 4 + extra)
+    lengths = jnp.full((b,), prompt_len, jnp.int32)
+    logits, cache = model.prefill(
+        cfg, params, tokens[:, :prompt_len], lengths, cache, frontend_embeds=fe
+    )
+    np.testing.assert_allclose(
+        logits, full_logits[:, prompt_len - 1], rtol=2e-4, atol=2e-4
+    )
+    for step in range(prompt_len, total - 1):
+        logits, cache = model.decode_step(cfg, params, tokens[:, step], cache)
+        np.testing.assert_allclose(
+            logits, full_logits[:, step], rtol=2e-4, atol=2e-4,
+            err_msg=f"{arch} decode step {step}",
+        )
+
+
+def test_hybrid_ring_cache_long_decode():
+    """hymba's windowed ring cache: decoding past the window stays finite and
+    positions wrap."""
+    cfg = get_arch("hymba-1.5b").reduced()
+    assert cfg.sliding_window == 64
+    params = model.init_params(cfg, KEY)
+    b = 1
+    # force ring mode: max_len beyond the long-context threshold
+    cache = model.init_cache(cfg, b, max_len=cfg.long_context_threshold + 64)
+    assert cache["k"].shape[2] == cfg.sliding_window
+    tokens = jax.random.randint(KEY, (b, 16), 0, cfg.vocab_size)
+    lengths = jnp.full((b,), 16, jnp.int32)
+    logits, cache = model.prefill(cfg, params, tokens, lengths, cache)
+    for i in range(80):  # well past the 64-wide window
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits, cache = model.decode_step(cfg, params, nxt, cache)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"][0]) == 96
+
+
+def test_ssm_decode_constant_memory():
+    """xLSTM decode cache has no sequence dimension at all."""
+    cfg = get_arch("xlstm-1.3b").reduced()
+    cache = model.init_cache(cfg, batch=2, max_len=1 << 19)
+    leaves = jax.tree_util.tree_leaves(cache)
+    total_floats = sum(l.size for l in leaves)
+    assert total_floats < 1e6  # O(1) in max_len
+    assert "k" not in cache
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = get_arch("dbrx-132b").reduced()
+    params = model.init_params(cfg, KEY)
+    tokens, _ = _inputs(cfg)
+    _, aux = model.forward(cfg, params, tokens)
+    assert float(aux["moe_aux"]) > 0.0
+
+
+def test_param_counts_full_configs_sane():
+    """n_params estimates land in the right ballpark for known models."""
+    q14 = get_arch("qwen2.5-14b")
+    assert 12e9 < q14.n_params < 18e9
+    x13 = get_arch("xlstm-1.3b")
+    assert 0.7e9 < x13.n_params < 2.5e9
+    q3 = get_arch("qwen3-30b-a3b")
+    assert 24e9 < q3.n_params < 36e9
+    assert 2e9 < q3.n_active_params < 5e9

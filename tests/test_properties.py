@@ -1,0 +1,116 @@
+"""Cross-cutting property tests (hypothesis) for system invariants not
+covered by the per-module suites."""
+import random
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel, fit_coefficients
+from repro.core.parameter_server import plan_transfers
+from repro.core.snapshot import InstanceSnapshot
+from repro.core.trajectory_server import TrajectoryServer
+from repro.core.types import reset_traj_ids
+
+
+# ------------------------------------------------------------ comm planner
+@settings(max_examples=50, deadline=None)
+@given(
+    n_slices=st.integers(1, 40),
+    n_senders=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+)
+def test_plan_transfers_near_optimal_makespan(n_slices, n_senders, seed):
+    """Greedy LPT balancing: makespan <= 2x the trivial lower bound
+    (classic multiprocessor-scheduling guarantee)."""
+    rng = random.Random(seed)
+    senders = [f"s{i}" for i in range(n_senders)]
+    required = [
+        (f"x{i}", rng.randint(1, 10_000), "r", senders) for i in range(n_slices)
+    ]
+    bw = 100.0
+    plan = plan_transfers(required, lambda s, r: bw, fixed_latency=0.0)
+    total = sum(n for _, n, _, _ in required) / bw
+    lower = max(total / n_senders, max(n for _, n, _, _ in required) / bw)
+    assert plan.makespan <= 2.0 * lower + 1e-9
+    # every slice assigned exactly once
+    assert len(plan.transfers) == n_slices
+
+
+# -------------------------------------------------------------- cost model
+@settings(max_examples=50, deadline=None)
+@given(
+    k1=st.floats(1e-15, 1e-9),
+    k2=st.floats(1e-5, 1e-2),
+    k3=st.floats(1e-6, 1e-3),
+    k4=st.floats(1e-4, 1e-1),
+    n=st.integers(1, 200),
+    kv=st.floats(0, 1e9),
+)
+def test_cost_model_basic_properties(k1, k2, k3, k4, n, kv):
+    cm = CostModel(k1=k1, k2=k2, k3=k3, k4=k4, k5=1000.0, kv_budget=1e12)
+    s = InstanceSnapshot(0, kv_cache=kv, run_trajs=set(range(n)))
+    t = cm.throughput(s)
+    assert t >= 0
+    # throughput saturates below the compute-bound ceiling 1/k3
+    assert t <= 1.0 / k3 + 1e-9
+    # marginal gain of an admissible route is bounded by the idle ceiling
+    # ONLY when the instance is already slower than idle; in all cases the
+    # post-route state must remain consistent:
+    s2 = cm.with_routed(s, 999, 100)
+    assert 999 in s2.run_trajs or 999 in s2.wait_trajs
+
+
+def test_fit_coefficients_recovers_known_model():
+    true = CostModel(k1=2e-10, k2=3e-3, k3=2e-4, k4=8e-3, k5=1000.0,
+                     kv_budget=1e12)
+    samples = []
+    for n in (1, 2, 4, 8, 16, 32, 64):
+        for kv in (0.0, 1e6, 1e7, 1e8):
+            samples.append((kv, n, true.step_latency(kv, n)))
+    fit = fit_coefficients(samples, k5=1000.0, kv_budget=1e12)
+    for kv, n, lat in samples:
+        pred = fit.step_latency(kv, n)
+        assert abs(pred - lat) / lat < 0.05
+
+
+# ------------------------------------------------------------------- TS
+@settings(max_examples=40, deadline=None)
+@given(
+    capacity=st.integers(1, 6),
+    group_size=st.integers(1, 3),
+    n_ops=st.integers(1, 60),
+    seed=st.integers(0, 2**31),
+)
+def test_trajectory_server_capacity_invariant(capacity, group_size, n_ops, seed):
+    """Live groups never exceed capacity; registry/queue stay consistent
+    under random take/put_back/complete/drop/retire/refill sequences."""
+    reset_traj_ids()
+    rng = random.Random(seed)
+    src = iter([[1, 2, 3]] * 10_000)
+    ts = TrajectoryServer(src, capacity_groups=capacity, group_size=group_size)
+    ts.refill()
+    taken = []
+    for _ in range(n_ops):
+        op = rng.choice(["take", "back", "complete", "drop", "retire", "refill"])
+        if op == "take" and ts.n_available:
+            t = rng.choice(ts.peek())
+            ts.take(t.traj_id)
+            taken.append(t.traj_id)
+        elif op == "back" and taken:
+            ts.put_back(taken.pop(rng.randrange(len(taken))))
+        elif op == "complete" and taken:
+            ts.complete(taken.pop(rng.randrange(len(taken))))
+        elif op == "drop" and taken:
+            ts.drop(taken.pop(rng.randrange(len(taken))))
+        elif op == "retire":
+            done = [tid for tid in ts.registry
+                    if ts.registry[tid].status.value == "generated"]
+            if done:
+                ts.retire(done[0])
+        elif op == "refill":
+            ts.refill()
+        assert ts._live_groups <= capacity
+        assert len(ts.groups) == ts._live_groups
+        # available is always a subset of the registry
+        for t in ts.peek():
+            assert t.traj_id in ts.registry

@@ -1,0 +1,110 @@
+"""Simulator tests: the cluster-scale reproduction engine behind the
+Fig. 13/15/16/17/18 benchmarks. The control plane is the REAL protocol;
+these tests assert the paper's qualitative claims hold in simulation."""
+import dataclasses
+
+import pytest
+
+from repro.core import PAPER_H20_QWEN3_30B, StrategySuite
+from repro.core.types import reset_traj_ids
+from repro.sim.baselines import OneStepSim, SyncSim
+from repro.sim.engine import SimConfig, StaleFlowSim
+
+
+def base_cfg(**kw):
+    d = dict(
+        n_instances=4, batch_size=8, group_size=4, eta=1, total_steps=3,
+        response_mean=3000, response_sigma=1.2, response_cap=20000,
+        dt=0.5, prompt_len=2048, train_fixed=20.0, train_per_token=2e-5,
+    )
+    d.update(kw)
+    return SimConfig(**d)
+
+
+def run(cfg):
+    reset_traj_ids()
+    return StaleFlowSim(cfg).run()
+
+
+def test_sim_completes_and_counts_tokens():
+    r = run(base_cfg())
+    assert r.steps == 3
+    assert r.total_tokens > 3 * 8 * 4 * 2048  # at least the prompts
+    assert r.throughput > 0
+
+
+def test_sim_staleness_bounded_and_exploited():
+    cfg = base_cfg(eta=3, total_steps=5)
+    r = run(cfg)
+    flat = [s for h in r.staleness_hists for s in h]
+    assert all(0 <= s <= 3 for s in flat)
+    # Fig. 18: once pipelined, staleness > 0 is actually used
+    assert any(s > 0 for s in flat)
+
+
+def test_sim_async_beats_sync_and_onestep():
+    """Fig. 13 qualitative ordering: staleflow > one-step > sync."""
+    cfg = base_cfg(eta=2, total_steps=4)
+    r_sf = run(cfg)
+    reset_traj_ids()
+    r_os = OneStepSim(cfg).run()
+    reset_traj_ids()
+    r_sy = SyncSim(cfg).run()
+    assert r_sf.throughput > r_os.throughput > r_sy.throughput
+    assert r_sf.throughput / r_sy.throughput > 1.5  # paper: 2.01x avg
+
+
+def test_sim_throughput_grows_with_eta():
+    """Fig. 3/13: larger staleness bounds buy throughput."""
+    t = {}
+    for eta in (0, 1, 3):
+        t[eta] = run(base_cfg(eta=eta, total_steps=4)).throughput
+    assert t[1] > t[0]
+    assert t[3] > t[1]
+
+
+def test_sim_staleflow_beats_inflight_when_kv_bound():
+    """Fig. 13/16: under KV pressure + large eta, throughput-oriented
+    strategies beat the vanilla (in-flight-limit == VeRL-Async) ones."""
+    cm = dataclasses.replace(
+        PAPER_H20_QWEN3_30B, kv_budget=75_000 * PAPER_H20_QWEN3_30B.k5
+    )
+    cfg = base_cfg(
+        n_instances=8, batch_size=16, group_size=8, eta=3, total_steps=6,
+        response_mean=4000, response_sigma=1.6, response_cap=40000,
+        cost_model=cm,
+    )
+    r_sf = run(cfg)
+    reset_traj_ids()
+    r_if = StaleFlowSim(
+        dataclasses.replace(cfg, suite=StrategySuite.vanilla())
+    ).run()
+    assert r_sf.throughput > 1.05 * r_if.throughput
+
+
+def test_sim_instance_load_telemetry():
+    r = run(base_cfg())
+    assert len(r.instance_load) > 2
+    t0, loads0 = r.instance_load[0]
+    assert set(loads0) == set(range(4))
+
+
+def test_sim_group_redundancy_no_speculative_deadlock():
+    """Regression: group-level surplus aborts bypass the command cycle and
+    MUST update the speculative state P (Table 1), else Eq. 1 rejects every
+    later snapshot and the coordinator deadlocks."""
+    cfg = base_cfg(total_steps=3, group_size=4)
+    r = StaleFlowSim(dataclasses.replace(cfg, group_redundancy=1)).run()
+    assert r.steps == 3
+    assert r.total_time < cfg.max_sim_time
+
+
+def test_sim_redundancy_reduces_step_time():
+    """Fig. 25: batch-level redundancy drops long-tail trajectories and
+    shortens steps (tokens/step decreases, throughput rises modestly)."""
+    cfg = base_cfg(total_steps=4, response_sigma=1.6)
+    r0 = run(cfg)
+    reset_traj_ids()
+    r1 = StaleFlowSim(dataclasses.replace(cfg, batch_redundancy=2)).run()
+    assert r1.total_time < r0.total_time
+    assert r1.total_tokens <= r0.total_tokens  # tail dropped

@@ -1,0 +1,215 @@
+"""Protocol tests: virtual staleness buffers (paper §4, Fig. 7/8)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.staleness import (
+    BufferState,
+    EntryState,
+    StalenessManager,
+    StalenessViolation,
+)
+
+
+def test_reserve_backward_scan_picks_latest_buffer():
+    m = StalenessManager(batch_size=2, eta=2)
+    # worst-case Reserve: version 0 with eta=2 -> buffer 2 (latest legal)
+    assert m.reserve(key=1, version=0) == 2
+    assert m.reserve(key=2, version=0) == 2
+    # buffer 2 is now full -> falls back to buffer 1
+    assert m.reserve(key=3, version=0) == 1
+    m.check_invariants()
+
+
+def test_reserve_respects_eta_zero():
+    m = StalenessManager(batch_size=1, eta=0)
+    assert m.reserve(1, 0) == 0
+    with pytest.raises(StalenessViolation):
+        m.reserve(2, 0)  # buffer 0 full; version 0 cannot go to buffer 1
+
+
+def test_occupy_moves_to_earliest_buffer():
+    m = StalenessManager(batch_size=2, eta=2)
+    m.reserve(1, 0)          # -> buffer 2
+    v = m.occupy(1)          # greedy forward -> buffer 0
+    assert v == 0
+    info = m.entry_info(1)
+    assert info == (0, EntryState.OCCUPIED, 0)
+    m.check_invariants()
+
+
+def test_consume_requires_ready_and_advances_version():
+    m = StalenessManager(batch_size=2, eta=1)
+    m.reserve(1, 0)
+    m.reserve(2, 0)
+    assert m.consume() is None          # nothing occupied yet
+    m.occupy(1)
+    m.occupy(2)
+    assert m.ready()
+    keys = m.consume()
+    assert sorted(keys) == [1, 2]
+    assert m.train_version == 1
+    assert m.in_flight() == 0
+    m.check_invariants()
+
+
+def test_discriminator_rejects_when_range_full():
+    m = StalenessManager(batch_size=1, eta=1)
+    m.reserve(1, 0)  # buffer 1
+    m.reserve(2, 0)  # buffer 0
+    assert not m.can_reserve(0)          # buffers 0..1 full
+    assert m.can_reserve(1)              # buffer 2 reachable from version 1
+    assert m.min_admissible_version(at_least=0) == 1
+
+
+def test_entry_movement_cascade_fig7_right():
+    """Deleting a reserved entry pulls earlier reserved entries forward."""
+    m = StalenessManager(batch_size=1, eta=2)
+    # A: version 0 -> buffer 2 (backward scan)
+    m.reserve(10, 0)
+    # B: version 0 -> buffer 1
+    m.reserve(11, 0)
+    # C: version 0 -> buffer 0
+    m.reserve(12, 0)
+    # A completes: per Fig. 7 right, the *earliest* reserved entry legal at
+    # buffer 2 (C, in buffer 0) is pulled into A's hole; buffer 0 frees up
+    # and A occupies it (greedy forward scan). Reserved entries end up
+    # pushed late, occupied entries early.
+    v = m.occupy(10)
+    assert v == 0
+    assert m.entry_info(12)[0] == 2      # C (earliest reserved) moved late
+    assert m.entry_info(11)[0] == 1      # B untouched
+    assert m.entry_info(10) == (0, EntryState.OCCUPIED, 0)
+    m.check_invariants()
+
+
+def test_buffer_states_waiting_ready_stuck():
+    m = StalenessManager(batch_size=2, eta=0)
+    assert m._buffer(0).state == BufferState.WAITING
+    m.reserve(1, 0)
+    m.reserve(2, 0)
+    assert m._buffer(0).state == BufferState.STUCK
+    m.occupy(1)
+    m.occupy(2)
+    assert m._buffer(0).state == BufferState.READY
+
+
+def test_abort_pulls_occupied_forward():
+    m = StalenessManager(batch_size=1, eta=2)
+    m.reserve(1, 0)
+    m.occupy(1)              # occupied at buffer 0
+    m.reserve(2, 0)
+    m.occupy(2)              # buffer 0 full -> occupies buffer 1
+    assert m.entry_info(2)[0] == 1
+    m.abort(1)               # free buffer 0 -> entry 2 moves forward
+    assert m.entry_info(2)[0] == 0
+    assert not m.is_tracked(1)
+    m.check_invariants()
+
+
+def test_abort_is_idempotent():
+    m = StalenessManager(batch_size=2, eta=1)
+    m.reserve(1, 0)
+    m.abort(1)
+    m.abort(1)  # no raise
+    assert m.in_flight() == 0
+
+
+def test_batch_redundancy_surplus_reported():
+    m = StalenessManager(batch_size=2, eta=0, batch_redundancy=1)
+    for k in range(3):
+        m.reserve(k, 0)
+    m.occupy(0)
+    m.occupy(1)
+    # batch_size occupied; key 2 still reserved -> surplus
+    assert m.surplus_keys() == [2]
+    keys = m.consume()
+    assert sorted(keys) == [0, 1]
+    m.check_invariants()
+
+
+def test_lower_version_relocates_entry():
+    m = StalenessManager(batch_size=2, eta=1)
+    m.reserve(1, 2)                       # group min starts at 2 -> buffer 3
+    assert m.entry_info(1)[0] == 3
+    assert m.lower_version(1, 1)          # new member at version 1
+    v_buf, _, version = m.entry_info(1)
+    assert version == 1 and v_buf <= 2    # relocated to satisfy 1 + 1 >= v_buf
+    m.check_invariants()
+
+
+def test_staleness_distribution_telemetry():
+    m = StalenessManager(batch_size=2, eta=3)
+    m.reserve(1, 0)
+    m.reserve(2, 0)
+    m.occupy(1)
+    m.occupy(2)
+    m.consume()
+    assert m.consumed_staleness == [[0, 0]]  # consumed at train_version 0
+
+
+def test_full_pipeline_multiple_steps():
+    """Drive several training steps with mixed versions; bound always holds."""
+    m = StalenessManager(batch_size=4, eta=2)
+    key = 0
+    for step in range(8):
+        # producers run at the current trained version
+        while not m.ready():
+            v = m.min_admissible_version(at_least=max(0, m.train_version - m.eta))
+            m.reserve(key, v)
+            m.occupy(key)
+            key += 1
+            m.check_invariants()
+        batch = m.consume()
+        assert len(batch) == 4
+        for hist in m.consumed_staleness:
+            assert all(0 <= s <= m.eta for s in hist)
+    assert m.train_version == 8
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=200, deadline=None)
+@given(
+    batch_size=st.integers(1, 4),
+    eta=st.integers(0, 3),
+    seed=st.integers(0, 2**32 - 1),
+    n_ops=st.integers(1, 120),
+)
+def test_random_op_sequences_never_violate_bound(batch_size, eta, seed, n_ops):
+    """Fuzz Reserve/Occupy/Consume/Abort: the invariant must always hold and
+    consumed staleness must never exceed eta."""
+    rng = random.Random(seed)
+    m = StalenessManager(batch_size=batch_size, eta=eta)
+    reserved, occupied = [], []
+    next_key = 0
+    for _ in range(n_ops):
+        op = rng.choice(["reserve", "occupy", "consume", "abort"])
+        if op == "reserve":
+            v = m.min_admissible_version(
+                at_least=max(0, m.train_version - eta + rng.randint(0, eta or 1))
+            )
+            if v is not None and m.can_reserve(v):
+                m.reserve(next_key, v)
+                reserved.append(next_key)
+                next_key += 1
+        elif op == "occupy" and reserved:
+            k = reserved.pop(rng.randrange(len(reserved)))
+            if m.is_tracked(k):
+                m.occupy(k)
+                occupied.append(k)
+        elif op == "consume":
+            keys = m.consume()
+            if keys:
+                occupied = [k for k in occupied if k not in set(keys)]
+                # consume may silently drop leftovers that no longer fit;
+                # resync our mirror of reserved keys
+                reserved = [k for k in reserved if m.is_tracked(k)]
+                occupied = [k for k in occupied if m.is_tracked(k)]
+        elif op == "abort" and (reserved or occupied):
+            pool = reserved if (reserved and (not occupied or rng.random() < 0.5)) else occupied
+            k = pool.pop(rng.randrange(len(pool)))
+            m.abort(k)
+        m.check_invariants()
+    for hist in m.consumed_staleness:
+        assert all(0 <= s <= eta for s in hist)

@@ -1,0 +1,188 @@
+"""Training substrate tests: optimizer, RL train step, checkpoint round-trip
+(incl. protocol state), gradient compression with error feedback."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.staleness import StalenessManager
+from repro.models import model as M
+from repro.training import checkpoint as ckpt
+from repro.training.compression import (
+    ErrorFeedback,
+    compressed_bytes,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.train_step import make_lm_train_step, make_rl_train_step
+
+CFG = get_arch("qwen2-1.5b").reduced()
+KEY = jax.random.PRNGKey(0)
+
+
+def _rl_batch(b=4, t=24):
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 1), (b, t), 3, 17)
+    mask = jnp.zeros((b, t)).at[:, 8:].set(1.0)
+    return {
+        "tokens": tokens,
+        "behavior_logprobs": jnp.full((b, t), -2.0) * mask,
+        "advantages": jnp.asarray([1.0, -1.0, 0.5, -0.5]),
+        "mask": mask,
+    }
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, grad_clip=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_rl_train_step_runs_and_improves_objective():
+    params = M.init_params(CFG, KEY)
+    opt = init_opt_state(params)
+    step = jax.jit(make_rl_train_step(CFG, AdamWConfig(lr=3e-3)))
+    batch = _rl_batch()
+    losses = []
+    for _ in range(5):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["pg_loss"]))
+        assert np.isfinite(losses[-1])
+        assert float(metrics["grad_norm"]) > 0
+    assert losses[-1] < losses[0]  # same batch -> objective must improve
+
+
+def test_rl_train_step_remat_matches_no_remat():
+    params = M.init_params(CFG, KEY)
+    opt = init_opt_state(params)
+    batch = _rl_batch()
+    s1 = make_rl_train_step(CFG, AdamWConfig(lr=1e-3), remat=False)
+    s2 = make_rl_train_step(CFG, AdamWConfig(lr=1e-3), remat=True)
+    p1, _, m1 = jax.jit(s1)(params, opt, batch)
+    p2, _, m2 = jax.jit(s2)(params, opt, batch)
+    np.testing.assert_allclose(
+        float(m1["loss"]), float(m2["loss"]), rtol=1e-5
+    )
+    l1 = jax.tree_util.tree_leaves(p1)
+    l2 = jax.tree_util.tree_leaves(p2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_rl_train_step_accum_matches_full_batch():
+    """Gradient accumulation (the HBM-fit lever) must reproduce the
+    full-batch update up to float tolerance."""
+    params = M.init_params(CFG, KEY)
+    opt = init_opt_state(params)
+    batch = _rl_batch(b=4, t=24)
+    s1 = make_rl_train_step(CFG, AdamWConfig(lr=1e-3), accum_steps=1)
+    s2 = make_rl_train_step(CFG, AdamWConfig(lr=1e-3), accum_steps=2)
+    p1, _, m1 = jax.jit(s1)(params, opt, batch)
+    p2, _, m2 = jax.jit(s2)(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_lm_train_step_loss_decreases():
+    params = M.init_params(CFG, KEY)
+    opt = init_opt_state(params)
+    step = jax.jit(make_lm_train_step(CFG, AdamWConfig(lr=3e-3)))
+    batch = {"tokens": jax.random.randint(KEY, (4, 32), 3, 17)}
+    first = last = None
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        first = first if first is not None else float(m["nll"])
+        last = float(m["nll"])
+    assert last < first
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_with_protocol(tmp_path):
+    params = M.init_params(CFG, KEY)
+    opt = init_opt_state(params)
+    mgr = StalenessManager(batch_size=2, eta=1)
+    mgr.reserve(1, 0)
+    mgr.reserve(2, 0)
+    mgr.occupy(1)
+
+    path = ckpt.save_checkpoint(
+        str(tmp_path), 7, params, opt,
+        extra_meta={"model_version": 7},
+        protocol_state=ckpt.dump_protocol_state(mgr),
+    )
+    assert os.path.exists(os.path.join(path, "meta.json"))
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+    p2, o2, meta = ckpt.restore_checkpoint(str(tmp_path), params, opt)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+    assert meta["extra"]["model_version"] == 7
+
+    mgr2 = ckpt.load_protocol_state(meta["protocol"])
+    assert mgr2.train_version == mgr.train_version
+    assert mgr2.entry_info(1) == mgr.entry_info(1)
+    assert mgr2.entry_info(2) == mgr.entry_info(2)
+    mgr2.check_invariants()
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    params = {"w": jnp.ones((4,))}
+    opt = init_opt_state(params)
+    ckpt.save_checkpoint(str(tmp_path), 1, params, opt)
+    params2 = {"w": jnp.full((4,), 2.0)}
+    ckpt.save_checkpoint(str(tmp_path), 1, params2, opt)  # overwrite same step
+    p, _, _ = ckpt.restore_checkpoint(str(tmp_path), params, opt, step=1)
+    np.testing.assert_array_equal(p["w"], np.full((4,), 2.0))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    params = {"w": jnp.ones((4,))}
+    opt = init_opt_state(params)
+    ckpt.save_checkpoint(str(tmp_path), 0, params, opt)
+    bad = {"w": jnp.ones((5,))}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_checkpoint(str(tmp_path), bad, init_opt_state(bad))
+
+
+# ---------------------------------------------------------------- compression
+def test_int8_quantization_bounded_error():
+    x = jax.random.normal(KEY, (1024,))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_converges_sum():
+    """With error feedback, the SUM of compressed grads tracks the true sum
+    (bias does not accumulate)."""
+    g = jax.random.normal(KEY, (512,)) * 0.1
+    ef = ErrorFeedback({"g": g})
+    total_true = np.zeros(512)
+    total_comp = np.zeros(512)
+    res_at_100 = None
+    for i in range(200):
+        gi = {"g": g * (1 + 0.1 * np.sin(i))}
+        out = ef.compress_grads(gi, scheme="topk", topk_rate=0.05)
+        total_true += np.asarray(gi["g"])
+        total_comp += np.asarray(out["g"])
+        if i == 99:
+            res_at_100 = float(np.linalg.norm(np.asarray(ef.residual["g"])))
+    # residual is bounded (plateaus) -> cumulative error decays as 1/n
+    rel = np.linalg.norm(total_comp - total_true) / np.linalg.norm(total_true)
+    assert rel < 0.05
+    res_final = float(np.linalg.norm(np.asarray(ef.residual["g"])))
+    assert res_final < 1.1 * res_at_100  # no unbounded error accumulation
+
+
+def test_compressed_bytes_accounting():
+    g = {"a": jnp.zeros((1000,)), "b": jnp.zeros((24,))}
+    assert compressed_bytes(g, scheme="int8") == 1024 + 8
+    assert compressed_bytes(g, scheme="topk", topk_rate=0.01) == (10 + 1) * 8
