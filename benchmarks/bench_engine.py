@@ -1,0 +1,148 @@
+"""Rollout-engine data-plane benchmark: batched admission + compacted decode.
+
+Tracks the speedup the prefill/decode runner split buys over the seed
+engine's single-row path:
+
+* **admission latency** — time to admit a full wave of waiting
+  trajectories (the migration/re-prefill burst after an Interrupt storm):
+  seed = one forward + tensor-by-tensor scatter per trajectory; batched =
+  one padded forward + one fused scatter per length bucket.
+* **decode tokens/s vs active fraction** — seed decodes all ``max_slots``
+  rows every step regardless of occupancy; compacted decode gathers the
+  active slots into a power-of-two bucket, so cost scales with occupancy.
+
+Acceptance tracked in the bench trajectory: admission latency no worse
+than seed; decode tokens/s strictly better when <50% of slots are active.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, note
+from repro.configs import get_arch
+from repro.core.types import Trajectory, reset_traj_ids
+from repro.models import model as M
+from repro.rollout.backend import create_backend
+
+NO_EOS = -1  # no sampled token ever matches: trajectories never self-finish
+
+
+def _bench_arch():
+    """Mid-size config: big enough that per-row decode compute dominates
+    dispatch overhead on CPU (the tiny smoke config measures only the
+    latter), small enough that the bench stays in seconds."""
+    return dataclasses.replace(
+        get_arch("qwen2-1.5b").reduced(),
+        d_model=256, n_layers=8, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=4096,
+    )
+
+
+def _mk_instance(params, cfg, *, legacy: bool, slots: int, max_len: int):
+    return create_backend(
+        "jax", 0, cfg=cfg, params=params, version=0,
+        max_slots=slots, max_len=max_len, temperature=1.0, eos_id=NO_EOS,
+        batched_prefill=not legacy, compact_decode=not legacy,
+    )
+
+
+def _mk_trajs(n, prompt_len, max_new=10_000, base=0):
+    return [
+        Trajectory(
+            traj_id=base + i,
+            prompt=list(np.random.RandomState(base + i).randint(3, 200, prompt_len)),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def _bench_admission(params, cfg, *, legacy, slots=8, prompt_len=8, repeats=5):
+    """Median wall time to admit ``slots`` waiting trajectories at once."""
+    inst = _mk_instance(params, cfg, legacy=legacy, slots=slots, max_len=64)
+    trajs = _mk_trajs(slots, prompt_len, base=1000)
+    ids = [t.traj_id for t in trajs]
+    # warm-up: compiles the prefill/scatter shapes for this wave
+    inst.route_many(trajs)
+    times = []
+    for _ in range(repeats):
+        out = inst.interrupt(ids)
+        assert len(out) == slots
+        # keep re-prefill shapes identical across repeats: drop the token
+        # each admission samples
+        for t in trajs:
+            t.response.pop()
+            t.behavior_logprobs.pop()
+            t.finished = False
+        t0 = time.perf_counter()
+        inst.route_many(trajs)  # one wave, as execute_commands delivers it
+        times.append(time.perf_counter() - t0)
+    assert inst.n_active() == slots
+    return float(np.median(times))
+
+
+def _bench_decode(
+    params, cfg, *, legacy, n_active, slots=16, steps=20, reps=5
+):
+    """Steady-state decode tokens/s with ``n_active`` occupied slots."""
+    inst = _mk_instance(params, cfg, legacy=legacy, slots=slots, max_len=128)
+    for t in _mk_trajs(n_active, 8, base=2000):
+        inst.route(t)
+    assert inst.n_active() == n_active
+    for _ in range(5):  # warm-up: compiles this occupancy's decode bucket
+        inst.step()
+    best = float("inf")
+    for _ in range(reps):  # min-of-reps to shrug off scheduler noise
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            inst.step()
+        best = min(best, time.perf_counter() - t0)
+    assert inst.n_active() == n_active, "occupancy changed mid-measurement"
+    return n_active * steps / best
+
+
+def run(quick: bool = False) -> Dict[str, float]:
+    reset_traj_ids()
+    cfg = _bench_arch()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    slots = 16
+    out: Dict[str, float] = {}
+
+    note("engine: admission latency (one wave fills all slots)")
+    for mode, legacy in (("seed", True), ("batched", False)):
+        lat = _bench_admission(
+            params, cfg, legacy=legacy, slots=8,
+            repeats=3 if quick else 5,
+        )
+        out[f"admission_latency_{mode}_s"] = lat
+        emit("engine", f"admission_latency_{mode}_s", lat)
+    emit(
+        "engine", "admission_speedup",
+        out["admission_latency_seed_s"] / out["admission_latency_batched_s"],
+    )
+
+    note("engine: decode tokens/s vs active slots (of %d)" % slots)
+    for n_active in (1, 2, 4, 8, 16):
+        for mode, legacy in (("seed", True), ("compact", False)):
+            tps = _bench_decode(
+                params, cfg, legacy=legacy, n_active=n_active, slots=slots,
+                steps=10 if quick else 20, reps=3 if quick else 5,
+            )
+            out[f"decode_tps_{mode}_active{n_active}"] = tps
+            emit("engine", f"decode_tps_{mode}_active{n_active}", tps)
+        emit(
+            "engine", f"decode_speedup_active{n_active}",
+            out[f"decode_tps_compact_active{n_active}"]
+            / out[f"decode_tps_seed_active{n_active}"],
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("bench,metric,value")
+    run()

@@ -14,6 +14,8 @@ Emits ``bench,metric,value`` CSV rows. Mapping to the paper:
   bench_cost_model      Fig.24/T4 cost-model fit on our engine (runtime)
   bench_redundancy      Fig. 25   redundant rollout ablation (simulator)
   bench_kernels         (substrate) kernel microbench + interpret probes
+  bench_engine          (substrate) batched admission + compacted decode
+                        vs the seed single-row engine path (real runtime)
 
 The dry-run / roofline deliverables are separate:
   PYTHONPATH=src python -m repro.launch.dryrun --all
@@ -30,6 +32,7 @@ from benchmarks import (
     bench_case_study,
     bench_convergence,
     bench_cost_model,
+    bench_engine,
     bench_kernels,
     bench_redundancy,
     bench_scalability,
@@ -49,6 +52,7 @@ ALL = {
     "cost_model": bench_cost_model,
     "redundancy": bench_redundancy,
     "kernels": bench_kernels,
+    "engine": bench_engine,
 }
 
 

@@ -122,7 +122,7 @@ class RolloutCoordinator:
         ts: TrajectoryServer,
         *,
         cost_model: CostModel,
-        cfg: StrategyConfig = StrategyConfig(),
+        cfg: Optional[StrategyConfig] = None,
         suite: Optional[StrategySuite] = None,
         group_sampling: bool = True,
         group_filter=None,  # callable([Trajectory]) -> keep? (§4.3 filtering)
@@ -130,7 +130,10 @@ class RolloutCoordinator:
         self.manager = manager
         self.ts = ts
         self.cost_model = cost_model
-        self.cfg = cfg
+        # a fresh StrategyConfig per coordinator: a class-level default
+        # instance would be silently shared (and mutated) across every
+        # coordinator constructed without an explicit config
+        self.cfg = cfg if cfg is not None else StrategyConfig()
         self.suite = suite or StrategySuite.staleflow()
         self.groups = GroupBook(ts) if group_sampling else None
         self.group_filter = group_filter

@@ -21,6 +21,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
 
 def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     amax = jnp.max(jnp.abs(g)).astype(jnp.float32)
@@ -68,7 +73,7 @@ def make_dp_allreduce(mesh: Mesh, *, compress: bool = False, axes=("data",)):
         spec = P()  # replicated per-shard view
 
         @partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=jax.tree_util.tree_map(lambda _: spec, grads),
             out_specs=jax.tree_util.tree_map(lambda _: spec, grads),
         )

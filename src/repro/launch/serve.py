@@ -18,7 +18,7 @@ from repro.core.types import Trajectory, next_traj_id
 from repro.data.tasks import ArithmeticDataset
 from repro.data.tokenizer import decode as tok_decode
 from repro.models import model as M
-from repro.rollout.engine import RolloutInstance
+from repro.rollout.backend import create_backend
 
 
 def main() -> None:
@@ -28,13 +28,19 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument(
+        "--no-compact-decode", action="store_true",
+        help="decode all slots every step (seed behavior) instead of "
+             "compacting to the active power-of-two bucket",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    inst = RolloutInstance(
-        0, cfg, params, version=0, max_slots=args.slots,
+    inst = create_backend(
+        "jax", 0, cfg=cfg, params=params, version=0, max_slots=args.slots,
         max_len=64, temperature=args.temperature,
+        compact_decode=not args.no_compact_decode,
     )
     ds = ArithmeticDataset(args.requests, seed=2)
     for p in ds.problems:

@@ -1,0 +1,397 @@
+"""Engine backend contract: one instance interface for runtime + simulator.
+
+The coordinator (``repro.core.coordinator``) is pure control plane — it
+emits ``Route / Interrupt / Abort / Pull`` commands against instance
+*snapshots* and never touches an engine. This module pins down the data
+plane those commands land on:
+
+``EngineBackend``
+    The protocol every rollout instance implements:
+    ``route / interrupt / abort / pull / step / snapshot``.  Two
+    implementations ship:
+
+    * ``repro.rollout.engine.RolloutInstance`` — the real JAX engine
+      (slot-based continuous batching, batched prefill + compacted decode
+      via ``repro.rollout.runners``);
+    * ``SimBackend`` (here) — the cost-model-driven replica the
+      discrete-event simulator and the baselines run on.  Token payloads
+      are tracked as counts (``Trajectory.sim_generated``); timing follows
+      the paper's Eq. 2 cost model.
+
+    Real backends ignore the simulated-clock arguments (``now``/``dt``);
+    simulated backends ignore the parameter payload of ``pull``.  That
+    asymmetry is exactly what lets one coordinator drive a *mixed* cluster
+    of real and simulated instances (``examples/mixed_cluster.py``).
+
+``execute_commands``
+    The single, backend-agnostic command executor.  The live runtime, the
+    simulator, and the mixed example all route coordinator output through
+    it, so command semantics (TS take/put_back/drop, PS pull) cannot drift
+    between deployments.
+
+``create_backend``
+    Factory/registry keyed by backend name (``"jax"`` / ``"sim"``); the JAX
+    engine is imported lazily so simulator-only workloads never pay the JAX
+    import.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import (
+    Any,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    runtime_checkable,
+)
+
+from repro.core.commands import Abort, Command, Interrupt, Pull, Route
+from repro.core.cost_model import CostModel
+from repro.core.snapshot import InstanceSnapshot
+from repro.core.types import Trajectory, TrajStatus
+
+
+@runtime_checkable
+class ParamSource(Protocol):
+    """Where a backend pulls parameters from (the PS, or a version stub)."""
+
+    @property
+    def version(self) -> int: ...
+
+    def pull(self) -> Tuple[Any, int]: ...
+
+
+class VersionSource:
+    """Parameter-less ``ParamSource`` for simulated backends: tracks only
+    the published model version (the simulator's ``ps_version``)."""
+
+    def __init__(self, version: int = 0):
+        self.version = version
+
+    def pull(self) -> Tuple[Any, int]:
+        return None, self.version
+
+
+@runtime_checkable
+class EngineBackend(Protocol):
+    """One rollout instance, as seen by the coordinator's command stream.
+
+    Contract (conformance-tested in ``tests/test_backend.py``):
+
+    * ``route(traj, now)``     — enqueue; admit when slots/KV allow. Sets
+      ``traj.instance`` to this instance's id.
+    * ``route_many(trajs, now)`` — enqueue a whole wave, then admit once:
+      the real engine prefills every admissible trajectory in one batched
+      forward per length bucket (``execute_commands`` coalesces each command
+      batch's Routes per instance into one wave).
+    * ``interrupt(ids, now)``  — remove matching resident trajectories and
+      return them with ``status=INTERRUPTED`` and ``instance=None``; the
+      payload travels on the Trajectory object (migration is metadata-only).
+    * ``abort(ids, now)``      — like interrupt but ``status=ABORTED``.
+    * ``pull(params, version, now)`` — adopt a new parameter version and
+      clear ``complete_trajs`` accounting. Simulated backends ignore
+      ``params``.
+    * ``step(now, dt)``        — advance generation; returns trajectories
+      completed during the step. Real backends perform one decode step and
+      ignore the clock; simulated backends integrate ``dt`` sim-seconds.
+    * ``snapshot()``           — the paper's five-field instance snapshot.
+    """
+
+    inst_id: int
+    inst_version: int
+
+    def route(self, traj: Trajectory, now: float = 0.0) -> None: ...
+
+    def route_many(
+        self, trajs: Sequence[Trajectory], now: float = 0.0
+    ) -> None: ...
+
+    def interrupt(
+        self, traj_ids: Sequence[int], now: float = 0.0
+    ) -> List[Trajectory]: ...
+
+    def abort(
+        self, traj_ids: Sequence[int], now: float = 0.0
+    ) -> List[Trajectory]: ...
+
+    def pull(self, params: Any, version: int, now: float = 0.0) -> None: ...
+
+    def step(self, now: float = 0.0, dt: float = 0.0) -> List[Trajectory]: ...
+
+    def snapshot(self) -> InstanceSnapshot: ...
+
+
+# ============================================================== sim backend
+class SimBackend:
+    """Cost-model-driven rollout replica (the simulator's data plane).
+
+    Decode progress follows ``CostModel.step_latency`` (paper Eq. 2);
+    admission respects the KV budget; routing/migration re-prefill stalls
+    the instance for ``length / prefill_tps`` and Pull for ``pull_time``.
+    """
+
+    def __init__(
+        self,
+        inst_id: int,
+        cost_model: CostModel,
+        version: int = 0,
+        *,
+        prefill_tps: float = 50000.0,
+        pull_time: float = 0.0,
+    ):
+        self.inst_id = inst_id
+        self.cm = cost_model
+        self.inst_version = version
+        self._prefill_tps = prefill_tps
+        self.pull_time = pull_time
+        self.running: Dict[int, Trajectory] = {}
+        self.progress: Dict[int, float] = {}   # fractional generated tokens
+        self.waiting: List[Trajectory] = []
+        self.stall_until = 0.0
+        self.complete_since_sync: set = set()
+        self.decode_tokens = 0.0
+        self.prefill_tokens = 0.0
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def version(self) -> int:  # legacy alias
+        return self.inst_version
+
+    def kv_bytes(self) -> float:
+        return sum(self.cm.k5 * t.length for t in self.running.values())
+
+    def n_active(self) -> int:
+        return len(self.running)
+
+    def _admit(self, now: float) -> None:
+        while self.waiting:
+            nxt = self.waiting[0]
+            if self.kv_bytes() + self.cm.k5 * (nxt.length + 64) > self.cm.kv_budget:
+                return
+            self.waiting.pop(0)
+            self.running[nxt.traj_id] = nxt
+            self.progress[nxt.traj_id] = float(nxt.sim_generated)
+            # re-prefill stall (prompt + already-generated tokens)
+            self.stall_until = (
+                max(self.stall_until, now) + nxt.length / self._prefill_tps
+            )
+            self.prefill_tokens += nxt.length
+
+    # ------------------------------------------------------------- commands
+    def route(self, traj: Trajectory, now: float = 0.0) -> None:
+        traj.instance = self.inst_id
+        traj.status = TrajStatus.RUNNING
+        self.waiting.append(traj)
+        self._admit(now)
+
+    def route_many(
+        self, trajs: Sequence[Trajectory], now: float = 0.0
+    ) -> None:
+        for traj in trajs:
+            traj.instance = self.inst_id
+            traj.status = TrajStatus.RUNNING
+            self.waiting.append(traj)
+        self._admit(now)
+
+    def _remove(self, traj_ids: Sequence[int], now: float) -> List[Trajectory]:
+        out = []
+        for tid in list(traj_ids):
+            if tid in self.running:
+                t = self.running.pop(tid)
+                t.sim_generated = int(self.progress.pop(tid))
+                out.append(t)
+            else:
+                for i, t in enumerate(self.waiting):
+                    if t.traj_id == tid:
+                        out.append(self.waiting.pop(i))
+                        break
+        self._admit(now)
+        return out
+
+    def interrupt(
+        self, traj_ids: Sequence[int], now: float = 0.0
+    ) -> List[Trajectory]:
+        out = self._remove(traj_ids, now)
+        for t in out:
+            t.status = TrajStatus.INTERRUPTED
+            t.instance = None
+        return out
+
+    def abort(self, traj_ids: Sequence[int], now: float = 0.0) -> List[Trajectory]:
+        out = self._remove(traj_ids, now)
+        for t in out:
+            t.status = TrajStatus.ABORTED
+            t.instance = None
+        return out
+
+    def pull(self, params: Any, version: int, now: float = 0.0) -> None:
+        del params  # simulated replicas carry no real weights
+        self.inst_version = version
+        self.complete_since_sync.clear()
+        self.stall_until = max(self.stall_until, now) + self.pull_time
+
+    # ----------------------------------------------------------------- step
+    def step(self, now: float = 0.0, dt: float = 0.0) -> List[Trajectory]:
+        """Generate tokens for ``dt`` sim-seconds; return completed trajs."""
+        if not self.running:
+            return []
+        t0 = max(now, self.stall_until)
+        avail = now + dt - t0
+        if avail <= 0:
+            return []
+        lat = self.cm.step_latency(self.kv_bytes(), len(self.running))
+        steps = avail / lat
+        done = []
+        for tid, traj in list(self.running.items()):
+            self.progress[tid] += steps
+            self.decode_tokens += steps
+            traj.sim_generated = int(self.progress[tid])
+            if self.progress[tid] >= traj.sim_target_len:
+                traj.sim_generated = traj.sim_target_len
+                traj.finished = True
+                traj.status = TrajStatus.GENERATED
+                del self.running[tid]
+                del self.progress[tid]
+                self.complete_since_sync.add(tid)
+                done.append(traj)
+        if done:
+            self._admit(now + dt)
+        return done
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot(self) -> InstanceSnapshot:
+        lengths = {t.traj_id: t.length for t in self.running.values()}
+        lengths.update({t.traj_id: t.length for t in self.waiting})
+        return InstanceSnapshot(
+            inst_id=self.inst_id,
+            kv_cache=self.kv_bytes(),
+            run_trajs=set(self.running),
+            wait_trajs={t.traj_id for t in self.waiting},
+            complete_trajs=set(self.complete_since_sync),
+            inst_version=self.inst_version,
+            traj_lengths=lengths,
+        )
+
+
+# ================================================================= executor
+@dataclass
+class ExecResult:
+    """What a command batch did — shared telemetry for runtime and sim."""
+
+    routed: int = 0
+    interrupted: int = 0
+    aborted: int = 0
+    pulls: List[Tuple[int, int]] = field(default_factory=list)  # (inst, version)
+    returned: List[int] = field(default_factory=list)           # put_back ids
+
+
+def execute_commands(
+    commands: Sequence[Command],
+    instances: Dict[int, EngineBackend],
+    ts,                                   # TrajectoryServer
+    param_source: ParamSource,
+    *,
+    now: float = 0.0,
+    timers: Optional[Dict[str, float]] = None,
+) -> ExecResult:
+    """Apply coordinator commands to any mix of engine backends.
+
+    Missing instances (failed since command issuance) are skipped, matching
+    the live runtime's fault-tolerance semantics.
+
+    Consecutive Route commands are coalesced per instance and applied as
+    one ``route_many`` wave, letting the real engine admit every routed
+    trajectory in one batched prefill per length bucket. Pending waves are
+    flushed before any non-Route command executes, so semantics match the
+    strictly in-order executor for *arbitrary* command sequences — with
+    the coordinator's ordering (Alg. 1 emits Routes last within a cycle)
+    the whole cycle still lands as one wave per instance.
+    """
+    res = ExecResult()
+
+    def _timed(name: str, t0: float) -> None:
+        if timers is not None:
+            timers[name] = timers.get(name, 0.0) + time.perf_counter() - t0
+
+    route_waves: Dict[int, List[Trajectory]] = {}
+
+    def _flush_waves() -> None:
+        for inst_id, wave in route_waves.items():
+            t0 = time.perf_counter()
+            instances[inst_id].route_many(wave, now)
+            _timed("route", t0)
+        route_waves.clear()
+
+    for cmd in commands:
+        inst = instances.get(cmd.inst)
+        if inst is None:
+            continue  # instance failed since issuance
+        if isinstance(cmd, Route):
+            t0 = time.perf_counter()
+            for tid in cmd.traj_ids:
+                traj = ts.take(tid)
+                if traj.v_traj is None:
+                    traj.v_traj = cmd.v_traj
+                route_waves.setdefault(cmd.inst, []).append(traj)
+            res.routed += len(cmd.traj_ids)
+            _timed("route", t0)
+            continue
+        _flush_waves()
+        if isinstance(cmd, Interrupt):
+            t0 = time.perf_counter()
+            for traj in inst.interrupt(cmd.traj_ids, now):
+                ts.put_back(traj.traj_id)
+                res.returned.append(traj.traj_id)
+            res.interrupted += len(cmd.traj_ids)
+            _timed("interrupt", t0)
+        elif isinstance(cmd, Abort):
+            inst.abort(cmd.traj_ids, now)
+            for tid in cmd.traj_ids:
+                ts.drop(tid)
+            res.aborted += len(cmd.traj_ids)
+        elif isinstance(cmd, Pull):
+            t0 = time.perf_counter()
+            params, version = param_source.pull()
+            inst.pull(params, version, now)
+            res.pulls.append((cmd.inst, version))
+            _timed("pull", t0)
+
+    _flush_waves()
+    return res
+
+
+# ================================================================== factory
+def _make_sim_backend(inst_id: int, **kw) -> SimBackend:
+    return SimBackend(inst_id, **kw)
+
+
+def _make_jax_backend(inst_id: int, **kw) -> "EngineBackend":
+    from repro.rollout.engine import RolloutInstance  # lazy: needs jax
+
+    return RolloutInstance(inst_id, **kw)
+
+
+BACKENDS = {
+    "sim": _make_sim_backend,
+    "jax": _make_jax_backend,
+}
+
+
+def create_backend(kind: str, inst_id: int, **kw) -> EngineBackend:
+    """Construct a rollout instance by backend name (``"jax"`` / ``"sim"``).
+
+    Keyword arguments are backend-specific: the JAX engine takes
+    ``cfg/params/version/max_slots/...`` (see ``RolloutInstance``), the sim
+    backend ``cost_model/version/prefill_tps/pull_time``.
+    """
+    try:
+        factory = BACKENDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {kind!r}; available: {sorted(BACKENDS)}"
+        ) from None
+    return factory(inst_id, **kw)

@@ -9,7 +9,16 @@ This is the JAX stand-in for a vLLM instance in the paper's rollout service
 * an engine-internal waiting queue (the paper's ``wait_trajs``, Fig. 11) —
   trajectories routed to the instance but not yet admitted to a slot
   (KV budget or slot exhaustion), and
-* a jit'd single-row prefill + batched decode step.
+* a prefill/decode runner pair (``repro.rollout.runners``): admission
+  prefills **all** eligible waiting trajectories in one padded forward per
+  length bucket and scatters the row caches in one fused jitted write;
+  decode gathers only the **active** slots into a power-of-two compaction
+  bucket instead of always stepping ``max_slots`` rows.
+
+``RolloutInstance`` implements the ``EngineBackend`` protocol
+(``repro.rollout.backend``): ``route / interrupt / abort / pull / step /
+snapshot``. The simulated-clock arguments of ``step``/``pull`` are accepted
+and ignored — a real replica advances one decode step per ``step()`` call.
 
 Command execution (the data-plane side of §5.1):
 * ``route``     — enqueue; admit into a free slot if the KV budget allows
@@ -26,27 +35,25 @@ Behavior logprobs: every sampled token's logprob under the *generating*
 version is recorded on the trajectory — this is the importance-sampling
 denominator for staleness correction (``repro.rl.losses``) and survives
 interrupts/migrations untouched.
+
+Legacy mode: ``batched_prefill=False`` forces single-row prefill groups and
+``compact_decode=False`` forces full-``max_slots`` decode — together they
+reproduce the seed engine's execution exactly, which the equivalence tests
+(``tests/test_engine_equivalence.py``) compare the batched path against.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.snapshot import InstanceSnapshot
 from repro.core.types import Trajectory, TrajStatus
 from repro.data.tokenizer import EOS
 from repro.models import model as M
-from repro.rollout.sampler import sample
-
-
-def _round_up(n: int, mult: int) -> int:
-    return ((n + mult - 1) // mult) * mult
+from repro.rollout.runners import DecodeRunner, PrefillJob, PrefillRunner
 
 
 class RolloutInstance:
@@ -66,6 +73,8 @@ class RolloutInstance:
         seed: int = 0,
         prefill_bucket: int = 16,
         frontend_fn: Optional[Callable[[int], jax.Array]] = None,
+        batched_prefill: bool = True,
+        compact_decode: bool = True,
     ):
         self.inst_id = inst_id
         self.cfg = cfg
@@ -79,8 +88,7 @@ class RolloutInstance:
         self.kv_budget = kv_budget
         self.temperature = temperature
         self.eos_id = eos_id
-        self.prefill_bucket = prefill_bucket
-        self.frontend_fn = frontend_fn
+        self.compact_decode = compact_decode
         self._key = jax.random.PRNGKey(seed + 7919 * inst_id)
 
         self.cache = M.init_cache(cfg, max_slots, max_len)
@@ -93,8 +101,17 @@ class RolloutInstance:
         self.prefill_tokens = 0
         self.decode_tokens = 0
 
-        self._jit_decode = jax.jit(partial(M.decode_step, cfg))
-        self._jit_prefill = jax.jit(partial(M.prefill, cfg))
+        self.prefill_runner = PrefillRunner(
+            cfg,
+            max_len=max_len,
+            prefill_bucket=prefill_bucket,
+            batch_limit=0 if batched_prefill else 1,
+            temperature=temperature,
+            frontend_fn=frontend_fn,
+        )
+        self.decode_runner = DecodeRunner(
+            cfg, max_slots=max_slots, temperature=temperature
+        )
         self._overflow_done: List[Trajectory] = []
 
     # ------------------------------------------------------------- geometry
@@ -110,23 +127,37 @@ class RolloutInstance:
         return sum(1 for t in self.slots if t is not None)
 
     # ------------------------------------------------------------- commands
-    def route(self, traj: Trajectory) -> None:
+    def route(self, traj: Trajectory, now: float = 0.0) -> None:
         traj.instance = self.inst_id
         self.waiting.append(traj)
         self._admit()
 
-    def interrupt(self, traj_ids) -> List[Trajectory]:
+    def route_many(
+        self, trajs: Sequence[Trajectory], now: float = 0.0
+    ) -> None:
+        """Enqueue a wave of trajectories, then admit once — every
+        admissible trajectory prefills in one batched forward per bucket."""
+        for traj in trajs:
+            traj.instance = self.inst_id
+            self.waiting.append(traj)
+        self._admit()
+
+    def interrupt(
+        self, traj_ids: Sequence[int], now: float = 0.0
+    ) -> List[Trajectory]:
         ids = set(traj_ids)
         out: List[Trajectory] = []
         for i, t in enumerate(self.slots):
             if t is not None and t.traj_id in ids:
                 self.slots[i] = None
                 t.status = TrajStatus.INTERRUPTED
+                t.instance = None
                 out.append(t)
         keep = []
         for t in self.waiting:
             if t.traj_id in ids:
                 t.status = TrajStatus.INTERRUPTED
+                t.instance = None
                 out.append(t)
             else:
                 keep.append(t)
@@ -134,13 +165,13 @@ class RolloutInstance:
         self._admit()
         return out
 
-    def abort(self, traj_ids) -> List[Trajectory]:
+    def abort(self, traj_ids: Sequence[int], now: float = 0.0) -> List[Trajectory]:
         out = self.interrupt(traj_ids)
         for t in out:
             t.status = TrajStatus.ABORTED
         return out
 
-    def pull(self, params: Any, version: int) -> None:
+    def pull(self, params: Any, version: int, now: float = 0.0) -> None:
         self.params = params
         self.inst_version = version
         self.complete_since_sync.clear()
@@ -150,66 +181,56 @@ class RolloutInstance:
 
     # ---------------------------------------------------------------- admit
     def _admit(self) -> None:
-        """Move waiting trajectories into free slots within the KV budget."""
-        for i in range(self.max_slots):
-            if not self.waiting:
-                return
-            if self.slots[i] is not None:
-                continue
+        """Admit waiting trajectories into free slots within the KV budget —
+        all eligible admissions run as ONE batched prefill per length bucket.
+
+        Admission policy matches the seed engine decision-for-decision: the
+        waiting queue is FIFO, each admission charges ``k5 * (length + 1)``
+        against the budget (the +1 is the token prefill samples), and a
+        trajectory too long to generate consumes its candidate slot index
+        exactly as the seed's slot-scan did.
+        """
+        free = [i for i, t in enumerate(self.slots) if t is None]
+        jobs: List[PrefillJob] = []
+        trajs: List[Trajectory] = []
+        planned_bytes = self.kv_bytes()
+        while self.waiting and free:
             nxt = self.waiting[0]
             need = self.k5 * min(self._slot_len(nxt) + 16, self.max_len)
-            if self.kv_bytes() + need > self.kv_budget:
-                return
+            if planned_bytes + need > self.kv_budget:
+                break
             self.waiting.pop(0)
-            self._prefill_slot(i, nxt)
-
-    # batch-axis index per cache entry (single-row scatter targets)
-    _BATCH_AXIS = {
-        "pos": 0, "k": 1, "v": 1, "conv": 1, "ssm": 1, "xk": 1, "xv": 1,
-        "mlstm": 2, "slstm": 1,
-    }
-
-    def _scatter_row(self, row_cache: Dict[str, Any], slot: int) -> None:
-        """Write a freshly prefilled single-row cache into batch ``slot``."""
-        for name, row_val in row_cache.items():
-            axis = self._BATCH_AXIS[name]
-
-            def put(full, row):
-                idx = (slice(None),) * axis + (slot,)
-                ridx = (slice(None),) * axis + (0,)
-                return full.at[idx].set(row[ridx])
-
-            self.cache[name] = jax.tree_util.tree_map(
-                put, self.cache[name], row_val
-            )
-
-    def _prefill_slot(self, slot: int, traj: Trajectory) -> None:
-        """(Re-)prefill prompt + already-generated response into ``slot``."""
-        tokens = list(traj.prompt) + list(traj.response)
-        if len(tokens) >= self.max_len - 1:
-            # no room to generate: finish immediately (engine-level cap)
-            traj.finished = True
-            traj.status = TrajStatus.GENERATED
-            self.complete_since_sync.add(traj.traj_id)
-            self._overflow_done.append(traj)
+            slot = free.pop(0)
+            tokens = list(nxt.prompt) + list(nxt.response)
+            if len(tokens) >= self.max_len - 1:
+                # no room to generate: finish immediately (engine-level cap)
+                nxt.finished = True
+                nxt.status = TrajStatus.GENERATED
+                self.complete_since_sync.add(nxt.traj_id)
+                self._overflow_done.append(nxt)
+                continue
+            self._key, sub = jax.random.split(self._key)
+            jobs.append(PrefillJob(slot=slot, tokens=tokens, key=sub))
+            trajs.append(nxt)
+            planned_bytes += self.k5 * (self._slot_len(nxt) + 1)
+        if not jobs:
             return
-        bucket = min(_round_up(len(tokens), self.prefill_bucket), self.max_len)
-        padded = tokens + [0] * (bucket - len(tokens))
-        row_tokens = jnp.asarray([padded], jnp.int32)
-        lengths = jnp.asarray([len(tokens)], jnp.int32)
-        fe = self.frontend_fn(1) if self.frontend_fn is not None else None
-        row_cache = M.init_cache(self.cfg, 1, self.max_len)
-        logits, row_cache = self._jit_prefill(
-            self.params, row_tokens, lengths, row_cache, frontend_embeds=fe
+        # the decode runner may hold active rows compacted out of the batch
+        # cache; sync them back before the prefill scatter writes new rows
+        self.cache = self.decode_runner.flush(self.cache)
+        self.cache, result = self.prefill_runner.run(
+            self.params, self.cache, jobs
         )
-        self._scatter_row(row_cache, slot)
-        self._key, sub = jax.random.split(self._key)
-        tok, blp = sample(logits, sub, temperature=self.temperature)
-        self._record_token(traj, int(tok[0]), float(blp[0]))
-        self._last_tokens = self._last_tokens.at[slot].set(tok[0])
-        self.prefill_tokens += len(tokens)
-        traj.status = TrajStatus.RUNNING
-        self.slots[slot] = traj
+        self.prefill_tokens += result.prefill_tokens
+        last = self._last_tokens
+        for job, traj, tok, blp in zip(
+            jobs, trajs, result.tokens, result.logprobs
+        ):
+            self._record_token(traj, tok, blp)
+            last = last.at[job.slot].set(tok)
+            traj.status = TrajStatus.RUNNING
+            self.slots[job.slot] = traj
+        self._last_tokens = last
 
     # ----------------------------------------------------------------- step
     def _record_token(self, traj: Trajectory, token: int, blp: float) -> None:
@@ -219,8 +240,8 @@ class RolloutInstance:
         if token == self.eos_id or traj.n_generated >= traj.max_new_tokens:
             traj.finished = True
 
-    def step(self) -> List[Trajectory]:
-        """One batched decode step for all active slots. Returns completed
+    def step(self, now: float = 0.0, dt: float = 0.0) -> List[Trajectory]:
+        """One batched decode step over the active slots. Returns completed
         trajectories (removed from their slots)."""
         done: List[Trajectory] = []
         if self._overflow_done:
@@ -229,33 +250,29 @@ class RolloutInstance:
         active = [i for i, t in enumerate(self.slots) if t is not None]
         if not active:
             return done
-        prev_pos = self.cache["pos"]
-        logits, new_cache = self._jit_decode(
-            self.params, self._last_tokens, self.cache
-        )
-        # only active slots advance; inactive rows keep their old position
-        mask = np.zeros((self.max_slots,), bool)
-        mask[active] = True
-        mask_j = jnp.asarray(mask)
-        new_cache["pos"] = jnp.where(mask_j, new_cache["pos"], prev_pos)
-        self.cache = new_cache
         self._key, sub = jax.random.split(self._key)
-        tokens, blps = sample(logits, sub, temperature=self.temperature)
-        self._last_tokens = jnp.where(mask_j, tokens, self._last_tokens)
+        self.cache, self._last_tokens, result = self.decode_runner.run(
+            self.params,
+            self.cache,
+            active,
+            self._last_tokens,
+            sub,
+            compact=self.compact_decode,
+        )
         self.decode_steps += 1
         self.decode_tokens += len(active)
 
-        tokens_np = np.asarray(tokens)
-        blps_np = np.asarray(blps)
-        for i in active:
-            traj = self.slots[i]
-            self._record_token(traj, int(tokens_np[i]), float(blps_np[i]))
-            if traj.finished or int(self.cache["pos"][i]) >= self.max_len - 1:
+        for slot, token, blp, pos in zip(
+            result.slots, result.tokens, result.logprobs, result.positions
+        ):
+            traj = self.slots[slot]
+            self._record_token(traj, int(token), float(blp))
+            if traj.finished or int(pos) >= self.max_len - 1:
                 traj.finished = True
                 traj.status = TrajStatus.GENERATED
                 self.complete_since_sync.add(traj.traj_id)
                 done.append(traj)
-                self.slots[i] = None
+                self.slots[slot] = None
         if done:
             self._admit()
         return done

@@ -1,0 +1,376 @@
+"""Prefill / decode runners: the batched data plane of a rollout instance.
+
+Production engines (vLLM, SGLang, TensorRT-LLM) split the generation loop
+into two phases with very different batching economics:
+
+* **Prefill** is compute-bound and benefits from batching whole prompts —
+  ``PrefillRunner`` admits *all* eligible waiting trajectories in one padded
+  forward pass per length bucket and writes the resulting row caches into
+  the instance's batch cache with a single jitted scatter (replacing the
+  seed engine's per-trajectory ``init_cache(cfg, 1, ...)`` forward +
+  tensor-by-tensor ``tree_map(.at[].set)`` loop).
+* **Decode** is memory/parameter-bound and pays for every batch row whether
+  or not a trajectory occupies it — ``DecodeRunner`` gathers only the
+  *active* slots into a power-of-two compaction bucket, decodes that, and
+  scatters the updated rows back, instead of always decoding ``max_slots``
+  rows.
+
+Equivalence contract (tested in ``tests/test_engine_equivalence.py``): on
+the CPU/TPU XLA backends both runners are **bitwise** equivalent per row to
+the seed single-row path — batched matmul rows do not interact (MoE expert
+capacity is the one documented exception: capacity is a function of batch
+size, so compaction can change token dropping at capacity limits; the
+runtime's reduced configs are dense). Sampling keys are split per
+trajectory at prefill (same order as the seed admission loop) and once per
+decode step (same as the seed), so greedy decoding reproduces the seed
+token stream exactly.
+
+Both runners are pure data-plane helpers: they know nothing about the
+waiting queue, KV budget, or the coordination protocol — that policy stays
+in ``RolloutInstance`` (``repro.rollout.engine``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.rollout.sampler import sample
+
+Cache = Dict[str, Any]
+
+# batch-axis index per cache entry (gather/scatter targets)
+BATCH_AXIS = {
+    "pos": 0, "k": 1, "v": 1, "conv": 1, "ssm": 1, "xk": 1, "xv": 1,
+    "mlstm": 2, "slstm": 1,
+}
+
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _row_index(name: str, rows: jax.Array) -> Tuple:
+    return (slice(None),) * BATCH_AXIS[name] + (rows,)
+
+
+def gather_rows(cache: Cache, rows: jax.Array) -> Cache:
+    """Extract batch rows ``rows`` of every cache entry (compact view)."""
+    return {
+        name: jax.tree_util.tree_map(lambda f: f[_row_index(name, rows)], val)
+        for name, val in cache.items()
+    }
+
+
+def scatter_rows(cache: Cache, row_cache: Cache, rows: jax.Array) -> Cache:
+    """Write batch rows of ``row_cache`` into ``cache`` at indices ``rows``.
+
+    ``row_cache`` leaves must carry exactly ``len(rows)`` entries on their
+    batch axis. One fused scatter over the whole cache pytree.
+    """
+    out = {}
+    for name, full in cache.items():
+        idx = _row_index(name, rows)
+        out[name] = jax.tree_util.tree_map(
+            lambda f, r: f.at[idx].set(r.astype(f.dtype)), full, row_cache[name]
+        )
+    return out
+
+
+@dataclass
+class PrefillJob:
+    """One planned admission: trajectory tokens destined for a cache slot."""
+
+    slot: int
+    tokens: List[int]          # prompt + partial response (re-prefill)
+    key: jax.Array             # per-trajectory sampling key (seed split order)
+
+    @property
+    def bucket_len(self) -> int:
+        return len(self.tokens)
+
+
+@dataclass
+class PrefillResult:
+    """Per-job sampled continuations, aligned with the submitted job list."""
+
+    tokens: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    prefill_tokens: int = 0
+
+
+class PrefillRunner:
+    """Bucketed multi-row batched prefill + fused cache scatter.
+
+    ``batch_limit`` caps rows per forward; ``batch_limit=1`` degenerates to
+    the seed engine's single-row path exactly (same shapes, same calls, same
+    key order), which is what the equivalence tests compare against.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        *,
+        max_len: int,
+        prefill_bucket: int = 16,
+        batch_limit: int = 0,            # 0 = unlimited (one pass per bucket)
+        temperature: float = 1.0,
+        frontend_fn: Optional[Callable[[int], jax.Array]] = None,
+    ):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+        self.batch_limit = batch_limit
+        self.temperature = temperature
+        self.frontend_fn = frontend_fn
+        self._jit_prefill = jax.jit(partial(M.prefill, cfg))
+        self._jit_scatter = jax.jit(scatter_rows)
+        # per-row sampling with per-trajectory keys, vmapped: bitwise equal
+        # to the seed's one-row sample() loop, but a single dispatch
+        self._jit_sample = jax.jit(
+            jax.vmap(
+                lambda lg, k: sample(
+                    lg[None], k, temperature=self.temperature
+                )
+            )
+        )
+
+    def bucket_of(self, n_tokens: int) -> int:
+        return min(round_up(max(n_tokens, 1), self.prefill_bucket), self.max_len)
+
+    def _groups(self, jobs: Sequence[PrefillJob]) -> List[List[PrefillJob]]:
+        """Group jobs by padded bucket length, preserving admission order,
+        splitting groups at ``batch_limit`` rows."""
+        by_bucket: Dict[int, List[PrefillJob]] = {}
+        order: List[int] = []
+        for job in jobs:
+            b = self.bucket_of(len(job.tokens))
+            if b not in by_bucket:
+                by_bucket[b] = []
+                order.append(b)
+            by_bucket[b].append(job)
+        limit = self.batch_limit if self.batch_limit > 0 else len(jobs)
+        groups: List[List[PrefillJob]] = []
+        for b in order:
+            g = by_bucket[b]
+            groups.extend(g[i : i + limit] for i in range(0, len(g), limit))
+        return groups
+
+    def run(
+        self, params: Any, cache: Cache, jobs: Sequence[PrefillJob]
+    ) -> Tuple[Cache, PrefillResult]:
+        """Prefill every job into its slot. Returns (cache, sampled tokens).
+
+        The result lists are aligned with ``jobs`` (not with the internal
+        bucket grouping).
+        """
+        result = PrefillResult(
+            tokens=[0] * len(jobs), logprobs=[0.0] * len(jobs)
+        )
+        index = {id(job): i for i, job in enumerate(jobs)}
+        for group in self._groups(jobs):
+            bucket = self.bucket_of(max(len(j.tokens) for j in group))
+            rows = np.zeros((len(group), bucket), np.int32)
+            lengths = np.zeros((len(group),), np.int32)
+            for r, job in enumerate(group):
+                rows[r, : len(job.tokens)] = job.tokens
+                lengths[r] = len(job.tokens)
+            fe = (
+                self.frontend_fn(len(group))
+                if self.frontend_fn is not None
+                else None
+            )
+            row_cache = M.init_cache(self.cfg, len(group), self.max_len)
+            logits, row_cache = self._jit_prefill(
+                params,
+                jnp.asarray(rows),
+                jnp.asarray(lengths),
+                row_cache,
+                frontend_embeds=fe,
+            )
+            slots = jnp.asarray([j.slot for j in group], jnp.int32)
+            cache = self._jit_scatter(cache, row_cache, slots)
+            keys = jnp.stack([j.key for j in group])
+            toks, blps = self._jit_sample(logits, keys)
+            toks_np = np.asarray(toks)[:, 0]
+            blps_np = np.asarray(blps)[:, 0]
+            for r, job in enumerate(group):
+                i = index[id(job)]
+                result.tokens[i] = int(toks_np[r])
+                result.logprobs[i] = float(blps_np[r])
+                result.prefill_tokens += len(job.tokens)
+        return cache, result
+
+
+@dataclass
+class DecodeResult:
+    """One decode step's outputs for the active slots (aligned lists)."""
+
+    slots: List[int]
+    tokens: np.ndarray           # (n_active,)
+    logprobs: np.ndarray         # (n_active,)
+    positions: np.ndarray        # (n_active,) post-step cache positions
+
+
+class DecodeRunner:
+    """Active-slot decode via *persistent* power-of-two compaction buckets.
+
+    When every slot is active (or ``compact=False``) this is the seed
+    engine's full-batch decode: all ``max_slots`` rows in place, inactive
+    rows masked. When fewer are active, the active rows are gathered into a
+    ``next_pow2(n_active)`` bucket **once** and decoded there step after
+    step — decode FLOPs, cache-update traffic, and sampling all scale with
+    the bucket, not ``max_slots``. The compact state is written back into
+    the full cache only at structural changes (occupancy change, or an
+    explicit ``flush`` before a prefill scatters new rows), so the steady
+    state pays one jitted dispatch per step with bucket-sized buffers.
+
+    Coherence contract: while compact state is live, the *active* rows of
+    the full cache handed back by ``run`` are stale — callers that read or
+    write cache rows directly (the prefill scatter) must call ``flush``
+    first. ``run`` itself re-syncs automatically whenever the active-slot
+    set changes.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, max_slots: int, temperature: float = 1.0):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.temperature = temperature
+        self._jit_decode = jax.jit(partial(M.decode_step, cfg))
+        self._jit_gather = jax.jit(gather_rows)
+        # fused row-gather + decode per (bucket, n_active): one dispatch
+        # per steady-state step
+        self._compact_steps: Dict[Tuple[int, int], Any] = {}
+        self._flushes: Dict[Tuple[int, int], Any] = {}
+        # persistent compact state: (ordered active slots, compact cache)
+        self._rows: Optional[Tuple[int, ...]] = None
+        self._rows_arr: Optional[jax.Array] = None   # padded device copy
+        self._live_arr: Optional[jax.Array] = None
+        self._compact: Optional[Cache] = None
+
+    def bucket_of(self, n_active: int) -> int:
+        return min(next_pow2(max(n_active, 1)), self.max_slots)
+
+    # ------------------------------------------------------------ coherence
+    def flush(self, cache: Cache) -> Cache:
+        """Write live compact rows back into ``cache`` and drop the compact
+        state. Call before touching cache rows externally (prefill scatter);
+        a no-op when no compact state is held."""
+        if self._compact is None:
+            return cache
+        n = len(self._rows)
+        bucket = self.bucket_of(n)
+        fn = self._flushes.get((bucket, n))
+        if fn is None:
+            def _flush(cache, compact, live):
+                live_rows = {
+                    name: jax.tree_util.tree_map(
+                        lambda f: jax.lax.slice_in_dim(
+                            f, 0, n, axis=BATCH_AXIS[name]
+                        ),
+                        val,
+                    )
+                    for name, val in compact.items()
+                }
+                return scatter_rows(cache, live_rows, live)
+
+            fn = jax.jit(_flush)
+            self._flushes[(bucket, n)] = fn
+        cache = fn(cache, self._compact, self._live_arr)
+        self._rows = self._rows_arr = self._live_arr = None
+        self._compact = None
+        return cache
+
+    def _compact_step(self, bucket: int, n: int):
+        key = (bucket, n)
+        fn = self._compact_steps.get(key)
+        if fn is None:
+            def step(params, last_tokens, compact, rows):
+                logits, new_compact = M.decode_step(
+                    self.cfg, params, last_tokens[rows], compact
+                )
+                return logits, new_compact, new_compact["pos"][:n]
+
+            fn = jax.jit(step)
+            self._compact_steps[key] = fn
+        return fn
+
+    # ----------------------------------------------------------------- step
+    def run(
+        self,
+        params: Any,
+        cache: Cache,
+        active: Sequence[int],
+        last_tokens: jax.Array,      # (max_slots,)
+        key: jax.Array,              # one step key (seed split order)
+        *,
+        compact: bool = True,
+    ) -> Tuple[Cache, jax.Array, DecodeResult]:
+        """One decode step over ``active`` slots.
+
+        Returns (cache, last_tokens, result); ``last_tokens`` rows of
+        inactive slots are preserved, as are their cache positions.
+        """
+        active = list(active)
+        n = len(active)
+        bucket = self.max_slots if not compact else self.bucket_of(n)
+        if bucket >= self.max_slots:
+            cache = self.flush(cache)
+            return self._run_full(params, cache, active, last_tokens, key)
+
+        rows_key = tuple(active)
+        if self._rows != rows_key:
+            # occupancy changed: sync the old compact state back, gather the
+            # new active rows (padded with duplicates of the first row; the
+            # pads decode too but are never written back)
+            cache = self.flush(cache)
+            self._rows_arr = jnp.asarray(
+                active + [active[0]] * (bucket - n), jnp.int32
+            )
+            self._live_arr = jnp.asarray(active, jnp.int32)
+            self._compact = self._jit_gather(cache, self._rows_arr)
+            self._rows = rows_key
+        logits, self._compact, pos_live = self._compact_step(bucket, n)(
+            params, last_tokens, self._compact, self._rows_arr
+        )
+        tokens, blps = sample(logits, key, temperature=self.temperature)
+        last_tokens = last_tokens.at[self._live_arr].set(tokens[:n])
+        return cache, last_tokens, DecodeResult(
+            slots=active,
+            tokens=np.asarray(tokens[:n]),
+            logprobs=np.asarray(blps[:n]),
+            positions=np.asarray(pos_live),
+        )
+
+    def _run_full(self, params, cache, active, last_tokens, key):
+        """Seed path: decode all ``max_slots`` rows, mask inactive ones."""
+        prev_pos = cache["pos"]
+        logits, new_cache = self._jit_decode(params, last_tokens, cache)
+        mask = np.zeros((self.max_slots,), bool)
+        mask[active] = True
+        mask_j = jnp.asarray(mask)
+        new_cache["pos"] = jnp.where(mask_j, new_cache["pos"], prev_pos)
+        tokens, blps = sample(logits, key, temperature=self.temperature)
+        last_tokens = jnp.where(mask_j, tokens, last_tokens)
+        tokens_np = np.asarray(tokens)
+        blps_np = np.asarray(blps)
+        pos_np = np.asarray(new_cache["pos"])
+        return new_cache, last_tokens, DecodeResult(
+            slots=list(active),
+            tokens=tokens_np[active],
+            logprobs=blps_np[active],
+            positions=pos_np[active],
+        )

@@ -36,24 +36,20 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import (
-    Abort,
     CostModel,
-    Interrupt,
     ParameterServer,
-    Pull,
     RolloutCoordinator,
-    Route,
     StalenessManager,
     StrategyConfig,
     StrategySuite,
     TrajectoryServer,
 )
-from repro.core.types import Trajectory
+from repro.core.types import Trajectory, TrajStatus
 from repro.data.tasks import ArithmeticDataset
 from repro.models import model as M
 from repro.reward.verifier import RewardModel
 from repro.rl.advantages import group_advantages
-from repro.rollout.engine import RolloutInstance
+from repro.rollout.backend import EngineBackend, create_backend, execute_commands
 from repro.training import checkpoint as ckpt_lib
 from repro.training.optimizer import AdamWConfig, init_opt_state
 from repro.training.train_step import make_rl_train_step
@@ -142,7 +138,7 @@ class AsyncRLRuntime:
             group_filter=group_filter,
         )
 
-        self.instances: Dict[int, RolloutInstance] = {}
+        self.instances: Dict[int, EngineBackend] = {}
         for i in range(rcfg.n_instances):
             self.instances[i] = self._new_instance(i)
         self.coordinator.spec.resync(self._snapshots())
@@ -159,12 +155,13 @@ class AsyncRLRuntime:
         }
 
     # -------------------------------------------------------------- plumbing
-    def _new_instance(self, inst_id: int) -> RolloutInstance:
-        return RolloutInstance(
+    def _new_instance(self, inst_id: int) -> EngineBackend:
+        return create_backend(
+            "jax",
             inst_id,
-            self.cfg,
-            self.ps.pull()[0],
-            self.ps.version,
+            cfg=self.cfg,
+            params=self.ps.pull()[0],
+            version=self.ps.version,
             max_slots=self.rcfg.max_slots,
             max_len=self.rcfg.max_len,
             kv_bytes_per_token=self.cost_model.k5,
@@ -178,32 +175,9 @@ class AsyncRLRuntime:
 
     # ------------------------------------------------------------- commands
     def _execute(self, commands) -> None:
-        for cmd in commands:
-            inst = self.instances.get(cmd.inst)
-            if inst is None:
-                continue  # instance failed since issuance
-            if isinstance(cmd, Route):
-                t0 = time.perf_counter()
-                for tid in cmd.traj_ids:
-                    traj = self.ts.take(tid)
-                    if traj.v_traj is None:
-                        traj.v_traj = cmd.v_traj
-                    inst.route(traj)
-                self.timers["route"] += time.perf_counter() - t0
-            elif isinstance(cmd, Interrupt):
-                t0 = time.perf_counter()
-                for traj in inst.interrupt(cmd.traj_ids):
-                    self.ts.put_back(traj.traj_id)
-                self.timers["interrupt"] += time.perf_counter() - t0
-            elif isinstance(cmd, Abort):
-                inst.abort(cmd.traj_ids)
-                for tid in cmd.traj_ids:
-                    self.ts.drop(tid)
-            elif isinstance(cmd, Pull):
-                t0 = time.perf_counter()
-                params, version = self.ps.pull()
-                inst.pull(params, version)
-                self.timers["pull"] += time.perf_counter() - t0
+        execute_commands(
+            commands, self.instances, self.ts, self.ps, timers=self.timers
+        )
 
     # ----------------------------------------------------------- the trainer
     def _train_once(self) -> Optional[StepRecord]:
@@ -319,9 +293,16 @@ class AsyncRLRuntime:
     def fail_instance(self, inst_id: int) -> List[int]:
         """Simulate a replica failure. Returns trajectory IDs returned to TS."""
         inst = self.instances.pop(inst_id)
-        resident = [t.traj_id for t in inst.slots if t is not None]
-        resident += [t.traj_id for t in inst.waiting]
+        snap = inst.snapshot()
+        resident = sorted(snap.run_trajs) + sorted(snap.wait_trajs)
         for tid in resident:
+            traj = self.ts.get(tid)
+            if traj is not None:
+                # the replica is gone: clear the dead-instance affinity and
+                # the RUNNING status, or _abort_members would mistake these
+                # TS-resident payloads for live residents of the dead id
+                traj.status = TrajStatus.INTERRUPTED
+                traj.instance = None
             self.ts.put_back(tid)
         # speculative state must forget the dead instance
         self.coordinator.spec.expectations.pop(inst_id, None)

@@ -13,8 +13,10 @@
   paper's own ablation (Fig. 16, all-vanilla == VeRL-Async), it is
   ``StaleFlowSim`` with ``suite=StrategySuite.vanilla()``.
 
-All baselines share ``SimInstance`` and the heavy-tail length sampler so
-differences come from coordination, not engine modeling.
+All baselines construct their replicas through the engine-backend factory
+(``repro.rollout.backend.create_backend("sim", ...)``) and share the
+heavy-tail length sampler, so differences come from coordination, not
+engine modeling.
 """
 from __future__ import annotations
 
@@ -23,7 +25,19 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.types import Trajectory
-from repro.sim.engine import SimConfig, SimInstance, SimResult, _length_sampler
+from repro.rollout.backend import EngineBackend, create_backend
+from repro.sim.engine import SimConfig, SimResult, _length_sampler
+
+
+def _make_instances(cfg: SimConfig) -> Dict[int, EngineBackend]:
+    """Baselines construct replicas through the backend factory — same
+    interface the StaleFlow sim and the live runtime use."""
+    return {
+        i: create_backend(
+            "sim", i, cost_model=cfg.cost_model, prefill_tps=cfg.prefill_tps
+        )
+        for i in range(cfg.n_instances)
+    }
 
 
 def _make_batch(cfg: SimConfig, sampler, start_id: int) -> List[Trajectory]:
@@ -42,7 +56,7 @@ def _make_batch(cfg: SimConfig, sampler, start_id: int) -> List[Trajectory]:
 
 def _rollout_to_completion(
     cfg: SimConfig,
-    instances: Dict[int, SimInstance],
+    instances: Dict[int, EngineBackend],
     batch: List[Trajectory],
     t_start: float,
 ) -> float:
@@ -55,7 +69,7 @@ def _rollout_to_completion(
     remaining = len(batch)
     while remaining > 0:
         for inst in instances.values():
-            done = inst.advance(now, cfg.dt)
+            done = inst.step(now, cfg.dt)
             remaining -= len(done)
         now += cfg.dt
         if now - t_start > cfg.max_sim_time:
@@ -74,10 +88,7 @@ class SyncSim:
     def run(self) -> SimResult:
         cfg = self.cfg
         sampler = _length_sampler(cfg)
-        instances = {
-            i: SimInstance(i, cfg.cost_model, prefill_tps=cfg.prefill_tps)
-            for i in range(cfg.n_instances)
-        }
+        instances = _make_instances(cfg)
         now, tokens, next_id = 0.0, 0, 0
         loads = []
         for step in range(cfg.total_steps):
@@ -92,7 +103,7 @@ class SyncSim:
             now = end + train + cfg.pull_time
             tokens += bt
             for inst in instances.values():
-                inst.pull(step + 1, now, 0.0)
+                inst.pull(None, step + 1, now)
         return SimResult(
             total_time=now,
             total_tokens=tokens,
@@ -107,10 +118,7 @@ class SyncSim:
 class OneStepSim:
     def run_impl(self, cfg: SimConfig) -> SimResult:
         sampler = _length_sampler(cfg)
-        instances = {
-            i: SimInstance(i, cfg.cost_model, prefill_tps=cfg.prefill_tps)
-            for i in range(cfg.n_instances)
-        }
+        instances = _make_instances(cfg)
         now, tokens, next_id = 0.0, 0, 0
         loads = []
         pending = None  # completed batch awaiting training (one step behind)
@@ -131,7 +139,7 @@ class OneStepSim:
                 (now, {i: len(inst.running) for i, inst in instances.items()})
             )
             for inst in instances.values():
-                inst.pull(step + 1, now, 0.0)
+                inst.pull(None, step + 1, now)
             pending = batch
         # drain: train the final rolled-out batch with nothing to overlap
         bt = _batch_tokens(cfg, pending)

@@ -24,27 +24,27 @@ to VeRL-Async. Sync (VeRL) and one-step (VeRL-Pipeline) baselines live in
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import (
-    Abort,
     CostModel,
-    Interrupt,
     PAPER_H20_QWEN3_30B,
-    Pull,
     RolloutCoordinator,
-    Route,
     StalenessManager,
     StrategyConfig,
     StrategySuite,
     TrajectoryServer,
 )
-from repro.core.snapshot import InstanceSnapshot
-from repro.core.types import Trajectory, TrajStatus
+from repro.core.types import Trajectory
+from repro.rollout.backend import (
+    SimBackend,
+    VersionSource,
+    create_backend,
+    execute_commands,
+)
 
 
 @dataclass
@@ -92,110 +92,10 @@ class SimResult:
     prefill_tokens: float = 0.0
 
 
-class SimInstance:
-    """Cost-model-driven rollout replica."""
-
-    def __init__(
-        self, inst_id: int, cm: CostModel, version: int = 0,
-        prefill_tps: float = 50000.0,
-    ):
-        self.inst_id = inst_id
-        self.cm = cm
-        self.version = version
-        self._prefill_tps = prefill_tps
-        self.running: Dict[int, Trajectory] = {}
-        self.progress: Dict[int, float] = {}   # fractional generated tokens
-        self.waiting: List[Trajectory] = []
-        self.stall_until = 0.0
-        self.complete_since_sync: set = set()
-        self.decode_tokens = 0.0
-        self.prefill_tokens = 0.0
-
-    # ------------------------------------------------------------- geometry
-    def kv_bytes(self) -> float:
-        return sum(self.cm.k5 * t.length for t in self.running.values())
-
-    def _admit(self, now: float) -> None:
-        while self.waiting:
-            nxt = self.waiting[0]
-            if self.kv_bytes() + self.cm.k5 * (nxt.length + 64) > self.cm.kv_budget:
-                return
-            self.waiting.pop(0)
-            self.running[nxt.traj_id] = nxt
-            self.progress[nxt.traj_id] = float(nxt.sim_generated)
-            # re-prefill stall (prompt + already-generated tokens)
-            self.stall_until = (
-                max(self.stall_until, now) + nxt.length / self._prefill_tps
-            )
-            self.prefill_tokens += nxt.length
-
-    # ------------------------------------------------------------- commands
-    def route(self, traj: Trajectory, now: float) -> None:
-        traj.instance = self.inst_id
-        traj.status = TrajStatus.RUNNING
-        self.waiting.append(traj)
-        self._admit(now)
-
-    def remove(self, traj_ids, now: float) -> List[Trajectory]:
-        out = []
-        for tid in list(traj_ids):
-            if tid in self.running:
-                t = self.running.pop(tid)
-                t.sim_generated = int(self.progress.pop(tid))
-                out.append(t)
-            else:
-                for i, t in enumerate(self.waiting):
-                    if t.traj_id == tid:
-                        out.append(self.waiting.pop(i))
-                        break
-        self._admit(now)
-        return out
-
-    def pull(self, version: int, now: float, pull_time: float) -> None:
-        self.version = version
-        self.complete_since_sync.clear()
-        self.stall_until = max(self.stall_until, now) + pull_time
-
-    # ----------------------------------------------------------------- step
-    def advance(self, now: float, dt: float) -> List[Trajectory]:
-        """Generate tokens for ``dt`` sim-seconds; return completed trajs."""
-        if not self.running:
-            return []
-        t0 = max(now, self.stall_until)
-        avail = now + dt - t0
-        if avail <= 0:
-            return []
-        lat = self.cm.step_latency(self.kv_bytes(), len(self.running))
-        steps = avail / lat
-        done = []
-        for tid, traj in list(self.running.items()):
-            self.progress[tid] += steps
-            self.decode_tokens += steps
-            traj.sim_generated = int(self.progress[tid])
-            if self.progress[tid] >= traj.sim_target_len:
-                traj.sim_generated = traj.sim_target_len
-                traj.finished = True
-                del self.running[tid]
-                del self.progress[tid]
-                self.complete_since_sync.add(tid)
-                done.append(traj)
-        if done:
-            self._admit(now + dt)
-        return done
-
-    # ------------------------------------------------------------- snapshot
-    def snapshot(self) -> InstanceSnapshot:
-        lengths = {t.traj_id: t.length for t in self.running.values()}
-        lengths.update({t.traj_id: t.length for t in self.waiting})
-        return InstanceSnapshot(
-            inst_id=self.inst_id,
-            kv_cache=self.kv_bytes(),
-            run_trajs=set(self.running),
-            wait_trajs={t.traj_id for t in self.waiting},
-            complete_trajs=set(self.complete_since_sync),
-            inst_version=self.version,
-            traj_lengths=lengths,
-        )
+# The simulator's data plane now lives behind the engine-backend contract
+# (``repro.rollout.backend.SimBackend``); ``SimInstance`` remains as the
+# historical name used throughout the sim/baseline modules and tests.
+SimInstance = SimBackend
 
 
 def _length_sampler(cfg: SimConfig):
@@ -234,8 +134,11 @@ class StaleFlowSim:
             self.manager, self.ts, cost_model=cm, cfg=cfg.strategy_cfg,
             suite=cfg.suite, group_sampling=cfg.group_size > 1,
         )
-        self.instances = {
-            i: SimInstance(i, cm, prefill_tps=cfg.prefill_tps)
+        self.instances: Dict[int, SimBackend] = {
+            i: create_backend(
+                "sim", i, cost_model=cm,
+                prefill_tps=cfg.prefill_tps, pull_time=cfg.pull_time,
+            )
             for i in range(cfg.n_instances)
         }
         self._sample_len = _length_sampler(cfg)
@@ -244,8 +147,16 @@ class StaleFlowSim:
         self.trainer_busy_until = 0.0
         self.pending_version: Optional[int] = None  # lands at push completion
         self.version_available_at = 0.0
-        self.ps_version = 0
+        self.ps = VersionSource(0)
         self.result = SimResult(0, 0, 0, 0.0, [], [], [])
+
+    @property
+    def ps_version(self) -> int:
+        return self.ps.version
+
+    @ps_version.setter
+    def ps_version(self, v: int) -> None:
+        self.ps.version = v
 
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
@@ -259,7 +170,7 @@ class StaleFlowSim:
         ):
             # 1) decode
             for inst in self.instances.values():
-                for traj in inst.advance(self.now, cfg.dt):
+                for traj in inst.step(self.now, cfg.dt):
                     self._on_complete(traj)
             # 2) coordinator cycle
             if self.now >= next_coord:
@@ -300,7 +211,7 @@ class StaleFlowSim:
         to_abort = self.coordinator.on_trajectory_rewarded(traj)
         for tid in to_abort:
             for inst in self.instances.values():
-                inst.remove([tid], self.now)
+                inst.abort([tid], self.now)
             self.ts.drop(tid)
 
     def _coordinate(self) -> None:
@@ -310,29 +221,15 @@ class StaleFlowSim:
             self.pending_version = None
         snaps = {i: inst.snapshot() for i, inst in self.instances.items()}
         commands = self.coordinator.step(snaps, self.ps_version)
-        for cmd in commands:
-            inst = self.instances[cmd.inst]
-            if isinstance(cmd, Route):
-                for tid in cmd.traj_ids:
-                    traj = self.ts.take(tid)
-                    if traj.v_traj is None:
-                        traj.v_traj = cmd.v_traj
-                    inst.route(traj, self.now)
-                self.result.route_count += len(cmd.traj_ids)
-            elif isinstance(cmd, Interrupt):
-                for traj in inst.remove(cmd.traj_ids, self.now):
-                    self.ts.put_back(traj.traj_id)
-                self.result.interrupt_count += len(cmd.traj_ids)
-            elif isinstance(cmd, Abort):
-                inst.remove(cmd.traj_ids, self.now)
-                for tid in cmd.traj_ids:
-                    self.ts.drop(tid)
-            elif isinstance(cmd, Pull):
-                inst.pull(self.ps_version, self.now, self.cfg.pull_time)
-                self.result.pull_total += self.cfg.pull_time
-                self.result.sync_events.append(
-                    (self.now, cmd.inst, self.ps_version)
-                )
+        res = execute_commands(
+            commands, self.instances, self.ts, self.ps, now=self.now
+        )
+        self.result.route_count += res.routed
+        self.result.interrupt_count += res.interrupted
+        self.result.pull_total += self.cfg.pull_time * len(res.pulls)
+        self.result.sync_events.extend(
+            (self.now, inst_id, version) for inst_id, version in res.pulls
+        )
 
     def _trainer(self) -> None:
         if self.now < self.trainer_busy_until:

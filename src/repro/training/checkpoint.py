@@ -15,7 +15,10 @@ Design points for 1000+-node deployments (DESIGN.md §3):
   staleness guarantees intact rather than dropping in-flight work.
 
 Format: one ``.npz`` for array leaves (pytree paths as keys) + ``meta.json``
-(orjson) for structure and scalar state.
+for structure and scalar state — serialized with ``orjson`` when available,
+otherwise stdlib ``json`` (offline environments). Either reader loads either
+writer's output; scalar state is expected to be finite (non-finite floats
+are the one divergence: orjson writes ``null`` where stdlib writes ``NaN``).
 """
 from __future__ import annotations
 
@@ -25,7 +28,35 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
-import orjson
+
+try:
+    import orjson
+
+    def _json_dumps(obj: Any) -> bytes:
+        return orjson.dumps(obj, option=orjson.OPT_SERIALIZE_NUMPY)
+
+    def _json_loads(data: bytes) -> Any:
+        return orjson.loads(data)
+
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    import json
+
+    def _np_default(o: Any):
+        if isinstance(o, np.integer):
+            return int(o)
+        if isinstance(o, np.floating):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        raise TypeError(f"not JSON serializable: {type(o)!r}")
+
+    def _json_dumps(obj: Any) -> bytes:
+        return json.dumps(
+            obj, default=_np_default, separators=(",", ":")
+        ).encode("utf-8")
+
+    def _json_loads(data: bytes) -> Any:
+        return json.loads(data)
 
 
 def _flatten_with_paths(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -67,7 +98,7 @@ def save_checkpoint(
         "protocol": protocol_state or {},
     }
     with open(os.path.join(tmp, "meta.json"), "wb") as f:
-        f.write(orjson.dumps(meta, option=orjson.OPT_SERIALIZE_NUMPY))
+        f.write(_json_dumps(meta))
     # treedefs are reproducible from the same code version; store reprs for
     # sanity checking on restore
     with open(os.path.join(tmp, "treedef.txt"), "w") as f:
@@ -110,7 +141,7 @@ def restore_checkpoint(
     path = os.path.join(directory, f"step_{step:08d}")
     arrays = np.load(os.path.join(path, "arrays.npz"))
     with open(os.path.join(path, "meta.json"), "rb") as f:
-        meta = orjson.loads(f.read())
+        meta = _json_loads(f.read())
 
     def fill(template: Any, prefix: str) -> Any:
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)

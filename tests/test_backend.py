@@ -1,0 +1,264 @@
+"""EngineBackend conformance: the real JAX engine and the cost-model sim
+backend must honor the same instance contract (`repro.rollout.backend`),
+since the coordinator, runtime, simulator, and mixed clusters drive them
+interchangeably through `execute_commands`."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import PAPER_H20_QWEN3_30B
+from repro.core.commands import Abort, Interrupt, Pull, Route
+from repro.core.snapshot import InstanceSnapshot
+from repro.core.types import Trajectory, TrajStatus, reset_traj_ids
+from repro.models import model as M
+from repro.rollout.backend import (
+    EngineBackend,
+    SimBackend,
+    VersionSource,
+    create_backend,
+    execute_commands,
+)
+
+CFG = get_arch("qwen2-1.5b").reduced()
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def mk_jax(inst_id=0, slots=2):
+    return create_backend(
+        "jax", inst_id, cfg=CFG, params=PARAMS, version=0,
+        max_slots=slots, max_len=64, temperature=0.0,
+    )
+
+
+def mk_sim(inst_id=0):
+    return create_backend("sim", inst_id, cost_model=PAPER_H20_QWEN3_30B)
+
+
+def mk_traj(tid, prompt_len=6, max_new=8):
+    prompt = list(np.random.RandomState(tid).randint(3, 17, size=prompt_len))
+    t = Trajectory(traj_id=tid, prompt=prompt, max_new_tokens=max_new)
+    t.sim_target_len = max_new  # only the sim backend reads this
+    return t
+
+
+BACKENDS = {
+    "jax": mk_jax,
+    "sim": mk_sim,
+}
+
+
+def drive(inst, now=0.0, dt=5.0, rounds=200):
+    done = []
+    for i in range(rounds):
+        done.extend(inst.step(now + i * dt, dt))
+        if done:
+            break
+    return done
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_backend_satisfies_protocol(kind):
+    inst = BACKENDS[kind]()
+    assert isinstance(inst, EngineBackend)
+    for method in ("route", "interrupt", "abort", "pull", "step", "snapshot"):
+        assert callable(getattr(inst, method))
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_route_step_complete_cycle(kind):
+    reset_traj_ids()
+    inst = BACKENDS[kind]()
+    t = mk_traj(1)
+    inst.route(t, 0.0)
+    assert t.instance == inst.inst_id
+    snap = inst.snapshot()
+    assert isinstance(snap, InstanceSnapshot)
+    assert snap.resident() == {1}
+    done = drive(inst)
+    assert [d.traj_id for d in done] == [1]
+    assert done[0].finished
+    assert done[0].status == TrajStatus.GENERATED
+    snap = inst.snapshot()
+    assert snap.complete_trajs == {1}
+    assert snap.resident() == set()
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_route_many_admits_wave(kind):
+    reset_traj_ids()
+    inst = BACKENDS[kind]()
+    trajs = [mk_traj(50 + i, max_new=100) for i in range(3)]
+    inst.route_many(trajs, 0.0)
+    snap = inst.snapshot()
+    assert snap.resident() == {50, 51, 52}
+    assert all(t.instance == inst.inst_id for t in trajs)
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_interrupt_returns_and_detaches(kind):
+    inst = BACKENDS[kind]()
+    t = mk_traj(2, max_new=100)
+    inst.route(t, 0.0)
+    out = inst.interrupt([2], 1.0)
+    assert [x.traj_id for x in out] == [2]
+    assert out[0].status == TrajStatus.INTERRUPTED
+    assert out[0].instance is None
+    assert inst.snapshot().resident() == set()
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_abort_marks_aborted(kind):
+    inst = BACKENDS[kind]()
+    t = mk_traj(3, max_new=100)
+    inst.route(t, 0.0)
+    out = inst.abort([3], 1.0)
+    assert [x.traj_id for x in out] == [3]
+    assert out[0].status == TrajStatus.ABORTED
+    assert inst.snapshot().resident() == set()
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_pull_bumps_version_and_clears_completions(kind):
+    inst = BACKENDS[kind]()
+    t = mk_traj(4)
+    inst.route(t, 0.0)
+    drive(inst)
+    assert inst.snapshot().complete_trajs == {4}
+    inst.pull(PARAMS if kind == "jax" else None, 5, 10.0)
+    assert inst.inst_version == 5
+    assert inst.snapshot().inst_version == 5
+    assert inst.snapshot().complete_trajs == set()
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_snapshot_kv_accounting_nonnegative(kind):
+    inst = BACKENDS[kind]()
+    t = mk_traj(5, max_new=100)
+    inst.route(t, 0.0)
+    snap = inst.snapshot()
+    assert snap.kv_cache > 0
+    assert snap.traj_lengths[5] >= len(t.prompt)
+    inst.interrupt([5], 1.0)
+    assert inst.snapshot().kv_cache == 0
+
+
+def test_create_backend_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown backend"):
+        create_backend("cuda", 0)
+
+
+class _StubTS:
+    """Minimal trajectory-server facade for executor tests."""
+
+    def __init__(self, trajs):
+        self.registry = {t.traj_id: t for t in trajs}
+        self.put_backs = []
+        self.drops = []
+
+    def take(self, tid):
+        return self.registry[tid]
+
+    def put_back(self, tid):
+        self.put_backs.append(tid)
+
+    def drop(self, tid):
+        self.drops.append(tid)
+        self.registry.pop(tid, None)
+
+
+def test_execute_commands_mixed_backends():
+    """One command batch, two backend kinds, one executor."""
+    reset_traj_ids()
+    instances = {0: mk_jax(0), 1: mk_sim(1)}
+    trajs = [mk_traj(10), mk_traj(11, max_new=100)]
+    ts = _StubTS(trajs)
+
+    class _PS:
+        version = 3
+
+        def pull(self):
+            return PARAMS, self.version
+
+    ps = _PS()
+    res = execute_commands(
+        [
+            Route(0, (10,), v_traj=3),
+            Route(1, (11,), v_traj=3),
+            Pull(0),
+            Pull(1),
+        ],
+        instances,
+        ts,
+        ps,
+        now=0.0,
+    )
+    assert res.routed == 2
+    assert res.pulls == [(0, 3), (1, 3)]
+    assert trajs[0].v_traj == 3 and trajs[1].v_traj == 3
+    # Pull is issued post-interrupt by contract, but both backends must
+    # still report the new version
+    assert instances[0].inst_version == 3
+    assert instances[1].inst_version == 3
+
+    res2 = execute_commands(
+        [Interrupt(1, (11,)), Abort(0, (10,)), Route(99, (10,))],
+        instances,
+        ts,
+        ps,
+    )
+    assert res2.interrupted == 1 and res2.aborted == 1
+    assert ts.put_backs == [11]
+    assert ts.drops == [10]
+    assert res2.routed == 0  # instance 99 doesn't exist: command skipped
+
+
+def test_execute_commands_route_then_abort_stays_in_order():
+    """Wave coalescing must not reorder a Route past a later Interrupt/
+    Abort for the same trajectory: pending waves flush before any
+    non-Route command executes."""
+    inst = mk_sim(0)
+    t = mk_traj(60, max_new=100)
+    ts = _StubTS([t])
+    res = execute_commands(
+        [Route(0, (60,), v_traj=0), Abort(0, (60,))],
+        {0: inst},
+        ts,
+        VersionSource(0),
+    )
+    assert res.routed == 1 and res.aborted == 1
+    # the trajectory was routed, then aborted off the instance — it must
+    # NOT still be resident (the engine never decodes a dropped traj)
+    assert inst.snapshot().resident() == set()
+    assert ts.drops == [60]
+    assert t.status == TrajStatus.ABORTED
+
+
+def test_execute_commands_timers_accumulate():
+    instances = {0: mk_sim(0)}
+    ts = _StubTS([mk_traj(20)])
+    timers = {}
+    execute_commands(
+        [Route(0, (20,), v_traj=0), Pull(0)],
+        instances,
+        ts,
+        VersionSource(1),
+        timers=timers,
+    )
+    assert timers.get("route", 0) > 0
+    assert timers.get("pull", 0) > 0
+
+
+def test_sim_backend_respects_kv_budget():
+    import dataclasses
+
+    cm = dataclasses.replace(
+        PAPER_H20_QWEN3_30B, kv_budget=PAPER_H20_QWEN3_30B.k5 * 100
+    )
+    inst = SimBackend(0, cm)
+    a, b = mk_traj(30, prompt_len=20), mk_traj(31, prompt_len=20)
+    inst.route(a, 0.0)
+    inst.route(b, 0.0)
+    snap = inst.snapshot()
+    assert snap.run_trajs == {30}
+    assert snap.wait_trajs == {31}

@@ -4,7 +4,7 @@ import itertools
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st
 
 from repro.core import (
     Abort,

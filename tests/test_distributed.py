@@ -69,10 +69,18 @@ def _run_subprocess(code: str, devices: int = 8) -> str:
         f"'--xla_force_host_platform_device_count={devices}'\n"
         + textwrap.dedent(code)
     )
+    import os
+
     out = subprocess.run(
         [sys.executable, "-c", prog],
         capture_output=True, text=True, timeout=480,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={
+            "PYTHONPATH": "src",
+            "PATH": "/usr/bin:/bin",
+            # without this the child jax probes for a TPU backend (libtpu
+            # ships in the image) and stalls minutes on metadata retries
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+        },
         cwd="/root/repo",
     )
     assert out.returncode == 0, out.stderr[-3000:]
@@ -101,11 +109,11 @@ def test_compressed_psum_subprocess():
         """
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
-        from repro.distributed.collectives import psum_compressed
+        from repro.distributed.collectives import psum_compressed, shard_map
         mesh = jax.make_mesh((4,), ("data",))
         x = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=jax.sharding.PartitionSpec("data"),
                  out_specs=jax.sharding.PartitionSpec("data"))
         def f(xs):

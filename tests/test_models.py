@@ -96,6 +96,7 @@ def test_prefill_decode_matches_forward(arch):
         )
 
 
+@pytest.mark.slow
 def test_hybrid_ring_cache_long_decode():
     """hymba's windowed ring cache: decoding past the window stays finite and
     positions wrap."""

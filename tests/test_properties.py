@@ -3,7 +3,7 @@ covered by the per-module suites."""
 import random
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st
 
 from repro.core.cost_model import CostModel, fit_coefficients
 from repro.core.parameter_server import plan_transfers

@@ -63,6 +63,32 @@ def test_runtime_instance_failure_recovers():
         assert all(0 <= s <= rt.rcfg.eta for s in hist)
 
 
+def test_runtime_failed_instance_trajectories_fully_detached():
+    """Regression: fail_instance used to return residents to the TS with
+    status=RUNNING and a dangling ``instance`` id from the dead replica,
+    which misled _abort_members' residency check into mutating speculative
+    state for trajectories that were actually TS-resident."""
+    rt = mk_runtime(total_steps=2, n_instances=2, max_slots=2)
+    returned = []
+    for _ in range(40):
+        rt.tick()
+        if rt.instances[1].snapshot().resident():
+            returned = rt.fail_instance(1)
+            break
+    assert returned, "instance 1 never hosted a trajectory"
+    from repro.core.types import TrajStatus
+
+    for tid in returned:
+        traj = rt.ts.get(tid)
+        assert traj is not None, f"traj {tid} lost on failure"
+        assert traj.status != TrajStatus.RUNNING
+        assert traj.instance is None
+    # the run still completes on the surviving instance
+    rt.manager.check_invariants()
+    rt.run(max_ticks=5000)
+    assert rt.model_version == 2
+
+
 def test_runtime_elastic_scale_up():
     rt = mk_runtime(total_steps=2, n_instances=1)
     for _ in range(3):
