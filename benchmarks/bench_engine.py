@@ -43,11 +43,11 @@ def _bench_arch():
     )
 
 
-def _mk_instance(params, cfg, *, legacy: bool, slots: int, max_len: int):
+def _mk_instance(params, cfg, *, legacy: bool, slots: int, max_len: int, **kw):
     return create_backend(
         "jax", 0, cfg=cfg, params=params, version=0,
         max_slots=slots, max_len=max_len, temperature=1.0, eos_id=NO_EOS,
-        batched_prefill=not legacy, compact_decode=not legacy,
+        batched_prefill=not legacy, compact_decode=not legacy, **kw,
     )
 
 
@@ -106,6 +106,50 @@ def _bench_decode(
     return n_active * steps / best
 
 
+def _bench_paged_capacity(
+    params, cfg, *, paged: bool, budget_slots: int, max_len: int = 128,
+    block_size: int = 16, steps: int = 20,
+):
+    """Concurrency + decode tokens/s at one fixed HBM budget.
+
+    The budget holds ``budget_slots`` dense worst-case rows. The dense
+    engine physically reserves ``max_len`` rows per slot, so its slot count
+    IS the budget; the paged engine shares the same bytes as a block pool
+    and admits by actual allocation, so a mixed short/long workload packs
+    strictly more concurrent trajectories into the same memory.
+    """
+    k5 = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
+    budget = float(k5 * max_len * budget_slots)
+    inst = _mk_instance(
+        params, cfg, legacy=False,
+        slots=(4 * budget_slots) if paged else budget_slots,
+        max_len=max_len, kv_budget=budget,
+        **(dict(paged=True, kv_block_size=block_size) if paged else {}),
+    )
+    # heavy-tail mix: mostly short prompts, a few long ones (Fig. 4 skew)
+    lengths = [8, 8, 8, 16, 8, 8, 32, 8] * budget_slots
+    trajs = [
+        Trajectory(
+            traj_id=3000 + i,
+            prompt=list(np.random.RandomState(3000 + i).randint(3, 200, pl)),
+            max_new_tokens=10_000,
+        )
+        for i, pl in enumerate(lengths)
+    ]
+    inst.route_many(trajs)
+    admitted = inst.n_active()
+    for _ in range(3):  # warm-up this occupancy's decode shapes
+        inst.step()
+    t0 = time.perf_counter()
+    tok0 = inst.decode_tokens
+    for _ in range(steps):
+        inst.step()
+    dt = time.perf_counter() - t0
+    # decode_tokens counts rows actually decoded (post-preemption), so the
+    # paged number is not inflated by slots evicted before the dispatch
+    return admitted, (inst.decode_tokens - tok0) / dt, inst.kv_bytes() / budget
+
+
 def run(quick: bool = False) -> Dict[str, float]:
     reset_traj_ids()
     cfg = _bench_arch()
@@ -139,6 +183,24 @@ def run(quick: bool = False) -> Dict[str, float]:
             "engine", f"decode_speedup_active{n_active}",
             out[f"decode_tps_compact_active{n_active}"]
             / out[f"decode_tps_seed_active{n_active}"],
+        )
+
+    note("engine: paged vs dense at a fixed HBM budget (mixed lengths)")
+    for budget_slots in (2, 4) if quick else (2, 4, 8):
+        for mode, paged in (("dense", False), ("paged", True)):
+            adm, tps, fill = _bench_paged_capacity(
+                params, cfg, paged=paged, budget_slots=budget_slots,
+                steps=10 if quick else 20,
+            )
+            out[f"kvfit_{mode}_budget{budget_slots}_admitted"] = adm
+            out[f"kvfit_{mode}_budget{budget_slots}_tps"] = tps
+            emit("engine", f"kvfit_{mode}_budget{budget_slots}_admitted", adm)
+            emit("engine", f"kvfit_{mode}_budget{budget_slots}_tps", tps)
+            emit("engine", f"kvfit_{mode}_budget{budget_slots}_fill", fill)
+        emit(
+            "engine", f"kvfit_concurrency_gain_budget{budget_slots}",
+            out[f"kvfit_paged_budget{budget_slots}_admitted"]
+            / out[f"kvfit_dense_budget{budget_slots}_admitted"],
         )
     return out
 

@@ -41,6 +41,11 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-ticks", type=int, default=4000)
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="block-paged KV on the real replica (the sim replicas adopt "
+             "the same block-granular cost-model accounting)",
+    )
     args = ap.parse_args()
     reset_traj_ids()
 
@@ -59,7 +64,8 @@ def main() -> None:
     )
     k5 = 2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
     cm = CostModel(
-        k1=1e-12, k2=1e-3, k3=1e-4, k4=5e-3, k5=k5, kv_budget=k5 * 64 * 4
+        k1=1e-12, k2=1e-3, k3=1e-4, k4=5e-3, k5=k5, kv_budget=k5 * 64 * 4,
+        block_size=16 if args.paged else 1,
     )
     coordinator = RolloutCoordinator(manager, ts, cost_model=cm)
 
@@ -69,6 +75,7 @@ def main() -> None:
             "jax", 0, cfg=cfg, params=params, version=0,
             max_slots=4, max_len=64, kv_bytes_per_token=k5,
             kv_budget=cm.kv_budget, temperature=1.0,
+            paged=args.paged, kv_block_size=16,
         )
     }
     for i in range(1, 1 + args.sim_instances):

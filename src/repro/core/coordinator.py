@@ -179,12 +179,15 @@ class RolloutCoordinator:
             commands: CommandList = []
             ts_trajs = list(self.ts.peek())
             k5 = self.cost_model.k5
+            kv_bs = self.cost_model.block_size
 
             # ---- redundancy surplus + protocol-dropped payload aborts
             for cmd in self._collect_aborts(s):
                 commands.append(cmd)
                 self.spec.apply(cmd, ps_version=ps_version)
-                s[cmd.inst].discard(cmd.traj_ids, bytes_per_token=k5)
+                s[cmd.inst].discard(
+                    cmd.traj_ids, bytes_per_token=k5, block_size=kv_bs
+                )
 
             # ---- Alg. 1 line 3: synchronization strategy
             for inst in self.suite.synchronization(
@@ -198,7 +201,7 @@ class RolloutCoordinator:
                 cmd_p = Pull(inst)
                 commands.append(cmd_p)
                 self.spec.apply(cmd_p, ps_version=ps_version)
-                s[inst].discard(resident, bytes_per_token=k5)
+                s[inst].discard(resident, bytes_per_token=k5, block_size=kv_bs)
                 s[inst].complete_trajs = set()
                 s[inst].inst_version = ps_version
                 ts_trajs.extend(
@@ -210,7 +213,7 @@ class RolloutCoordinator:
                 cmd = Interrupt(inst, tuple(trajs))
                 commands.append(cmd)
                 self.spec.apply(cmd, ps_version=ps_version)
-                s[inst].discard(trajs, bytes_per_token=k5)
+                s[inst].discard(trajs, bytes_per_token=k5, block_size=kv_bs)
                 ts_trajs.extend(
                     t for tid in trajs if (t := self.ts.get(tid)) is not None
                 )

@@ -35,6 +35,18 @@ class CostModel:
     k4: float   # s, constant overhead
     k5: float   # bytes of KV per token
     kv_budget: float  # M, bytes
+    # KV allocation granularity in tokens: 1 = dense per-token reservation
+    # (legacy), >1 = paged engine with fixed-size blocks — footprints round
+    # up to whole blocks so routing decisions see the engine's real
+    # block-granular memory picture.
+    block_size: int = 1
+
+    def kv_bytes_for(self, length: int) -> float:
+        """Bytes a trajectory of ``length`` tokens occupies on an instance
+        (block-rounded under paging)."""
+        if self.block_size <= 1:
+            return self.k5 * length
+        return self.k5 * self.block_size * (-(-length // self.block_size))
 
     # ----------------------------------------------------------------- Eq. 2
     def step_latency(self, kv_cache: float, n_run: int) -> float:
@@ -50,14 +62,15 @@ class CostModel:
     def admit(self, s: InstanceSnapshot, length: int) -> bool:
         """gamma_i: can a routed trajectory of ``length`` run immediately?"""
         return (
-            s.kv_cache + self.k5 * length <= self.kv_budget and s.n_wait == 0
+            s.kv_cache + self.kv_bytes_for(length) <= self.kv_budget
+            and s.n_wait == 0
         )
 
     def with_routed(self, s: InstanceSnapshot, traj_id: int, length: int) -> InstanceSnapshot:
         """S' after routing ``traj_id`` (Eq. 3 state update)."""
         s2 = s.clone()
         if self.admit(s, length):
-            s2.kv_cache = s.kv_cache + self.k5 * length
+            s2.kv_cache = s.kv_cache + self.kv_bytes_for(length)
             s2.run_trajs = s.run_trajs | {traj_id}
         else:
             s2.wait_trajs = s.wait_trajs | {traj_id}
@@ -70,14 +83,15 @@ class CostModel:
         if not self.admit(s, length):
             return 0.0  # waits -> contributes no throughput
         n2 = s.n_run + 1
-        t2 = n2 / self.step_latency(s.kv_cache + self.k5 * length, n2)
+        t2 = n2 / self.step_latency(s.kv_cache + self.kv_bytes_for(length), n2)
         return t2 - self.throughput(s)
 
     # ----------------------------------------------------------------- Eq. 4
     def ideal_gain(self, length: int) -> float:
         """Delta T_ideal: gain of routing to a fully idle instance."""
         return 1.0 / (
-            self.k1 * (self.k5 * length) + max(self.k2, self.k3 * 1) + self.k4
+            self.k1 * self.kv_bytes_for(length)
+            + max(self.k2, self.k3 * 1) + self.k4
         )
 
     def scaled(self, **kw) -> "CostModel":

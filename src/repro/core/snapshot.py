@@ -39,16 +39,26 @@ class InstanceSnapshot:
     def resident(self) -> Set[int]:
         return self.run_trajs | self.wait_trajs
 
-    def discard(self, traj_ids: Iterable[int], bytes_per_token: float = 0.0) -> None:
+    def discard(
+        self,
+        traj_ids: Iterable[int],
+        bytes_per_token: float = 0.0,
+        block_size: int = 1,
+    ) -> None:
         """Remove trajectories from run/wait (post-Interrupt bookkeeping).
 
         ``bytes_per_token`` (the cost model's k5) releases their estimated
-        KV footprint; lengths are tracked in tokens.
+        KV footprint; lengths are tracked in tokens. ``block_size`` > 1
+        rounds the released footprint up to whole KV blocks, matching the
+        paged engine's block-granular accounting.
         """
         ids = set(traj_ids)
         for t in ids & self.run_trajs:
+            length = self.traj_lengths.get(t, 0)
+            if block_size > 1:
+                length = block_size * (-(-length // block_size))
             self.kv_cache = max(
-                0.0, self.kv_cache - bytes_per_token * self.traj_lengths.get(t, 0)
+                0.0, self.kv_cache - bytes_per_token * length
             )
         self.run_trajs -= ids
         self.wait_trajs -= ids

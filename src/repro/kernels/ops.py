@@ -27,6 +27,12 @@ from repro.kernels.decode_attention import (
     decode_attention_update as _decode_update_pallas,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+)
+from repro.kernels.paged_attention import (
+    paged_decode_attention_update as _paged_update_pallas,
+)
 from repro.kernels.moe_gmm import grouped_matmul as _gmm_pallas
 from repro.kernels.moe_gmm import moe_expert_ffn as _moe_ffn_pallas
 from repro.kernels.selective_scan import selective_scan as _selective_scan_pallas
@@ -115,6 +121,53 @@ def decode_attention_update(
         return out, new_k, new_v
     return _decode_update_pallas(
         q, k_cache, v_cache, k_new, v_new, write_pos, lengths,
+        interpret=(mode == "interpret"),
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,             # (B, H, hd)
+    k_pool: jax.Array,        # (N, bs, Hkv, hd) shared block pool
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    block_tables: jax.Array,  # (B, nb) int32 per-sequence block tables
+    lengths: jax.Array,       # (B,) int32 valid positions
+    *, impl: Optional[str] = None,
+) -> jax.Array:
+    """Decode attention over a block-paged KV pool (vLLM-style layout)."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, block_tables, lengths
+        )
+    return _paged_decode_pallas(
+        q, k_pool, v_pool, block_tables, lengths,
+        interpret=(mode == "interpret"),
+    )
+
+
+def paged_decode_attention_update(
+    q: jax.Array,             # (B, H, hd)
+    k_pool: jax.Array,        # (N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    k_new: jax.Array,         # (B, Hkv, hd)
+    v_new: jax.Array,         # (B, Hkv, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    write_pos: jax.Array,     # (B,) int32 logical position of the new token
+    *, impl: Optional[str] = None,
+):
+    """Fused paged decode attention + new-token K/V write at ``write_pos``.
+
+    Valid length is ``write_pos + 1``. The Pallas path writes only the one
+    touched pool block in place (aliasing); the ref path scatters the row
+    then attends over the table-gathered cache. Returns
+    (out (B, H, hd), k_pool', v_pool')."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref.paged_decode_attention_update_ref(
+            q, k_pool, v_pool, k_new, v_new, block_tables, write_pos
+        )
+    return _paged_update_pallas(
+        q, k_pool, v_pool, k_new, v_new, block_tables, write_pos,
         interpret=(mode == "interpret"),
     )
 

@@ -136,6 +136,69 @@ def decode_attention_ref(
     return out.reshape(b, h, hd)
 
 
+# ----------------------------------------------------- paged decode attention
+def paged_gather_kv(
+    pool: jax.Array,          # (N, bs, Hkv, hd) shared block pool
+    block_tables: jax.Array,  # (B, nb) int32 block ids (pad -> null block)
+) -> jax.Array:
+    """Materialize each sequence's logical KV window from its block table.
+
+    Returns (B, nb*bs, Hkv, hd) — position ``p`` of row ``b`` lives at
+    ``pool[block_tables[b, p // bs], p % bs]``. Padded table entries gather
+    the null block's garbage; callers mask by length.
+    """
+    b, nb = block_tables.shape
+    n, bs, hkv, hd = pool.shape
+    g = pool[block_tables]                       # (B, nb, bs, Hkv, hd)
+    return g.reshape(b, nb * bs, hkv, hd)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,             # (B, H, hd) one new token per sequence
+    k_pool: jax.Array,        # (N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    lengths: jax.Array,       # (B,) int32 valid positions
+) -> jax.Array:
+    """Decode attention with the KV cache gathered via block tables.
+
+    Bit-for-bit equal to ``decode_attention_ref`` over a contiguous cache of
+    width ``nb*bs`` holding the same valid values: masked lanes contribute
+    exact zeros either way (exp(-1e30 - m) underflows to +0.0 in f32).
+    """
+    kg = paged_gather_kv(k_pool, block_tables)
+    vg = paged_gather_kv(v_pool, block_tables)
+    return decode_attention_ref(q, kg, vg, lengths)
+
+
+def paged_decode_attention_update_ref(
+    q: jax.Array,             # (B, H, hd)
+    k_pool: jax.Array,        # (N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    k_new: jax.Array,         # (B, Hkv, hd) this step's key
+    v_new: jax.Array,         # (B, Hkv, hd) this step's value
+    block_tables: jax.Array,  # (B, nb) int32
+    write_pos: jax.Array,     # (B,) int32 logical position to write
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Write the new token's K/V into its pool block, then attend over the
+    table-gathered cache (valid length = write_pos + 1).
+
+    Block ownership is exclusive, so the (B,)-indexed scatter is conflict-
+    free; rows whose table points a position at the null block (padding)
+    harmlessly write garbage there. Returns (out, k_pool', v_pool').
+    """
+    b = q.shape[0]
+    bs = k_pool.shape[1]
+    blk = block_tables[jnp.arange(b), write_pos // bs]
+    off = write_pos % bs
+    new_k = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype))
+    new_v = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype))
+    out = paged_decode_attention_ref(
+        q, new_k, new_v, block_tables, write_pos + 1
+    )
+    return out, new_k, new_v
+
+
 # -------------------------------------------------------------------- MoE GMM
 def moe_gmm_ref(
     x: jax.Array,            # (E, C, D) dispatched tokens per expert

@@ -33,6 +33,15 @@ def main() -> None:
         help="decode all slots every step (seed behavior) instead of "
              "compacting to the active power-of-two bucket",
     )
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="block-paged KV cache (shared pool + per-trajectory block "
+             "tables) instead of dense per-slot rows",
+    )
+    ap.add_argument(
+        "--block-size", type=int, default=16,
+        help="tokens per KV block with --paged",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -41,6 +50,7 @@ def main() -> None:
         "jax", 0, cfg=cfg, params=params, version=0, max_slots=args.slots,
         max_len=64, temperature=args.temperature,
         compact_decode=not args.no_compact_decode,
+        paged=args.paged, kv_block_size=args.block_size,
     )
     ds = ArithmeticDataset(args.requests, seed=2)
     for p in ds.problems:

@@ -511,6 +511,50 @@ def init_cache(
     return cache
 
 
+def init_paged_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    n_blocks: int,
+    block_size: int,
+    dtype=jnp.float32,
+) -> Cache:
+    """Decode cache with the KV laid out as a shared block pool.
+
+    ``k``/``v`` become ``(layers, n_blocks, block_size, Hkv, hd)`` pools
+    addressed through per-slot block tables (``repro.rollout.kv_allocator``)
+    instead of ``(layers, batch, max_len, ...)`` dense rows — HBM scales
+    with *allocated* tokens, not ``batch * max_len``. All other per-slot
+    state (``pos``, hybrid conv/ssm, audio cross caches) keeps the dense
+    per-slot layout: it is O(1) per slot and batch-indexed by the runners.
+
+    Constraints: ``block_size`` must divide ``max_len`` (so a full table
+    spans exactly the dense cache width — bit-for-bit equivalence with the
+    dense path), sliding-window ring caches are not paged, and the SSM
+    family has no KV cache to page.
+    """
+    if cfg.family == "ssm":
+        raise ValueError("ssm family has no KV cache to page")
+    if cfg.sliding_window and max_len > cfg.long_context_threshold:
+        raise ValueError("paged cache does not support ring (windowed) KV")
+    if max_len % block_size:
+        raise ValueError(
+            f"block_size {block_size} must divide max_len {max_len}"
+        )
+    cache: Cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    l, hkv, hd, h = cfg.n_layers, cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    cache["k"] = jnp.zeros((l, n_blocks, block_size, hkv, hd), dtype)
+    cache["v"] = jnp.zeros((l, n_blocks, block_size, hkv, hd), dtype)
+    if cfg.family == "hybrid":
+        inner = cfg.ssm_expand * cfg.d_model
+        cache["conv"] = jnp.zeros((l, batch, cfg.ssm_conv - 1, inner), dtype)
+        cache["ssm"] = jnp.zeros((l, batch, inner, cfg.ssm_state), jnp.float32)
+    if cfg.family == "audio":
+        cache["xk"] = jnp.zeros((l, batch, cfg.encoder_seq, h, hd), dtype)
+        cache["xv"] = jnp.zeros((l, batch, cfg.encoder_seq, h, hd), dtype)
+    return cache
+
+
 # ================================================================== prefill
 def prefill(
     cfg: ArchConfig,
@@ -724,6 +768,86 @@ def decode_step(
         # EXPERIMENTS.md §Perf A1/A3.
         o, new_k, new_v = ops.decode_attention_update(
             q[:, 0], k_slot, v_slot, k[:, 0], v[:, 0], write_pos, lengths,
+            impl=impl,
+        )
+        attn = o.reshape(b, 1, -1) @ p["wo"]
+        new_conv, new_ssm = conv_slot, ssm_slot
+        if cfg.family == "hybrid":
+            ssm_out, (new_conv, new_ssm) = layers.mamba_block(
+                h, p["mamba"], state=(conv_slot, ssm_slot), decode=True
+            )
+            x = x + 0.5 * (attn + ssm_out)
+        else:
+            x = x + attn
+        if cfg.cross_attention and xk_slot.ndim > 2:
+            hc = layers.rms_norm(x, p["cross_norm"], cfg.norm_eps)
+            qc = (hc @ p["cross"]["wq"]).reshape(b, cfg.n_heads, cfg.hd)
+            senc = xk_slot.shape[1]
+            oc = ops.decode_attention(
+                qc, xk_slot, xv_slot,
+                jnp.full((b,), senc, jnp.int32), impl=impl,
+            )
+            x = x + oc.reshape(b, 1, -1) @ p["cross"]["wo"]
+        h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = _moe(h2, p, cfg, impl=impl)
+        else:
+            f = _ffn(h2, p)
+        return x + f, (new_k, new_v, new_conv, new_ssm, xk_slot, xv_slot)
+
+    slots = (
+        cache["k"], cache["v"],
+        cache.get("conv", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("ssm", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("xk", jnp.zeros((cfg.n_layers, 0))),
+        cache.get("xv", jnp.zeros((cfg.n_layers, 0))),
+    )
+    x, outs = jax.lax.scan(
+        body, x, (params["blocks"], slots), unroll=runmode.outer_unroll()
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = outs[0], outs[1]
+    if cfg.family == "hybrid":
+        new_cache["conv"], new_cache["ssm"] = outs[2], outs[3]
+    new_cache["pos"] = pos + 1
+    return _logits(cfg, params, x[:, 0]), new_cache
+
+
+# ========================================================= paged decode step
+def paged_decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,        # (B,) next input token per sequence
+    cache: Cache,             # paged layout (``init_paged_cache``), with the
+                              # per-slot entries already gathered to B rows
+    block_tables: jax.Array,  # (B, nb) int32 per-sequence block tables
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Cache]:
+    """One autoregressive step over a block-paged KV cache.
+
+    Identical math to ``decode_step``: the new token's K/V row is written at
+    logical position ``pos`` (pool block ``block_tables[b, pos // bs]``) and
+    attention runs over the table-gathered window, so for equal valid values
+    the two paths produce bit-for-bit equal logits. Returns
+    (logits (B, V), updated cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None]          # (B, 1, D)
+    pos = cache["pos"]                            # (B,)
+
+    if cfg.family == "audio":
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(x.dtype)
+        x = x + pe[:, None]
+
+    def body(x, pc):
+        p, (k_pool, v_pool, conv_slot, ssm_slot, xk_slot, xv_slot) = pc
+        h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(h, p, cfg, pos[:, None])
+        o, new_k, new_v = ops.paged_decode_attention_update(
+            q[:, 0], k_pool, v_pool, k[:, 0], v[:, 0], block_tables, pos,
             impl=impl,
         )
         attn = o.reshape(b, 1, -1) @ p["wo"]

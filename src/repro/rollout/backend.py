@@ -142,12 +142,17 @@ class SimBackend:
         *,
         prefill_tps: float = 50000.0,
         pull_time: float = 0.0,
+        admission_headroom_tokens: int = 64,
     ):
         self.inst_id = inst_id
         self.cm = cost_model
         self.inst_version = version
         self._prefill_tps = prefill_tps
         self.pull_time = pull_time
+        # decode-growth tokens charged on top of a trajectory's current
+        # length at admission (see RolloutInstance.admission_headroom_tokens;
+        # the sim's coarser dt steps warrant a larger default)
+        self.admission_headroom_tokens = admission_headroom_tokens
         self.running: Dict[int, Trajectory] = {}
         self.progress: Dict[int, float] = {}   # fractional generated tokens
         self.waiting: List[Trajectory] = []
@@ -162,7 +167,13 @@ class SimBackend:
         return self.inst_version
 
     def kv_bytes(self) -> float:
-        return sum(self.cm.k5 * t.length for t in self.running.values())
+        """KV bytes in use, at the cost model's allocation granularity
+        (block-rounded when ``cm.block_size`` > 1 — the same accounting the
+        paged RolloutInstance reports, so mixed real/sim clusters give the
+        coordinator one consistent memory picture)."""
+        return sum(
+            self.cm.kv_bytes_for(t.length) for t in self.running.values()
+        )
 
     def n_active(self) -> int:
         return len(self.running)
@@ -170,7 +181,10 @@ class SimBackend:
     def _admit(self, now: float) -> None:
         while self.waiting:
             nxt = self.waiting[0]
-            if self.kv_bytes() + self.cm.k5 * (nxt.length + 64) > self.cm.kv_budget:
+            charge = self.cm.kv_bytes_for(
+                nxt.length + self.admission_headroom_tokens
+            )
+            if self.kv_bytes() + charge > self.cm.kv_budget:
                 return
             self.waiting.pop(0)
             self.running[nxt.traj_id] = nxt

@@ -36,6 +36,16 @@ version is recorded on the trajectory — this is the importance-sampling
 denominator for staleness correction (``repro.rl.losses``) and survives
 interrupts/migrations untouched.
 
+Paged KV mode (``paged=True``): the dense ``(max_slots, max_len)`` cache
+rows are replaced by a shared block pool + per-trajectory block tables
+(``repro.rollout.kv_allocator``). Admission charges the budget by *actual
+allocated blocks* instead of worst-case rows, decode extends tables on the
+fly as trajectories cross block boundaries, and block exhaustion preempts
+the youngest resident back to the waiting queue (it re-admits via the
+normal re-prefill path — the same interrupt semantics the coordinator
+uses). Greedy decode is bit-for-bit equal to the dense path
+(``tests/test_engine_equivalence.py``).
+
 Legacy mode: ``batched_prefill=False`` forces single-row prefill groups and
 ``compact_decode=False`` forces full-``max_slots`` decode — together they
 reproduce the seed engine's execution exactly, which the equivalence tests
@@ -53,7 +63,17 @@ from repro.core.snapshot import InstanceSnapshot
 from repro.core.types import Trajectory, TrajStatus
 from repro.data.tokenizer import EOS
 from repro.models import model as M
-from repro.rollout.runners import DecodeRunner, PrefillJob, PrefillRunner
+from repro.rollout.kv_allocator import (
+    BlockAllocator,
+    BlockExhausted,
+    blocks_for_tokens,
+)
+from repro.rollout.runners import (
+    DecodeRunner,
+    PagedDecodeRunner,
+    PrefillJob,
+    PrefillRunner,
+)
 
 
 class RolloutInstance:
@@ -75,6 +95,10 @@ class RolloutInstance:
         frontend_fn: Optional[Callable[[int], jax.Array]] = None,
         batched_prefill: bool = True,
         compact_decode: bool = True,
+        paged: bool = False,
+        kv_block_size: int = 16,
+        kv_pool_blocks: Optional[int] = None,
+        admission_headroom_tokens: int = 16,
     ):
         self.inst_id = inst_id
         self.cfg = cfg
@@ -89,17 +113,60 @@ class RolloutInstance:
         self.temperature = temperature
         self.eos_id = eos_id
         self.compact_decode = compact_decode
+        # Admission over-provisioning: besides its current tokens, a routed
+        # trajectory is charged this many future decode tokens against the
+        # KV budget, so freshly admitted trajectories have room to grow
+        # before the next coordinator cycle rebalances (avoids immediate
+        # OOM-thrash at full budget). The charge is capped at ``max_len``.
+        self.admission_headroom_tokens = admission_headroom_tokens
+        self.paged = paged
+        self.kv_block_size = kv_block_size
         self._key = jax.random.PRNGKey(seed + 7919 * inst_id)
 
-        self.cache = M.init_cache(cfg, max_slots, max_len)
+        # vlm caches lead with ``n_patches`` frontend positions per slot
+        self._pos_offset = (
+            cfg.n_patches
+            if (cfg.family == "vlm" and frontend_fn is not None)
+            else 0
+        )
+        self.allocator: Optional[BlockAllocator] = None
+        if paged:
+            bs = kv_block_size
+            blocks_per_seq = blocks_for_tokens(max_len, bs)
+            if kv_pool_blocks is not None:
+                n_blocks = kv_pool_blocks
+            elif kv_budget != float("inf"):
+                n_blocks = int(kv_budget // (self.k5 * bs))
+            else:
+                n_blocks = max_slots * blocks_per_seq
+            # at least one max-length trajectory must always fit, so block
+            # exhaustion can only strike when there is a victim to preempt
+            n_blocks = max(n_blocks, blocks_per_seq)
+            self.allocator = BlockAllocator(n_blocks + 1, bs)  # +1 null
+            self.cache = M.init_paged_cache(
+                cfg, max_slots, max_len, n_blocks + 1, bs
+            )
+        else:
+            self.cache = M.init_cache(cfg, max_slots, max_len)
         self.slots: List[Optional[Trajectory]] = [None] * max_slots
         self.waiting: List[Trajectory] = []
         self.complete_since_sync: set = set()
         self._last_tokens = jnp.zeros((max_slots,), jnp.int32)
+        # incrementally maintained byte counter (exact under paging via the
+        # allocator; on the dense path updated at admission / per recorded
+        # token / slot release) — admission is O(1) per trajectory instead
+        # of O(active slots)
+        self._kv_bytes = 0.0
+        # per-slot cache position (host mirror of cache["pos"] rows) and
+        # admission sequence number (preemption picks the youngest resident)
+        self._slot_pos: List[int] = [0] * max_slots
+        self._slot_seq: List[int] = [0] * max_slots
+        self._admit_seq = 0
         # telemetry
         self.decode_steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.preemptions = 0
 
         self.prefill_runner = PrefillRunner(
             cfg,
@@ -108,10 +175,21 @@ class RolloutInstance:
             batch_limit=0 if batched_prefill else 1,
             temperature=temperature,
             frontend_fn=frontend_fn,
+            paged_block_size=kv_block_size if paged else 0,
         )
-        self.decode_runner = DecodeRunner(
-            cfg, max_slots=max_slots, temperature=temperature
-        )
+        if paged:
+            self.paged_decode_runner = PagedDecodeRunner(
+                cfg,
+                max_slots=max_slots,
+                blocks_per_seq=blocks_for_tokens(max_len, kv_block_size),
+                temperature=temperature,
+            )
+            self.decode_runner = None
+        else:
+            self.paged_decode_runner = None
+            self.decode_runner = DecodeRunner(
+                cfg, max_slots=max_slots, temperature=temperature
+            )
         self._overflow_done: List[Trajectory] = []
 
     # ------------------------------------------------------------- geometry
@@ -119,6 +197,18 @@ class RolloutInstance:
         return t.length
 
     def kv_bytes(self) -> float:
+        """Bytes of KV in use — O(1).
+
+        Paged: exact block-granular usage (allocated blocks x block bytes).
+        Dense: token-granular sum over resident trajectories, maintained
+        incrementally.
+        """
+        if self.paged:
+            return self.k5 * self.allocator.used_tokens()
+        return self._kv_bytes
+
+    def _recompute_kv_bytes(self) -> float:
+        """O(active-slots) dense recomputation — invariant checks in tests."""
         return sum(
             self.k5 * self._slot_len(t) for t in self.slots if t is not None
         )
@@ -142,6 +232,18 @@ class RolloutInstance:
             self.waiting.append(traj)
         self._admit()
 
+    def _release_slot(self, slot: int) -> Trajectory:
+        """Vacate ``slot`` and release its KV (blocks or byte counter)."""
+        t = self.slots[slot]
+        self.slots[slot] = None
+        if self.paged:
+            self.allocator.free(t.traj_id)
+        else:
+            self._kv_bytes = max(
+                0.0, self._kv_bytes - self.k5 * self._slot_len(t)
+            )
+        return t
+
     def interrupt(
         self, traj_ids: Sequence[int], now: float = 0.0
     ) -> List[Trajectory]:
@@ -149,7 +251,7 @@ class RolloutInstance:
         out: List[Trajectory] = []
         for i, t in enumerate(self.slots):
             if t is not None and t.traj_id in ids:
-                self.slots[i] = None
+                self._release_slot(i)
                 t.status = TrajStatus.INTERRUPTED
                 t.instance = None
                 out.append(t)
@@ -180,15 +282,36 @@ class RolloutInstance:
         self._admit()
 
     # ---------------------------------------------------------------- admit
+    def _admission_charge(self, length: int) -> float:
+        """Bytes a routed trajectory of ``length`` tokens is charged at
+        admission (current tokens + ``admission_headroom_tokens`` of growth,
+        capped at ``max_len``; block-rounded under paging).
+
+        The paged charge is on the *cache-position* basis the allocator
+        draws from — including the vlm patch offset — so the budget check
+        matches what ``alloc`` will actually take. Dense keeps the seed's
+        token basis (its ``kv_bytes`` excludes patches too)."""
+        tokens = min(length + self.admission_headroom_tokens, self.max_len)
+        if self.paged:
+            bs = self.kv_block_size
+            return self.k5 * bs * blocks_for_tokens(
+                min(tokens + self._pos_offset, self.max_len), bs
+            )
+        return self.k5 * tokens
+
     def _admit(self) -> None:
         """Admit waiting trajectories into free slots within the KV budget —
         all eligible admissions run as ONE batched prefill per length bucket.
 
-        Admission policy matches the seed engine decision-for-decision: the
-        waiting queue is FIFO, each admission charges ``k5 * (length + 1)``
-        against the budget (the +1 is the token prefill samples), and a
-        trajectory too long to generate consumes its candidate slot index
-        exactly as the seed's slot-scan did.
+        Admission policy matches the seed engine decision-for-decision on
+        the dense path: the waiting queue is FIFO, each admission charges
+        its headroom-padded current length against the budget and then
+        accumulates ``k5 * (length + 1)`` of planned usage (the +1 is the
+        token prefill samples), and a trajectory too long to generate
+        consumes its candidate slot index exactly as the seed's slot-scan
+        did. Under paging the charge is the trajectory's *actual block
+        allocation*, and admission additionally requires the pool to hold
+        enough free blocks for the (re-)prefill.
         """
         free = [i for i, t in enumerate(self.slots) if t is None]
         jobs: List[PrefillJob] = []
@@ -196,12 +319,23 @@ class RolloutInstance:
         planned_bytes = self.kv_bytes()
         while self.waiting and free:
             nxt = self.waiting[0]
-            need = self.k5 * min(self._slot_len(nxt) + 16, self.max_len)
-            if planned_bytes + need > self.kv_budget:
+            if planned_bytes + self._admission_charge(
+                self._slot_len(nxt)
+            ) > self.kv_budget:
                 break
+            tokens = list(nxt.prompt) + list(nxt.response)
+            cache_len = len(tokens) + self._pos_offset
+            if self.paged:
+                # ``alloc`` below draws down ``n_free`` as this pass admits,
+                # so the availability check is against the live free count
+                need_blocks = blocks_for_tokens(cache_len, self.kv_block_size)
+                if (
+                    len(tokens) < self.max_len - 1
+                    and need_blocks > self.allocator.n_free
+                ):
+                    break  # pool exhausted: wait for releases
             self.waiting.pop(0)
             slot = free.pop(0)
-            tokens = list(nxt.prompt) + list(nxt.response)
             if len(tokens) >= self.max_len - 1:
                 # no room to generate: finish immediately (engine-level cap)
                 nxt.finished = True
@@ -210,14 +344,23 @@ class RolloutInstance:
                 self._overflow_done.append(nxt)
                 continue
             self._key, sub = jax.random.split(self._key)
-            jobs.append(PrefillJob(slot=slot, tokens=tokens, key=sub))
+            blocks = None
+            if self.paged:
+                blocks = self.allocator.alloc(nxt.traj_id, cache_len)
+                planned_bytes += self.k5 * self.kv_block_size * len(blocks)
+            else:
+                planned_bytes += self.k5 * (self._slot_len(nxt) + 1)
+            jobs.append(
+                PrefillJob(slot=slot, tokens=tokens, key=sub, blocks=blocks)
+            )
             trajs.append(nxt)
-            planned_bytes += self.k5 * (self._slot_len(nxt) + 1)
         if not jobs:
             return
-        # the decode runner may hold active rows compacted out of the batch
-        # cache; sync them back before the prefill scatter writes new rows
-        self.cache = self.decode_runner.flush(self.cache)
+        if not self.paged:
+            # the decode runner may hold active rows compacted out of the
+            # batch cache; sync them back before the prefill scatter writes
+            # new rows (the paged pool needs no such coherence step)
+            self.cache = self.decode_runner.flush(self.cache)
         self.cache, result = self.prefill_runner.run(
             self.params, self.cache, jobs
         )
@@ -230,6 +373,11 @@ class RolloutInstance:
             last = last.at[job.slot].set(tok)
             traj.status = TrajStatus.RUNNING
             self.slots[job.slot] = traj
+            self._slot_pos[job.slot] = len(job.tokens) + self._pos_offset
+            self._slot_seq[job.slot] = self._admit_seq
+            self._admit_seq += 1
+            if not self.paged:
+                self._kv_bytes += self.k5 * self._slot_len(traj)
         self._last_tokens = last
 
     # ----------------------------------------------------------------- step
@@ -240,6 +388,43 @@ class RolloutInstance:
         if token == self.eos_id or traj.n_generated >= traj.max_new_tokens:
             traj.finished = True
 
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s trajectory to the head of the waiting queue,
+        releasing its blocks (it re-prefills prompt + partial response on
+        re-admission — the standard partial-rollout path)."""
+        t = self._release_slot(slot)
+        t.status = TrajStatus.INTERRUPTED
+        self.waiting.insert(0, t)
+        self.preemptions += 1
+
+    def _ensure_decode_blocks(self) -> None:
+        """Grow each resident's block table to cover its next write
+        position; on pool exhaustion preempt the *youngest* resident
+        (vLLM-style LIFO preemption — the oldest trajectories, closest to
+        completion, keep their blocks)."""
+        for slot in sorted(
+            (i for i, t in enumerate(self.slots) if t is not None),
+            key=lambda i: self._slot_seq[i],
+        ):
+            t = self.slots[slot]
+            if t is None:  # preempted earlier in this pass
+                continue
+            while True:
+                try:
+                    self.allocator.extend_to(t.traj_id, self._slot_pos[slot] + 1)
+                    break
+                except BlockExhausted:
+                    victims = [
+                        i
+                        for i, v in enumerate(self.slots)
+                        if v is not None and i != slot
+                    ]
+                    if not victims:
+                        # unreachable by construction: the pool always holds
+                        # >= one full-length trajectory's worth of blocks
+                        raise
+                    self._preempt(max(victims, key=lambda i: self._slot_seq[i]))
+
     def step(self, now: float = 0.0, dt: float = 0.0) -> List[Trajectory]:
         """One batched decode step over the active slots. Returns completed
         trajectories (removed from their slots)."""
@@ -247,18 +432,31 @@ class RolloutInstance:
         if self._overflow_done:
             done.extend(self._overflow_done)
             self._overflow_done.clear()
+        if self.paged:
+            self._ensure_decode_blocks()
         active = [i for i, t in enumerate(self.slots) if t is not None]
         if not active:
             return done
         self._key, sub = jax.random.split(self._key)
-        self.cache, self._last_tokens, result = self.decode_runner.run(
-            self.params,
-            self.cache,
-            active,
-            self._last_tokens,
-            sub,
-            compact=self.compact_decode,
-        )
+        if self.paged:
+            tables = {
+                s: self.allocator.table(self.slots[s].traj_id) for s in active
+            }
+            self.cache, self._last_tokens, result = (
+                self.paged_decode_runner.run(
+                    self.params, self.cache, active, tables,
+                    self._last_tokens, sub,
+                )
+            )
+        else:
+            self.cache, self._last_tokens, result = self.decode_runner.run(
+                self.params,
+                self.cache,
+                active,
+                self._last_tokens,
+                sub,
+                compact=self.compact_decode,
+            )
         self.decode_steps += 1
         self.decode_tokens += len(active)
 
@@ -267,12 +465,15 @@ class RolloutInstance:
         ):
             traj = self.slots[slot]
             self._record_token(traj, int(token), float(blp))
+            self._slot_pos[slot] = int(pos)
+            if not self.paged:
+                self._kv_bytes += self.k5
             if traj.finished or int(pos) >= self.max_len - 1:
                 traj.finished = True
                 traj.status = TrajStatus.GENERATED
                 self.complete_since_sync.add(traj.traj_id)
                 done.append(traj)
-                self.slots[slot] = None
+                self._release_slot(slot)
         if done:
             self._admit()
         return done

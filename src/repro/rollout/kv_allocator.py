@@ -1,0 +1,144 @@
+"""Fixed-size KV block allocator (vLLM-style paging, rollout side).
+
+The dense engine reserves ``max_len`` contiguous cache rows per slot, so a
+replica's concurrency is bounded by worst-case trajectory length even when
+most trajectories are short (the heavy-tail skew of Fig. 4). Paging breaks
+the cache into fixed-size token blocks drawn from one shared pool:
+
+* each resident trajectory owns an ordered **block table** — block ``i``
+  of the table holds cache positions ``[i*block_size, (i+1)*block_size)``;
+* blocks are allocated at admission (prompt re-prefill) and **extended on
+  the fly** as decode crosses block boundaries;
+* freeing (finish / interrupt / abort / preemption) returns every owned
+  block to the free list.
+
+Block 0 is the **null block**: a garbage sink that is never allocated.
+Block-table paddings point at it, so padded scatters/gathers in the jitted
+data plane have a harmless, always-valid target (reads of it are masked by
+per-sequence lengths downstream).
+
+The allocator is host-side bookkeeping only — it never touches device
+memory. Invariants (enforced by ``check()``, property-tested in
+``tests/test_kv_allocator.py``):
+
+* a block is owned by at most one trajectory and is either owned or free;
+* the null block is never owned and never free;
+* ``n_free + sum(len(table) for table in tables) + 1 == n_blocks``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+NULL_BLOCK = 0
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache positions."""
+    return max(0, -(-n_tokens // block_size))
+
+
+class BlockExhausted(RuntimeError):
+    """The pool cannot satisfy an allocation (caller should preempt)."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``n_blocks`` fixed-size KV blocks.
+
+    ``n_blocks`` counts the null block, so ``n_blocks - 1`` blocks are
+    actually allocatable.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError("need at least one allocatable block + null")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # LIFO free list: recently freed (still-warm) blocks are reused first
+        self._free: List[int] = list(range(n_blocks - 1, NULL_BLOCK, -1))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def used_tokens(self) -> int:
+        """Token *capacity* of allocated blocks (block-granular accounting)."""
+        return self.used_blocks * self.block_size
+
+    def owners(self) -> Tuple[int, ...]:
+        return tuple(self._tables)
+
+    def table(self, owner: int) -> List[int]:
+        """The owner's ordered block table (a copy)."""
+        return list(self._tables[owner])
+
+    def capacity(self, owner: int) -> int:
+        """Cache positions currently backed for ``owner``."""
+        return len(self._tables[owner]) * self.block_size
+
+    # ----------------------------------------------------------- allocation
+    def alloc(self, owner: int, n_tokens: int) -> List[int]:
+        """Allocate a fresh table covering ``n_tokens`` positions.
+
+        Raises ``BlockExhausted`` (allocating nothing) if the free list is
+        short, ``ValueError`` if ``owner`` already holds a table.
+        """
+        if owner in self._tables:
+            raise ValueError(f"owner {owner} already has a block table")
+        need = blocks_for_tokens(n_tokens, self.block_size)
+        if need > len(self._free):
+            raise BlockExhausted(
+                f"need {need} blocks, {len(self._free)} free"
+            )
+        self._tables[owner] = [self._free.pop() for _ in range(need)]
+        return list(self._tables[owner])
+
+    def extend_to(self, owner: int, n_tokens: int) -> List[int]:
+        """Grow the owner's table to cover ``n_tokens`` positions.
+
+        Returns the newly appended blocks (empty if already covered).
+        Raises ``BlockExhausted`` without partial allocation on shortfall.
+        """
+        table = self._tables[owner]
+        need = blocks_for_tokens(n_tokens, self.block_size) - len(table)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise BlockExhausted(
+                f"need {need} more blocks, {len(self._free)} free"
+            )
+        new = [self._free.pop() for _ in range(need)]
+        table.extend(new)
+        return new
+
+    def free(self, owner: int) -> int:
+        """Release every block owned by ``owner``. Returns the count.
+
+        Double-free (an unknown owner) raises ``KeyError`` — leaks and
+        double-frees must fail loudly, not corrupt the pool.
+        """
+        table = self._tables.pop(owner)
+        self._free.extend(table)
+        return len(table)
+
+    # ------------------------------------------------------------ invariants
+    def check(self) -> None:
+        """Validate pool invariants; raises ``AssertionError`` on violation."""
+        owned: List[int] = [b for t in self._tables.values() for b in t]
+        owned_set = set(owned)
+        free_set = set(self._free)
+        assert len(owned) == len(owned_set), "block owned twice"
+        assert len(self._free) == len(free_set), "block freed twice"
+        assert not (owned_set & free_set), "block both owned and free"
+        assert NULL_BLOCK not in owned_set, "null block allocated"
+        assert NULL_BLOCK not in free_set, "null block on the free list"
+        universe = owned_set | free_set | {NULL_BLOCK}
+        assert universe == set(range(self.n_blocks)), "blocks leaked"
+        assert all(0 < b < self.n_blocks for b in owned_set | free_set)

@@ -97,6 +97,7 @@ class PrefillJob:
     slot: int
     tokens: List[int]          # prompt + partial response (re-prefill)
     key: jax.Array             # per-trajectory sampling key (seed split order)
+    blocks: Optional[List[int]] = None  # paged mode: the slot's block table
 
     @property
     def bucket_len(self) -> int:
@@ -129,6 +130,8 @@ class PrefillRunner:
         batch_limit: int = 0,            # 0 = unlimited (one pass per bucket)
         temperature: float = 1.0,
         frontend_fn: Optional[Callable[[int], jax.Array]] = None,
+        paged_block_size: int = 0,       # 0 = dense slot-row scatter
+        paged_null_block: int = 0,
     ):
         self.cfg = cfg
         self.max_len = max_len
@@ -136,8 +139,11 @@ class PrefillRunner:
         self.batch_limit = batch_limit
         self.temperature = temperature
         self.frontend_fn = frontend_fn
+        self.paged_block_size = paged_block_size
+        self.paged_null_block = paged_null_block
         self._jit_prefill = jax.jit(partial(M.prefill, cfg))
         self._jit_scatter = jax.jit(scatter_rows)
+        self._jit_paged_scatter = jax.jit(self._paged_scatter)
         # per-row sampling with per-trajectory keys, vmapped: bitwise equal
         # to the seed's one-row sample() loop, but a single dispatch
         self._jit_sample = jax.jit(
@@ -150,6 +156,22 @@ class PrefillRunner:
 
     def bucket_of(self, n_tokens: int) -> int:
         return min(round_up(max(n_tokens, 1), self.prefill_bucket), self.max_len)
+
+    def _paged_scatter(self, cache, row_cache, slots, flat_blocks):
+        """Scatter a contiguous prefill row cache into the paged layout:
+        per-slot entries land at their slot rows, K/V rows are re-blocked
+        and written to the pool at the jobs' block tables (padding entries
+        target the null block — a masked garbage sink)."""
+        small = {n: v for n, v in cache.items() if n not in ("k", "v")}
+        rows = {n: v for n, v in row_cache.items() if n not in ("k", "v")}
+        out = scatter_rows(small, rows, slots)
+        l, r, s, hkv, hd = row_cache["k"].shape
+        bs = cache["k"].shape[2]
+        rk = row_cache["k"].reshape(l, r * (s // bs), bs, hkv, hd)
+        rv = row_cache["v"].reshape(l, r * (s // bs), bs, hkv, hd)
+        out["k"] = cache["k"].at[:, flat_blocks].set(rk.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, flat_blocks].set(rv.astype(cache["v"].dtype))
+        return out
 
     def _groups(self, jobs: Sequence[PrefillJob]) -> List[List[PrefillJob]]:
         """Group jobs by padded bucket length, preserving admission order,
@@ -202,7 +224,17 @@ class PrefillRunner:
                 frontend_embeds=fe,
             )
             slots = jnp.asarray([j.slot for j in group], jnp.int32)
-            cache = self._jit_scatter(cache, row_cache, slots)
+            if self.paged_block_size:
+                nb = self.max_len // self.paged_block_size
+                flat = np.full((len(group) * nb,), self.paged_null_block,
+                               np.int32)
+                for r, job in enumerate(group):
+                    flat[r * nb : r * nb + len(job.blocks)] = job.blocks
+                cache = self._jit_paged_scatter(
+                    cache, row_cache, slots, jnp.asarray(flat)
+                )
+            else:
+                cache = self._jit_scatter(cache, row_cache, slots)
             keys = jnp.stack([j.key for j in group])
             toks, blps = self._jit_sample(logits, keys)
             toks_np = np.asarray(toks)[:, 0]
@@ -373,4 +405,103 @@ class DecodeRunner:
             tokens=tokens_np[active],
             logprobs=blps_np[active],
             positions=pos_np[active],
+        )
+
+
+class PagedDecodeRunner:
+    """Active-slot decode over a block-paged KV pool.
+
+    The pool is shared by every slot, so — unlike ``DecodeRunner`` — no
+    cache rows need gathering or persistent compaction for the KV itself:
+    the per-step block-table array *is* the compaction. Active slots are
+    still bucketed to ``next_pow2(n_active)`` rows so matmul cost scales
+    with occupancy; only the small per-slot entries (``pos``, hybrid
+    conv/ssm, audio cross caches) are gathered/scattered each step, inside
+    the same jitted dispatch. There is no compact state held between steps,
+    hence no ``flush`` coherence protocol either.
+
+    Pad rows duplicate the first active slot's token/position but point
+    their block tables at the null block, so their writes land in the
+    garbage sink and their outputs are sliced away.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        *,
+        max_slots: int,
+        blocks_per_seq: int,
+        null_block: int = 0,
+        temperature: float = 1.0,
+    ):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.nb = blocks_per_seq
+        self.null_block = null_block
+        self.temperature = temperature
+        self._steps: Dict[Tuple[int, int], Any] = {}
+
+    def bucket_of(self, n_active: int) -> int:
+        return min(next_pow2(max(n_active, 1)), self.max_slots)
+
+    def _step(self, bucket: int, n: int):
+        fn = self._steps.get((bucket, n))
+        if fn is None:
+            def step(params, last_tokens, cache, rows, live, tables):
+                small = {
+                    nm: v for nm, v in cache.items() if nm not in ("k", "v")
+                }
+                view = gather_rows(small, rows)
+                view["k"], view["v"] = cache["k"], cache["v"]
+                logits, new = M.paged_decode_step(
+                    self.cfg, params, last_tokens[rows], view, tables
+                )
+                live_rows = {
+                    nm: jax.tree_util.tree_map(
+                        lambda f: jax.lax.slice_in_dim(
+                            f, 0, n, axis=BATCH_AXIS[nm]
+                        ),
+                        new[nm],
+                    )
+                    for nm in small
+                }
+                out = scatter_rows(small, live_rows, live)
+                out["k"], out["v"] = new["k"], new["v"]
+                return logits, out, new["pos"][:n]
+
+            fn = jax.jit(step)
+            self._steps[(bucket, n)] = fn
+        return fn
+
+    def run(
+        self,
+        params: Any,
+        cache: Cache,
+        active: Sequence[int],
+        block_tables: Dict[int, Sequence[int]],   # slot -> block table
+        last_tokens: jax.Array,                   # (max_slots,)
+        key: jax.Array,                           # one step key
+    ) -> Tuple[Cache, jax.Array, DecodeResult]:
+        """One decode step over ``active`` slots. Returns
+        (cache, last_tokens, result)."""
+        active = list(active)
+        n = len(active)
+        bucket = self.bucket_of(n)
+        rows = active + [active[0]] * (bucket - n)
+        tables = np.full((bucket, self.nb), self.null_block, np.int32)
+        for r, slot in enumerate(active):
+            bt = block_tables[slot]
+            tables[r, : len(bt)] = bt
+        live = jnp.asarray(active, jnp.int32)
+        logits, cache, pos_live = self._step(bucket, n)(
+            params, last_tokens, cache,
+            jnp.asarray(rows, jnp.int32), live, jnp.asarray(tables),
+        )
+        tokens, blps = sample(logits, key, temperature=self.temperature)
+        last_tokens = last_tokens.at[live].set(tokens[:n])
+        return cache, last_tokens, DecodeResult(
+            slots=active,
+            tokens=np.asarray(tokens[:n]),
+            logprobs=np.asarray(blps[:n]),
+            positions=np.asarray(pos_live),
         )

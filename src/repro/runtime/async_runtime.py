@@ -76,6 +76,8 @@ class RuntimeConfig:
     snapshot_every: int = 1            # coordinator cycle cadence (ticks)
     decode_steps_per_tick: int = 4
     reward_fn: Optional[Callable] = None  # (prompt_ids, response_ids) -> float
+    paged_kv: bool = False             # block-paged KV cache on the engines
+    kv_block_size: int = 16            # tokens per KV block when paged
 
 
 @dataclass
@@ -122,6 +124,7 @@ class AsyncRLRuntime:
         self.cost_model = CostModel(
             k1=1e-12, k2=1e-3, k3=1e-4, k4=5e-3, k5=k5,
             kv_budget=k5 * rcfg.max_len * rcfg.max_slots,
+            block_size=rcfg.kv_block_size if rcfg.paged_kv else 1,
         )
         group_filter = None
         if rcfg.filter_zero_signal:
@@ -168,6 +171,8 @@ class AsyncRLRuntime:
             kv_budget=self.cost_model.kv_budget,
             temperature=self.rcfg.temperature,
             seed=self.rcfg.seed,
+            paged=self.rcfg.paged_kv,
+            kv_block_size=self.rcfg.kv_block_size,
         )
 
     def _snapshots(self):

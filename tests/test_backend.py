@@ -31,6 +31,14 @@ def mk_jax(inst_id=0, slots=2):
     )
 
 
+def mk_jax_paged(inst_id=0, slots=2):
+    return create_backend(
+        "jax", inst_id, cfg=CFG, params=PARAMS, version=0,
+        max_slots=slots, max_len=64, temperature=0.0,
+        paged=True, kv_block_size=16,
+    )
+
+
 def mk_sim(inst_id=0):
     return create_backend("sim", inst_id, cost_model=PAPER_H20_QWEN3_30B)
 
@@ -44,6 +52,7 @@ def mk_traj(tid, prompt_len=6, max_new=8):
 
 BACKENDS = {
     "jax": mk_jax,
+    "jax_paged": mk_jax_paged,
     "sim": mk_sim,
 }
 
@@ -262,3 +271,68 @@ def test_sim_backend_respects_kv_budget():
     snap = inst.snapshot()
     assert snap.run_trajs == {30}
     assert snap.wait_trajs == {31}
+
+
+# ================================================ block-granular accounting
+def test_sim_and_paged_engine_kv_accounting_parity():
+    """SimBackend with a block-sized cost model must report the same
+    ``snapshot().kv_cache`` as a paged RolloutInstance holding the same
+    trajectories — the coordinator's routing math sees one memory picture
+    across real and simulated replicas."""
+    import dataclasses
+
+    reset_traj_ids()
+    bs = 16
+    k5 = 2 * CFG.n_layers * CFG.n_kv_heads * CFG.hd * 4
+    cm = dataclasses.replace(
+        PAPER_H20_QWEN3_30B, k5=float(k5), block_size=bs, kv_budget=float("inf")
+    )
+    sim = SimBackend(0, cm)
+    jaxp = create_backend(
+        "jax", 1, cfg=CFG, params=PARAMS, version=0,
+        max_slots=4, max_len=64, temperature=0.0,
+        paged=True, kv_block_size=bs,
+    )
+    # 6 tokens -> 1 block, 20 tokens -> 2 blocks (lengths chosen off block
+    # boundaries so the engine's +1 sampled token doesn't change the count)
+    for tid, plen in ((70, 6), (71, 20)):
+        t_sim, t_jax = mk_traj(tid, prompt_len=plen), mk_traj(tid, prompt_len=plen)
+        sim.route(t_sim, 0.0)
+        jaxp.route(t_jax, 0.0)
+    expected = k5 * bs * (1 + 2)
+    assert sim.snapshot().kv_cache == expected
+    assert jaxp.snapshot().kv_cache == expected
+    sim.interrupt([70, 71], 1.0)
+    jaxp.interrupt([70, 71], 1.0)
+    assert sim.snapshot().kv_cache == 0
+    assert jaxp.snapshot().kv_cache == 0
+
+
+def test_paged_engine_admits_more_than_dense_at_fixed_budget():
+    """The acceptance property behind paging: at one fixed KV budget the
+    paged engine runs strictly more concurrent trajectories than the dense
+    engine, whose slots each reserve ``max_len`` rows."""
+    reset_traj_ids()
+    bs = 16
+    max_len = 64
+    k5 = 2 * CFG.n_layers * CFG.n_kv_heads * CFG.hd * 4
+    budget = float(k5 * max_len * 2)  # HBM for 2 dense max_len slots
+
+    dense = create_backend(
+        "jax", 0, cfg=CFG, params=PARAMS, version=0,
+        max_slots=2,  # budget // (k5 * max_len): dense reserves worst case
+        max_len=max_len, temperature=0.0, kv_budget=budget,
+    )
+    paged = create_backend(
+        "jax", 1, cfg=CFG, params=PARAMS, version=0,
+        max_slots=8, max_len=max_len, temperature=0.0, kv_budget=budget,
+        paged=True, kv_block_size=bs,
+    )
+    for inst in (dense, paged):
+        reset_traj_ids()
+        inst.route_many(
+            [mk_traj(300 + i, prompt_len=6, max_new=100) for i in range(8)],
+            0.0,
+        )
+    assert paged.n_active() > dense.n_active()
+    assert paged.kv_bytes() <= budget and dense.kv_bytes() <= budget

@@ -220,3 +220,172 @@ def test_decode_bucket_sizes():
     assert r.bucket_of(3) == 4
     assert r.bucket_of(5) == 8
     assert r.bucket_of(8) == 8
+
+
+# ===================================================== paged KV equivalence
+# The block-paged cache (shared pool + per-trajectory block tables) must be
+# bit-for-bit equivalent to the dense per-slot layout under greedy decoding:
+# valid cache lanes hold identical values and masked lanes contribute exact
+# zeros, so tokens AND behavior logprobs match — including across slot
+# reuse, interrupt/migrate re-prefill, and KV-budget admission.
+
+def mk_paged(*, slots=4, max_len=64, seed=0, block_size=16, **kw):
+    return RolloutInstance(
+        0, CFG, PARAMS, 0, max_slots=slots, max_len=max_len,
+        temperature=0.0, seed=seed, paged=True, kv_block_size=block_size,
+        **kw,
+    )
+
+
+@pytest.mark.parametrize("n_trajs,prompt_lens", [
+    (3, (6, 6, 6)),            # one shared bucket
+    (4, (5, 21, 9, 17)),       # two prefill buckets
+    (6, (6, 7, 8, 9, 10, 11)), # slot reuse through the waiting queue
+])
+def test_paged_decode_matches_dense(n_trajs, prompt_lens):
+    reset_traj_ids()
+    mk = lambda: [
+        mk_traj(600 + i, prompt_len=pl, max_new=10)
+        for i, pl in enumerate(prompt_lens)
+    ]
+    done_paged = run_workload(mk_paged(), mk())
+    done_dense = run_workload(mk_inst(legacy=False), mk())
+    assert len(done_paged) == len(done_dense) == n_trajs
+    key = lambda t: t.traj_id
+    assert_same_streams(
+        sorted(done_paged, key=key), sorted(done_dense, key=key)
+    )
+
+
+@pytest.mark.parametrize("block_size", [8, 16, 32, 64])
+def test_paged_block_size_sweep_matches_dense(block_size):
+    reset_traj_ids()
+    mk = lambda: [mk_traj(700 + i, prompt_len=6 + i, max_new=8) for i in range(3)]
+    done_paged = run_workload(mk_paged(block_size=block_size), mk())
+    done_dense = run_workload(mk_inst(legacy=False), mk())
+    key = lambda t: t.traj_id
+    assert_same_streams(
+        sorted(done_paged, key=key), sorted(done_dense, key=key)
+    )
+
+
+def test_paged_interrupt_migrate_reprefill_matches_dense():
+    """Partial rollout across instances: blocks are freed at interrupt and
+    reallocated at re-prefill on the destination replica."""
+    reset_traj_ids()
+
+    def migrate(paged):
+        t = mk_traj(11, max_new=12)
+        a = mk_paged() if paged else mk_inst(legacy=False)
+        b = mk_paged() if paged else mk_inst(legacy=False)
+        a.route(t)
+        for _ in range(4):
+            a.step()
+        a.interrupt([t.traj_id])
+        if paged:
+            a.allocator.check()
+            assert a.allocator.used_blocks == 0
+        b.route(t)
+        for _ in range(60):
+            if t.finished:
+                break
+            b.step()
+        return t
+
+    assert_same_streams([migrate(True)], [migrate(False)])
+
+
+def test_paged_preemption_on_block_exhaustion():
+    """A pool too small for all residents preempts the youngest trajectory
+    back to the waiting queue; greedy token streams still match dense and
+    no block leaks."""
+    reset_traj_ids()
+    NO_EOS = -1
+
+    def run(paged):
+        if paged:
+            # 9 blocks x 8 tokens = 72 token capacity for 3 trajectories
+            # growing to ~35 tokens each -> exhaustion mid-decode
+            inst = RolloutInstance(
+                0, CFG, PARAMS, 0, max_slots=3, max_len=64,
+                temperature=0.0, seed=0, eos_id=NO_EOS,
+                paged=True, kv_block_size=8, kv_pool_blocks=9,
+            )
+        else:
+            inst = RolloutInstance(
+                0, CFG, PARAMS, 0, max_slots=3, max_len=64,
+                temperature=0.0, seed=0, eos_id=NO_EOS,
+            )
+        trajs = [mk_traj(800 + i, prompt_len=5 + i, max_new=30) for i in range(3)]
+        for t in trajs:
+            inst.route(t)
+        done = []
+        for _ in range(400):
+            done.extend(inst.step())
+            if inst.allocator is not None:
+                inst.allocator.check()
+            if len(done) == 3:
+                break
+        return inst, sorted(done, key=lambda t: t.traj_id)
+
+    inst_p, done_p = run(True)
+    inst_d, done_d = run(False)
+    assert inst_p.preemptions > 0
+    assert len(done_p) == len(done_d) == 3
+    for a, b in zip(done_p, done_d):
+        assert a.traj_id == b.traj_id
+        assert a.response == b.response
+    assert inst_p.allocator.used_blocks == 0
+    inst_p.allocator.check()
+
+
+def test_paged_admits_within_block_budget():
+    """Admission charges actual allocated blocks against the budget."""
+    reset_traj_ids()
+    k5 = 2 * CFG.n_layers * CFG.n_kv_heads * CFG.hd * 4
+    bs = 16
+    budget = k5 * bs * 3  # room for exactly 3 blocks
+    inst = mk_paged(block_size=bs, kv_budget=budget, slots=4)
+    for i in range(4):
+        inst.route(mk_traj(900 + i, prompt_len=6, max_new=6))
+    s = inst.snapshot()
+    # each short trajectory occupies one block but is charged headroom
+    # (6 + 16 tokens -> 2 blocks) at the admission decision
+    assert len(s.run_trajs) == 2
+    assert s.kv_cache == k5 * bs * 2
+    assert inst.kv_bytes() == k5 * inst.allocator.used_tokens()
+
+
+def test_dense_incremental_kv_counter_stays_exact():
+    """The O(1) admission counter must track the O(slots) recomputation
+    through admission, decode, completion, and interrupts."""
+    reset_traj_ids()
+    inst = mk_inst(legacy=False)
+    trajs = [mk_traj(950 + i, prompt_len=6 + i, max_new=8) for i in range(6)]
+    for t in trajs:
+        inst.route(t)
+        assert inst.kv_bytes() == inst._recompute_kv_bytes()
+    for _ in range(20):
+        inst.step()
+        assert inst.kv_bytes() == inst._recompute_kv_bytes()
+    resident = [t.traj_id for t in inst.slots if t is not None][:2]
+    inst.interrupt(resident)
+    assert inst.kv_bytes() == inst._recompute_kv_bytes()
+
+
+def test_paged_admission_wave_uses_live_free_count():
+    """Blocks drawn by earlier admissions in the same wave must not be
+    double-counted against the pool: with 9 free blocks, a 5-block and a
+    3-block trajectory admit together."""
+    reset_traj_ids()
+    inst = RolloutInstance(
+        0, CFG, PARAMS, 0, max_slots=4, max_len=64, temperature=0.0,
+        paged=True, kv_block_size=8, kv_pool_blocks=9,
+    )
+    a = mk_traj(970, prompt_len=33, max_new=4)   # ceil(33/8) = 5 blocks
+    b = mk_traj(971, prompt_len=17, max_new=4)   # ceil(17/8) = 3 blocks
+    inst.route_many([a, b])
+    s = inst.snapshot()
+    assert s.run_trajs == {970, 971}
+    assert inst.allocator.used_blocks == 8
+    inst.allocator.check()

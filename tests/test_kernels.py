@@ -10,6 +10,10 @@ from repro.kernels.dapo_loss import dapo_loss
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import grouped_matmul, moe_expert_ffn
+from repro.kernels.paged_attention import (
+    paged_decode_attention,
+    paged_decode_attention_update,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -145,6 +149,104 @@ def test_decode_attention_full_cache():
     out = decode_attention(q, k, v, lengths, bk=64, interpret=True)
     expect = ref.decode_attention_ref(q, k, v, lengths)
     np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------ paged decode attention
+def _mk_tables(b, nb, n_pool, salt=0):
+    """Disjoint, shuffled block tables (block 0 reserved as the null sink)."""
+    rng = np.random.RandomState(salt)
+    blocks = rng.permutation(np.arange(1, n_pool))[: b * nb]
+    return jnp.asarray(blocks.reshape(b, nb), jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,n_pool,bs,nb,h,hkv,hd",
+    [
+        (2, 12, 64, 4, 4, 4, 64),     # MHA
+        (3, 16, 32, 4, 8, 2, 64),     # GQA 4:1
+        (2, 24, 128, 8, 8, 1, 128),   # MQA, wide head, long window
+    ],
+)
+def test_paged_decode_attention_matches_ref(dtype, b, n_pool, bs, nb, h, hkv, hd):
+    q = rnd((b, h, hd), dtype, salt=51)
+    kp = rnd((n_pool, bs, hkv, hd), dtype, salt=52)
+    vp = rnd((n_pool, bs, hkv, hd), dtype, salt=53)
+    tables = _mk_tables(b, nb, n_pool, salt=54)
+    lengths = jnp.arange(1, b + 1) * (nb * bs // (b + 1)) + 1
+    out = paged_decode_attention(
+        q, kp, vp, tables, lengths.astype(jnp.int32), interpret=True
+    )
+    expect = ref.paged_decode_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **tol(dtype)
+    )
+
+
+def test_paged_decode_attention_matches_contiguous_dense():
+    """An identity block table must reproduce plain decode attention over
+    the same values laid out contiguously — the paged layout is purely an
+    indirection."""
+    b, s, bs, h, hkv, hd = 2, 256, 64, 8, 2, 64
+    nb = s // bs
+    kc = rnd((b, s, hkv, hd), salt=61)
+    vc = rnd((b, s, hkv, hd), salt=62)
+    q = rnd((b, h, hd), salt=63)
+    # pool rows 1.. hold the dense rows' blocks in order
+    kp = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, hd)), kc.reshape(b * nb, bs, hkv, hd)]
+    )
+    vp = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, hd)), vc.reshape(b * nb, bs, hkv, hd)]
+    )
+    tables = (jnp.arange(b * nb, dtype=jnp.int32) + 1).reshape(b, nb)
+    lengths = jnp.array([100, 256], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, tables, lengths, interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("write_pos", [(0, 31, 63), (32, 95, 127)])
+def test_paged_decode_attention_update_fused(dtype, write_pos):
+    """Fused paged decode + pool block row write: output equals scatter-
+    then-attend, and only the written rows of the pool change — including
+    writes exactly at block boundaries."""
+    b, n_pool, bs, nb, h, hkv, hd = 3, 14, 32, 4, 8, 2, 64
+    q = rnd((b, h, hd), dtype, salt=71)
+    kp = rnd((n_pool, bs, hkv, hd), dtype, salt=72)
+    vp = rnd((n_pool, bs, hkv, hd), dtype, salt=73)
+    kn = rnd((b, hkv, hd), dtype, salt=74)
+    vn = rnd((b, hkv, hd), dtype, salt=75)
+    tables = _mk_tables(b, nb, n_pool, salt=76)
+    wp = jnp.asarray(write_pos, jnp.int32)
+    # pools are donated (in-place on TPU) — pass copies, keep originals
+    out, nk, nv = paged_decode_attention_update(
+        q, jnp.array(kp), jnp.array(vp), kn, vn, tables, wp, interpret=True
+    )
+    expect, ek, ev = ref.paged_decode_attention_update_ref(
+        q, kp, vp, kn, vn, tables, wp
+    )
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **tol(dtype)
+    )
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(ek))
+    np.testing.assert_array_equal(np.asarray(nv), np.asarray(ev))
+
+
+def test_paged_ops_dispatch():
+    """ops.paged_* route ref and interpret impls to the same numbers."""
+    b, n_pool, bs, nb, h, hkv, hd = 2, 10, 32, 4, 4, 2, 32
+    q = rnd((b, h, hd), salt=81)
+    kp = rnd((n_pool, bs, hkv, hd), salt=82)
+    vp = rnd((n_pool, bs, hkv, hd), salt=83)
+    tables = _mk_tables(b, nb, n_pool, salt=84)
+    lengths = jnp.array([40, 128], jnp.int32)
+    a = ops.paged_decode_attention(q, kp, vp, tables, lengths, impl="ref")
+    c = ops.paged_decode_attention(
+        q, kp, vp, tables, lengths, impl="interpret"
+    )
+    np.testing.assert_allclose(a, c, atol=2e-5, rtol=2e-5)
 
 
 # -------------------------------------------------------------------- MoE GMM

@@ -1,0 +1,137 @@
+"""KV block allocator: leak-proof invariants under arbitrary op sequences.
+
+The allocator backs the paged engine's admission/extend/free lifecycle, so
+a leaked or double-owned block silently shrinks (or corrupts) replica
+capacity. Every test drives random or adversarial op sequences and asserts
+the pool invariants (``BlockAllocator.check``) after every mutation.
+"""
+import numpy as np
+import pytest
+
+from tests._optional import given, settings, st
+from repro.rollout.kv_allocator import (
+    NULL_BLOCK,
+    BlockAllocator,
+    BlockExhausted,
+    blocks_for_tokens,
+)
+
+
+def test_blocks_for_tokens():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2
+
+
+def test_alloc_extend_free_roundtrip():
+    a = BlockAllocator(9, 16)  # 8 allocatable + null
+    t = a.alloc(1, 20)         # 2 blocks
+    assert len(t) == 2 and a.used_blocks == 2
+    assert a.capacity(1) == 32
+    assert NULL_BLOCK not in t
+    assert a.extend_to(1, 30) == []          # already covered
+    new = a.extend_to(1, 33)                 # 3rd block
+    assert len(new) == 1 and a.capacity(1) == 48
+    assert a.free(1) == 3
+    assert a.used_blocks == 0 and a.n_free == 8
+    a.check()
+
+
+def test_exhaustion_allocates_nothing():
+    a = BlockAllocator(4, 8)   # 3 allocatable
+    a.alloc(1, 16)             # 2 blocks
+    with pytest.raises(BlockExhausted):
+        a.alloc(2, 17)         # needs 3, only 1 free
+    a.check()
+    assert a.used_blocks == 2  # failed alloc left no partial allocation
+    with pytest.raises(BlockExhausted):
+        a.extend_to(1, 33)     # needs 2 more, only 1 free
+    assert a.capacity(1) == 16
+
+
+def test_double_free_and_double_alloc_fail_loudly():
+    a = BlockAllocator(4, 8)
+    a.alloc(7, 8)
+    with pytest.raises(ValueError):
+        a.alloc(7, 8)
+    a.free(7)
+    with pytest.raises(KeyError):
+        a.free(7)
+    a.check()
+
+
+def _apply(a: BlockAllocator, live: dict, op: int, owner: int, tokens: int):
+    """One randomized lifecycle op against the allocator + a shadow model."""
+    if op == 0:  # admit
+        if owner in live:
+            return
+        try:
+            a.alloc(owner, tokens)
+            live[owner] = tokens
+        except BlockExhausted:
+            pass
+    elif op == 1:  # decode growth
+        if owner in live:
+            try:
+                a.extend_to(owner, live[owner] + tokens)
+                live[owner] += tokens
+            except BlockExhausted:
+                pass
+    else:  # finish / interrupt / abort / preempt all free the table
+        if owner in live:
+            a.free(owner)
+            del live[owner]
+
+
+def _check_model(a: BlockAllocator, live: dict):
+    a.check()
+    assert set(a.owners()) == set(live)
+    for owner, tokens in live.items():
+        assert a.capacity(owner) >= tokens
+        assert len(a.table(owner)) == blocks_for_tokens(tokens, a.block_size)
+
+
+def test_randomized_lifecycle_never_leaks():
+    """np.random stress (runs offline, where hypothesis is unavailable)."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        a = BlockAllocator(int(rng.integers(2, 24)), int(rng.integers(1, 20)))
+        live: dict = {}
+        for _ in range(200):
+            _apply(
+                a, live,
+                op=int(rng.integers(0, 3)),
+                owner=int(rng.integers(0, 8)),
+                tokens=int(rng.integers(1, 64)),
+            )
+            _check_model(a, live)
+        for owner in list(live):
+            a.free(owner)
+        a.check()
+        assert a.used_blocks == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_blocks=st.integers(2, 24),
+    block_size=st.integers(1, 20),
+    ops=st.lists(
+        st.tuples(
+            st.integers(0, 2),    # admit / extend / release
+            st.integers(0, 7),    # owner
+            st.integers(1, 64),   # token count
+        ),
+        max_size=120,
+    ),
+)
+def test_property_no_leak_no_double_free(n_blocks, block_size, ops):
+    a = BlockAllocator(n_blocks, block_size)
+    live: dict = {}
+    for op, owner, tokens in ops:
+        _apply(a, live, op, owner, tokens)
+        _check_model(a, live)
+    for owner in list(live):
+        a.free(owner)
+    a.check()
+    assert a.used_blocks == 0 and a.n_free == n_blocks - 1

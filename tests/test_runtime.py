@@ -142,3 +142,18 @@ def test_runtime_records_is_ratio_metric():
     history = rt.run(max_ticks=5000)
     for rec in history:
         assert 0.2 < rec.mean_is_ratio < 5.0  # sane IS ratios
+
+
+def test_runtime_completes_with_paged_kv():
+    """Full rollout->reward->train cycles with the block-paged engines:
+    the coordinator's cost model runs block-granular accounting and the
+    staleness protocol is unaffected by paging/preemption."""
+    rt = mk_runtime(total_steps=2, paged_kv=True, kv_block_size=16)
+    assert rt.cost_model.block_size == 16
+    history = rt.run(max_ticks=3000)
+    assert len(history) == 2
+    for rec in history:
+        assert np.isfinite(rec.loss)
+    rt.manager.check_invariants()
+    for inst in rt.instances.values():
+        inst.allocator.check()
