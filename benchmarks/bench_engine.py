@@ -150,6 +150,45 @@ def _bench_paged_capacity(
     return admitted, (inst.decode_tokens - tok0) / dt, inst.kv_bytes() / budget
 
 
+def _bench_prefix_capacity(
+    params, cfg, *, share: bool, group_size: int, prompt_len: int,
+    budget_slots: int = 2, max_len: int = 128, block_size: int = 16,
+):
+    """Group-sampling capacity at one fixed HBM budget, with and without
+    prefix sharing.
+
+    Routes waves of ``group_size``-member groups (identical prompt per
+    group) at a paged engine whose pool holds ``budget_slots`` dense
+    worst-case rows. Sharing stores each admitted group's full prompt
+    blocks once and prefills the prompt once, so at the same budget it
+    admits up to ~group_size x more members on prompt-heavy workloads
+    while running a fraction of the prefill tokens.
+
+    Returns (admitted members, HBM fill fraction, prefill tokens run).
+    """
+    k5 = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
+    budget = float(k5 * max_len * budget_slots)
+    inst = _mk_instance(
+        params, cfg, legacy=False,
+        slots=8 * budget_slots * max(1, group_size // 2),
+        max_len=max_len, kv_budget=budget,
+        paged=True, kv_block_size=block_size, share_prefix=share,
+    )
+    n_groups = 4 * budget_slots
+    for gid in range(n_groups):
+        prompt = list(
+            np.random.RandomState(7000 + gid).randint(3, 200, prompt_len)
+        )
+        inst.route_many([
+            Trajectory(
+                traj_id=7000 + gid * 100 + i, prompt=list(prompt),
+                group_id=gid, max_new_tokens=10_000,
+            )
+            for i in range(group_size)
+        ])
+    return inst.n_active(), inst.kv_bytes() / budget, inst.prefill_tokens
+
+
 def run(quick: bool = False) -> Dict[str, float]:
     reset_traj_ids()
     cfg = _bench_arch()
@@ -202,9 +241,98 @@ def run(quick: bool = False) -> Dict[str, float]:
             out[f"kvfit_paged_budget{budget_slots}_admitted"]
             / out[f"kvfit_dense_budget{budget_slots}_admitted"],
         )
+
+    note("engine: prefix sharing — group capacity at a fixed HBM budget")
+    gs_sweep = (4,) if quick else (2, 4, 8)
+    pl_sweep = (48,) if quick else (16, 48, 96)
+    for group_size in gs_sweep:
+        for prompt_len in pl_sweep:
+            cell = f"g{group_size}_p{prompt_len}"
+            for mode, share in (("noshare", False), ("share", True)):
+                adm, fill, ptoks = _bench_prefix_capacity(
+                    params, cfg, share=share,
+                    group_size=group_size, prompt_len=prompt_len,
+                )
+                out[f"prefixfit_{mode}_{cell}_admitted"] = adm
+                # prefill work is per-member: sharing admits more members
+                # off the same prompt passes, so tokens/member is the
+                # comparable cost (raw totals are budget-bounded alike)
+                out[f"prefixfit_{mode}_{cell}_prefill_per_member"] = (
+                    ptoks / max(adm, 1)
+                )
+                emit("engine", f"prefixfit_{mode}_{cell}_admitted", adm)
+                emit("engine", f"prefixfit_{mode}_{cell}_fill", fill)
+                emit(
+                    "engine", f"prefixfit_{mode}_{cell}_prefill_per_member",
+                    ptoks / max(adm, 1),
+                )
+            emit(
+                "engine", f"prefixfit_member_gain_{cell}",
+                out[f"prefixfit_share_{cell}_admitted"]
+                / max(out[f"prefixfit_noshare_{cell}_admitted"], 1),
+            )
+            emit(
+                "engine", f"prefixfit_prefill_saved_frac_{cell}",
+                1.0
+                - out[f"prefixfit_share_{cell}_prefill_per_member"]
+                / max(
+                    out[f"prefixfit_noshare_{cell}_prefill_per_member"], 1e-9
+                ),
+            )
     return out
 
 
+def run_memfit_smoke() -> None:
+    """CI smoke: the kvfit and prefixfit sweeps at a tiny config.
+
+    Exercises the real admission/allocation paths (dense vs paged, shared
+    vs unshared) end-to-end in seconds and asserts the headline
+    inequalities, so the benchmarks cannot silently rot.
+    """
+    reset_traj_ids()
+    cfg = get_arch("qwen2-1.5b").reduced()  # tiny smoke arch, CPU-fast
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    note("smoke: kvfit (paged vs dense at one fixed budget)")
+    dense_adm, _, dense_fill = _bench_paged_capacity(
+        params, cfg, paged=False, budget_slots=2, max_len=64, steps=2,
+    )
+    paged_adm, _, paged_fill = _bench_paged_capacity(
+        params, cfg, paged=True, budget_slots=2, max_len=64, steps=2,
+    )
+    emit("engine", "smoke_kvfit_dense_admitted", dense_adm)
+    emit("engine", "smoke_kvfit_paged_admitted", paged_adm)
+    assert paged_adm > dense_adm, "paged must out-admit dense"
+    assert dense_fill <= 1.0 and paged_fill <= 1.0, "budget overrun"
+
+    note("smoke: prefixfit (shared vs unshared group admission)")
+    reset_traj_ids()
+    no_adm, no_fill, no_ptoks = _bench_prefix_capacity(
+        params, cfg, share=False, group_size=4, prompt_len=24, max_len=64,
+    )
+    reset_traj_ids()
+    sh_adm, sh_fill, sh_ptoks = _bench_prefix_capacity(
+        params, cfg, share=True, group_size=4, prompt_len=24, max_len=64,
+    )
+    emit("engine", "smoke_prefixfit_noshare_admitted", no_adm)
+    emit("engine", "smoke_prefixfit_share_admitted", sh_adm)
+    emit("engine", "smoke_prefixfit_prefill_per_member_noshare",
+         no_ptoks / max(no_adm, 1))
+    emit("engine", "smoke_prefixfit_prefill_per_member_share",
+         sh_ptoks / max(sh_adm, 1))
+    assert sh_adm >= no_adm, "sharing must not admit fewer members"
+    assert sh_ptoks / max(sh_adm, 1) < no_ptoks / max(no_adm, 1), (
+        "sharing must cut prefill tokens per admitted member"
+    )
+    assert no_fill <= 1.0 and sh_fill <= 1.0, "budget overrun"
+    note("smoke: OK")
+
+
 if __name__ == "__main__":
+    import sys
+
     print("bench,metric,value")
-    run()
+    if "--smoke" in sys.argv:
+        run_memfit_smoke()
+    else:
+        run(quick="--quick" in sys.argv)

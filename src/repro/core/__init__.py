@@ -35,6 +35,7 @@ from repro.core.strategies import (
     StrategySuite,
     check_routable,
     migration_strategy,
+    prefix_routing_strategy,
     routing_strategy,
     synchronization_strategy,
     vanilla_migration,

@@ -140,6 +140,11 @@ class RolloutCoordinator:
         self.verifier = StalenessVerifier(manager, self.groups)
         self.spec = SpeculativeState()
         self.stats = CoordinatorStats()
+        # last-seen cumulative preemption count per instance: snapshots
+        # report monotone totals (a pure read on the engine), and the
+        # coordinator differences them into the per-cycle thrash rate the
+        # cost model's routing penalty consumes
+        self._preempt_seen: Dict[int, int] = {}
         self._lock = threading.RLock()
 
     # --------------------------------------------------------- protocol keys
@@ -176,6 +181,15 @@ class RolloutCoordinator:
                 return []
 
             s = clone_snapshot(snapshot)
+            # rewrite cumulative preemption counters into the rate since
+            # the previous cycle (only on the local clone the strategies
+            # see — the caller's snapshot is untouched)
+            for inst_id, si in s.items():
+                total = si.preemptions
+                si.preemptions = max(
+                    0, total - self._preempt_seen.get(inst_id, 0)
+                )
+                self._preempt_seen[inst_id] = total
             commands: CommandList = []
             ts_trajs = list(self.ts.peek())
             k5 = self.cost_model.k5

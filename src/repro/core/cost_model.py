@@ -23,6 +23,7 @@ drive the discrete-event simulator.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import Sequence
 
 from repro.core.snapshot import InstanceSnapshot
 
@@ -40,6 +41,11 @@ class CostModel:
     # up to whole blocks so routing decisions see the engine's real
     # block-granular memory picture.
     block_size: int = 1
+    # Routing penalty per pool preemption reported in the snapshot window:
+    # a replica evicting residents is over-committed, so its marginal gain
+    # is discounted by 1 / (1 + penalty * preemptions) — the coordinator
+    # stops feeding a thrashing pool until it drains. 0 disables.
+    preemption_penalty: float = 0.5
 
     def kv_bytes_for(self, length: int) -> float:
         """Bytes a trajectory of ``length`` tokens occupies on an instance
@@ -47,6 +53,28 @@ class CostModel:
         if self.block_size <= 1:
             return self.k5 * length
         return self.k5 * self.block_size * (-(-length // self.block_size))
+
+    # ------------------------------------------------- prefix-shared groups
+    def shared_prefix_blocks(self, prompt_len: int) -> int:
+        """Full prompt blocks a shared-prefix group stores once."""
+        if self.block_size <= 1:
+            return 0
+        return prompt_len // self.block_size
+
+    def group_kv_bytes_for(
+        self, prompt_len: int, lengths: Sequence[int]
+    ) -> float:
+        """Bytes a shared-prefix group occupies: the prompt's full blocks
+        once, plus each member's exclusive blocks (private tail copy +
+        response). Without paging there is no sharing — plain sum."""
+        if self.block_size <= 1:
+            return self.k5 * float(sum(lengths))
+        n_full = prompt_len // self.block_size
+        blocks = n_full + sum(
+            max(0, -(-length // self.block_size) - n_full)
+            for length in lengths
+        )
+        return self.k5 * self.block_size * blocks
 
     # ----------------------------------------------------------------- Eq. 2
     def step_latency(self, kv_cache: float, n_run: int) -> float:
@@ -78,13 +106,75 @@ class CostModel:
         s2.traj_lengths[traj_id] = length
         return s2
 
+    def _preempt_discount(self, s: InstanceSnapshot) -> float:
+        """1 / (1 + penalty * preemptions): discounts the gain of feeding a
+        replica whose pool evicted residents in the last snapshot window."""
+        if self.preemption_penalty <= 0.0 or s.preemptions <= 0:
+            return 1.0
+        return 1.0 / (1.0 + self.preemption_penalty * s.preemptions)
+
     def marginal_gain(self, s: InstanceSnapshot, length: int) -> float:
-        """Delta T_i of routing a trajectory of ``length`` to instance ``s``."""
+        """Delta T_i of routing a trajectory of ``length`` to instance ``s``,
+        discounted by the instance's recent preemption thrash."""
         if not self.admit(s, length):
             return 0.0  # waits -> contributes no throughput
         n2 = s.n_run + 1
         t2 = n2 / self.step_latency(s.kv_cache + self.kv_bytes_for(length), n2)
-        return t2 - self.throughput(s)
+        return (t2 - self.throughput(s)) * self._preempt_discount(s)
+
+    # ------------------------------------------ Eq. 3, shared-prefix groups
+    def admit_group(
+        self, s: InstanceSnapshot, prompt_len: int, lengths: Sequence[int]
+    ) -> bool:
+        """Can a whole shared-prefix group run immediately on ``s``?"""
+        return (
+            s.kv_cache + self.group_kv_bytes_for(prompt_len, lengths)
+            <= self.kv_budget
+            and s.n_wait == 0
+        )
+
+    def with_routed_group(
+        self,
+        s: InstanceSnapshot,
+        traj_ids: Sequence[int],
+        prompt_len: int,
+        lengths: Sequence[int],
+    ) -> InstanceSnapshot:
+        """S' after routing a shared-prefix group as one unit. The clone's
+        prefix bookkeeping is updated so later in-cycle discards release the
+        shared blocks once."""
+        s2 = s.clone()
+        s2.traj_lengths = dict(s.traj_lengths)
+        if self.admit_group(s, prompt_len, lengths):
+            s2.kv_cache = s.kv_cache + self.group_kv_bytes_for(
+                prompt_len, lengths
+            )
+            s2.run_trajs = s.run_trajs | set(traj_ids)
+            if self.shared_prefix_blocks(prompt_len) > 0:
+                # synthetic cycle-local key, below any existing key so a
+                # discard-then-route sequence can never collide
+                pk = min(s2.prefix_groups, default=0) - 1
+                s2.prefix_groups[pk] = set(traj_ids)
+                s2.prefix_tokens[pk] = (
+                    self.shared_prefix_blocks(prompt_len) * self.block_size
+                )
+        else:
+            s2.wait_trajs = s.wait_trajs | set(traj_ids)
+        for tid, length in zip(traj_ids, lengths):
+            s2.traj_lengths[tid] = length
+        return s2
+
+    def group_marginal_gain(
+        self, s: InstanceSnapshot, prompt_len: int, lengths: Sequence[int]
+    ) -> float:
+        """Delta T_i of routing a whole shared-prefix group to ``s``."""
+        if not self.admit_group(s, prompt_len, lengths):
+            return 0.0
+        n2 = s.n_run + len(lengths)
+        t2 = n2 / self.step_latency(
+            s.kv_cache + self.group_kv_bytes_for(prompt_len, lengths), n2
+        )
+        return (t2 - self.throughput(s)) * self._preempt_discount(s)
 
     # ----------------------------------------------------------------- Eq. 4
     def ideal_gain(self, length: int) -> float:
@@ -92,6 +182,16 @@ class CostModel:
         return 1.0 / (
             self.k1 * self.kv_bytes_for(length)
             + max(self.k2, self.k3 * 1) + self.k4
+        )
+
+    def group_ideal_gain(
+        self, prompt_len: int, lengths: Sequence[int]
+    ) -> float:
+        """Delta T_ideal of a shared-prefix group on a fully idle instance."""
+        g = len(lengths)
+        return g / (
+            self.k1 * self.group_kv_bytes_for(prompt_len, lengths)
+            + max(self.k2, self.k3 * g) + self.k4
         )
 
     def scaled(self, **kw) -> "CostModel":

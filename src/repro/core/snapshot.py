@@ -27,6 +27,20 @@ class InstanceSnapshot:
     # estimate KV footprints of routed/migrated trajectories. Not one of the
     # paper's five fields but carried alongside in every real system.
     traj_lengths: Dict[int, int] = field(default_factory=dict)
+    # engine telemetry: cumulative pool preemptions. The coordinator
+    # differences consecutive snapshots into a per-cycle rate before the
+    # strategies run; the cost model folds that rate into marginal_gain as
+    # a routing penalty so the coordinator stops feeding replicas
+    # thrashing their block pools.
+    preemptions: int = 0
+    # prefix sharing (paged group admission): opaque prefix id -> member
+    # trajectory ids still holding the shared full prompt blocks, and the
+    # token capacity of those blocks. ``kv_cache`` charges shared blocks
+    # once per group; ``discard`` uses these to release a member's
+    # *exclusive* blocks only, freeing the shared bytes when the last
+    # member leaves.
+    prefix_groups: Dict[int, Set[int]] = field(default_factory=dict)
+    prefix_tokens: Dict[int, int] = field(default_factory=dict)
 
     @property
     def n_run(self) -> int:
@@ -51,9 +65,37 @@ class InstanceSnapshot:
         KV footprint; lengths are tracked in tokens. ``block_size`` > 1
         rounds the released footprint up to whole KV blocks, matching the
         paged engine's block-granular accounting.
+
+        Shared-prefix members release only their exclusive blocks (tail +
+        response); the shared full prompt blocks are released exactly once,
+        when the last co-owning member is discarded.
         """
         ids = set(traj_ids)
-        for t in ids & self.run_trajs:
+        shared_handled: Set[int] = set()
+        if block_size > 1:
+            for pk, members in list(self.prefix_groups.items()):
+                hit = ids & members
+                if not hit:
+                    continue
+                n_full = self.prefix_tokens.get(pk, 0) // block_size
+                for t in hit & self.run_trajs:
+                    length = self.traj_lengths.get(t, 0)
+                    excl = max(0, -(-length // block_size) - n_full)
+                    self.kv_cache = max(
+                        0.0,
+                        self.kv_cache - bytes_per_token * block_size * excl,
+                    )
+                shared_handled |= hit
+                members -= hit
+                if not members:
+                    self.kv_cache = max(
+                        0.0,
+                        self.kv_cache
+                        - bytes_per_token * block_size * n_full,
+                    )
+                    del self.prefix_groups[pk]
+                    self.prefix_tokens.pop(pk, None)
+        for t in (ids - shared_handled) & self.run_trajs:
             length = self.traj_lengths.get(t, 0)
             if block_size > 1:
                 length = block_size * (-(-length // block_size))

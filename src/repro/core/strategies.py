@@ -51,6 +51,113 @@ def check_routable(
 
 
 # --------------------------------------------------------------- Algorithm 3
+def _waterfall_route(
+    snapshot: Snapshot,
+    units: Sequence[List[Trajectory]],
+    cost_model: CostModel,
+    verifier: Verifier,
+    cfg: StrategyConfig,
+) -> List[Tuple[int, Trajectory, int]]:
+    """Alg. 3 waterfall over routing *units*.
+
+    A unit is a list of trajectories routed to one instance as a whole:
+    singletons reproduce the per-trajectory waterfall exactly; multi-member
+    units are shared-prefix groups, whose gain/footprint the cost model
+    charges with the prompt's full blocks counted once
+    (``group_marginal_gain`` / ``with_routed_group``).
+    """
+    s = clone_snapshot(snapshot)
+    routing: List[Tuple[int, Trajectory, int]] = []
+
+    # Multi-level queue: levels ordered by V_traj ascending (staler = higher
+    # priority); initial trajectories (V_traj None) lowest priority.
+    levels: Dict[Optional[int], List[List[Trajectory]]] = {}
+    for unit in units:
+        levels.setdefault(unit[0].v_traj, []).append(unit)
+    keyed = sorted(
+        levels.items(), key=lambda kv: (kv[0] is None, kv[0] if kv[0] is not None else 0)
+    )
+
+    stop = False
+    for _, queue in keyed:
+        if stop:
+            break
+        idx = 0
+        while idx < len(queue):
+            unit = queue[idx]
+            rep = unit[0]  # members of a unit are interchangeable for Alg. 2
+            grouped = len(unit) > 1
+            lengths = [t.length for t in unit]
+            # Step 1: candidate instances
+            candidates = [
+                i for i, si in s.items() if check_routable(si, rep, verifier)
+            ]
+            if not candidates:
+                stop = True
+                break
+            # Step 2: group by inst_version ascending (older versions admit
+            # fewer trajectories -> serve them first)
+            by_version: Dict[int, List[int]] = {}
+            for i in candidates:
+                by_version.setdefault(s[i].inst_version, []).append(i)
+            groups = [by_version[v] for v in sorted(by_version)]
+            # Step 3: ideal gain upper bound
+            if grouped:
+                ideal = cost_model.group_ideal_gain(len(rep.prompt), lengths)
+            else:
+                ideal = cost_model.ideal_gain(rep.length)
+            # Step 4: waterfall selection
+            selected: Optional[int] = None
+            for group in groups:
+                best_gain, best_inst = -1.0, None
+                for i in group:
+                    if grouped:
+                        g = cost_model.group_marginal_gain(
+                            s[i], len(rep.prompt), lengths
+                        )
+                    else:
+                        g = cost_model.marginal_gain(s[i], rep.length)
+                    if g > best_gain:
+                        best_gain, best_inst = g, i
+                if best_gain >= cfg.mu * ideal:
+                    selected = best_inst
+                    break
+            if selected is None:
+                if grouped:
+                    # the whole group fits nowhere as a unit (pool smaller
+                    # than the group, or every instance loaded): fall back
+                    # to routing its members individually so the group can
+                    # trickle in — engine-side sharing still applies to
+                    # members landing in one wave, and stragglers fork the
+                    # resident prefix. Without this, an unplaceable group
+                    # would stop the waterfall and starve everything
+                    # queued behind it, every cycle.
+                    queue[idx : idx + 1] = [[t] for t in unit]
+                    continue
+                # withhold: let running work drain for a better gain later
+                stop = True
+                break
+            # Step 5: route + update speculative snapshot
+            v = (
+                rep.v_traj
+                if rep.v_traj is not None
+                else s[selected].inst_version
+            )
+            for traj in unit:
+                routing.append((selected, traj, v))
+            if grouped:
+                s[selected] = cost_model.with_routed_group(
+                    s[selected], [t.traj_id for t in unit],
+                    len(rep.prompt), lengths,
+                )
+            else:
+                s[selected] = cost_model.with_routed(
+                    s[selected], rep.traj_id, rep.length
+                )
+            queue.pop(idx)
+    return routing
+
+
 def routing_strategy(
     snapshot: Snapshot,
     ts_trajs: Sequence[Trajectory],
@@ -65,65 +172,47 @@ def routing_strategy(
     marginal effects; callers apply the decisions to the real system via
     Route commands.
     """
-    s = clone_snapshot(snapshot)
-    routing: List[Tuple[int, Trajectory, int]] = []
-
-    # Multi-level queue: levels ordered by V_traj ascending (staler = higher
-    # priority); initial trajectories (V_traj None) lowest priority.
-    levels: Dict[Optional[int], List[Trajectory]] = {}
-    for t in ts_trajs:
-        levels.setdefault(t.v_traj, []).append(t)
-    keyed = sorted(
-        levels.items(), key=lambda kv: (kv[0] is None, kv[0] if kv[0] is not None else 0)
+    return _waterfall_route(
+        snapshot, [[t] for t in ts_trajs], cost_model, verifier, cfg
     )
 
-    stop = False
-    for _, queue in keyed:
-        if stop:
-            break
-        idx = 0
-        while idx < len(queue):
-            traj = queue[idx]
-            # Step 1: candidate instances
-            candidates = [
-                i for i, si in s.items() if check_routable(si, traj, verifier)
-            ]
-            if not candidates:
-                stop = True
-                break
-            # Step 2: group by inst_version ascending (older versions admit
-            # fewer trajectories -> serve them first)
-            by_version: Dict[int, List[int]] = {}
-            for i in candidates:
-                by_version.setdefault(s[i].inst_version, []).append(i)
-            groups = [by_version[v] for v in sorted(by_version)]
-            # Step 3: ideal gain upper bound
-            ideal = cost_model.ideal_gain(traj.length)
-            # Step 4: waterfall selection
-            selected: Optional[int] = None
-            for group in groups:
-                best_gain, best_inst = -1.0, None
-                for i in group:
-                    g = cost_model.marginal_gain(s[i], traj.length)
-                    if g > best_gain:
-                        best_gain, best_inst = g, i
-                if best_gain >= cfg.mu * ideal:
-                    selected = best_inst
-                    break
-            if selected is None:
-                # withhold: let running work drain for a better gain later
-                stop = True
-                break
-            # Step 5: route + update speculative snapshot
-            v = (
-                traj.v_traj
-                if traj.v_traj is not None
-                else s[selected].inst_version
-            )
-            routing.append((selected, traj, v))
-            s[selected] = cost_model.with_routed(s[selected], traj.traj_id, traj.length)
-            queue.pop(idx)
-    return routing
+
+def prefix_routing_strategy(
+    snapshot: Snapshot,
+    ts_trajs: Sequence[Trajectory],
+    cost_model: CostModel,
+    verifier: Verifier,
+    cfg: StrategyConfig = StrategyConfig(),
+) -> List[Tuple[int, Trajectory, int]]:
+    """Group-affine waterfall routing for prefix-sharing engines.
+
+    Initial members of the same sampling group (identical prompt, nothing
+    generated, no ``V_traj`` yet) bundle into ONE routing unit placed on a
+    single instance, so they arrive in one wave and the engine prefills the
+    shared prompt once, mapping its full KV blocks into every member's
+    table. Partially generated or already-versioned trajectories route
+    individually exactly as ``routing_strategy`` would.
+    """
+    units: List[List[Trajectory]] = []
+    bundles: Dict[int, List[Trajectory]] = {}
+    for t in ts_trajs:
+        shareable = (
+            t.group_id >= 0
+            and t.v_traj is None
+            and not t.response
+            and not t.sim_generated
+        )
+        if not shareable:
+            units.append([t])
+            continue
+        bundle = bundles.get(t.group_id)
+        if bundle is not None and bundle[0].prompt == t.prompt:
+            bundle.append(t)
+        else:
+            bundle = [t]
+            bundles[t.group_id] = bundle
+            units.append(bundle)  # anchored at the first member's position
+    return _waterfall_route(snapshot, units, cost_model, verifier, cfg)
 
 
 # --------------------------------------------------------------- Algorithm 4
@@ -252,6 +341,14 @@ class StrategySuite:
     @staticmethod
     def staleflow() -> "StrategySuite":
         return StrategySuite(routing_strategy, synchronization_strategy, migration_strategy)
+
+    @staticmethod
+    def prefix_sharing() -> "StrategySuite":
+        """StaleFlow with group-affine routing: sampling groups land on one
+        instance so paged engines can prefill the shared prompt once."""
+        return StrategySuite(
+            prefix_routing_strategy, synchronization_strategy, migration_strategy
+        )
 
     @staticmethod
     def vanilla() -> "StrategySuite":

@@ -5,6 +5,8 @@
                          of rollout step time is per-token decode)
 * ``moe_gmm``          — grouped expert matmul (MoE FFN)
 * ``dapo_loss``        — fused token-level clipped PG loss + reduction
+* ``block_copy``       — paged-pool block move (copy-on-write tails for
+                         prefix-shared group rollout)
 
 ``ops`` is the dispatch layer (ref | pallas | interpret); ``ref`` holds the
 pure-jnp oracles the tests validate against.

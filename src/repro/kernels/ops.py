@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.block_copy import copy_pool_blocks as _block_copy_pallas
 from repro.kernels.dapo_loss import dapo_loss as _dapo_pallas
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.decode_attention import (
@@ -169,6 +170,29 @@ def paged_decode_attention_update(
     return _paged_update_pallas(
         q, k_pool, v_pool, k_new, v_new, block_tables, write_pos,
         interpret=(mode == "interpret"),
+    )
+
+
+def copy_pool_blocks(
+    k_pool: jax.Array,        # (L, N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (L, N, bs, Hkv, hd)
+    src: jax.Array,           # (C,) int32 source block per copy
+    dst: jax.Array,           # (C,) int32 destination block per copy
+    *, impl: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Device-side pool-block copy ``src[c] -> dst[c]`` (K and V).
+
+    The copy-on-write primitive behind prefix sharing: duplicates a shared
+    prompt's partial tail block into each group member's private block.
+    The Pallas path moves only the touched blocks in place (aliasing); the
+    ref path lowers a gather + scatter over the pools."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        new_k = k_pool.at[:, dst].set(k_pool[:, src])
+        new_v = v_pool.at[:, dst].set(v_pool[:, src])
+        return new_k, new_v
+    return _block_copy_pallas(
+        k_pool, v_pool, src, dst, interpret=(mode == "interpret")
     )
 
 

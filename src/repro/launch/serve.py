@@ -42,6 +42,16 @@ def main() -> None:
         "--block-size", type=int, default=16,
         help="tokens per KV block with --paged",
     )
+    ap.add_argument(
+        "--group-size", type=int, default=1,
+        help="sample this many responses per prompt (GRPO-style group "
+             "rollout); with --paged the shared prompt prefills once and "
+             "its full KV blocks are refcount-shared across the group",
+    )
+    ap.add_argument(
+        "--no-share-prefix", action="store_true",
+        help="disable prefix sharing for group rollout (ablation)",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -51,17 +61,23 @@ def main() -> None:
         max_len=64, temperature=args.temperature,
         compact_decode=not args.no_compact_decode,
         paged=args.paged, kv_block_size=args.block_size,
+        share_prefix=not args.no_share_prefix,
     )
     ds = ArithmeticDataset(args.requests, seed=2)
-    for p in ds.problems:
-        inst.route(Trajectory(
-            traj_id=next_traj_id(), prompt=list(p.prompt_ids),
-            max_new_tokens=args.max_new,
-        ))
+    n_requests = args.requests * args.group_size
+    for gid, p in enumerate(ds.problems):
+        inst.route_many([
+            Trajectory(
+                traj_id=next_traj_id(), prompt=list(p.prompt_ids),
+                group_id=gid if args.group_size > 1 else -1,
+                max_new_tokens=args.max_new,
+            )
+            for _ in range(args.group_size)
+        ])
 
     t0 = time.time()
     done = []
-    while len(done) < args.requests and time.time() - t0 < 120:
+    while len(done) < n_requests and time.time() - t0 < 120:
         for t in inst.step():
             done.append(t)
             print(f"  '{tok_decode(t.prompt)}' -> '{tok_decode(t.response)}'")
@@ -69,6 +85,10 @@ def main() -> None:
     print(f"\n{len(done)} requests, {inst.decode_tokens} tokens in {dt:.2f}s "
           f"({inst.decode_tokens/dt:.1f} tok/s, "
           f"{inst.decode_tokens/max(inst.decode_steps,1):.2f} tok/step batched)")
+    if args.group_size > 1 and args.paged:
+        print(f"prefix sharing: {inst.shared_prefix_hits} members admitted "
+              f"off a shared prompt, {inst.prefill_tokens_saved} prefill "
+              f"tokens saved")
 
 
 if __name__ == "__main__":

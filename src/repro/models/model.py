@@ -555,6 +555,28 @@ def init_paged_cache(
     return cache
 
 
+def copy_kv_blocks(
+    cache: Cache,
+    src: jax.Array,           # (C,) int32 source pool blocks
+    dst: jax.Array,           # (C,) int32 destination pool blocks
+    *,
+    impl: Optional[str] = None,
+) -> Cache:
+    """Duplicate pool blocks ``src[c] -> dst[c]`` in a paged cache's K/V.
+
+    The copy-on-write step of prefix sharing: after a group prompt is
+    prefilled once, its partially-filled tail block is copied into each
+    member's private block so decode appends never alias. Dispatches
+    through ``kernels.ops`` (Pallas in-place block move on TPU; XLA
+    gather/scatter on the ref path). Only ``k``/``v`` change; per-slot
+    state is untouched."""
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ops.copy_pool_blocks(
+        cache["k"], cache["v"], src, dst, impl=impl
+    )
+    return new_cache
+
+
 # ================================================================== prefill
 def prefill(
     cfg: ArchConfig,

@@ -53,6 +53,7 @@ from repro.core.commands import Abort, Command, Interrupt, Pull, Route
 from repro.core.cost_model import CostModel
 from repro.core.snapshot import InstanceSnapshot
 from repro.core.types import Trajectory, TrajStatus
+from repro.rollout.prefix_cache import PrefixRegistry, shareable_run
 
 
 @runtime_checkable
@@ -143,6 +144,7 @@ class SimBackend:
         prefill_tps: float = 50000.0,
         pull_time: float = 0.0,
         admission_headroom_tokens: int = 64,
+        share_prefix: bool = True,
     ):
         self.inst_id = inst_id
         self.cm = cost_model
@@ -153,6 +155,11 @@ class SimBackend:
         # length at admission (see RolloutInstance.admission_headroom_tokens;
         # the sim's coarser dt steps warrant a larger default)
         self.admission_headroom_tokens = admission_headroom_tokens
+        # prefix sharing mirrors the paged engine's group admission: a run
+        # of same-group, same-prompt, nothing-generated members at the
+        # waiting-queue head admits as one unit — one prefill stall, shared
+        # prompt blocks charged once. Inert at block_size 1 (dense model).
+        self.share_prefix = bool(share_prefix and cost_model.block_size > 1)
         self.running: Dict[int, Trajectory] = {}
         self.progress: Dict[int, float] = {}   # fractional generated tokens
         self.waiting: List[Trajectory] = []
@@ -160,6 +167,12 @@ class SimBackend:
         self.complete_since_sync: set = set()
         self.decode_tokens = 0.0
         self.prefill_tokens = 0.0
+        self.preemptions = 0                   # sim pools never preempt
+        self.shared_prefix_hits = 0
+        # shared-prefix registry — the same class the engine maintains, so
+        # both admission pictures and snapshot exports come from one
+        # implementation and cannot drift
+        self._prefix = PrefixRegistry()
 
     # ------------------------------------------------------------- geometry
     @property
@@ -170,30 +183,95 @@ class SimBackend:
         """KV bytes in use, at the cost model's allocation granularity
         (block-rounded when ``cm.block_size`` > 1 — the same accounting the
         paged RolloutInstance reports, so mixed real/sim clusters give the
-        coordinator one consistent memory picture)."""
-        return sum(
-            self.cm.kv_bytes_for(t.length) for t in self.running.values()
-        )
+        coordinator one consistent memory picture). Shared prefix blocks
+        are charged once per group, like the engine's refcounted pool."""
+        bs = self.cm.block_size
+        total = self.cm.k5 * float(self._prefix.shared_token_total())
+        for t in self.running.values():
+            pk = self._prefix.lookup(t.traj_id)
+            if pk is None:
+                total += self.cm.kv_bytes_for(t.length)
+            else:
+                n_full = self._prefix.tokens(pk) // bs
+                excl = max(0, -(-t.length // bs) - n_full)
+                total += self.cm.k5 * bs * excl
+        return total
 
     def n_active(self) -> int:
         return len(self.running)
 
+    def _share_run(self) -> int:
+        """Shareable same-group run length at the queue head — the same
+        scan the engine runs (``prefix_cache.shareable_run``)."""
+        if not self.share_prefix:
+            return 1
+        return shareable_run(self.waiting)
+
+    def _admit_one(self, traj: Trajectory, now: float, prefill: int) -> None:
+        self.running[traj.traj_id] = traj
+        self.progress[traj.traj_id] = float(traj.sim_generated)
+        if prefill:
+            self.stall_until = (
+                max(self.stall_until, now) + prefill / self._prefill_tps
+            )
+            self.prefill_tokens += prefill
+
     def _admit(self, now: float) -> None:
         while self.waiting:
+            g = self._share_run()
+            if g >= 2:
+                head = self.waiting[0]
+                plen = len(head.prompt)
+                pad = plen + self.admission_headroom_tokens
+                while g >= 2:
+                    charge = self.cm.group_kv_bytes_for(plen, [pad] * g)
+                    if self.kv_bytes() + charge <= self.cm.kv_budget:
+                        break
+                    g -= 1
+                if g >= 2:
+                    members = [self.waiting.pop(0) for _ in range(g)]
+                    bs = self.cm.block_size
+                    n_full = plen // bs
+                    if n_full:
+                        self._prefix.register(
+                            head.group_id,
+                            [m.traj_id for m in members],
+                            n_full * bs,
+                            head.prompt,
+                        )
+                    # one shared prompt prefill for the whole group
+                    self._admit_one(members[0], now, prefill=plen)
+                    for m in members[1:]:
+                        self._admit_one(m, now, prefill=0)
+                    self.shared_prefix_hits += g - 1
+                    continue
             nxt = self.waiting[0]
+            # cross-wave join: a straggler member of a still-resident
+            # prefix is charged only its exclusive blocks (the engine
+            # forks the sibling prefix the same way)
+            fork_pk = None
+            if (
+                self.share_prefix
+                and nxt.group_id >= 0
+                and not nxt.response
+                and not nxt.sim_generated
+            ):
+                fork_pk = self._prefix.find(nxt.group_id, nxt.prompt)
             charge = self.cm.kv_bytes_for(
                 nxt.length + self.admission_headroom_tokens
             )
+            if fork_pk is not None:
+                charge = max(
+                    0.0, charge - self.cm.k5 * self._prefix.tokens(fork_pk)
+                )
             if self.kv_bytes() + charge > self.cm.kv_budget:
                 return
             self.waiting.pop(0)
-            self.running[nxt.traj_id] = nxt
-            self.progress[nxt.traj_id] = float(nxt.sim_generated)
+            if fork_pk is not None:
+                self._prefix.join(fork_pk, nxt.traj_id)
+                self.shared_prefix_hits += 1
             # re-prefill stall (prompt + already-generated tokens)
-            self.stall_until = (
-                max(self.stall_until, now) + nxt.length / self._prefill_tps
-            )
-            self.prefill_tokens += nxt.length
+            self._admit_one(nxt, now, prefill=nxt.length)
 
     # ------------------------------------------------------------- commands
     def route(self, traj: Trajectory, now: float = 0.0) -> None:
@@ -217,6 +295,7 @@ class SimBackend:
             if tid in self.running:
                 t = self.running.pop(tid)
                 t.sim_generated = int(self.progress.pop(tid))
+                self._prefix.drop(tid)
                 out.append(t)
             else:
                 for i, t in enumerate(self.waiting):
@@ -270,6 +349,7 @@ class SimBackend:
                 traj.status = TrajStatus.GENERATED
                 del self.running[tid]
                 del self.progress[tid]
+                self._prefix.drop(tid)
                 self.complete_since_sync.add(tid)
                 done.append(traj)
         if done:
@@ -280,6 +360,7 @@ class SimBackend:
     def snapshot(self) -> InstanceSnapshot:
         lengths = {t.traj_id: t.length for t in self.running.values()}
         lengths.update({t.traj_id: t.length for t in self.waiting})
+        prefix_groups, prefix_tokens = self._prefix.export()
         return InstanceSnapshot(
             inst_id=self.inst_id,
             kv_cache=self.kv_bytes(),
@@ -288,6 +369,9 @@ class SimBackend:
             complete_trajs=set(self.complete_since_sync),
             inst_version=self.inst_version,
             traj_lengths=lengths,
+            preemptions=0,  # sim pools admit by budget, never preempt
+            prefix_groups=prefix_groups,
+            prefix_tokens=prefix_tokens,
         )
 
 

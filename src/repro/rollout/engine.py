@@ -46,6 +46,16 @@ normal re-prefill path — the same interrupt semantics the coordinator
 uses). Greedy decode is bit-for-bit equal to the dense path
 (``tests/test_engine_equivalence.py``).
 
+Prefix sharing (``share_prefix=True``, paged mode): group-sampled
+trajectories (GRPO/DAPO) that share one prompt and arrive together admit as
+a **group**: the prompt is prefilled once, its full KV blocks are mapped
+read-only into every member's block table (refcounted,
+``repro.rollout.prefix_cache``), and the partially-filled tail block is
+device-copied per member (eager copy-on-write) so decode appends never
+alias. Frees and preemption decrement refcounts; ``kv_bytes()`` charges
+shared blocks once. Greedy (and same-occupancy stochastic) decode stays
+bit-for-bit equal to ``group_size`` independent prefills.
+
 Legacy mode: ``batched_prefill=False`` forces single-row prefill groups and
 ``compact_decode=False`` forces full-``max_slots`` decode — together they
 reproduce the seed engine's execution exactly, which the equivalence tests
@@ -64,9 +74,14 @@ from repro.core.types import Trajectory, TrajStatus
 from repro.data.tokenizer import EOS
 from repro.models import model as M
 from repro.rollout.kv_allocator import (
-    BlockAllocator,
+    NULL_BLOCK,
     BlockExhausted,
     blocks_for_tokens,
+)
+from repro.rollout.prefix_cache import (
+    PrefixRegistry,
+    RefcountedBlockAllocator,
+    shareable_run,
 )
 from repro.rollout.runners import (
     DecodeRunner,
@@ -99,6 +114,7 @@ class RolloutInstance:
         kv_block_size: int = 16,
         kv_pool_blocks: Optional[int] = None,
         admission_headroom_tokens: int = 16,
+        share_prefix: bool = True,
     ):
         self.inst_id = inst_id
         self.cfg = cfg
@@ -129,7 +145,10 @@ class RolloutInstance:
             if (cfg.family == "vlm" and frontend_fn is not None)
             else 0
         )
-        self.allocator: Optional[BlockAllocator] = None
+        # prefix sharing needs the paged pool and a plain token frontend
+        # (frontend embeddings would have to be proven identical per row)
+        self.share_prefix = bool(share_prefix and paged and frontend_fn is None)
+        self.allocator: Optional[RefcountedBlockAllocator] = None
         if paged:
             bs = kv_block_size
             blocks_per_seq = blocks_for_tokens(max_len, bs)
@@ -142,7 +161,9 @@ class RolloutInstance:
             # at least one max-length trajectory must always fit, so block
             # exhaustion can only strike when there is a victim to preempt
             n_blocks = max(n_blocks, blocks_per_seq)
-            self.allocator = BlockAllocator(n_blocks + 1, bs)  # +1 null
+            # refcounted allocator: identical to the plain pool without
+            # sharing, and the substrate for group-admission prefix reuse
+            self.allocator = RefcountedBlockAllocator(n_blocks + 1, bs)
             self.cache = M.init_paged_cache(
                 cfg, max_slots, max_len, n_blocks + 1, bs
             )
@@ -162,11 +183,19 @@ class RolloutInstance:
         self._slot_pos: List[int] = [0] * max_slots
         self._slot_seq: List[int] = [0] * max_slots
         self._admit_seq = 0
+        # shared-prefix registry (shared with SimBackend): prefix id ->
+        # member traj ids still holding the shared full prompt blocks +
+        # their token capacity. Exported in snapshots so the coordinator's
+        # discard releases shared bytes once per group, and consulted by
+        # single admissions to fork a still-resident sibling prefix.
+        self._prefix = PrefixRegistry()
         # telemetry
         self.decode_steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.preemptions = 0
+        self.shared_prefix_hits = 0       # members admitted off a shared prompt
+        self.prefill_tokens_saved = 0     # prompt tokens not re-prefilled
 
         self.prefill_runner = PrefillRunner(
             cfg,
@@ -233,11 +262,16 @@ class RolloutInstance:
         self._admit()
 
     def _release_slot(self, slot: int) -> Trajectory:
-        """Vacate ``slot`` and release its KV (blocks or byte counter)."""
+        """Vacate ``slot`` and release its KV (blocks or byte counter).
+
+        Under paging the free *decrements refcounts*: blocks shared with
+        surviving group members stay allocated until the last member
+        releases them."""
         t = self.slots[slot]
         self.slots[slot] = None
         if self.paged:
             self.allocator.free(t.traj_id)
+            self._prefix.drop(t.traj_id)
         else:
             self._kv_bytes = max(
                 0.0, self._kv_bytes - self.k5 * self._slot_len(t)
@@ -299,6 +333,73 @@ class RolloutInstance:
             )
         return self.k5 * tokens
 
+    def _share_run(self) -> int:
+        """Shareable same-group run length at the waiting-queue head (the
+        scan itself is shared with SimBackend; prompts at the engine-level
+        overflow cap finish immediately instead)."""
+        if not self.share_prefix:
+            return 1
+        return shareable_run(self.waiting, self.max_len - 1)
+
+    def _admit_group(
+        self,
+        g: int,
+        free: List[int],
+        jobs: List["PrefillJob"],
+        trajs: List[Trajectory],
+        planned_bytes: float,
+    ) -> Optional[float]:
+        """Try to admit the first ``g`` waiting trajectories (one group,
+        one prompt) as a shared-prefix unit. Shrinks ``g`` until budget and
+        pool fit; returns updated ``planned_bytes``, or ``None`` when even
+        the shrunken unit cannot admit (caller falls back to the single
+        path, whose FIFO break semantics then apply)."""
+        bs = self.kv_block_size
+        prompt = self.waiting[0].prompt
+        cache_len = len(prompt)
+        n_full, tail = divmod(cache_len, bs)
+        pad_tokens = min(cache_len + self.admission_headroom_tokens,
+                         self.max_len)
+        member_excl = blocks_for_tokens(pad_tokens, bs) - n_full
+        while g >= 2:
+            charge = self.k5 * bs * (n_full + g * member_excl)
+            need_now = n_full + (g if tail else 0)
+            if (
+                planned_bytes + charge <= self.kv_budget
+                and need_now <= self.allocator.n_free
+            ):
+                break
+            g -= 1
+        if g < 2:
+            return None
+        members = [self.waiting.pop(0) for _ in range(g)]
+        slots = [free.pop(0) for _ in range(g)]
+        keys = []
+        for _ in members:  # per-member key split, seed admission order
+            self._key, sub = jax.random.split(self._key)
+            keys.append(sub)
+        ids = [m.traj_id for m in members]
+        shared, tails = self.allocator.alloc_group(ids, cache_len)
+        planned_bytes += self.k5 * bs * (len(shared) + len(tails))
+        if shared:
+            self._prefix.register(
+                members[0].group_id, ids, len(shared) * bs, prompt
+            )
+        jobs.append(PrefillJob(
+            slot=slots[0],
+            tokens=list(prompt),
+            key=keys[0],
+            blocks=shared + tails[:1],
+            extra_slots=slots[1:],
+            extra_keys=keys[1:],
+            tail_src=tails[0] if tails else None,
+            tail_dsts=tails[1:],
+        ))
+        trajs.extend(members)
+        self.shared_prefix_hits += g - 1
+        self.prefill_tokens_saved += (g - 1) * cache_len
+        return planned_bytes
+
     def _admit(self) -> None:
         """Admit waiting trajectories into free slots within the KV budget —
         all eligible admissions run as ONE batched prefill per length bucket.
@@ -312,23 +413,59 @@ class RolloutInstance:
         did. Under paging the charge is the trajectory's *actual block
         allocation*, and admission additionally requires the pool to hold
         enough free blocks for the (re-)prefill.
+
+        Prefix sharing: a contiguous run of same-group, same-prompt,
+        nothing-generated members at the queue head admits as one unit —
+        one prompt prefill, full blocks shared (refcounted), private tail
+        copies — charging the shared blocks once.
         """
         free = [i for i, t in enumerate(self.slots) if t is None]
         jobs: List[PrefillJob] = []
         trajs: List[Trajectory] = []
         planned_bytes = self.kv_bytes()
         while self.waiting and free:
+            run = min(self._share_run(), len(free))
+            if run >= 2:
+                planned = self._admit_group(
+                    run, free, jobs, trajs, planned_bytes
+                )
+                if planned is not None:
+                    planned_bytes = planned
+                    continue
             nxt = self.waiting[0]
-            if planned_bytes + self._admission_charge(
-                self._slot_len(nxt)
-            ) > self.kv_budget:
-                break
             tokens = list(nxt.prompt) + list(nxt.response)
             cache_len = len(tokens) + self._pos_offset
+            # cross-wave prefix join: a straggler group member admitted
+            # after its siblings forks their still-resident prefix blocks
+            # instead of duplicating them (the prompt forward still runs —
+            # its first-token logits are needed — but the full-block KV it
+            # produces is discarded into the null sink)
+            fork_pk = None
+            shared_blocks = 0
+            if (
+                self.paged
+                and self.share_prefix
+                and len(tokens) < self.max_len - 1
+                and nxt.group_id >= 0
+                and not nxt.response
+                and not nxt.sim_generated
+            ):
+                fork_pk = self._prefix.find(nxt.group_id, nxt.prompt)
+                if fork_pk is not None:
+                    shared_blocks = (
+                        self._prefix.tokens(fork_pk) // self.kv_block_size
+                    )
+            charge = self._admission_charge(self._slot_len(nxt))
+            charge -= self.k5 * self.kv_block_size * shared_blocks
+            if planned_bytes + max(charge, 0.0) > self.kv_budget:
+                break
             if self.paged:
                 # ``alloc`` below draws down ``n_free`` as this pass admits,
                 # so the availability check is against the live free count
-                need_blocks = blocks_for_tokens(cache_len, self.kv_block_size)
+                need_blocks = (
+                    blocks_for_tokens(cache_len, self.kv_block_size)
+                    - shared_blocks
+                )
                 if (
                     len(tokens) < self.max_len - 1
                     and need_blocks > self.allocator.n_free
@@ -346,8 +483,23 @@ class RolloutInstance:
             self._key, sub = jax.random.split(self._key)
             blocks = None
             if self.paged:
-                blocks = self.allocator.alloc(nxt.traj_id, cache_len)
-                planned_bytes += self.k5 * self.kv_block_size * len(blocks)
+                if fork_pk is not None:
+                    shared = self.allocator.table(
+                        self._prefix.member_of(fork_pk)
+                    )[:shared_blocks]
+                    own = self.allocator.fork(nxt.traj_id, shared, cache_len)
+                    self._prefix.join(fork_pk, nxt.traj_id)
+                    # scatter target: the shared blocks are already written
+                    # (identical prompt KV) — aim those rows at the null
+                    # garbage block and keep only the tail/own writes
+                    blocks = [NULL_BLOCK] * shared_blocks + own
+                    planned_bytes += self.k5 * self.kv_block_size * len(own)
+                    self.shared_prefix_hits += 1
+                else:
+                    blocks = self.allocator.alloc(nxt.traj_id, cache_len)
+                    planned_bytes += (
+                        self.k5 * self.kv_block_size * len(blocks)
+                    )
             else:
                 planned_bytes += self.k5 * (self._slot_len(nxt) + 1)
             jobs.append(
@@ -365,16 +517,22 @@ class RolloutInstance:
             self.params, self.cache, jobs
         )
         self.prefill_tokens += result.prefill_tokens
+        member_slots: List[int] = []
+        member_lens: List[int] = []
+        for job in jobs:
+            member_slots.append(job.slot)
+            member_slots.extend(job.extra_slots)
+            member_lens.extend([len(job.tokens)] * job.n_members)
         last = self._last_tokens
-        for job, traj, tok, blp in zip(
-            jobs, trajs, result.tokens, result.logprobs
+        for slot, n_tok, traj, tok, blp in zip(
+            member_slots, member_lens, trajs, result.tokens, result.logprobs
         ):
             self._record_token(traj, tok, blp)
-            last = last.at[job.slot].set(tok)
+            last = last.at[slot].set(tok)
             traj.status = TrajStatus.RUNNING
-            self.slots[job.slot] = traj
-            self._slot_pos[job.slot] = len(job.tokens) + self._pos_offset
-            self._slot_seq[job.slot] = self._admit_seq
+            self.slots[slot] = traj
+            self._slot_pos[slot] = n_tok + self._pos_offset
+            self._slot_seq[slot] = self._admit_seq
             self._admit_seq += 1
             if not self.paged:
                 self._kv_bytes += self.k5 * self._slot_len(traj)
@@ -420,8 +578,14 @@ class RolloutInstance:
                         if v is not None and i != slot
                     ]
                     if not victims:
-                        # unreachable by construction: the pool always holds
-                        # >= one full-length trajectory's worth of blocks
+                        # unreachable by construction: the pool holds >= one
+                        # full-length trajectory's worth of blocks, and with
+                        # every victim preempted this owner is the sole
+                        # surviving table (shared refcounts drop to 1 with
+                        # it), so free >= blocks_per_seq - len(table) >=
+                        # the <= 1 block the extension needs. A preempted
+                        # sharer may free 0 blocks, but the loop then moves
+                        # to the next victim rather than re-preempting it.
                         raise
                     self._preempt(max(victims, key=lambda i: self._slot_seq[i]))
 
@@ -486,6 +650,10 @@ class RolloutInstance:
             for t in list(self.slots) + list(self.waiting)
             if t is not None
         }
+        # cumulative preemption count — snapshot() stays a pure read; the
+        # coordinator differences consecutive snapshots into the per-cycle
+        # rate the routing penalty wants
+        prefix_groups, prefix_tokens = self._prefix.export()
         return InstanceSnapshot(
             inst_id=self.inst_id,
             kv_cache=self.kv_bytes(),
@@ -494,4 +662,7 @@ class RolloutInstance:
             complete_trajs=set(self.complete_since_sync),
             inst_version=self.inst_version,
             traj_lengths=lengths,
+            preemptions=self.preemptions,
+            prefix_groups=prefix_groups,
+            prefix_tokens=prefix_tokens,
         )

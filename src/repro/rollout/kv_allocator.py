@@ -84,6 +84,18 @@ class BlockAllocator:
         return len(self._tables[owner]) * self.block_size
 
     # ----------------------------------------------------------- allocation
+    def _take(self, n: int) -> List[int]:
+        """Pop ``n`` fresh blocks off the free list (ownership hook — the
+        refcounted subclass also stamps refcounts here)."""
+        return [self._free.pop() for _ in range(n)]
+
+    def _release_table(self, table: List[int]) -> int:
+        """Return a table's blocks to the free list; returns the number
+        physically freed (the refcounted subclass frees only last-owner
+        blocks)."""
+        self._free.extend(table)
+        return len(table)
+
     def alloc(self, owner: int, n_tokens: int) -> List[int]:
         """Allocate a fresh table covering ``n_tokens`` positions.
 
@@ -97,7 +109,7 @@ class BlockAllocator:
             raise BlockExhausted(
                 f"need {need} blocks, {len(self._free)} free"
             )
-        self._tables[owner] = [self._free.pop() for _ in range(need)]
+        self._tables[owner] = self._take(need)
         return list(self._tables[owner])
 
     def extend_to(self, owner: int, n_tokens: int) -> List[int]:
@@ -114,19 +126,19 @@ class BlockAllocator:
             raise BlockExhausted(
                 f"need {need} more blocks, {len(self._free)} free"
             )
-        new = [self._free.pop() for _ in range(need)]
+        new = self._take(need)
         table.extend(new)
         return new
 
     def free(self, owner: int) -> int:
-        """Release every block owned by ``owner``. Returns the count.
+        """Release every block owned by ``owner``. Returns the number of
+        blocks physically freed (equal to the table length here; smaller
+        under sharing, where co-owned blocks persist).
 
         Double-free (an unknown owner) raises ``KeyError`` — leaks and
         double-frees must fail loudly, not corrupt the pool.
         """
-        table = self._tables.pop(owner)
-        self._free.extend(table)
-        return len(table)
+        return self._release_table(self._tables.pop(owner))
 
     # ------------------------------------------------------------ invariants
     def check(self) -> None:

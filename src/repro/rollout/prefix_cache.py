@@ -1,0 +1,305 @@
+"""Copy-on-write prefix sharing over the paged KV block pool.
+
+The paper's workload is group sampling (GRPO/DAPO, §2.1): every dataset
+prompt expands into ``group_size`` member trajectories that differ only in
+their responses. The plain ``BlockAllocator`` stores each member's identical
+prompt KV independently, multiplying prefill FLOPs and pool pressure by the
+group size. This module adds the sharing layer:
+
+* ``RefcountedBlockAllocator`` — the same free-list pool, but a block may
+  now appear in *several* owners' tables. A per-block refcount tracks the
+  co-owners; ``free`` decrements and returns a block to the free list only
+  when its last owner releases it.
+* ``alloc_group(owners, n_tokens)`` — the group-admission primitive: the
+  prompt's **full** blocks are allocated once and mapped read-only into
+  every member's table, while the partially-filled tail block (if the
+  prompt does not end on a block boundary) gets one private copy per
+  member. The tail is the only prompt block decode will ever write into
+  (the next token's cache position lands inside it), so copying it eagerly
+  at admission is exactly copy-on-write with the write time known upfront:
+  members never alias a writable block.
+* ``fork(owner, shared, n_tokens)`` — join an existing shared prefix:
+  refcounts on ``shared`` are bumped and fresh exclusive blocks cover the
+  remainder. Used when members admit against a still-resident prefix.
+
+Safety argument for the read-only full blocks: block ``i`` of a table backs
+cache positions ``[i*bs, (i+1)*bs)`` and decode only ever writes position
+``pos`` (monotonically increasing, ``pos >= prompt_len``). A *full* prompt
+block ends at ``prompt_len - tail <= prompt_len``, so no decode write can
+land in it — sharing is sound without write tracking. The tail block spans
+``prompt_len`` itself, hence the per-member copy.
+
+Accounting: ``used_blocks``/``used_tokens`` count **distinct** allocated
+blocks, so shared prefix blocks are charged once per group — the property
+the engine's ``kv_bytes()``, the cost model, and the snapshots all rely on.
+
+Invariants (``check()``, property-tested in ``tests/test_kv_allocator.py``):
+
+* a block's refcount equals the number of tables that contain it;
+* a block appears at most once within any single table;
+* refcounted and free blocks partition the pool (minus the null block);
+* ``n_free + distinct owned + 1 == n_blocks`` — no leaks, no double frees.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.rollout.kv_allocator import (
+    NULL_BLOCK,
+    BlockAllocator,
+    BlockExhausted,
+    blocks_for_tokens,
+)
+
+__all__ = [
+    "NULL_BLOCK",
+    "BlockExhausted",
+    "PrefixRegistry",
+    "RefcountedBlockAllocator",
+    "blocks_for_tokens",
+    "shareable_run",
+]
+
+
+def shareable_run(waiting: Sequence, max_prompt_len: Optional[int] = None) -> int:
+    """Length of the contiguous run of group members at the head of a
+    waiting queue that can admit off one shared prompt prefill: same
+    group, identical prompt, nothing generated yet (a partial response
+    makes a member's KV diverge — it re-prefills exclusively).
+
+    Shared by the real engine and the sim backend so their admission
+    pictures cannot drift. ``max_prompt_len`` excludes prompts that the
+    caller's overflow path finishes immediately.
+    """
+    head = waiting[0]
+    if head.group_id < 0 or head.response or head.sim_generated:
+        return 1
+    if max_prompt_len is not None and len(head.prompt) >= max_prompt_len:
+        return 1
+    n = 1
+    for t in waiting[1:]:
+        if (
+            t.group_id == head.group_id
+            and not t.response
+            and not t.sim_generated
+            and t.prompt == head.prompt
+        ):
+            n += 1
+        else:
+            break
+    return n
+
+
+class PrefixRegistry:
+    """Live shared prefixes on one instance: an opaque prefix id maps to
+    the member trajectory ids still holding the shared full prompt blocks
+    and those blocks' token capacity.
+
+    Both ``RolloutInstance`` and ``SimBackend`` maintain one and export it
+    verbatim in snapshots (``prefix_groups`` / ``prefix_tokens``), which
+    is what lets the coordinator's ``discard`` release shared bytes once
+    per group. ``find`` supports cross-wave joining: a straggler member
+    admitted after its siblings can locate their still-resident prefix
+    and fork it instead of duplicating the blocks.
+    """
+
+    def __init__(self):
+        self._members: Dict[int, Set[int]] = {}
+        self._tokens: Dict[int, int] = {}
+        self._by_member: Dict[int, int] = {}
+        self._by_group: Dict[int, int] = {}   # group_id -> latest live pk
+        self._prompt: Dict[int, tuple] = {}
+        self._seq = 0
+
+    def register(
+        self, group_id: int, member_ids: Sequence[int],
+        shared_tokens: int, prompt: Sequence[int],
+    ) -> int:
+        """Record a freshly admitted shared prefix. Returns its id."""
+        pk = self._seq
+        self._seq += 1
+        self._members[pk] = set(member_ids)
+        self._tokens[pk] = shared_tokens
+        self._by_group[group_id] = pk
+        self._prompt[pk] = tuple(prompt)
+        for tid in member_ids:
+            self._by_member[tid] = pk
+        return pk
+
+    def join(self, pk: int, tid: int) -> None:
+        """A straggler member forked the prefix and co-owns it now."""
+        self._members[pk].add(tid)
+        self._by_member[tid] = pk
+
+    def drop(self, tid: int) -> None:
+        """A member released its blocks; forget the prefix with the last."""
+        pk = self._by_member.pop(tid, None)
+        if pk is None:
+            return
+        members = self._members[pk]
+        members.discard(tid)
+        if not members:
+            del self._members[pk]
+            del self._tokens[pk]
+            del self._prompt[pk]
+            for gid, live in list(self._by_group.items()):
+                if live == pk:
+                    del self._by_group[gid]
+
+    def find(self, group_id: int, prompt: Sequence[int]) -> Optional[int]:
+        """The live prefix id for ``group_id`` if its prompt matches."""
+        pk = self._by_group.get(group_id)
+        if pk is not None and self._prompt[pk] == tuple(prompt):
+            return pk
+        return None
+
+    def lookup(self, tid: int) -> Optional[int]:
+        """The prefix id a member co-owns, if any."""
+        return self._by_member.get(tid)
+
+    def member_of(self, pk: int) -> int:
+        """Any member currently co-owning ``pk`` (its table holds the
+        shared blocks as its leading entries)."""
+        return next(iter(self._members[pk]))
+
+    def tokens(self, pk: int) -> int:
+        return self._tokens[pk]
+
+    def shared_token_total(self) -> int:
+        """Sum of all live prefixes' shared token capacity — the bytes-
+        accounting hot path (no copies, unlike ``export``)."""
+        return sum(self._tokens.values())
+
+    def export(self) -> Tuple[Dict[int, Set[int]], Dict[int, int]]:
+        """Snapshot-ready copies of (prefix_groups, prefix_tokens)."""
+        return (
+            {pk: set(m) for pk, m in self._members.items()},
+            dict(self._tokens),
+        )
+
+
+class RefcountedBlockAllocator(BlockAllocator):
+    """Block pool with shared (refcounted) blocks for prefix reuse.
+
+    With only ``alloc``/``extend_to``/``free`` (no sharing), behavior is
+    identical to ``BlockAllocator`` — every refcount is 1 — so the paged
+    engine uses this allocator unconditionally.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        super().__init__(n_blocks, block_size)
+        self._ref: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- geometry
+    def refcount(self, block: int) -> int:
+        """Co-owners of ``block`` (0 = free or null)."""
+        return self._ref.get(block, 0)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Distinct blocks currently owned by more than one table."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    def shared_tokens(self) -> int:
+        """Token capacity whose physical blocks are deduplicated away —
+        what dense per-member storage would cost *extra*."""
+        return sum(r - 1 for r in self._ref.values() if r > 1) * self.block_size
+
+    # ----------------------------------------------------------- allocation
+    # ``alloc`` / ``extend_to`` / ``free`` are inherited unchanged: the
+    # base allocator routes block ownership through these two hooks, and
+    # refcounting lives entirely in them. ``free`` therefore decrements:
+    # only last-owner blocks return to the free list.
+    def _take(self, n: int) -> List[int]:
+        blocks = super()._take(n)
+        for b in blocks:
+            self._ref[b] = 1
+        return blocks
+
+    def _release_table(self, table: List[int]) -> int:
+        released = 0
+        for b in table:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+                released += 1
+        return released
+
+    # -------------------------------------------------------------- sharing
+    def fork(
+        self, owner: int, shared: Sequence[int], n_tokens: int
+    ) -> List[int]:
+        """Create ``owner``'s table as ``shared`` (refcounts bumped) plus
+        fresh exclusive blocks covering ``n_tokens`` total positions.
+        Returns the exclusive blocks. Atomic: raises ``BlockExhausted``
+        without side effects on shortfall."""
+        if owner in self._tables:
+            raise ValueError(f"owner {owner} already has a block table")
+        for b in shared:
+            if self._ref.get(b, 0) < 1:
+                raise ValueError(f"cannot share unowned block {b}")
+        need = blocks_for_tokens(n_tokens, self.block_size) - len(shared)
+        if need < 0:
+            raise ValueError("shared prefix longer than the forked table")
+        if need > len(self._free):
+            raise BlockExhausted(f"need {need} blocks, {len(self._free)} free")
+        for b in shared:
+            self._ref[b] += 1
+        own = self._take(need)
+        self._tables[owner] = list(shared) + own
+        return own
+
+    def alloc_group(
+        self, owners: Sequence[int], n_tokens: int
+    ) -> Tuple[List[int], List[int]]:
+        """Allocate tables for a group of owners sharing one ``n_tokens``
+        prompt. Full blocks are allocated once and mapped into every table;
+        a partial tail gets one private block per owner (the caller copies
+        the prefilled tail KV into them — eager CoW).
+
+        Returns ``(shared_full_blocks, tail_blocks)`` with ``tail_blocks``
+        aligned with ``owners`` (empty when the prompt is block-aligned).
+        Atomic: raises ``BlockExhausted`` allocating nothing on shortfall.
+        """
+        owners = list(owners)
+        if len(set(owners)) != len(owners):
+            raise ValueError("duplicate owners in group")
+        for o in owners:
+            if o in self._tables:
+                raise ValueError(f"owner {o} already has a block table")
+        n_full, tail = divmod(n_tokens, self.block_size)
+        need = n_full + (len(owners) if tail else 0)
+        if need > len(self._free):
+            raise BlockExhausted(f"need {need} blocks, {len(self._free)} free")
+        shared = [self._free.pop() for _ in range(n_full)]
+        for b in shared:
+            self._ref[b] = len(owners)
+        tails: List[int] = []
+        if tail:
+            tails = [self._free.pop() for _ in range(len(owners))]
+            for b in tails:
+                self._ref[b] = 1
+        for i, o in enumerate(owners):
+            self._tables[o] = list(shared) + ([tails[i]] if tail else [])
+        return shared, tails
+
+    # ------------------------------------------------------------ invariants
+    def check(self) -> None:
+        counts: Counter = Counter()
+        for owner, table in self._tables.items():
+            assert len(table) == len(set(table)), (
+                f"block repeated within owner {owner}'s table"
+            )
+            counts.update(table)
+        assert dict(counts) == self._ref, "refcounts out of sync with tables"
+        owned_set = set(counts)
+        free_set = set(self._free)
+        assert len(self._free) == len(free_set), "block freed twice"
+        assert not (owned_set & free_set), "block both owned and free"
+        assert NULL_BLOCK not in owned_set, "null block allocated"
+        assert NULL_BLOCK not in free_set, "null block on the free list"
+        universe = owned_set | free_set | {NULL_BLOCK}
+        assert universe == set(range(self.n_blocks)), "blocks leaked"
+        assert all(r >= 1 for r in self._ref.values())

@@ -92,21 +92,46 @@ def scatter_rows(cache: Cache, row_cache: Cache, rows: jax.Array) -> Cache:
 
 @dataclass
 class PrefillJob:
-    """One planned admission: trajectory tokens destined for a cache slot."""
+    """One planned admission: trajectory tokens destined for a cache slot.
+
+    Group admission (prefix sharing, paged mode only): ``extra_slots`` /
+    ``extra_keys`` name additional group members that decode off this job's
+    prompt. The prompt is prefilled **once**; its full blocks (already
+    mapped into every member's table by the allocator) are written once via
+    ``blocks``, the per-slot small state is scattered to every member slot,
+    and the partially-filled tail block — the only prompt block decode will
+    ever write — is device-copied from ``tail_src`` into each member's
+    private ``tail_dsts`` block (eager copy-on-write). Each member samples
+    its own first token from the shared last-position logits with its own
+    key, in admission order.
+    """
 
     slot: int
     tokens: List[int]          # prompt + partial response (re-prefill)
     key: jax.Array             # per-trajectory sampling key (seed split order)
     blocks: Optional[List[int]] = None  # paged mode: the slot's block table
+    # --- group admission (prefix sharing) ---
+    extra_slots: List[int] = field(default_factory=list)
+    extra_keys: List[jax.Array] = field(default_factory=list)
+    tail_src: Optional[int] = None       # prefill-written partial tail block
+    tail_dsts: List[int] = field(default_factory=list)  # one per extra member
 
     @property
     def bucket_len(self) -> int:
         return len(self.tokens)
 
+    @property
+    def n_members(self) -> int:
+        return 1 + len(self.extra_slots)
+
 
 @dataclass
 class PrefillResult:
-    """Per-job sampled continuations, aligned with the submitted job list."""
+    """Per-member sampled continuations, aligned with the submitted jobs
+    flattened member-wise (a job's primary member first, then its
+    ``extra_slots`` in order; plain jobs contribute one entry).
+    ``prefill_tokens`` counts tokens actually run through the model — a
+    shared group prompt counts once, which is the saving."""
 
     tokens: List[int] = field(default_factory=list)
     logprobs: List[float] = field(default_factory=list)
@@ -144,6 +169,12 @@ class PrefillRunner:
         self._jit_prefill = jax.jit(partial(M.prefill, cfg))
         self._jit_scatter = jax.jit(scatter_rows)
         self._jit_paged_scatter = jax.jit(self._paged_scatter)
+        # donate the cache: the copy is always fed a fresh intermediate (a
+        # scatter output) and donating lets the inner Pallas aliasing move
+        # only the touched blocks instead of round-tripping the whole pool
+        self._jit_block_copy = jax.jit(
+            M.copy_kv_blocks, static_argnames=("impl",), donate_argnums=(0,)
+        )
         # per-row sampling with per-trajectory keys, vmapped: bitwise equal
         # to the seed's one-row sample() loop, but a single dispatch
         self._jit_sample = jax.jit(
@@ -157,13 +188,21 @@ class PrefillRunner:
     def bucket_of(self, n_tokens: int) -> int:
         return min(round_up(max(n_tokens, 1), self.prefill_bucket), self.max_len)
 
-    def _paged_scatter(self, cache, row_cache, slots, flat_blocks):
+    def _paged_scatter(self, cache, row_cache, slots, row_ids, flat_blocks):
         """Scatter a contiguous prefill row cache into the paged layout:
         per-slot entries land at their slot rows, K/V rows are re-blocked
         and written to the pool at the jobs' block tables (padding entries
-        target the null block — a masked garbage sink)."""
+        target the null block — a masked garbage sink).
+
+        ``slots``/``row_ids`` are member-expanded: group admission writes
+        one prefill row's small state (``pos``, hybrid/audio slot caches)
+        to *every* member slot (``row_ids`` names each member's source
+        row); plain waves pass the identity mapping."""
         small = {n: v for n, v in cache.items() if n not in ("k", "v")}
-        rows = {n: v for n, v in row_cache.items() if n not in ("k", "v")}
+        rows = gather_rows(
+            {n: v for n, v in row_cache.items() if n not in ("k", "v")},
+            row_ids,
+        )
         out = scatter_rows(small, rows, slots)
         l, r, s, hkv, hd = row_cache["k"].shape
         bs = cache["k"].shape[2]
@@ -194,15 +233,20 @@ class PrefillRunner:
     def run(
         self, params: Any, cache: Cache, jobs: Sequence[PrefillJob]
     ) -> Tuple[Cache, PrefillResult]:
-        """Prefill every job into its slot. Returns (cache, sampled tokens).
+        """Prefill every job into its slot(s). Returns (cache, samples).
 
-        The result lists are aligned with ``jobs`` (not with the internal
-        bucket grouping).
+        The result lists are aligned with ``jobs`` flattened member-wise
+        (not with the internal bucket grouping). Group jobs run their
+        prompt through the model once; every member then samples its own
+        first token from the shared logits row with its own key.
         """
-        result = PrefillResult(
-            tokens=[0] * len(jobs), logprobs=[0.0] * len(jobs)
-        )
-        index = {id(job): i for i, job in enumerate(jobs)}
+        offsets: Dict[int, int] = {}
+        total = 0
+        for job in jobs:
+            offsets[id(job)] = total
+            total += job.n_members
+        result = PrefillResult(tokens=[0] * total, logprobs=[0.0] * total)
+        copies: List[Tuple[int, int]] = []
         for group in self._groups(jobs):
             bucket = self.bucket_of(max(len(j.tokens) for j in group))
             rows = np.zeros((len(group), bucket), np.int32)
@@ -223,7 +267,23 @@ class PrefillRunner:
                 row_cache,
                 frontend_embeds=fe,
             )
-            slots = jnp.asarray([j.slot for j in group], jnp.int32)
+            # member expansion: group jobs scatter one row's small state to
+            # every member slot and sample per member off the shared row
+            member_rows: List[int] = []
+            member_slots: List[int] = []
+            member_keys: List[jax.Array] = []
+            for r, job in enumerate(group):
+                if job.extra_slots and not self.paged_block_size:
+                    raise ValueError("group prefill requires the paged cache")
+                member_rows.extend([r] * job.n_members)
+                member_slots.append(job.slot)
+                member_slots.extend(job.extra_slots)
+                member_keys.append(job.key)
+                member_keys.extend(job.extra_keys)
+                if job.tail_src is not None:
+                    copies.extend((job.tail_src, d) for d in job.tail_dsts)
+            expanded = len(member_rows) != len(group)
+            slots = jnp.asarray(member_slots, jnp.int32)
             if self.paged_block_size:
                 nb = self.max_len // self.paged_block_size
                 flat = np.full((len(group) * nb,), self.paged_null_block,
@@ -231,19 +291,35 @@ class PrefillRunner:
                 for r, job in enumerate(group):
                     flat[r * nb : r * nb + len(job.blocks)] = job.blocks
                 cache = self._jit_paged_scatter(
-                    cache, row_cache, slots, jnp.asarray(flat)
+                    cache, row_cache, slots,
+                    jnp.asarray(member_rows, jnp.int32), jnp.asarray(flat),
                 )
             else:
                 cache = self._jit_scatter(cache, row_cache, slots)
-            keys = jnp.stack([j.key for j in group])
+            if expanded:
+                logits = logits[jnp.asarray(member_rows, jnp.int32)]
+            keys = jnp.stack(member_keys)
             toks, blps = self._jit_sample(logits, keys)
             toks_np = np.asarray(toks)[:, 0]
             blps_np = np.asarray(blps)[:, 0]
-            for r, job in enumerate(group):
-                i = index[id(job)]
-                result.tokens[i] = int(toks_np[r])
-                result.logprobs[i] = float(blps_np[r])
+            m = 0
+            for job in group:
+                base = offsets[id(job)]
+                for i in range(job.n_members):
+                    result.tokens[base + i] = int(toks_np[m])
+                    result.logprobs[base + i] = float(blps_np[m])
+                    m += 1
                 result.prefill_tokens += len(job.tokens)
+        if copies:
+            # eager CoW: duplicate prefilled tail blocks into each member's
+            # private block, padded to a power-of-two copy count aimed at
+            # the null garbage block to bound compiled shapes
+            pad = next_pow2(len(copies)) - len(copies)
+            src = [s for s, _ in copies] + [self.paged_null_block] * pad
+            dst = [d for _, d in copies] + [self.paged_null_block] * pad
+            cache = self._jit_block_copy(
+                cache, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+            )
         return cache, result
 
 

@@ -43,6 +43,8 @@ from repro.core import (
     StrategyConfig,
     StrategySuite,
     TrajectoryServer,
+    prefix_routing_strategy,
+    routing_strategy,
 )
 from repro.core.types import Trajectory, TrajStatus
 from repro.data.tasks import ArithmeticDataset
@@ -78,6 +80,11 @@ class RuntimeConfig:
     reward_fn: Optional[Callable] = None  # (prompt_ids, response_ids) -> float
     paged_kv: bool = False             # block-paged KV cache on the engines
     kv_block_size: int = 16            # tokens per KV block when paged
+    # Prefix sharing (paged only): group members prefill their shared
+    # prompt once, full prompt blocks are refcount-shared across member
+    # block tables, and routing turns group-affine so members land where
+    # the prefix lives (StrategySuite.prefix_sharing routing).
+    share_prefix: bool = True
 
 
 @dataclass
@@ -131,12 +138,24 @@ class AsyncRLRuntime:
             def group_filter(members: List[Trajectory]) -> bool:
                 rs = [m.reward for m in members if m.reward is not None]
                 return len(set(rs)) > 1
+        suite = rcfg.suite
+        if (
+            rcfg.share_prefix
+            and rcfg.paged_kv
+            and rcfg.group_size > 1
+            and suite.routing is routing_strategy
+        ):
+            # group-affine routing: members of one sampling group land on a
+            # single instance so its paged engine prefills the prompt once
+            import dataclasses as _dc
+
+            suite = _dc.replace(suite, routing=prefix_routing_strategy)
         self.coordinator = RolloutCoordinator(
             self.manager,
             self.ts,
             cost_model=self.cost_model,
             cfg=rcfg.strategy_cfg,
-            suite=rcfg.suite,
+            suite=suite,
             group_sampling=rcfg.group_size > 1,
             group_filter=group_filter,
         )
@@ -173,6 +192,7 @@ class AsyncRLRuntime:
             seed=self.rcfg.seed,
             paged=self.rcfg.paged_kv,
             kv_block_size=self.rcfg.kv_block_size,
+            share_prefix=self.rcfg.share_prefix,
         )
 
     def _snapshots(self):

@@ -308,6 +308,63 @@ def test_sim_and_paged_engine_kv_accounting_parity():
     assert jaxp.snapshot().kv_cache == 0
 
 
+def test_sim_and_engine_shared_prefix_kv_parity():
+    """A freshly routed group must report identical snapshot kv_cache on a
+    prefix-sharing paged engine and a SimBackend with the same block-sized
+    cost model: shared prompt blocks charged once, exclusive tails per
+    member — one memory picture for the coordinator."""
+    import dataclasses
+
+    reset_traj_ids()
+    bs, plen, g = 16, 37, 3   # 2 full shared blocks + off-boundary tail
+    k5 = 2 * CFG.n_layers * CFG.n_kv_heads * CFG.hd * 4
+    cm = dataclasses.replace(
+        PAPER_H20_QWEN3_30B, k5=float(k5), block_size=bs,
+        kv_budget=float("inf"),
+    )
+    sim = SimBackend(0, cm, share_prefix=True)
+    jaxp = create_backend(
+        "jax", 1, cfg=CFG, params=PARAMS, version=0,
+        max_slots=4, max_len=64, temperature=0.0,
+        paged=True, kv_block_size=bs, share_prefix=True,
+    )
+    prompt = list(np.random.RandomState(7).randint(3, 17, size=plen))
+
+    def group(base):
+        return [
+            Trajectory(traj_id=base + i, prompt=list(prompt), group_id=0,
+                       max_new_tokens=50)
+            for i in range(g)
+        ]
+
+    sim.route_many(group(80), 0.0)
+    jaxp.route_many(group(80), 0.0)
+    n_full = plen // bs
+    expected = k5 * bs * (n_full + g)   # shared once + one tail each
+    assert sim.snapshot().kv_cache == expected
+    assert jaxp.snapshot().kv_cache == expected
+    # the coordinator's routing math prices the same group identically
+    # (each engine member holds prompt + 1 sampled token, same block count)
+    assert cm.group_kv_bytes_for(plen, [plen + 1] * g) == expected
+    assert sim.shared_prefix_hits == g - 1
+    # snapshots agree on the prefix structure the discard math needs
+    ssim, sjax = sim.snapshot(), jaxp.snapshot()
+    assert list(ssim.prefix_tokens.values()) == [n_full * bs]
+    assert list(sjax.prefix_tokens.values()) == [n_full * bs]
+    assert set(map(frozenset, ssim.prefix_groups.values())) == set(
+        map(frozenset, sjax.prefix_groups.values())
+    )
+    # members leave one by one: both release the tail only, then the
+    # shared prefix with the last member
+    sim.interrupt([80], 1.0)
+    jaxp.interrupt([80], 1.0)
+    assert sim.snapshot().kv_cache == jaxp.snapshot().kv_cache
+    sim.interrupt([81, 82], 1.0)
+    jaxp.interrupt([81, 82], 1.0)
+    assert sim.snapshot().kv_cache == 0
+    assert jaxp.snapshot().kv_cache == 0
+
+
 def test_paged_engine_admits_more_than_dense_at_fixed_budget():
     """The acceptance property behind paging: at one fixed KV budget the
     paged engine runs strictly more concurrent trajectories than the dense

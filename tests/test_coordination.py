@@ -24,6 +24,7 @@ from repro.core import (
     TrajectoryServer,
     migration_strategy,
     plan_transfers,
+    prefix_routing_strategy,
     routing_strategy,
     synchronization_strategy,
     vanilla_routing,
@@ -83,6 +84,147 @@ def test_ideal_gain_matches_eq4():
     l = 123
     expect = 1.0 / (CM.k1 * CM.k5 * l + max(CM.k2, CM.k3) + CM.k4)
     assert CM.ideal_gain(l) == pytest.approx(expect)
+
+
+def test_marginal_gain_discounted_by_preemptions():
+    """Preemption-aware routing (ROADMAP): a replica thrashing its pool
+    reports preemptions since the last snapshot, and its marginal gain is
+    discounted so the coordinator stops feeding it."""
+    calm = snap(0, kv=1e6, run={1}, lengths={1: 100})
+    thrash = snap(1, kv=1e6, run={2}, lengths={2: 100})
+    thrash.preemptions = 4
+    g_calm = CM.marginal_gain(calm, 100)
+    g_thrash = CM.marginal_gain(thrash, 100)
+    assert g_calm > 0
+    assert g_thrash == pytest.approx(
+        g_calm / (1.0 + CM.preemption_penalty * 4)
+    )
+    # penalty 0 disables the discount
+    cm0 = CM.scaled(preemption_penalty=0.0)
+    assert cm0.marginal_gain(thrash, 100) == pytest.approx(
+        cm0.marginal_gain(calm, 100)
+    )
+
+
+def test_coordinator_differences_cumulative_preemptions():
+    """Snapshots report cumulative preemption counts (a pure read on the
+    engine); the coordinator rewrites its local clone to the per-cycle
+    delta before the strategies run, so the penalty tracks the live rate
+    and decays once the pool stops churning."""
+    mgr, ts, coord = _mk_coordinator()
+    s = {0: snap(0)}
+    s[0].preemptions = 5
+    coord.spec.resync(s)
+    coord.step(s, ps_version=0)
+    assert coord._preempt_seen[0] == 5
+    # caller's snapshot is untouched (clone-only rewrite)
+    assert s[0].preemptions == 5
+    # a later cycle with the same cumulative count = zero new thrash
+    s2 = {0: snap(0)}
+    s2[0].preemptions = 5
+    coord.spec.resync(s2)
+    coord.step(s2, ps_version=0)
+    assert coord._preempt_seen[0] == 5
+
+
+def test_routing_avoids_thrashing_instance():
+    """Two otherwise-identical replicas: the one that preempted residents
+    last window loses the waterfall."""
+    s = {0: snap(0, kv=1e6, run={1}, lengths={1: 100}),
+         1: snap(1, kv=1e6, run={2}, lengths={2: 100})}
+    s[0].preemptions = 5
+    routed = routing_strategy(s, [traj(10)], CM, _AlwaysYes())
+    assert routed and routed[0][0] == 1
+
+
+# ---------------------------------------------------- shared-prefix groups
+def test_group_kv_bytes_charges_prefix_once():
+    cm = CM.scaled(block_size=16)
+    # P=40 -> 2 full blocks shared; each member len 45 -> 3 blocks total,
+    # 1 exclusive beyond the shared prefix
+    expect = cm.k5 * 16 * (2 + 4 * 1)
+    assert cm.group_kv_bytes_for(40, [45] * 4) == expect
+    # without paging there is no sharing: plain sum
+    assert CM.group_kv_bytes_for(40, [45] * 4) == CM.k5 * 45 * 4
+
+
+def test_prefix_routing_bundles_group_on_one_instance():
+    """Group-affine routing: initial members of one sampling group land on
+    a single instance (where the shared prefix will live), even when count
+    balancing would scatter them."""
+    reset_traj_ids()
+    cm = CM.scaled(block_size=16)
+    s = {0: snap(0), 1: snap(1, kv=1e5, run={99}, lengths={99: 100})}
+    members = [traj(10 + i, length=40, group=7) for i in range(4)]
+    routed = prefix_routing_strategy(s, members, cm, _AlwaysYes())
+    assert len(routed) == 4
+    assert len({inst for inst, _, _ in routed}) == 1
+    # partial (already-versioned) members still route individually
+    partial = traj(50, length=40, v=0, group=8)
+    partial.response = [1] * 4
+    routed2 = prefix_routing_strategy(
+        s, [partial] + members, cm, _AlwaysYes()
+    )
+    assert len(routed2) == 5
+
+
+def test_prefix_routing_splits_unplaceable_group_instead_of_stalling():
+    """A group too big to EVER admit as one unit must not deadlock the
+    waterfall: it splits into singleton units so members trickle in
+    (remaining members then follow the standard Alg. 3 per-trajectory
+    withhold semantics instead of freezing the cycle forever)."""
+    cm = CM.scaled(block_size=16, kv_budget=CM.k5 * 16 * 5)  # 5-block pool
+    s = {0: snap(0)}
+    # 4 members x 37-token prompt: unit needs 2 shared + 4 tails = 6 > 5
+    members = [traj(20 + i, length=37, group=9) for i in range(4)]
+    routed = prefix_routing_strategy(s, members, cm, _AlwaysYes())
+    routed_ids = {t.traj_id for _, t, _ in routed}
+    assert 20 in routed_ids, "unplaceable group stalled the whole waterfall"
+    # and with room for the whole group, nothing splits — all land together
+    cm_big = CM.scaled(block_size=16)
+    routed_all = prefix_routing_strategy(
+        {0: snap(0)}, [traj(40 + i, length=37, group=9) for i in range(4)],
+        cm_big, _AlwaysYes(),
+    )
+    assert len(routed_all) == 4
+    assert len({i for i, _, _ in routed_all}) == 1
+
+
+def test_prefix_routing_matches_plain_for_ungrouped():
+    s = {0: snap(0), 1: snap(1)}
+    ts = [traj(1), traj(2), traj(3)]
+    a = prefix_routing_strategy(s, ts, CM, _AlwaysYes())
+    b = routing_strategy(s, ts, CM, _AlwaysYes())
+    assert [(i, t.traj_id, v) for i, t, v in a] == [
+        (i, t.traj_id, v) for i, t, v in b
+    ]
+
+
+def test_snapshot_discard_releases_shared_prefix_once():
+    """Prefix-aware discard: members release exclusive blocks only; the
+    shared prompt blocks come off kv_cache with the last member."""
+    k5, bs = 1000.0, 16
+    n_full = 2                          # 32 shared prompt tokens
+    # 3 members, each 45 tokens -> 3 blocks, 1 exclusive
+    kv = k5 * bs * (n_full + 3 * 1)
+    s = snap(0, kv=kv, run={1, 2, 3}, lengths={1: 45, 2: 45, 3: 45})
+    s.prefix_groups = {0: {1, 2, 3}}
+    s.prefix_tokens = {0: n_full * bs}
+    s.discard([1], bytes_per_token=k5, block_size=bs)
+    assert s.kv_cache == k5 * bs * (n_full + 2)
+    s.discard([2, 3], bytes_per_token=k5, block_size=bs)
+    assert s.kv_cache == 0.0
+    assert s.prefix_groups == {} and s.prefix_tokens == {}
+
+
+def test_with_routed_group_then_discard_roundtrips():
+    cm = CM.scaled(block_size=16)
+    s = snap(0)
+    s2 = cm.with_routed_group(s, [1, 2, 3], 40, [45, 45, 45])
+    assert s2.run_trajs == {1, 2, 3}
+    assert s2.kv_cache == cm.group_kv_bytes_for(40, [45, 45, 45])
+    s2.discard([1, 2, 3], bytes_per_token=cm.k5, block_size=16)
+    assert s2.kv_cache == 0.0
 
 
 # ------------------------------------------------------------- strategies

@@ -373,6 +373,204 @@ def test_dense_incremental_kv_counter_stays_exact():
     assert inst.kv_bytes() == inst._recompute_kv_bytes()
 
 
+# ==================================================== prefix-shared groups
+# Group sampling (GRPO/DAPO): group members share one prompt. With
+# share_prefix=True the paged engine prefills the prompt ONCE, maps its
+# full blocks read-only into every member's table (refcounted), and
+# CoW-copies the partial tail block per member. Greedy decode must be
+# bit-for-bit equal to group_size independent prefills — including after
+# CoW, preemption, and re-admission.
+
+def mk_group(base, n, prompt_len=21, max_new=10, gid=0, seed=1234):
+    prompt = list(np.random.RandomState(seed).randint(3, 17, size=prompt_len))
+    return [
+        Trajectory(traj_id=base + i, prompt=list(prompt), group_id=gid,
+                   max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def mk_sharing(*, share: bool, slots=4, max_len=64, block_size=16, **kw):
+    return RolloutInstance(
+        0, CFG, PARAMS, 0, max_slots=slots, max_len=max_len,
+        temperature=0.0, seed=0, paged=True, kv_block_size=block_size,
+        share_prefix=share, **kw,
+    )
+
+
+@pytest.mark.parametrize("prompt_len", [21, 32, 7])   # CoW tail / aligned / sub-block
+def test_group_shared_prefix_matches_independent(prompt_len):
+    """group_size=4 off one shared prefix == 4 independent prefills,
+    exactly (tokens + behavior logprobs), while allocating the prompt's
+    full blocks once and prefilling the prompt once."""
+    reset_traj_ids()
+    bs = 16
+    done_s = run_workload(
+        mk_sharing(share=True, block_size=bs),
+        mk_group(1000, 4, prompt_len=prompt_len),
+    )
+    done_i = run_workload(
+        mk_sharing(share=False, block_size=bs),
+        mk_group(1000, 4, prompt_len=prompt_len),
+    )
+    assert len(done_s) == len(done_i) == 4
+    key = lambda t: t.traj_id
+    assert_same_streams(sorted(done_s, key=key), sorted(done_i, key=key))
+
+
+def test_group_admission_allocates_prefix_blocks_once():
+    """Acceptance: a group of G members over a P-token prompt allocates
+    blocks_for(P) blocks for the shared prompt exactly once (full blocks
+    refcounted G ways, the partial tail copied per member) and prefills P
+    tokens once."""
+    reset_traj_ids()
+    bs, P, G = 16, 37, 4                  # 2 full blocks + 5-token tail
+    inst = mk_sharing(share=True, slots=G, block_size=bs)
+    inst.route_many(mk_group(1100, G, prompt_len=P))
+    n_full, tail = divmod(P, bs)
+    assert inst.n_active() == G
+    assert inst.allocator.used_blocks == n_full + G * (1 if tail else 0)
+    assert inst.allocator.shared_blocks == n_full
+    assert inst.prefill_tokens == P       # one pass over the prompt
+    assert inst.shared_prefix_hits == G - 1
+    assert inst.prefill_tokens_saved == (G - 1) * P
+    assert inst.kv_bytes() == inst.k5 * bs * (n_full + G)
+    inst.allocator.check()
+
+
+def test_group_stochastic_decode_diverges_and_matches_independent():
+    """temperature=1: members sample different responses (CoW tails and
+    private response blocks really diverge), and the shared path still
+    matches the independent path bitwise — same slot layout, same key
+    sequence, identical logits rows."""
+    reset_traj_ids()
+
+    def run(share):
+        inst = RolloutInstance(
+            0, CFG, PARAMS, 0, max_slots=4, max_len=64, temperature=1.0,
+            seed=11, paged=True, kv_block_size=16, share_prefix=share,
+        )
+        return run_workload(inst, mk_group(1200, 4, prompt_len=21, max_new=8))
+
+    done_s, done_i = run(True), run(False)
+    key = lambda t: t.traj_id
+    assert_same_streams(sorted(done_s, key=key), sorted(done_i, key=key))
+    # divergence: not every member produced the same response
+    responses = {tuple(t.response) for t in done_s}
+    assert len(responses) > 1, "stochastic members never diverged"
+
+
+def test_group_preemption_and_readmission_matches_unconstrained():
+    """A pool too small for the whole group preempts members mid-decode;
+    preempted members re-admit via exclusive re-prefill. Greedy streams
+    must match a run with an ample pool, and no block may leak."""
+    reset_traj_ids()
+    NO_EOS = -1
+
+    def run(pool_blocks):
+        inst = RolloutInstance(
+            0, CFG, PARAMS, 0, max_slots=3, max_len=64,
+            temperature=0.0, seed=0, eos_id=NO_EOS,
+            paged=True, kv_block_size=8, kv_pool_blocks=pool_blocks,
+            share_prefix=True,
+        )
+        trajs = mk_group(1300, 3, prompt_len=13, max_new=30)
+        inst.route_many(trajs)
+        done = []
+        for _ in range(400):
+            done.extend(inst.step())
+            inst.allocator.check()
+            if len(done) == 3:
+                break
+        return inst, sorted(done, key=lambda t: t.traj_id)
+
+    inst_small, done_small = run(10)   # 80-token pool for ~43*3 tokens
+    inst_big, done_big = run(64)
+    assert inst_small.preemptions > 0, "pool never exhausted"
+    assert inst_big.preemptions == 0
+    assert len(done_small) == len(done_big) == 3
+    for a, b in zip(done_small, done_big):
+        assert a.traj_id == b.traj_id
+        assert a.response == b.response
+    assert inst_small.allocator.used_blocks == 0
+    inst_small.allocator.check()
+
+
+def test_group_interrupt_releases_shared_blocks_once():
+    """Interrupting members one by one frees only their exclusive blocks;
+    the shared prompt blocks return to the pool with the last member."""
+    reset_traj_ids()
+    bs, P, G = 16, 37, 3
+    inst = mk_sharing(share=True, slots=G, block_size=bs)
+    group = mk_group(1400, G, prompt_len=P)
+    inst.route_many(group)
+    n_full = P // bs
+    used = inst.allocator.used_blocks
+    inst.interrupt([group[0].traj_id])
+    assert inst.allocator.used_blocks == used - 1          # its tail only
+    inst.interrupt([group[1].traj_id])
+    assert inst.allocator.used_blocks == used - 2
+    inst.interrupt([group[2].traj_id])
+    assert inst.allocator.used_blocks == 0                 # prefix released
+    assert inst.snapshot().prefix_groups == {}
+    inst.allocator.check()
+
+
+def test_group_straggler_forks_resident_prefix_across_waves():
+    """A member admitted AFTER its siblings (no free slot in their wave)
+    forks the still-resident prefix: no duplicate prompt blocks, and the
+    token stream still matches the all-independent path bit-for-bit."""
+    reset_traj_ids()
+    bs, P = 16, 37                       # 2 full shared blocks + tail
+    NO_EOS = -1
+
+    def run(share):
+        inst = RolloutInstance(
+            0, CFG, PARAMS, 0, max_slots=2, max_len=64,
+            temperature=0.0, seed=0, eos_id=NO_EOS,
+            paged=True, kv_block_size=bs, share_prefix=share,
+        )
+        group = mk_group(1600, 3, prompt_len=P, max_new=6)
+        # stagger budgets: member 0 finishes first, freeing a slot while
+        # member 1 still holds the shared prefix for the straggler to fork
+        group[0].max_new_tokens = 3
+        inst.route_many(group)           # only 2 slots: member 3 waits
+        assert inst.n_active() == 2
+        if share:
+            # two members share; the third joins when a slot frees
+            assert inst.allocator.used_blocks == 2 + 2
+        done = []
+        for _ in range(100):
+            done.extend(inst.step())
+            inst.allocator.check()
+            if len(done) == 3:
+                break
+        return inst, sorted(done, key=lambda t: t.traj_id)
+
+    inst_s, done_s = run(True)
+    inst_i, done_i = run(False)
+    assert inst_s.shared_prefix_hits == 2   # one in-wave, one cross-wave fork
+    assert_same_streams(done_s, done_i)
+    assert inst_s.allocator.used_blocks == 0
+    inst_s.allocator.check()
+
+
+def test_group_partial_members_do_not_share():
+    """A member with a partial response (diverged KV) must re-prefill
+    exclusively even when routed alongside its fresh siblings."""
+    reset_traj_ids()
+    inst = mk_sharing(share=True, slots=4)
+    group = mk_group(1500, 3, prompt_len=21, max_new=12)
+    partial = group[0]
+    partial.response = [5, 6]
+    partial.behavior_logprobs = [-1.0, -1.0]
+    inst.route_many(group)
+    # siblings 1,2 share; the partial member prefills alone
+    assert inst.shared_prefix_hits == 1
+    assert inst.prefill_tokens == 23 + 21
+    inst.allocator.check()
+
+
 def test_paged_admission_wave_uses_live_free_count():
     """Blocks drawn by earlier admissions in the same wave must not be
     double-counted against the pool: with 9 free blocks, a 5-block and a

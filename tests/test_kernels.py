@@ -249,6 +249,57 @@ def test_paged_ops_dispatch():
     np.testing.assert_allclose(a, c, atol=2e-5, rtol=2e-5)
 
 
+# --------------------------------------------------------------- block copy
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_copy_pool_blocks_matches_ref(dtype):
+    """The CoW block-copy kernel: only dst blocks change, and they become
+    exact copies of their src blocks in both pools."""
+    l, n, bs, hkv, hd = 3, 8, 16, 2, 32
+    kp = rnd((l, n, bs, hkv, hd), dtype, salt=91)
+    vp = rnd((l, n, bs, hkv, hd), dtype, salt=92)
+    src = jnp.array([1, 1, 5], jnp.int32)   # one src fans out to two dsts
+    dst = jnp.array([3, 6, 2], jnp.int32)
+    rk, rv = ops.copy_pool_blocks(kp, vp, src, dst, impl="ref")
+    # the pallas path donates the pools (in-place block move); hand it
+    # copies so the originals stay comparable
+    ik, iv = ops.copy_pool_blocks(
+        jnp.array(kp), jnp.array(vp), src, dst, impl="interpret"
+    )
+    for got_k, got_v in ((rk, rv), (ik, iv)):
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(rk))
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(rv))
+        for s, d in zip((1, 1, 5), (3, 6, 2)):
+            np.testing.assert_array_equal(
+                np.asarray(got_k[:, d]), np.asarray(kp[:, s])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got_v[:, d]), np.asarray(vp[:, s])
+            )
+        untouched = [i for i in range(n) if i not in (3, 6, 2)]
+        np.testing.assert_array_equal(
+            np.asarray(got_k[:, untouched]), np.asarray(kp[:, untouched])
+        )
+
+
+def test_copy_pool_blocks_null_padding_is_harmless():
+    """Padded copies aimed at the null garbage block leave every real
+    block intact (the runner pads copy batches to a power of two)."""
+    l, n, bs, hkv, hd = 2, 6, 8, 1, 16
+    kp = rnd((l, n, bs, hkv, hd), salt=93)
+    vp = rnd((l, n, bs, hkv, hd), salt=94)
+    src = jnp.array([2, 0, 0, 0], jnp.int32)
+    dst = jnp.array([4, 0, 0, 0], jnp.int32)
+    nk, nv = ops.copy_pool_blocks(kp, vp, src, dst, impl="ref")
+    np.testing.assert_array_equal(np.asarray(nk[:, 4]), np.asarray(kp[:, 2]))
+    real = [1, 2, 3, 5]
+    np.testing.assert_array_equal(
+        np.asarray(nk[:, real]), np.asarray(kp[:, real])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(nv[:, real]), np.asarray(vp[:, real])
+    )
+
+
 # -------------------------------------------------------------------- MoE GMM
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(

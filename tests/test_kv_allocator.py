@@ -15,6 +15,7 @@ from repro.rollout.kv_allocator import (
     BlockExhausted,
     blocks_for_tokens,
 )
+from repro.rollout.prefix_cache import RefcountedBlockAllocator
 
 
 def test_blocks_for_tokens():
@@ -131,6 +132,201 @@ def test_property_no_leak_no_double_free(n_blocks, block_size, ops):
     for op, owner, tokens in ops:
         _apply(a, live, op, owner, tokens)
         _check_model(a, live)
+    for owner in list(live):
+        a.free(owner)
+    a.check()
+    assert a.used_blocks == 0 and a.n_free == n_blocks - 1
+
+
+# ===================================================== refcounted (sharing)
+# The prefix-sharing layer: blocks may appear in several owners' tables
+# with a refcount; frees decrement and return a block only at zero. The
+# group-admission op allocates a prompt's full blocks once for the whole
+# group plus a private tail per member.
+
+def test_refcounted_group_alloc_shares_full_blocks():
+    a = RefcountedBlockAllocator(32, 16)
+    shared, tails = a.alloc_group([1, 2, 3, 4], 37)  # 2 full + 5-token tail
+    assert len(shared) == 2 and len(tails) == 4
+    assert a.used_blocks == 2 + 4              # full blocks stored ONCE
+    assert all(a.refcount(b) == 4 for b in shared)
+    assert all(a.refcount(b) == 1 for b in tails)
+    for i, owner in enumerate((1, 2, 3, 4)):
+        assert a.table(owner) == shared + [tails[i]]
+        assert a.capacity(owner) == 48
+    assert a.shared_blocks == 2
+    assert a.shared_tokens() == 3 * 2 * 16     # what dense would cost extra
+    a.check()
+
+
+def test_refcounted_group_alloc_block_aligned_prompt_has_no_tail():
+    a = RefcountedBlockAllocator(16, 8)
+    shared, tails = a.alloc_group([1, 2, 3], 24)
+    assert len(shared) == 3 and tails == []
+    assert a.used_blocks == 3
+    # each member grows with private blocks from there
+    new = a.extend_to(2, 25)
+    assert len(new) == 1 and a.refcount(new[0]) == 1
+    a.check()
+
+
+def test_refcounted_free_releases_shared_blocks_last_owner_only():
+    a = RefcountedBlockAllocator(32, 16)
+    shared, tails = a.alloc_group([1, 2, 3], 37)
+    assert a.free(1) == 1                # only its private tail
+    assert all(a.refcount(b) == 2 for b in shared)
+    assert a.used_blocks == 2 + 2
+    assert a.free(2) == 1
+    assert a.free(3) == 1 + 2            # last owner returns the prefix too
+    assert a.used_blocks == 0 and a.n_free == 31
+    a.check()
+
+
+def test_refcounted_fork_joins_existing_prefix():
+    a = RefcountedBlockAllocator(32, 16)
+    shared, _ = a.alloc_group([1, 2], 32)
+    own = a.fork(9, shared, 40)
+    assert len(own) == 1
+    assert all(a.refcount(b) == 3 for b in shared)
+    assert a.table(9) == shared + own
+    with pytest.raises(ValueError):
+        a.fork(9, shared, 40)            # owner already exists
+    with pytest.raises(ValueError):
+        a.fork(10, [31], 32)             # sharing an unowned block
+    a.check()
+
+
+def test_refcounted_group_alloc_atomic_on_exhaustion():
+    a = RefcountedBlockAllocator(5, 16)  # 4 allocatable
+    with pytest.raises(BlockExhausted):
+        a.alloc_group([1, 2, 3, 4], 17)  # needs 1 shared + 4 tails
+    a.check()
+    assert a.used_blocks == 0
+    with pytest.raises(ValueError):
+        a.alloc_group([1, 1], 8)         # duplicate owners
+    a.check()
+
+
+def test_refcounted_exclusive_use_matches_base_allocator():
+    """Without sharing, the refcounted pool is the plain pool."""
+    a, b = RefcountedBlockAllocator(9, 16), BlockAllocator(9, 16)
+    for alloc in (a, b):
+        alloc.alloc(1, 20)
+        alloc.extend_to(1, 40)
+        alloc.alloc(2, 5)
+        alloc.free(1)
+    assert a.used_blocks == b.used_blocks
+    assert a.n_free == b.n_free
+    assert a.table(2) == b.table(2)
+    a.check(), b.check()
+
+
+def _apply_ref(a: RefcountedBlockAllocator, live: dict, op: int,
+               owner: int, tokens: int, group: int):
+    """One randomized lifecycle op against the refcounted allocator and a
+    shadow model. ``live`` maps owner -> covered tokens. Ops: admit /
+    extend / release (as the base allocator) plus group-admit (share) and
+    fork (join the last surviving group's prefix)."""
+    if op == 0:  # admit (exclusive)
+        if owner in live:
+            return
+        try:
+            a.alloc(owner, tokens)
+            live[owner] = tokens
+        except BlockExhausted:
+            pass
+    elif op == 1:  # decode growth
+        if owner in live:
+            try:
+                a.extend_to(owner, live[owner] + tokens)
+                live[owner] += tokens
+            except BlockExhausted:
+                pass
+    elif op == 2:  # finish / interrupt / abort / preempt free the table
+        if owner in live:
+            a.free(owner)
+            del live[owner]
+    elif op == 3:  # group admission (prefix sharing)
+        owners = [owner * 10 + i for i in range(group)]
+        if any(o in live for o in owners):
+            return
+        try:
+            a.alloc_group(owners, tokens)
+            for o in owners:
+                live[o] = tokens
+        except BlockExhausted:
+            pass
+    else:  # fork off some live owner's full prefix blocks
+        if owner in live or not live:
+            return
+        src = sorted(live)[0]
+        bs = a.block_size
+        shared = a.table(src)[: live[src] // bs]
+        want = len(shared) * bs + (tokens % (2 * bs))
+        try:
+            a.fork(owner, shared, want)
+            live[owner] = want
+        except BlockExhausted:
+            pass
+
+
+def _check_ref_model(a: RefcountedBlockAllocator, live: dict):
+    a.check()
+    assert set(a.owners()) == set(live)
+    for owner, tokens in live.items():
+        assert a.capacity(owner) >= tokens
+    # distinct accounting never exceeds per-owner sums
+    per_owner = sum(len(a.table(o)) for o in live)
+    assert a.used_blocks <= per_owner
+
+
+def test_refcounted_randomized_lifecycle_never_leaks():
+    """np.random stress (runs offline, where hypothesis is unavailable)."""
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        a = RefcountedBlockAllocator(
+            int(rng.integers(2, 32)), int(rng.integers(1, 20))
+        )
+        live: dict = {}
+        for _ in range(200):
+            _apply_ref(
+                a, live,
+                op=int(rng.integers(0, 5)),
+                owner=int(rng.integers(0, 8)),
+                tokens=int(rng.integers(1, 64)),
+                group=int(rng.integers(2, 5)),
+            )
+            _check_ref_model(a, live)
+        for owner in list(live):
+            a.free(owner)
+        a.check()
+        assert a.used_blocks == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_blocks=st.integers(2, 32),
+    block_size=st.integers(1, 20),
+    ops=st.lists(
+        st.tuples(
+            st.integers(0, 4),    # admit / extend / release / share / fork
+            st.integers(0, 7),    # owner
+            st.integers(1, 64),   # token count
+            st.integers(2, 5),    # group size for share ops
+        ),
+        max_size=120,
+    ),
+)
+def test_property_refcounted_no_leak_no_double_free(
+    n_blocks, block_size, ops
+):
+    """Refcount/free-list invariants hold under random share/fork/extend/
+    free/preempt interleavings; draining every owner leaves a full pool."""
+    a = RefcountedBlockAllocator(n_blocks, block_size)
+    live: dict = {}
+    for op, owner, tokens, group in ops:
+        _apply_ref(a, live, op, owner, tokens, group)
+        _check_ref_model(a, live)
     for owner in list(live):
         a.free(owner)
     a.check()

@@ -157,3 +157,36 @@ def test_runtime_completes_with_paged_kv():
     rt.manager.check_invariants()
     for inst in rt.instances.values():
         inst.allocator.check()
+
+
+def test_runtime_prefix_sharing_engages_end_to_end():
+    """Paged runtime with group sampling: group-affine routing lands whole
+    groups on one instance, the engines admit them off ONE shared prompt
+    prefill, and training still converges through the same protocol."""
+    from repro.core import prefix_routing_strategy
+
+    rt = mk_runtime(
+        total_steps=2, paged_kv=True, kv_block_size=16, group_size=2,
+        max_slots=4, share_prefix=True,
+    )
+    assert rt.coordinator.suite.routing is prefix_routing_strategy
+    history = rt.run(max_ticks=3000)
+    assert len(history) == 2
+    hits = sum(inst.shared_prefix_hits for inst in rt.instances.values())
+    saved = sum(
+        inst.prefill_tokens_saved for inst in rt.instances.values()
+    )
+    assert hits > 0, "no group ever admitted off a shared prefix"
+    assert saved > 0
+    rt.manager.check_invariants()
+    for inst in rt.instances.values():
+        inst.allocator.check()
+
+
+def test_runtime_share_prefix_off_keeps_plain_routing():
+    rt = mk_runtime(paged_kv=True, share_prefix=False)
+    from repro.core import routing_strategy
+
+    assert rt.coordinator.suite.routing is routing_strategy
+    for inst in rt.instances.values():
+        assert not inst.share_prefix
