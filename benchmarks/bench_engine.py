@@ -164,7 +164,8 @@ def _bench_prefix_capacity(
     admits up to ~group_size x more members on prompt-heavy workloads
     while running a fraction of the prefill tokens.
 
-    Returns (admitted members, HBM fill fraction, prefill tokens run).
+    Returns (admitted members, HBM fill fraction, prefill tokens run,
+    prefill tokens saved by sharing).
     """
     k5 = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
     budget = float(k5 * max_len * budget_slots)
@@ -186,7 +187,12 @@ def _bench_prefix_capacity(
             )
             for i in range(group_size)
         ])
-    return inst.n_active(), inst.kv_bytes() / budget, inst.prefill_tokens
+    return (
+        inst.n_active(),
+        inst.kv_bytes() / budget,
+        inst.prefill_tokens,
+        inst.prefill_tokens_saved,
+    )
 
 
 def run(quick: bool = False) -> Dict[str, float]:
@@ -249,7 +255,7 @@ def run(quick: bool = False) -> Dict[str, float]:
         for prompt_len in pl_sweep:
             cell = f"g{group_size}_p{prompt_len}"
             for mode, share in (("noshare", False), ("share", True)):
-                adm, fill, ptoks = _bench_prefix_capacity(
+                adm, fill, ptoks, _ = _bench_prefix_capacity(
                     params, cfg, share=share,
                     group_size=group_size, prompt_len=prompt_len,
                 )
@@ -282,12 +288,18 @@ def run(quick: bool = False) -> Dict[str, float]:
     return out
 
 
-def run_memfit_smoke() -> None:
+def run_memfit_smoke() -> Dict[str, int]:
     """CI smoke: the kvfit and prefixfit sweeps at a tiny config.
 
     Exercises the real admission/allocation paths (dense vs paged, shared
     vs unshared) end-to-end in seconds and asserts the headline
     inequalities, so the benchmarks cannot silently rot.
+
+    Returns the sweeps' *deterministic* counters (admission counts and
+    prefill-token totals are pure functions of the seeded workload and
+    the block-exact accounting — no timing anywhere). CI pins them
+    against ``benchmarks/smoke_baseline.json`` so an accounting
+    regression fails the build instead of silently shifting every sweep.
     """
     reset_traj_ids()
     cfg = get_arch("qwen2-1.5b").reduced()  # tiny smoke arch, CPU-fast
@@ -307,11 +319,11 @@ def run_memfit_smoke() -> None:
 
     note("smoke: prefixfit (shared vs unshared group admission)")
     reset_traj_ids()
-    no_adm, no_fill, no_ptoks = _bench_prefix_capacity(
+    no_adm, no_fill, no_ptoks, no_saved = _bench_prefix_capacity(
         params, cfg, share=False, group_size=4, prompt_len=24, max_len=64,
     )
     reset_traj_ids()
-    sh_adm, sh_fill, sh_ptoks = _bench_prefix_capacity(
+    sh_adm, sh_fill, sh_ptoks, sh_saved = _bench_prefix_capacity(
         params, cfg, share=True, group_size=4, prompt_len=24, max_len=64,
     )
     emit("engine", "smoke_prefixfit_noshare_admitted", no_adm)
@@ -324,15 +336,61 @@ def run_memfit_smoke() -> None:
     assert sh_ptoks / max(sh_adm, 1) < no_ptoks / max(no_adm, 1), (
         "sharing must cut prefill tokens per admitted member"
     )
+    assert no_saved == 0, "unshared sweep cannot save prefill tokens"
+    assert sh_saved > 0, "shared sweep must save prefill tokens"
     assert no_fill <= 1.0 and sh_fill <= 1.0, "budget overrun"
     note("smoke: OK")
+    return {
+        "kvfit_dense_admitted": int(dense_adm),
+        "kvfit_paged_admitted": int(paged_adm),
+        "prefixfit_noshare_admitted": int(no_adm),
+        "prefixfit_share_admitted": int(sh_adm),
+        "prefixfit_noshare_prefill_tokens": int(no_ptoks),
+        "prefixfit_share_prefill_tokens": int(sh_ptoks),
+        "prefixfit_share_prefill_tokens_saved": int(sh_saved),
+    }
+
+
+def _check_baseline(counters: Dict[str, int], baseline_path: str) -> None:
+    """Exact comparison against the committed smoke baseline; any drift
+    is an accounting change that must be reviewed (and the baseline
+    regenerated with --json)."""
+    import json
+
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    diffs = {
+        key: (baseline.get(key), counters.get(key))
+        for key in sorted(set(baseline) | set(counters))
+        if baseline.get(key) != counters.get(key)
+    }
+    if diffs:
+        raise SystemExit(
+            f"smoke counters drifted from {baseline_path} "
+            f"(baseline, got): {diffs}\n"
+            "If the change is intentional, regenerate the baseline:\n"
+            "  python -m benchmarks.bench_engine --smoke "
+            "--json benchmarks/smoke_baseline.json"
+        )
+    note(f"smoke: counters match {baseline_path}")
 
 
 if __name__ == "__main__":
+    import json
     import sys
 
     print("bench,metric,value")
     if "--smoke" in sys.argv:
-        run_memfit_smoke()
+        counters = run_memfit_smoke()
+        if "--json" in sys.argv:
+            path = sys.argv[sys.argv.index("--json") + 1]
+            with open(path, "w") as f:
+                json.dump(counters, f, indent=2, sort_keys=True)
+                f.write("\n")
+            note(f"smoke: counters written to {path}")
+        if "--check-baseline" in sys.argv:
+            _check_baseline(
+                counters, sys.argv[sys.argv.index("--check-baseline") + 1]
+            )
     else:
         run(quick="--quick" in sys.argv)

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from benchmarks.common import emit, note, sim_cfg
 from repro.core.types import reset_traj_ids

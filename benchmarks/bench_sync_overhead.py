@@ -11,7 +11,6 @@ Two evidence classes:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Timer, emit, note
 from repro.configs import get_arch

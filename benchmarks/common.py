@@ -10,9 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict
 
-from repro.core import PAPER_H20_QWEN3_30B, StrategySuite
+from repro.core import PAPER_H20_QWEN3_30B
 from repro.core.types import reset_traj_ids
 from repro.sim.engine import SimConfig
 

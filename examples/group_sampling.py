@@ -19,7 +19,6 @@ filtering hook of §4.3).
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.core.types import Trajectory, next_traj_id, reset_traj_ids

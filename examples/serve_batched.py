@@ -53,7 +53,6 @@ def main() -> None:
         step += 1
         if step > 2000:
             break
-    snap = inst.snapshot()
     print(f"\ndecode steps: {inst.decode_steps}, "
           f"tokens: {inst.decode_tokens}, "
           f"batched avg: {inst.decode_tokens / max(inst.decode_steps, 1):.2f} "

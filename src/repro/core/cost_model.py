@@ -46,13 +46,25 @@ class CostModel:
     # is discounted by 1 / (1 + penalty * preemptions) — the coordinator
     # stops feeding a thrashing pool until it drains. 0 disables.
     preemption_penalty: float = 0.5
+    # Devices per rollout instance (sharded backend: instance = pod). k5
+    # stays the trajectory's total per-token footprint; every byte figure
+    # the model produces or consumes (kv_bytes_for, snapshots' kv_cache,
+    # kv_budget) is *per device* — the head-sharded pool spreads each
+    # token's KV evenly, so per-device bytes are total / shard_count.
+    shard_count: int = 1
+
+    def token_bytes(self, tokens: float) -> float:
+        """Per-device bytes of ``tokens`` worth of KV."""
+        return self.k5 * tokens / self.shard_count
 
     def kv_bytes_for(self, length: int) -> float:
-        """Bytes a trajectory of ``length`` tokens occupies on an instance
-        (block-rounded under paging)."""
+        """Per-device bytes a trajectory of ``length`` tokens occupies on
+        an instance (block-rounded under paging)."""
         if self.block_size <= 1:
-            return self.k5 * length
-        return self.k5 * self.block_size * (-(-length // self.block_size))
+            return self.token_bytes(length)
+        return self.token_bytes(
+            self.block_size * (-(-length // self.block_size))
+        )
 
     # ------------------------------------------------- prefix-shared groups
     def shared_prefix_blocks(self, prompt_len: int) -> int:
@@ -64,17 +76,18 @@ class CostModel:
     def group_kv_bytes_for(
         self, prompt_len: int, lengths: Sequence[int]
     ) -> float:
-        """Bytes a shared-prefix group occupies: the prompt's full blocks
-        once, plus each member's exclusive blocks (private tail copy +
-        response). Without paging there is no sharing — plain sum."""
+        """Per-device bytes a shared-prefix group occupies: the prompt's
+        full blocks once, plus each member's exclusive blocks (private
+        tail copy + response). Without paging there is no sharing — plain
+        sum."""
         if self.block_size <= 1:
-            return self.k5 * float(sum(lengths))
+            return self.token_bytes(float(sum(lengths)))
         n_full = prompt_len // self.block_size
         blocks = n_full + sum(
             max(0, -(-length // self.block_size) - n_full)
             for length in lengths
         )
-        return self.k5 * self.block_size * blocks
+        return self.token_bytes(self.block_size * blocks)
 
     # ----------------------------------------------------------------- Eq. 2
     def step_latency(self, kv_cache: float, n_run: int) -> float:

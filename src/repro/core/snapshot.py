@@ -41,6 +41,11 @@ class InstanceSnapshot:
     # member leaves.
     prefix_groups: Dict[int, Set[int]] = field(default_factory=dict)
     prefix_tokens: Dict[int, int] = field(default_factory=dict)
+    # devices the instance spans (sharded backend: instance = pod).
+    # ``kv_cache`` is *per-device* bytes — the pool is head-sharded, so
+    # each device holds 1/shard_count of every trajectory's KV — and
+    # ``discard`` scales released footprints accordingly.
+    shard_count: int = 1
 
     @property
     def n_run(self) -> int:
@@ -69,7 +74,13 @@ class InstanceSnapshot:
         Shared-prefix members release only their exclusive blocks (tail +
         response); the shared full prompt blocks are released exactly once,
         when the last co-owning member is discarded.
+
+        ``bytes_per_token`` is the cost model's k5 — the trajectory's
+        *total* per-token footprint across the pod; released bytes are
+        divided by ``shard_count`` to stay on the snapshot's per-device
+        basis.
         """
+        bytes_per_token = bytes_per_token / self.shard_count
         ids = set(traj_ids)
         shared_handled: Set[int] = set()
         if block_size > 1:

@@ -11,6 +11,18 @@ Kinds:
 * ``"logits"``   — (B, S, V) output logits. vocab -> "model": the
   log-softmax then runs on vocab shards with tiny cross-shard reductions
   instead of materializing the full vocab per device.
+
+Rollout tensor-parallel context (``rollout_sharding`` / ``gather``): the
+sharded rollout backend (``repro.rollout.sharded``) runs one instance's
+prefill/decode SPMD over a 1-D ``("tensor",)`` mesh with head-sharded
+weights and a head-sharded paged KV pool. Its contract is *bit-for-bit*
+equality with the single-device engine, so cross-shard reductions are
+forbidden: instead of letting GSPMD partial-sum a contraction over a
+sharded dimension (float addition order would change), the model gathers
+activations to replicated form at each sharded-dim boundary via
+``gather(x)`` — per-shard values are exact, the following full-width
+reduction then runs identically on every device. Outside the context
+``gather`` is a no-op, like ``constrain``.
 """
 from __future__ import annotations
 
@@ -82,3 +94,65 @@ def constrain(x: jax.Array, kind: str) -> jax.Array:
     else:
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------- rollout tensor parallel
+_rollout_state = threading.local()
+
+
+def _rollout_mesh() -> Optional[Mesh]:
+    return getattr(_rollout_state, "mesh", None)
+
+
+@contextmanager
+def rollout_sharding(mesh: Mesh):
+    """Activate decode-TP gathers for one sharded rollout instance.
+
+    The sharded runners (``repro.rollout.sharded``) enter this context
+    around every jitted prefill/decode call so the traced model body bakes
+    in the ``gather`` constraints. Nesting restores the previous mesh on
+    exit, and instances on different meshes never share jit caches (each
+    runner owns its own), so contexts cannot leak across backends.
+    """
+    prev = _rollout_mesh()
+    _rollout_state.mesh = mesh
+    try:
+        yield
+    finally:
+        _rollout_state.mesh = prev
+
+
+def gather(x: jax.Array) -> jax.Array:
+    """Pin ``x`` fully replicated at a sharded-dimension boundary.
+
+    Called by model code right before a reduction would cross a
+    tensor-sharded dimension (attention head outputs before ``wo``, the
+    SwiGLU hidden before the down projection, final logits before
+    sampling). The all-gather reconstructs exact per-shard values, so the
+    following full-width contraction is bitwise identical to the
+    single-device computation — the property the sharded backend's
+    equivalence tests pin. No-op outside ``rollout_sharding``.
+    """
+    mesh = _rollout_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+def gather_params(tree):
+    """Gather a (possibly shard-stored) parameter tree to replicated form
+    at the top of a jitted rollout step (ZeRO-3 style just-in-time
+    materialization).
+
+    Weights *stored* sharded (``sharding.rollout_param_spec``) cut
+    per-device parameter HBM, but a column-sharded matmul is not
+    bitwise-stable against its full-width counterpart on every backend
+    (XLA may pick a different micro-kernel per output width — observed on
+    CPU for 2-row prefill buckets). Gathering the weights inside the step
+    keeps every matmul full-width and replicated, so only the KV pool —
+    whose ops are per-head and reduction-free — stays sharded during
+    compute. No-op outside ``rollout_sharding``.
+    """
+    if _rollout_mesh() is None:
+        return tree
+    return jax.tree_util.tree_map(gather, tree)

@@ -48,6 +48,16 @@ def _fit(mesh: Mesh, dim: int, axis) -> Optional[str]:
     return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 else None
 
 
+def _spec(mesh: Mesh, shape: Tuple[int, ...], *dims) -> P:
+    """Right-aligned axis proposals -> PartitionSpec with divisibility
+    fallback; leading dimensions (stacked layers) stay replicated."""
+    lead = len(shape) - len(dims)
+    out = [None] * lead
+    for size, ax in zip(shape[lead:], dims):
+        out.append(_fit(mesh, size, ax))
+    return P(*out)
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     return ("pod", "data") if "pod" in mesh.shape else ("data",)
 
@@ -64,11 +74,7 @@ def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
 
     def spec(*dims):
         """dims: one axis proposal per trailing dimension (right-aligned)."""
-        lead = len(shape) - len(dims)
-        out = [None] * lead
-        for size, ax in zip(shape[lead:], dims):
-            out.append(_fit(mesh, size, ax))
-        return P(*out)
+        return _spec(mesh, shape, *dims)
 
     if name in ("embed",):
         return spec("model", "data")           # (V, D)
@@ -208,3 +214,91 @@ def replicated(mesh: Mesh, tree: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda leaf: NamedSharding(mesh, P()), tree
     )
+
+
+# ------------------------------------------------- rollout tensor parallel
+# A sharded rollout instance ("instance = pod") runs prefill/decode SPMD
+# over a 1-D ("tensor",) mesh with a *bitwise* contract
+# (repro.rollout.sharded): the paged KV pool is sharded on its KV-head
+# axis — attention is per-head and softmax reduces over the unsharded
+# sequence axis, so no partitioned computation ever changes a float —
+# and head outputs gather to replicated form before the wo contraction
+# (ctx.gather). Parameters are *stored* column-sharded (output dims
+# only: heads on wq/wk/wv, SwiGLU hidden on w_gate/w_up, vocab on
+# lm_head; wo / w_down / embed / norms replicate) and are gathered
+# replicated inside each jitted step (ctx.gather_params, ZeRO-3 style)
+# so matmuls stay full-width: column-sharded matmuls are not
+# bitwise-stable against their full-width counterparts.
+ROLLOUT_AXIS = "tensor"
+
+
+def validate_rollout_shards(
+    shard_count: int, *, n_heads: int, n_kv_heads: int
+) -> None:
+    """Head divisibility required by the head-sharded rollout layout.
+
+    The paged K/V pool shards its ``Hkv`` axis and q its head axis, so
+    ``shard_count`` must divide both head counts — otherwise the pool
+    cannot split without GSPMD padding (which would break the exact
+    per-device memory accounting the coordinator relies on).
+    """
+    if shard_count < 1:
+        raise ValueError(f"shard_count must be >= 1, got {shard_count}")
+    if n_kv_heads % shard_count or n_heads % shard_count:
+        raise ValueError(
+            f"shard_count {shard_count} must divide n_kv_heads "
+            f"{n_kv_heads} and n_heads {n_heads} (head-sharded KV pool)"
+        )
+
+
+def rollout_param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for one rollout-replica parameter leaf.
+
+    Column (output-dim) sharding only — see the module comment above for
+    why the reduction-side weights stay replicated.
+    """
+    name = path.split("'")[-2] if "'" in path else path
+    if name in ("wq", "wk", "wv"):
+        return _spec(mesh, shape, None, ROLLOUT_AXIS)   # (..., D, H*hd)
+    if name in ("bq", "bk", "bv"):
+        return _spec(mesh, shape, ROLLOUT_AXIS)
+    if name in ("w_gate", "w_up", "ws_gate", "ws_up"):
+        return _spec(mesh, shape, None, ROLLOUT_AXIS)   # (..., D, F)
+    if name == "lm_head":
+        return _spec(mesh, shape, None, ROLLOUT_AXIS)   # (D, V)
+    return P()
+
+
+def rollout_params_shardings(mesh: Mesh, params: Any) -> Any:
+    def one(path, leaf):
+        return NamedSharding(
+            mesh,
+            rollout_param_spec(
+                mesh, jax.tree_util.keystr(path), np.shape(leaf)
+            ),
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def paged_pool_spec(mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    """Spec for one paged K/V pool: ``(L, n_blocks, bs, Hkv, hd)`` with
+    the KV-head axis sharded over ``tensor`` — every device holds the
+    full block structure (tables replicate) but only ``Hkv/shards`` heads
+    per block, so per-device KV bytes are ``total / shard_count``."""
+    if len(shape) != 5:
+        raise ValueError(f"paged pool must be rank 5, got shape {shape}")
+    return P(None, None, None, _fit(mesh, shape[3], ROLLOUT_AXIS), None)
+
+
+def paged_cache_shardings(mesh: Mesh, cache: Any) -> Any:
+    """NamedShardings for a paged decode cache: K/V pools head-sharded,
+    per-slot small state (pos, hybrid conv/ssm, audio cross) replicated —
+    it is O(1) per slot and host-indexed by the runners."""
+    out = {}
+    for name, val in cache.items():
+        if name in ("k", "v"):
+            out[name] = NamedSharding(mesh, paged_pool_spec(mesh, val.shape))
+        else:
+            out[name] = replicated(mesh, val)
+    return out

@@ -7,7 +7,7 @@ are also the default execution path on non-TPU backends.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,10 +19,8 @@ import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
-from functools import partial  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ALL_SHAPES, ASSIGNED, get_arch, get_shape  # noqa: E402
 from repro.distributed import sharding as shd  # noqa: E402

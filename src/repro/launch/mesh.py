@@ -21,3 +21,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1-device mesh for smoke-testing launcher code paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_rollout_mesh(n_shards: int):
+    """1-D ``("tensor",)`` mesh for one sharded rollout instance.
+
+    A rollout "instance" in the paper is a resource pool, not a chip; the
+    sharded backend (``repro.rollout.sharded``) spans one instance across
+    ``n_shards`` devices of this mesh — params head-sharded, the paged KV
+    pool split on its KV-head axis. Uses the first ``n_shards`` local
+    devices; raises early (with the fix spelled out) when the process has
+    fewer, since ``jax.make_mesh``'s own error is opaque.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    avail = jax.device_count()
+    if n_shards > avail:
+        raise ValueError(
+            f"rollout mesh needs {n_shards} devices but only {avail} are "
+            f"visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} before the "
+            f"first jax call"
+        )
+    return jax.make_mesh((n_shards,), ("tensor",))

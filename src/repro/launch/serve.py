@@ -52,17 +52,42 @@ def main() -> None:
         "--no-share-prefix", action="store_true",
         help="disable prefix sharing for group rollout (ablation)",
     )
+    ap.add_argument(
+        "--shards", type=int, default=1,
+        help="devices this replica spans (requires --paged): params and "
+             "the paged KV pool are head-sharded over a ('tensor',) mesh; "
+             "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count"
+             "=<n> first",
+    )
+    ap.add_argument(
+        "--kv-heads", type=int, default=0,
+        help="override the reduced config's n_kv_heads (most reduced "
+             "configs keep the GQA ratio with 1 KV head, which cannot "
+             "split; --shards needs n_kv_heads %% shards == 0)",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
+    if args.kv_heads:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, n_kv_heads=args.kv_heads)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    inst = create_backend(
-        "jax", 0, cfg=cfg, params=params, version=0, max_slots=args.slots,
+    kw = dict(
+        cfg=cfg, params=params, version=0, max_slots=args.slots,
         max_len=64, temperature=args.temperature,
         compact_decode=not args.no_compact_decode,
         paged=args.paged, kv_block_size=args.block_size,
         share_prefix=not args.no_share_prefix,
     )
+    if args.shards > 1:
+        if not args.paged:
+            raise SystemExit("--shards requires --paged (sharded KV pool)")
+        inst = create_backend("sharded", 0, shard_count=args.shards, **kw)
+        print(f"sharded replica over {args.shards} devices "
+              f"({jax.device_count()} visible)")
+    else:
+        inst = create_backend("jax", 0, **kw)
     ds = ArithmeticDataset(args.requests, seed=2)
     n_requests = args.requests * args.group_size
     for gid, p in enumerate(ds.problems):

@@ -15,7 +15,7 @@ embeddings, audio cells precomputed frame embeddings.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -80,7 +80,7 @@ def main() -> None:
     if args.compress_dp:
         # demonstration: grads would flow through the compressed DP
         # all-reduce on a multi-host mesh; on 1 device it's an identity
-        allreduce = make_dp_allreduce(mesh, compress=True)
+        make_dp_allreduce(mesh, compress=True)
         print("compressed DP all-reduce enabled (int8, global-scale psum)")
 
     for i in range(args.steps):

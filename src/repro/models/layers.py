@@ -7,11 +7,12 @@ attention, MoE grouped matmul, DAPO loss) have Pallas TPU kernels in
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.ctx import gather
 
 
 def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
@@ -91,7 +92,10 @@ def attention(
 # --------------------------------------------------------------------- MLPs
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
     h = jax.nn.silu(x @ w_gate) * (x @ w_up)
-    return h @ w_down
+    # decode-TP: with w_gate/w_up column-sharded the hidden is sharded on
+    # F; gather exact per-shard values before the down-projection so the
+    # contraction stays full-width and bitwise (no-op unsharded)
+    return gather(h) @ w_down
 
 
 def moe_ffn(

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.ctx import constrain
+from repro.distributed.ctx import constrain, gather
 from repro.models import runmode
 from repro.kernels import ops
 from repro.models import layers
@@ -357,7 +357,9 @@ def _logits(cfg: ArchConfig, params, x):
         out = jnp.where(col < cfg.vocab_size, out, -1e9)
     if out.ndim == 3:
         out = constrain(out, "logits")
-    return out
+    # decode-TP: a vocab-sharded lm_head leaves ``out`` sharded on V;
+    # gather before the softmax reductions in sampling (no-op unsharded)
+    return gather(out)
 
 
 def _encode(cfg: ArchConfig, params, frames, impl=None):
@@ -426,7 +428,6 @@ def forward(
 
     aux_total = jnp.zeros((), jnp.float32)
     if cfg.family == "ssm":
-        p_period = xlstm_period(cfg)
 
         def group_body(x, gp):
             def m_body(x, mp):
@@ -651,7 +652,9 @@ def prefill(
         h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
         q, k, v = _project_qkv(h, p, cfg, positions)
         o = ops.flash_attention(q, k, v, causal=True, window=window, impl=impl)
-        attn = o.reshape(b, seq, -1) @ p["wo"]
+        # decode-TP: heads are computed per shard; gather exact per-head
+        # values before the full-width wo contraction (no-op unsharded)
+        attn = gather(o).reshape(b, seq, -1) @ p["wo"]
         new_conv, new_ssm = conv_slot, ssm_slot
         if cfg.family == "hybrid":
             ssm_out, (new_conv, new_ssm) = layers.mamba_block(
@@ -671,7 +674,7 @@ def prefill(
                 b, -1, cfg.n_heads, cfg.hd
             ).astype(xv_slot.dtype)
             oc = ops.flash_attention(qc, new_xk, new_xv, causal=False, impl=impl)
-            x = x + oc.reshape(b, seq, -1) @ p["cross"]["wo"]
+            x = x + gather(oc).reshape(b, seq, -1) @ p["cross"]["wo"]
         h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
         if cfg.family == "moe":
             f, a = _moe(h2, p, cfg, impl=impl)
@@ -792,7 +795,7 @@ def decode_step(
             q[:, 0], k_slot, v_slot, k[:, 0], v[:, 0], write_pos, lengths,
             impl=impl,
         )
-        attn = o.reshape(b, 1, -1) @ p["wo"]
+        attn = gather(o).reshape(b, 1, -1) @ p["wo"]
         new_conv, new_ssm = conv_slot, ssm_slot
         if cfg.family == "hybrid":
             ssm_out, (new_conv, new_ssm) = layers.mamba_block(
@@ -809,7 +812,7 @@ def decode_step(
                 qc, xk_slot, xv_slot,
                 jnp.full((b,), senc, jnp.int32), impl=impl,
             )
-            x = x + oc.reshape(b, 1, -1) @ p["cross"]["wo"]
+            x = x + gather(oc).reshape(b, 1, -1) @ p["cross"]["wo"]
         h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
         if cfg.family == "moe":
             f, _ = _moe(h2, p, cfg, impl=impl)
@@ -872,7 +875,10 @@ def paged_decode_step(
             q[:, 0], k_pool, v_pool, k[:, 0], v[:, 0], block_tables, pos,
             impl=impl,
         )
-        attn = o.reshape(b, 1, -1) @ p["wo"]
+        # decode-TP: q and the pool are head-sharded, so each shard holds
+        # its heads' exact outputs; gather before the wo contraction keeps
+        # the reduction full-width and bitwise (no-op unsharded)
+        attn = gather(o).reshape(b, 1, -1) @ p["wo"]
         new_conv, new_ssm = conv_slot, ssm_slot
         if cfg.family == "hybrid":
             ssm_out, (new_conv, new_ssm) = layers.mamba_block(
@@ -889,7 +895,7 @@ def paged_decode_step(
                 qc, xk_slot, xv_slot,
                 jnp.full((b,), senc, jnp.int32), impl=impl,
             )
-            x = x + oc.reshape(b, 1, -1) @ p["cross"]["wo"]
+            x = x + gather(oc).reshape(b, 1, -1) @ p["cross"]["wo"]
         h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
         if cfg.family == "moe":
             f, _ = _moe(h2, p, cfg, impl=impl)

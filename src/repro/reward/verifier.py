@@ -9,7 +9,7 @@ disaggregated architecture is observable in benchmarks.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 from repro.data import tokenizer as tok
 

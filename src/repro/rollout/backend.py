@@ -7,12 +7,16 @@ plane those commands land on:
 
 ``EngineBackend``
     The protocol every rollout instance implements:
-    ``route / interrupt / abort / pull / step / snapshot``.  Two
+    ``route / interrupt / abort / pull / step / snapshot``.  Three
     implementations ship:
 
     * ``repro.rollout.engine.RolloutInstance`` — the real JAX engine
       (slot-based continuous batching, batched prefill + compacted decode
       via ``repro.rollout.runners``);
+    * ``repro.rollout.sharded.ShardedBackend`` — the same engine spanning
+      a pod: params and the paged KV pool head-sharded over a
+      ``("tensor",)`` mesh, per-device memory accounting
+      (``shard_count``), bit-for-bit equal to the single-device engine;
     * ``SimBackend`` (here) — the cost-model-driven replica the
       discrete-event simulator and the baselines run on.  Token payloads
       are tracked as counts (``Trajectory.sim_generated``); timing follows
@@ -180,13 +184,15 @@ class SimBackend:
         return self.inst_version
 
     def kv_bytes(self) -> float:
-        """KV bytes in use, at the cost model's allocation granularity
-        (block-rounded when ``cm.block_size`` > 1 — the same accounting the
-        paged RolloutInstance reports, so mixed real/sim clusters give the
-        coordinator one consistent memory picture). Shared prefix blocks
-        are charged once per group, like the engine's refcounted pool."""
+        """Per-device KV bytes in use, at the cost model's allocation
+        granularity (block-rounded when ``cm.block_size`` > 1 — the same
+        accounting the paged RolloutInstance reports, so mixed real/sim
+        clusters give the coordinator one consistent memory picture; at
+        ``cm.shard_count`` > 1 the same per-device basis the sharded
+        backend reports). Shared prefix blocks are charged once per
+        group, like the engine's refcounted pool."""
         bs = self.cm.block_size
-        total = self.cm.k5 * float(self._prefix.shared_token_total())
+        total = self.cm.token_bytes(float(self._prefix.shared_token_total()))
         for t in self.running.values():
             pk = self._prefix.lookup(t.traj_id)
             if pk is None:
@@ -194,7 +200,7 @@ class SimBackend:
             else:
                 n_full = self._prefix.tokens(pk) // bs
                 excl = max(0, -(-t.length // bs) - n_full)
-                total += self.cm.k5 * bs * excl
+                total += self.cm.token_bytes(bs * excl)
         return total
 
     def n_active(self) -> int:
@@ -262,7 +268,8 @@ class SimBackend:
             )
             if fork_pk is not None:
                 charge = max(
-                    0.0, charge - self.cm.k5 * self._prefix.tokens(fork_pk)
+                    0.0,
+                    charge - self.cm.token_bytes(self._prefix.tokens(fork_pk)),
                 )
             if self.kv_bytes() + charge > self.cm.kv_budget:
                 return
@@ -372,6 +379,7 @@ class SimBackend:
             preemptions=0,  # sim pools admit by budget, never preempt
             prefix_groups=prefix_groups,
             prefix_tokens=prefix_tokens,
+            shard_count=self.cm.shard_count,
         )
 
 
@@ -473,18 +481,28 @@ def _make_jax_backend(inst_id: int, **kw) -> "EngineBackend":
     return RolloutInstance(inst_id, **kw)
 
 
+def _make_sharded_backend(inst_id: int, **kw) -> "EngineBackend":
+    from repro.rollout.sharded import ShardedBackend  # lazy: needs jax
+
+    return ShardedBackend(inst_id, **kw)
+
+
 BACKENDS = {
     "sim": _make_sim_backend,
     "jax": _make_jax_backend,
+    "sharded": _make_sharded_backend,
 }
 
 
 def create_backend(kind: str, inst_id: int, **kw) -> EngineBackend:
-    """Construct a rollout instance by backend name (``"jax"`` / ``"sim"``).
+    """Construct a rollout instance by backend name
+    (``"jax"`` / ``"sim"`` / ``"sharded"``).
 
     Keyword arguments are backend-specific: the JAX engine takes
-    ``cfg/params/version/max_slots/...`` (see ``RolloutInstance``), the sim
-    backend ``cost_model/version/prefill_tps/pull_time``.
+    ``cfg/params/version/max_slots/...`` (see ``RolloutInstance``), the
+    sharded engine additionally ``shard_count``/``mesh``
+    (see ``ShardedBackend``), the sim backend
+    ``cost_model/version/prefill_tps/pull_time``.
     """
     try:
         factory = BACKENDS[kind]

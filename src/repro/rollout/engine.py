@@ -115,6 +115,7 @@ class RolloutInstance:
         kv_pool_blocks: Optional[int] = None,
         admission_headroom_tokens: int = 16,
         share_prefix: bool = True,
+        shard_count: int = 1,
     ):
         self.inst_id = inst_id
         self.cfg = cfg
@@ -125,6 +126,12 @@ class RolloutInstance:
         self.k5 = kv_bytes_per_token or (
             2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
         )
+        # Devices this instance spans (ShardedBackend sets > 1). ``k5``
+        # stays the *total* per-token KV footprint across the pod; memory
+        # accounting and ``kv_budget`` are per-device, so every charge
+        # uses ``k5_local`` and the coordinator sees one device's HBM.
+        self.shard_count = shard_count
+        self.k5_local = self.k5 / shard_count
         self.kv_budget = kv_budget
         self.temperature = temperature
         self.eos_id = eos_id
@@ -155,7 +162,8 @@ class RolloutInstance:
             if kv_pool_blocks is not None:
                 n_blocks = kv_pool_blocks
             elif kv_budget != float("inf"):
-                n_blocks = int(kv_budget // (self.k5 * bs))
+                # per-device budget over per-device block bytes
+                n_blocks = int(kv_budget // (self.k5_local * bs))
             else:
                 n_blocks = max_slots * blocks_per_seq
             # at least one max-length trajectory must always fit, so block
@@ -197,7 +205,10 @@ class RolloutInstance:
         self.shared_prefix_hits = 0       # members admitted off a shared prompt
         self.prefill_tokens_saved = 0     # prompt tokens not re-prefilled
 
-        self.prefill_runner = PrefillRunner(
+        # runner construction goes through overridable factories so the
+        # sharded backend swaps in its SPMD variants without duplicating
+        # the argument plumbing (one construction site for both backends)
+        self.prefill_runner = self._make_prefill_runner(
             cfg,
             max_len=max_len,
             prefill_bucket=prefill_bucket,
@@ -207,7 +218,7 @@ class RolloutInstance:
             paged_block_size=kv_block_size if paged else 0,
         )
         if paged:
-            self.paged_decode_runner = PagedDecodeRunner(
+            self.paged_decode_runner = self._make_paged_decode_runner(
                 cfg,
                 max_slots=max_slots,
                 blocks_per_seq=blocks_for_tokens(max_len, kv_block_size),
@@ -221,19 +232,29 @@ class RolloutInstance:
             )
         self._overflow_done: List[Trajectory] = []
 
+    # --------------------------------------------------- runner factories
+    def _make_prefill_runner(self, cfg: ArchConfig, **kw) -> PrefillRunner:
+        return PrefillRunner(cfg, **kw)
+
+    def _make_paged_decode_runner(
+        self, cfg: ArchConfig, **kw
+    ) -> PagedDecodeRunner:
+        return PagedDecodeRunner(cfg, **kw)
+
     # ------------------------------------------------------------- geometry
     def _slot_len(self, t: Trajectory) -> int:
         return t.length
 
     def kv_bytes(self) -> float:
-        """Bytes of KV in use — O(1).
+        """Bytes of KV in use *per device* — O(1).
 
-        Paged: exact block-granular usage (allocated blocks x block bytes).
-        Dense: token-granular sum over resident trajectories, maintained
-        incrementally.
+        Paged: exact block-granular usage (allocated blocks x block bytes,
+        divided across the pod's head shards). Dense: token-granular sum
+        over resident trajectories, maintained incrementally (dense mode
+        is single-device only).
         """
         if self.paged:
-            return self.k5 * self.allocator.used_tokens()
+            return self.k5_local * self.allocator.used_tokens()
         return self._kv_bytes
 
     def _recompute_kv_bytes(self) -> float:
@@ -328,10 +349,10 @@ class RolloutInstance:
         tokens = min(length + self.admission_headroom_tokens, self.max_len)
         if self.paged:
             bs = self.kv_block_size
-            return self.k5 * bs * blocks_for_tokens(
+            return self.k5_local * bs * blocks_for_tokens(
                 min(tokens + self._pos_offset, self.max_len), bs
             )
-        return self.k5 * tokens
+        return self.k5_local * tokens
 
     def _share_run(self) -> int:
         """Shareable same-group run length at the waiting-queue head (the
@@ -362,7 +383,7 @@ class RolloutInstance:
                          self.max_len)
         member_excl = blocks_for_tokens(pad_tokens, bs) - n_full
         while g >= 2:
-            charge = self.k5 * bs * (n_full + g * member_excl)
+            charge = self.k5_local * bs * (n_full + g * member_excl)
             need_now = n_full + (g if tail else 0)
             if (
                 planned_bytes + charge <= self.kv_budget
@@ -380,7 +401,7 @@ class RolloutInstance:
             keys.append(sub)
         ids = [m.traj_id for m in members]
         shared, tails = self.allocator.alloc_group(ids, cache_len)
-        planned_bytes += self.k5 * bs * (len(shared) + len(tails))
+        planned_bytes += self.k5_local * bs * (len(shared) + len(tails))
         if shared:
             self._prefix.register(
                 members[0].group_id, ids, len(shared) * bs, prompt
@@ -456,7 +477,7 @@ class RolloutInstance:
                         self._prefix.tokens(fork_pk) // self.kv_block_size
                     )
             charge = self._admission_charge(self._slot_len(nxt))
-            charge -= self.k5 * self.kv_block_size * shared_blocks
+            charge -= self.k5_local * self.kv_block_size * shared_blocks
             if planned_bytes + max(charge, 0.0) > self.kv_budget:
                 break
             if self.paged:
@@ -493,15 +514,15 @@ class RolloutInstance:
                     # (identical prompt KV) — aim those rows at the null
                     # garbage block and keep only the tail/own writes
                     blocks = [NULL_BLOCK] * shared_blocks + own
-                    planned_bytes += self.k5 * self.kv_block_size * len(own)
+                    planned_bytes += self.k5_local * self.kv_block_size * len(own)
                     self.shared_prefix_hits += 1
                 else:
                     blocks = self.allocator.alloc(nxt.traj_id, cache_len)
                     planned_bytes += (
-                        self.k5 * self.kv_block_size * len(blocks)
+                        self.k5_local * self.kv_block_size * len(blocks)
                     )
             else:
-                planned_bytes += self.k5 * (self._slot_len(nxt) + 1)
+                planned_bytes += self.k5_local * (self._slot_len(nxt) + 1)
             jobs.append(
                 PrefillJob(slot=slot, tokens=tokens, key=sub, blocks=blocks)
             )
@@ -665,4 +686,5 @@ class RolloutInstance:
             preemptions=self.preemptions,
             prefix_groups=prefix_groups,
             prefix_tokens=prefix_tokens,
+            shard_count=self.shard_count,
         )

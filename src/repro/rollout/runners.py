@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.distributed.ctx import gather_params
 from repro.models import model as M
 from repro.rollout.sampler import sample
 
@@ -157,6 +158,8 @@ class PrefillRunner:
         frontend_fn: Optional[Callable[[int], jax.Array]] = None,
         paged_block_size: int = 0,       # 0 = dense slot-row scatter
         paged_null_block: int = 0,
+        impl: Optional[str] = None,      # kernels.ops dispatch override
+        pool_sharding: Optional[Any] = None,   # pin paged K/V layout (TP)
     ):
         self.cfg = cfg
         self.max_len = max_len
@@ -166,7 +169,20 @@ class PrefillRunner:
         self.frontend_fn = frontend_fn
         self.paged_block_size = paged_block_size
         self.paged_null_block = paged_null_block
-        self._jit_prefill = jax.jit(partial(M.prefill, cfg))
+        self.impl = impl
+        # NamedSharding for the (l, n_blocks, bs, hkv, hd) pools: the
+        # sharded backend pins scatter/copy outputs so GSPMD can never
+        # decide to replicate the pool (which would silently void the
+        # per-device memory accounting)
+        self.pool_sharding = pool_sharding
+        # shard-stored params are gathered replicated inside the step
+        # (ctx.gather_params: ZeRO-3-style JIT materialization, no-op on
+        # single-device instances) so matmul widths never change
+        self._jit_prefill = jax.jit(
+            lambda params, *a, **kw: M.prefill(
+                cfg, gather_params(params), *a, impl=impl, **kw
+            )
+        )
         self._jit_scatter = jax.jit(scatter_rows)
         self._jit_paged_scatter = jax.jit(self._paged_scatter)
         # donate the cache: the copy is always fed a fresh intermediate (a
@@ -210,6 +226,13 @@ class PrefillRunner:
         rv = row_cache["v"].reshape(l, r * (s // bs), bs, hkv, hd)
         out["k"] = cache["k"].at[:, flat_blocks].set(rk.astype(cache["k"].dtype))
         out["v"] = cache["v"].at[:, flat_blocks].set(rv.astype(cache["v"].dtype))
+        if self.pool_sharding is not None:
+            out["k"] = jax.lax.with_sharding_constraint(
+                out["k"], self.pool_sharding
+            )
+            out["v"] = jax.lax.with_sharding_constraint(
+                out["v"], self.pool_sharding
+            )
         return out
 
     def _groups(self, jobs: Sequence[PrefillJob]) -> List[List[PrefillJob]]:
@@ -318,7 +341,10 @@ class PrefillRunner:
             src = [s for s, _ in copies] + [self.paged_null_block] * pad
             dst = [d for _, d in copies] + [self.paged_null_block] * pad
             cache = self._jit_block_copy(
-                cache, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+                cache,
+                jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
+                impl=self.impl,
             )
         return cache, result
 
@@ -509,12 +535,16 @@ class PagedDecodeRunner:
         blocks_per_seq: int,
         null_block: int = 0,
         temperature: float = 1.0,
+        impl: Optional[str] = None,            # kernels.ops dispatch override
+        pool_sharding: Optional[Any] = None,   # pin paged K/V layout (TP)
     ):
         self.cfg = cfg
         self.max_slots = max_slots
         self.nb = blocks_per_seq
         self.null_block = null_block
         self.temperature = temperature
+        self.impl = impl
+        self.pool_sharding = pool_sharding
         self._steps: Dict[Tuple[int, int], Any] = {}
 
     def bucket_of(self, n_active: int) -> int:
@@ -530,7 +560,8 @@ class PagedDecodeRunner:
                 view = gather_rows(small, rows)
                 view["k"], view["v"] = cache["k"], cache["v"]
                 logits, new = M.paged_decode_step(
-                    self.cfg, params, last_tokens[rows], view, tables
+                    self.cfg, gather_params(params), last_tokens[rows],
+                    view, tables, impl=self.impl,
                 )
                 live_rows = {
                     nm: jax.tree_util.tree_map(
@@ -543,6 +574,13 @@ class PagedDecodeRunner:
                 }
                 out = scatter_rows(small, live_rows, live)
                 out["k"], out["v"] = new["k"], new["v"]
+                if self.pool_sharding is not None:
+                    out["k"] = jax.lax.with_sharding_constraint(
+                        out["k"], self.pool_sharding
+                    )
+                    out["v"] = jax.lax.with_sharding_constraint(
+                        out["v"], self.pool_sharding
+                    )
                 return logits, out, new["pos"][:n]
 
             fn = jax.jit(step)

@@ -1,7 +1,7 @@
 """Token sampling for the rollout engine."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

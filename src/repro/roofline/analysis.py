@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s

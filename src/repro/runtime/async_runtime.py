@@ -85,6 +85,12 @@ class RuntimeConfig:
     # block tables, and routing turns group-affine so members land where
     # the prefix lives (StrategySuite.prefix_sharing routing).
     share_prefix: bool = True
+    # Devices per rollout instance (paged only): > 1 spans each instance
+    # across a ("tensor",) mesh via the sharded backend — params and the
+    # paged K/V pool head-sharded, per-device memory accounting. All
+    # instances share one mesh over the first ``rollout_shards`` local
+    # devices (the same way single-device instances share device 0).
+    rollout_shards: int = 1
 
 
 @dataclass
@@ -127,11 +133,25 @@ class AsyncRLRuntime:
         self.ps = ParameterServer()
         self.ps.push(self.params, 0)
 
+        if rcfg.rollout_shards > 1 and not rcfg.paged_kv:
+            raise ValueError(
+                "rollout_shards > 1 requires paged_kv=True (the sharded "
+                "backend shards the paged K/V pool)"
+            )
+        self._rollout_mesh = None
+        if rcfg.rollout_shards > 1:
+            from repro.launch.mesh import make_rollout_mesh
+
+            self._rollout_mesh = make_rollout_mesh(rcfg.rollout_shards)
         k5 = 2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
+        # kv_budget is per device: the pod-wide pool (max_len * max_slots
+        # worth of k5-sized tokens) spreads evenly over the head shards
         self.cost_model = CostModel(
             k1=1e-12, k2=1e-3, k3=1e-4, k4=5e-3, k5=k5,
-            kv_budget=k5 * rcfg.max_len * rcfg.max_slots,
+            kv_budget=k5 * rcfg.max_len * rcfg.max_slots
+            / rcfg.rollout_shards,
             block_size=rcfg.kv_block_size if rcfg.paged_kv else 1,
+            shard_count=rcfg.rollout_shards,
         )
         group_filter = None
         if rcfg.filter_zero_signal:
@@ -178,9 +198,7 @@ class AsyncRLRuntime:
 
     # -------------------------------------------------------------- plumbing
     def _new_instance(self, inst_id: int) -> EngineBackend:
-        return create_backend(
-            "jax",
-            inst_id,
+        kw = dict(
             cfg=self.cfg,
             params=self.ps.pull()[0],
             version=self.ps.version,
@@ -194,6 +212,15 @@ class AsyncRLRuntime:
             kv_block_size=self.rcfg.kv_block_size,
             share_prefix=self.rcfg.share_prefix,
         )
+        if self.rcfg.rollout_shards > 1:
+            return create_backend(
+                "sharded",
+                inst_id,
+                shard_count=self.rcfg.rollout_shards,
+                mesh=self._rollout_mesh,
+                **kw,
+            )
+        return create_backend("jax", inst_id, **kw)
 
     def _snapshots(self):
         return {i: inst.snapshot() for i, inst in self.instances.items()}

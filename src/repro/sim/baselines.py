@@ -22,7 +22,6 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
 
 from repro.core.types import Trajectory
 from repro.rollout.backend import EngineBackend, create_backend

@@ -13,8 +13,7 @@ scanned block) and return (params, opt_state, metrics).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

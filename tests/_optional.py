@@ -9,6 +9,8 @@ keeping every non-hypothesis test in the same module collectible.
 """
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

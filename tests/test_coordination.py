@@ -1,6 +1,5 @@
 """Unit tests: cost model (Eq. 2-4), strategies (Alg. 2-5), speculative
 state (Eq. 1), TS/PS middleware, and the coordinator cycle (Alg. 1)."""
-import itertools
 import threading
 
 import pytest
@@ -19,7 +18,6 @@ from repro.core import (
     StalenessManager,
     StalenessVerifier,
     StrategyConfig,
-    StrategySuite,
     Trajectory,
     TrajectoryServer,
     migration_strategy,

@@ -504,7 +504,6 @@ def test_group_interrupt_releases_shared_blocks_once():
     inst = mk_sharing(share=True, slots=G, block_size=bs)
     group = mk_group(1400, G, prompt_len=P)
     inst.route_many(group)
-    n_full = P // bs
     used = inst.allocator.used_blocks
     inst.interrupt([group[0].traj_id])
     assert inst.allocator.used_blocks == used - 1          # its tail only

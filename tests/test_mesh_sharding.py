@@ -1,0 +1,210 @@
+"""Mesh construction + rollout sharding-spec helpers.
+
+Spec rules are pure functions of mesh *shape* — tested directly with a
+duck-typed mesh (the tests/test_distributed.py pattern). Everything that
+needs real devices (mesh construction, NamedSharding placement of the
+paged pool, per-device shard shapes) runs in subprocesses under forced
+host device counts.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    ROLLOUT_AXIS,
+    paged_pool_spec,
+    rollout_param_spec,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only ``shape`` (axis sizes) is consulted."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(tensor=4)
+
+
+# ------------------------------------------------------------ param specs
+def test_rollout_param_spec_attention_projections_head_sharded():
+    # stacked (L, D, H*hd): output heads -> tensor, contraction dim whole
+    assert rollout_param_spec(MESH, "['blocks']['wq']", (4, 64, 64)) == P(
+        None, None, ROLLOUT_AXIS
+    )
+    assert rollout_param_spec(MESH, "['blocks']['wk']", (4, 64, 32)) == P(
+        None, None, ROLLOUT_AXIS
+    )
+    assert rollout_param_spec(MESH, "['blocks']['bq']", (4, 64)) == P(
+        None, ROLLOUT_AXIS
+    )
+
+
+def test_rollout_param_spec_reduction_side_replicated():
+    # weights consumed by a full-width contraction never shard
+    assert rollout_param_spec(MESH, "['blocks']['wo']", (4, 64, 64)) == P()
+    assert rollout_param_spec(MESH, "['blocks']['w_down']", (4, 128, 64)) == P()
+    assert rollout_param_spec(MESH, "['embed']", (256, 64)) == P()
+    assert rollout_param_spec(MESH, "['blocks']['attn_norm']", (4, 64)) == P()
+
+
+def test_rollout_param_spec_ffn_and_lm_head_column_sharded():
+    assert rollout_param_spec(MESH, "['blocks']['w_gate']", (4, 64, 128)) == P(
+        None, None, ROLLOUT_AXIS
+    )
+    assert rollout_param_spec(MESH, "['lm_head']", (64, 256)) == P(None, ROLLOUT_AXIS)
+
+
+def test_rollout_param_spec_nondivisible_falls_back_to_replication():
+    # output dim 30 does not divide tensor=4 -> that dim replicates
+    assert rollout_param_spec(MESH, "['blocks']['wq']", (4, 64, 30)) == P(
+        None, None, None
+    )
+
+
+# ------------------------------------------------------------- pool specs
+def test_paged_pool_spec_shards_kv_head_axis():
+    spec = paged_pool_spec(MESH, (4, 33, 8, 4, 16))
+    assert spec == P(None, None, None, ROLLOUT_AXIS, None)
+
+
+def test_paged_pool_spec_nondivisible_heads_replicate():
+    assert paged_pool_spec(MESH, (4, 33, 8, 3, 16)) == P(None, None, None, None, None)
+
+
+def test_paged_pool_spec_rejects_wrong_rank():
+    with pytest.raises(ValueError, match="rank 5"):
+        paged_pool_spec(MESH, (33, 8, 4, 16))
+
+
+# ------------------------------------------------------------- subprocess
+def _run_subprocess(code: str, devices: int = 8) -> str:
+    prog = (
+        f"import os; os.environ['XLA_FLAGS']="
+        f"'--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(code)
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True,
+        text=True,
+        timeout=480,
+        env={
+            "PYTHONPATH": "src",
+            "PATH": "/usr/bin:/bin",
+            # forward so the child never probes for a TPU backend
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+        },
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_make_rollout_mesh_shapes_subprocess():
+    out = _run_subprocess(
+        """
+        import jax
+
+        from repro.launch.mesh import make_rollout_mesh
+
+        m = make_rollout_mesh(4)
+        assert m.shape == {"tensor": 4}, m.shape
+        assert m.size == 4
+        m8 = make_rollout_mesh(8)
+        assert m8.shape == {"tensor": 8}
+        try:
+            make_rollout_mesh(16)
+        except ValueError as e:
+            assert "xla_force_host_platform_device_count" in str(e)
+        else:
+            raise AssertionError("16 > 8 devices must raise")
+        print("MESH_OK")
+        """,
+        devices=8,
+    )
+    assert "MESH_OK" in out
+
+
+def test_paged_cache_shardings_placement_subprocess():
+    """Placing a real paged cache on a 4-way mesh: K/V pools split on the
+    KV-head axis (per-device shard = Hkv/4 heads), per-slot small state
+    replicated — for the dense and hybrid (conv/ssm state) families."""
+    out = _run_subprocess(
+        """
+        import dataclasses
+
+        import jax
+
+        from repro.configs import get_arch
+        from repro.distributed.sharding import paged_cache_shardings
+        from repro.launch.mesh import make_rollout_mesh
+        from repro.models import model as M
+
+        mesh = make_rollout_mesh(4)
+        for arch in ("qwen2-1.5b", "hymba-1.5b"):
+            cfg = dataclasses.replace(
+                get_arch(arch).reduced(), n_heads=4, n_kv_heads=4,
+                head_dim=16, d_model=64,
+            )
+            cache = M.init_paged_cache(cfg, 4, 64, 33, 8)
+            placed = jax.device_put(
+                cache, paged_cache_shardings(mesh, cache)
+            )
+            spec = placed["k"].sharding.spec
+            assert spec[3] == "tensor", (arch, spec)
+            shard = placed["k"].addressable_shards[0].data.shape
+            assert shard[3] == cfg.n_kv_heads // 4, (arch, shard)
+            assert placed["pos"].sharding.is_fully_replicated
+            if "conv" in placed:
+                assert placed["conv"].sharding.is_fully_replicated
+                assert placed["ssm"].sharding.is_fully_replicated
+        print("CACHE_OK")
+        """,
+        devices=8,
+    )
+    assert "CACHE_OK" in out
+
+
+def test_rollout_params_shardings_placement_subprocess():
+    """Shard-stored params: column dims split across the mesh (wq holds
+    1/N of its output columns per device), reduction-side weights
+    replicate."""
+    out = _run_subprocess(
+        """
+        import dataclasses
+
+        import jax
+
+        from repro.configs import get_arch
+        from repro.distributed.sharding import rollout_params_shardings
+        from repro.launch.mesh import make_rollout_mesh
+        from repro.models import model as M
+
+        cfg = dataclasses.replace(
+            get_arch("qwen2-1.5b").reduced(), n_heads=4, n_kv_heads=4,
+            head_dim=16, d_model=64,
+        )
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_rollout_mesh(4)
+        placed = jax.device_put(
+            params, rollout_params_shardings(mesh, params)
+        )
+        wq = placed["blocks"]["wq"]
+        assert wq.sharding.spec[-1] == "tensor", wq.sharding.spec
+        assert (
+            wq.addressable_shards[0].data.shape[-1] == wq.shape[-1] // 4
+        )
+        assert placed["blocks"]["wo"].sharding.is_fully_replicated
+        assert placed["embed"].sharding.is_fully_replicated
+        print("PARAMS_OK")
+        """,
+        devices=8,
+    )
+    assert "PARAMS_OK" in out

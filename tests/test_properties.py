@@ -2,7 +2,6 @@
 covered by the per-module suites."""
 import random
 
-import numpy as np
 from _optional import given, settings, st
 
 from repro.core.cost_model import CostModel, fit_coefficients

@@ -1,9 +1,7 @@
 """End-to-end async runtime tests: full rollout->reward->train cycles on a
 tiny model, staleness guarantees under load, fault tolerance, elasticity,
 checkpoint/restart."""
-import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
 from repro.core.types import reset_traj_ids
@@ -54,7 +52,7 @@ def test_runtime_instance_failure_recovers():
     # let some work start
     for _ in range(5):
         rt.tick()
-    returned = rt.fail_instance(1)
+    rt.fail_instance(1)
     # protocol reservations survive; the run must still complete on 1 inst
     rt.manager.check_invariants()
     rt.run(max_ticks=5000)

@@ -3,7 +3,6 @@ Fig. 13/15/16/17/18 benchmarks. The control plane is the REAL protocol;
 these tests assert the paper's qualitative claims hold in simulation."""
 import dataclasses
 
-import pytest
 
 from repro.core import PAPER_H20_QWEN3_30B, StrategySuite
 from repro.core.types import reset_traj_ids

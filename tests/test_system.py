@@ -1,13 +1,11 @@
 """End-to-end system behaviour tests: the paper's headline properties
 exercised through the full stack (protocol + coordinator + real rollout +
 reward + training), complementing the per-module suites."""
-import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
-from repro.core import StrategyConfig, StrategySuite
+from repro.core import StrategyConfig
 from repro.core.types import reset_traj_ids
 from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
 from repro.sim.engine import SimConfig, StaleFlowSim
