@@ -27,6 +27,11 @@ def main() -> None:
                     help="train step at which instance 0 dies (-1: never)")
     ap.add_argument("--vanilla", action="store_true",
                     help="use the vanilla strategy suite (ablation)")
+    ap.add_argument("--scheduler", choices=("tick", "threaded"),
+                    default="tick",
+                    help="tick: deterministic cooperative loop; threaded: "
+                         "rollout/reward/trainer on separate threads "
+                         "(the paper's asynchronous deployment shape)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch).reduced()
@@ -44,6 +49,7 @@ def main() -> None:
             lr=args.lr,
             filter_zero_signal=False,
             suite=StrategySuite.vanilla() if args.vanilla else StrategySuite.staleflow(),
+            scheduler=args.scheduler,
         ),
     )
 

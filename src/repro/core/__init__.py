@@ -7,13 +7,23 @@
 * ``speculative``        — speculative state P + Eq. 1 validation
 * ``strategies``         — routing / synchronization / migration (Alg. 2-5)
 * ``coordinator``        — snapshot->command cycle (Alg. 1)
+* ``lifecycle``          — trajectory-lifecycle event bus (the single
+                           write path for trajectory state, §5.1)
+* ``reward_server``      — the disaggregated reward phase (§2.1, Fig. 6)
 * ``trajectory_server``  — TS middleware (§5.1)
 * ``parameter_server``   — PS middleware + comm planning (§5.1, App. A)
 """
 from repro.core.commands import Abort, Command, Interrupt, Pull, Route
 from repro.core.coordinator import GroupBook, RolloutCoordinator, StalenessVerifier
 from repro.core.cost_model import PAPER_H20_QWEN3_30B, CostModel, fit_coefficients
+from repro.core.lifecycle import (
+    LifecycleEvent,
+    LifecycleEventKind,
+    RetiredPayloadStore,
+    TrajectoryLifecycle,
+)
 from repro.core.parameter_server import (
+    BackgroundPusher,
     CommPlan,
     ParameterServer,
     ReadWriteLock,
@@ -21,7 +31,8 @@ from repro.core.parameter_server import (
     replicated_pull_plan,
     sharded_push_plan,
 )
-from repro.core.snapshot import InstanceSnapshot, Snapshot, clone_snapshot
+from repro.core.reward_server import FnVerifier, RewardServer, RewardServerConfig
+from repro.core.snapshot import InstanceSnapshot, Snapshot, clone_snapshot, collect
 from repro.core.speculative import SpeculativeState
 from repro.core.staleness import (
     BufferState,

@@ -22,6 +22,11 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.commands import Abort, Command, CommandList, Interrupt, Pull, Route
 from repro.core.cost_model import CostModel
+from repro.core.lifecycle import (
+    LifecycleEvent,
+    LifecycleEventKind,
+    TrajectoryLifecycle,
+)
 from repro.core.snapshot import Snapshot, clone_snapshot
 from repro.core.speculative import SpeculativeState
 from repro.core.staleness import StalenessManager
@@ -56,11 +61,11 @@ class GroupBook:
     def on_rewarded(self, traj: Trajectory) -> Tuple[bool, List[int]]:
         """Returns (group_now_complete, surplus_member_ids_to_abort)."""
         with self._lock:
-            done = self._rewarded.setdefault(traj.group_id, set())
-            done.add(traj.traj_id)
             group = self.ts.groups.get(traj.group_id)
             if group is None:
-                return False, []
+                return False, []  # group already retired: no new entry
+            done = self._rewarded.setdefault(traj.group_id, set())
+            done.add(traj.traj_id)
             if len(done) == group.group_size:
                 surplus = [
                     tid
@@ -126,10 +131,25 @@ class RolloutCoordinator:
         suite: Optional[StrategySuite] = None,
         group_sampling: bool = True,
         group_filter=None,  # callable([Trajectory]) -> keep? (§4.3 filtering)
+        lifecycle: Optional[TrajectoryLifecycle] = None,
     ):
         self.manager = manager
         self.ts = ts
         self.cost_model = cost_model
+        # Lifecycle bus: protocol-side effects (Occupy, surplus/filter
+        # aborts, Consume retirement) are *published* as events; the TS,
+        # retired-payload store, and instance cleanup subscribe. When the
+        # caller provides no bus the coordinator creates a private one and
+        # attaches the TS, preserving the standalone (unit-test) behavior
+        # where aborts drop payloads and consume retires them directly.
+        if lifecycle is None:
+            lifecycle = TrajectoryLifecycle()
+            ts.attach(lifecycle)
+        self.lifecycle = lifecycle
+        # protocol Occupy runs off REWARDED events: the StalenessManager is
+        # effectively a bus subscriber, with the coordinator translating
+        # trajectory/group events into protocol keys on its behalf
+        lifecycle.subscribe(LifecycleEventKind.REWARDED, self._on_rewarded)
         # a fresh StrategyConfig per coordinator: a class-level default
         # instance would be silently shared (and mutated) across every
         # coordinator constructed without an explicit config
@@ -146,6 +166,29 @@ class RolloutCoordinator:
         # cost model's routing penalty consumes
         self._preempt_seen: Dict[int, int] = {}
         self._lock = threading.RLock()
+
+    @property
+    def lock(self) -> threading.RLock:
+        """The coordination critical-section lock. Schedulers hold it across
+        a whole snapshot->command->execute cycle so reward-side protocol
+        events (Occupy/aborts) cannot interleave mid-cycle."""
+        return self._lock
+
+    def _on_rewarded(self, e: LifecycleEvent) -> None:
+        """REWARDED bus subscriber: run protocol Occupy + surplus aborts.
+
+        A trajectory aborted while queued for reward is dead to the
+        protocol (its entry was already aborted) — do not resurrect its
+        status or group accounting.
+        """
+        if e.traj is not None and e.traj.status != TrajStatus.ABORTED:
+            self.on_trajectory_rewarded(e.traj)
+
+    def drop_instance(self, inst_id: int) -> None:
+        """An instance left the fleet (failure): forget its expectations."""
+        with self._lock:
+            self.spec.expectations.pop(inst_id, None)
+            self._preempt_seen.pop(inst_id, None)
 
     # --------------------------------------------------------- protocol keys
     def _protocol_key(self, traj: Trajectory) -> int:
@@ -263,12 +306,17 @@ class RolloutCoordinator:
             else:
                 member_ids = {key}
             self.manager.abort(key)
+            commanded: set = set()
             for inst, si in s.items():
                 hit = sorted(member_ids & si.resident())
                 if hit:
                     aborts.append(Abort(inst, tuple(hit)))
-            for tid in member_ids:
-                self.ts.drop(tid)
+                    commanded |= set(hit)
+            # resident members are aborted by the Abort *commands* (whose
+            # execution publishes the ABORTED events); the rest leave the
+            # lifecycle here
+            for tid in sorted(member_ids - commanded):
+                self.lifecycle.aborted(tid, self.ts.get(tid))
             if key >= GroupBook.GROUP_KEY_BASE and self.groups is not None:
                 self.groups.forget(key - GroupBook.GROUP_KEY_BASE)
         return aborts
@@ -282,6 +330,11 @@ class RolloutCoordinator:
         accum_traj_num) or Eq. 1 would reject every subsequent snapshot and
         the coordinator would deadlock. Only trajectories actually RESIDENT
         on an instance (running/waiting) change P; TS-resident ones don't.
+
+        The data-plane cleanup (TS drop, engine slot release, retired-
+        payload eviction) runs off the published ABORTED events — the
+        speculative fixup must precede the event because subscribers clear
+        the residency markers the fixup inspects.
         """
         for tid in traj_ids:
             t = self.ts.get(tid)
@@ -291,7 +344,7 @@ class RolloutCoordinator:
                 and t.status == TrajStatus.RUNNING
             ):
                 self.spec.apply(Abort(t.instance, (tid,)))
-            self.ts.drop(tid)
+            self.lifecycle.aborted(tid, t)
         return traj_ids
 
     def on_trajectory_rewarded(self, traj: Trajectory) -> List[int]:
@@ -344,9 +397,9 @@ class RolloutCoordinator:
                     members = sorted(self.groups.rewarded_members(gid))
                     traj_ids.extend(members)
                     for tid in members:
-                        self.ts.retire(tid)
+                        self.lifecycle.consumed(tid)
                     self.groups.forget(gid)
                 else:
                     traj_ids.append(key)
-                    self.ts.retire(key)
+                    self.lifecycle.consumed(key)
             return traj_ids

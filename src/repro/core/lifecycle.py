@@ -1,0 +1,217 @@
+"""Trajectory lifecycle event bus — the single write path for trajectory
+state (paper §5.1, Fig. 6 data flow as a *service* boundary).
+
+Before this module existed, trajectory lifecycle state was smeared across
+four hand-synchronized owners: ``TrajectoryServer`` status fields, the
+``StalenessManager`` (via coordinator calls), the coordinator's speculative
+state, and the runtime's private retired-payload dict. Every new consumer
+(reward workers, a threaded trainer, telemetry) had to be spliced into each
+call site by hand.
+
+Now there is ONE typed event stream::
+
+    ROUTED -> (INTERRUPTED ->)* COMPLETED -> REWARDED -> CONSUMED
+                                                      \\-> ABORTED
+
+and every party *subscribes*:
+
+* the TS applies payload/status transitions (``TrajectoryServer.attach``),
+* the coordinator runs protocol Occupy / surplus aborts / speculative-state
+  fixups off ``REWARDED`` and ``ABORTED`` (on behalf of the
+  ``StalenessManager`` it owns),
+* ``RetiredPayloadStore`` (below) retains rewarded payloads until training
+  consumes them — and, unlike the old private dict, drops payloads of
+  group-filtered members on ``ABORTED`` instead of leaking them,
+* the ``RewardServer`` scores off ``COMPLETED`` and publishes ``REWARDED``,
+* schedulers/benchmarks read the per-kind counters for telemetry.
+
+Dispatch is synchronous and reentrant (emitting from inside a handler is
+allowed — surplus aborts cascade off ``REWARDED``) and runs in the
+emitter's thread *without* a global bus lock, so the cooperative scheduler
+sees exactly the old deterministic call ordering while threaded services
+emit concurrently; cross-thread consistency is the subscribers' own locks
+(TS, coordinator, stores), never the bus's.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.types import Trajectory
+
+
+class LifecycleEventKind(enum.Enum):
+    """The six trajectory-lifecycle transitions (one per ``TrajStatus``
+    edge that crosses a service boundary)."""
+
+    ROUTED = "routed"            # TS -> instance (Route executed)
+    INTERRUPTED = "interrupted"  # instance -> TS (partial rollout / failure)
+    COMPLETED = "completed"      # generation finished, awaiting reward
+    REWARDED = "rewarded"        # reward landed -> protocol Occupy
+    CONSUMED = "consumed"        # retired by a training Consume
+    ABORTED = "aborted"          # discarded (surplus / filtering / restart)
+
+
+@dataclass(frozen=True)
+class LifecycleEvent:
+    """One lifecycle transition.
+
+    ``traj`` carries the payload when the emitter holds it; ``traj_id`` is
+    always set. ``inst`` is the instance that already applied the data-plane
+    side of the transition (command execution), or ``None`` for
+    protocol-initiated events whose data-plane cleanup is a *subscriber's*
+    job (e.g. surplus aborts fan out to every instance).
+    """
+
+    kind: LifecycleEventKind
+    traj_id: int
+    traj: Optional[Trajectory] = None
+    inst: Optional[int] = None
+    version: Optional[int] = None
+
+
+Subscriber = Callable[[LifecycleEvent], None]
+
+
+class TrajectoryLifecycle:
+    """Typed pub/sub bus over :class:`LifecycleEvent`.
+
+    Subscribers for a kind run in registration order, synchronously, in the
+    emitter's thread — event ordering IS the old call ordering, which is
+    what keeps the cooperative scheduler bit-for-bit deterministic.
+    """
+
+    def __init__(self) -> None:
+        self._subs: Dict[LifecycleEventKind, List[Subscriber]] = {
+            k: [] for k in LifecycleEventKind
+        }
+        self._lock = threading.RLock()
+        self.counts: Dict[LifecycleEventKind, int] = {
+            k: 0 for k in LifecycleEventKind
+        }
+
+    def subscribe(
+        self, kind: LifecycleEventKind, fn: Subscriber
+    ) -> Subscriber:
+        with self._lock:
+            self._subs[kind].append(fn)
+        return fn
+
+    def unsubscribe(self, kind: LifecycleEventKind, fn: Subscriber) -> None:
+        with self._lock:
+            if fn in self._subs[kind]:
+                self._subs[kind].remove(fn)
+
+    def emit(self, event: LifecycleEvent) -> None:
+        # The bus lock guards only the subscriber table and counters —
+        # dispatch runs OUTSIDE it, in the emitter's thread. Holding a
+        # global bus lock across handlers would order it against the
+        # domain locks handlers take (coordinator, instances) and deadlock
+        # the moment two services emit concurrently; instead, mutual
+        # exclusion is the subscribers' own responsibility (every stateful
+        # subscriber here is internally locked), and per-emitter event
+        # order is preserved because dispatch is synchronous.
+        with self._lock:
+            self.counts[event.kind] += 1
+            # snapshot: a handler may subscribe/unsubscribe re-entrantly
+            subs = list(self._subs[event.kind])
+        for fn in subs:
+            fn(event)
+
+    # ------------------------------------------------- typed emit shorthands
+    def routed(
+        self, traj: Trajectory, inst: int, version: Optional[int] = None
+    ) -> None:
+        self.emit(LifecycleEvent(
+            LifecycleEventKind.ROUTED, traj.traj_id, traj, inst, version
+        ))
+
+    def interrupted(
+        self, traj: Trajectory, inst: Optional[int] = None
+    ) -> None:
+        self.emit(LifecycleEvent(
+            LifecycleEventKind.INTERRUPTED, traj.traj_id, traj, inst
+        ))
+
+    def completed(self, traj: Trajectory, inst: Optional[int] = None) -> None:
+        self.emit(LifecycleEvent(
+            LifecycleEventKind.COMPLETED, traj.traj_id, traj, inst
+        ))
+
+    def rewarded(self, traj: Trajectory) -> None:
+        self.emit(LifecycleEvent(
+            LifecycleEventKind.REWARDED, traj.traj_id, traj
+        ))
+
+    def consumed(self, traj_id: int) -> None:
+        self.emit(LifecycleEvent(LifecycleEventKind.CONSUMED, traj_id))
+
+    def aborted(
+        self,
+        traj_id: int,
+        traj: Optional[Trajectory] = None,
+        inst: Optional[int] = None,
+    ) -> None:
+        self.emit(LifecycleEvent(
+            LifecycleEventKind.ABORTED, traj_id, traj, inst
+        ))
+
+
+class RetiredPayloadStore:
+    """Rewarded-payload retention, as a bus subscriber.
+
+    ``consume`` retires trajectories from the TS registry, but training
+    still needs their token payloads to build the batch. The store holds
+    every ``REWARDED`` payload until the trainer ``take``s it — and evicts
+    on ``ABORTED`` so group-filtered members (rewarded, then thrown away
+    whole-group) no longer leak, which the runtime's old private
+    ``_retired`` dict silently did.
+    """
+
+    def __init__(self, lifecycle: TrajectoryLifecycle):
+        self._lock = threading.Lock()
+        self._store: Dict[int, Trajectory] = {}
+        lifecycle.subscribe(LifecycleEventKind.REWARDED, self._on_rewarded)
+        lifecycle.subscribe(LifecycleEventKind.ABORTED, self._on_aborted)
+
+    def _on_rewarded(self, e: LifecycleEvent) -> None:
+        from repro.core.types import TrajStatus
+
+        # a trajectory aborted while its completion sat in the reward
+        # queue must not re-enter the store after its eviction fired
+        if e.traj is not None and e.traj.status != TrajStatus.ABORTED:
+            with self._lock:
+                self._store[e.traj_id] = e.traj
+
+    def _on_aborted(self, e: LifecycleEvent) -> None:
+        with self._lock:
+            self._store.pop(e.traj_id, None)
+
+    def take(self, traj_ids: List[int]) -> List[Trajectory]:
+        """Claim consumed payloads (missing IDs are skipped, matching the
+        old ``pop-if-present`` semantics under filtering races)."""
+        with self._lock:
+            return [
+                self._store.pop(tid)
+                for tid in traj_ids
+                if tid in self._store
+            ]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def ids(self) -> List[int]:
+        with self._lock:
+            return list(self._store)
+
+    def payloads(self) -> Dict[int, Trajectory]:
+        """Snapshot view (test/benchmark introspection)."""
+        with self._lock:
+            return dict(self._store)

@@ -127,3 +127,13 @@ Snapshot = Dict[int, InstanceSnapshot]
 
 def clone_snapshot(s: Snapshot) -> Snapshot:
     return {i: inst.clone() for i, inst in s.items()}
+
+
+def collect(instances: Dict[int, "object"]) -> Snapshot:
+    """Snapshot every instance of a fleet (runtime/sim shared helper).
+
+    Under the threaded scheduler the caller must hold the instances' locks
+    for the whole snapshot->execute cycle (``RuntimeCore.coordinator_cycle``
+    does) so the five fields are mutually consistent per Eq. 1.
+    """
+    return {i: inst.snapshot() for i, inst in instances.items()}

@@ -432,6 +432,17 @@ class StalenessManager:
         with self._lock:
             return len(self._index)
 
+    def max_consumed_staleness(self) -> int:
+        """Largest staleness over every consumed batch so far (0 when
+        nothing was consumed). The protocol guarantees this never exceeds
+        ``eta`` — asserted by the threaded-runtime smoke under real
+        concurrency."""
+        with self._lock:
+            return max(
+                (s for hist in self.consumed_staleness for s in hist),
+                default=0,
+            )
+
     # ------------------------------------------------------------ invariants
     def check_invariants(self) -> None:
         """Property-test hook: raises AssertionError on any protocol breach."""

@@ -14,6 +14,13 @@ through the TS as the paper prescribes (Fig. 10 top).
 
 Group sampling: one dataset prompt expands into ``group_size + redundancy``
 member trajectories sharing a ``group_id``.
+
+Lifecycle integration: ``attach(lifecycle)`` subscribes the TS to the
+trajectory-lifecycle bus so status transitions (``COMPLETED`` -> reward
+queue, ``INTERRUPTED`` -> routable pool, ``ABORTED`` -> drop, ``CONSUMED``
+-> retire) are driven by events instead of ad-hoc calls from every
+component that observes a transition. ``take`` (payload hand-off at Route
+execution) stays a direct call — it *returns* the payload.
 """
 from __future__ import annotations
 
@@ -47,6 +54,18 @@ class TrajectoryServer:
         self._group_counter = 0
         self._live_groups = 0
         self._exhausted = False
+
+    # -------------------------------------------------------------- lifecycle
+    def attach(self, lifecycle) -> None:
+        """Subscribe this TS to a ``TrajectoryLifecycle`` bus: events become
+        the single write path for trajectory status. Call once, by whoever
+        constructs the bus."""
+        from repro.core.lifecycle import LifecycleEventKind as K
+
+        lifecycle.subscribe(K.COMPLETED, lambda e: self.complete(e.traj_id))
+        lifecycle.subscribe(K.INTERRUPTED, lambda e: self.put_back(e.traj_id))
+        lifecycle.subscribe(K.ABORTED, lambda e: self.drop(e.traj_id))
+        lifecycle.subscribe(K.CONSUMED, lambda e: self.retire(e.traj_id))
 
     # ------------------------------------------------------------------ fill
     def refill(self) -> int:
@@ -99,20 +118,38 @@ class TrajectoryServer:
             t.status = TrajStatus.RUNNING
             return t
 
-    def put_back(self, traj_id: int) -> Trajectory:
-        """An Interrupt returned this trajectory (partial rollout state kept)."""
+    def try_take(self, traj_id: int) -> Optional[Trajectory]:
+        """``take`` that tolerates the trajectory having left the routable
+        pool since the Route was issued (aborted/completed by a concurrent
+        service thread) — returns ``None`` instead of raising."""
         with self._lock:
-            t = self.registry[traj_id]
+            t = self._available.pop(traj_id, None)
+            if t is None:
+                return None
+            t.status = TrajStatus.RUNNING
+            return t
+
+    def put_back(self, traj_id: int) -> Optional[Trajectory]:
+        """An Interrupt returned this trajectory (partial rollout state kept).
+        No-op (``None``) if the trajectory was dropped meanwhile — under the
+        threaded scheduler an abort can race the interrupt's event."""
+        with self._lock:
+            t = self.registry.get(traj_id)
+            if t is None:
+                return None
             t.status = TrajStatus.INTERRUPTED
             t.instance = None
             self._available[traj_id] = t
             return t
 
-    def complete(self, traj_id: int) -> Trajectory:
+    def complete(self, traj_id: int) -> Optional[Trajectory]:
         """Rollout finished; the trajectory leaves the routable pool for the
-        reward phase (still registered until consumed)."""
+        reward phase (still registered until consumed). No-op (``None``) if
+        already dropped (aborted earlier — surplus/filtering)."""
         with self._lock:
-            t = self.registry[traj_id]
+            t = self.registry.get(traj_id)
+            if t is None:
+                return None
             t.status = TrajStatus.GENERATED
             t.instance = None
             t.completed_at = self._clock()

@@ -13,7 +13,14 @@ from typing import List, Optional
 
 
 class TrajStatus(enum.Enum):
-    """Lifecycle of one trajectory (Fig. 1 / Fig. 6 data flow)."""
+    """Lifecycle of one trajectory (Fig. 1 / Fig. 6 data flow).
+
+    Status transitions are published on the ``TrajectoryLifecycle`` event
+    bus (``repro.core.lifecycle``): ROUTED -> RUNNING, INTERRUPTED ->
+    INTERRUPTED, COMPLETED -> GENERATED, REWARDED -> REWARDED, CONSUMED ->
+    CONSUMED, ABORTED -> ABORTED. ``TERMINAL`` states retire the registry
+    slot.
+    """
 
     PENDING = "pending"        # in TS, not yet routed / never started
     RUNNING = "running"        # on a rollout instance, generating
@@ -22,6 +29,9 @@ class TrajStatus(enum.Enum):
     REWARDED = "rewarded"      # reward computed -> protocol Occupy
     CONSUMED = "consumed"      # retired by a training Consume
     ABORTED = "aborted"        # discarded (redundancy surplus / filtering)
+
+
+TERMINAL_STATUSES = frozenset({TrajStatus.CONSUMED, TrajStatus.ABORTED})
 
 
 _traj_counter = itertools.count()

@@ -65,6 +65,16 @@ def main() -> None:
              "configs keep the GQA ratio with 1 KV head, which cannot "
              "split; --shards needs n_kv_heads %% shards == 0)",
     )
+    ap.add_argument(
+        "--score", action="store_true",
+        help="verify completions through a threaded RewardServer (worker "
+             "pool on the trajectory-lifecycle bus) overlapping decode — "
+             "the disaggregated reward phase, standalone",
+    )
+    ap.add_argument(
+        "--reward-workers", type=int, default=2,
+        help="reward worker threads with --score",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -90,6 +100,25 @@ def main() -> None:
         inst = create_backend("jax", 0, **kw)
     ds = ArithmeticDataset(args.requests, seed=2)
     n_requests = args.requests * args.group_size
+
+    reward_server = None
+    lifecycle = None
+    if args.score:
+        from repro.core import (
+            RewardServer,
+            RewardServerConfig,
+            TrajectoryLifecycle,
+        )
+        from repro.reward.verifier import RewardModel
+
+        lifecycle = TrajectoryLifecycle()
+        reward_server = RewardServer(
+            RewardModel(lambda prompt: ds.answer_for(prompt)),
+            lifecycle,
+            RewardServerConfig(n_workers=args.reward_workers),
+        )
+        reward_server.start()  # worker pool: scoring overlaps decode
+
     for gid, p in enumerate(ds.problems):
         inst.route_many([
             Trajectory(
@@ -106,6 +135,8 @@ def main() -> None:
         for t in inst.step():
             done.append(t)
             print(f"  '{tok_decode(t.prompt)}' -> '{tok_decode(t.response)}'")
+            if lifecycle is not None:
+                lifecycle.completed(t, inst.inst_id)
     dt = time.time() - t0
     print(f"\n{len(done)} requests, {inst.decode_tokens} tokens in {dt:.2f}s "
           f"({inst.decode_tokens/dt:.1f} tok/s, "
@@ -114,6 +145,15 @@ def main() -> None:
         print(f"prefix sharing: {inst.shared_prefix_hits} members admitted "
               f"off a shared prompt, {inst.prefill_tokens_saved} prefill "
               f"tokens saved")
+    if reward_server is not None:
+        reward_server.drain()
+        reward_server.stop()
+        correct = sum(1 for t in done if t.reward == 1.0)
+        pct = reward_server.latency_percentiles((0.5, 0.95))
+        print(f"reward server: {reward_server.scored} scored "
+              f"({correct} correct), queue latency "
+              f"p50={1e3 * (pct[0.5] or 0):.2f}ms "
+              f"p95={1e3 * (pct[0.95] or 0):.2f}ms")
 
 
 if __name__ == "__main__":

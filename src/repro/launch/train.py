@@ -39,6 +39,10 @@ def main() -> None:
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--compress-dp", action="store_true",
                     help="int8 gradient all-reduce demo (shard_map)")
+    ap.add_argument("--ps-push", action="store_true",
+                    help="publish each step's params to a ParameterServer "
+                         "through the BackgroundPusher: Push overlaps the "
+                         "next training step (Appendix A)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (only sensible on real HW)")
@@ -83,13 +87,30 @@ def main() -> None:
         make_dp_allreduce(mesh, compress=True)
         print("compressed DP all-reduce enabled (int8, global-scale psum)")
 
+    pusher = None
+    if args.ps_push:
+        from repro.core import BackgroundPusher, ParameterServer
+
+        ps = ParameterServer()
+        ps.push(params, 0)
+        pusher = BackgroundPusher(ps).start()
+        print("background PS push enabled (overlaps the next step)")
+
     for i in range(args.steps):
         t0 = time.time()
         params, opt, metrics = step(params, opt, batch)
         loss = float(metrics["loss"])
+        if pusher is not None:
+            pusher.push(params, i + 1)  # returns immediately
         print(f"step {i}: loss={loss:+.4f} "
               f"grad_norm={float(metrics['grad_norm']):.3f} "
               f"({time.time()-t0:.2f}s)")
+
+    if pusher is not None:
+        pusher.flush()
+        print(f"PS at version {pusher.ps.version} "
+              f"({pusher.pushes} background pushes landed)")
+        pusher.stop()
 
     if args.ckpt_dir:
         path = ckpt_lib.save_checkpoint(args.ckpt_dir, args.steps, params, opt)

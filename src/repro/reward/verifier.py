@@ -2,10 +2,14 @@
 
 CPU-only, stateless: score = 1.0 iff the decoded response begins with the
 exact expected answer (everything after '=' up to EOS). Mirrors the
-verifiable-reward setting (DAPO-Math / AIME) at toy scale. The reward
-server in ``repro.runtime`` wraps this with a worker pool and (optionally)
-a simulated verification latency so the overlap behavior of the
-disaggregated architecture is observable in benchmarks.
+verifiable-reward setting (DAPO-Math / AIME) at toy scale.
+
+This module is the *verifier*; the reward **service** is
+``repro.core.reward_server.RewardServer``, which wraps any object exposing
+``score(prompt_ids, response_ids) -> float`` with a bounded queue + worker
+pool on the trajectory-lifecycle bus (plus optional simulated verification
+latency, so the overlap behavior of the disaggregated architecture is
+observable in benchmarks). ``RewardModel`` below satisfies that protocol.
 """
 from __future__ import annotations
 

@@ -393,6 +393,10 @@ class ExecResult:
     aborted: int = 0
     pulls: List[Tuple[int, int]] = field(default_factory=list)  # (inst, version)
     returned: List[int] = field(default_factory=list)           # put_back ids
+    # Routes whose trajectory left the routable pool between issuance and
+    # execution (possible only under concurrent schedulers); the caller
+    # must rebalance the speculative state for these (inst, traj_id) pairs
+    skipped_routes: List[Tuple[int, int]] = field(default_factory=list)
 
 
 def execute_commands(
@@ -403,6 +407,7 @@ def execute_commands(
     *,
     now: float = 0.0,
     timers: Optional[Dict[str, float]] = None,
+    lifecycle=None,                       # TrajectoryLifecycle (optional)
 ) -> ExecResult:
     """Apply coordinator commands to any mix of engine backends.
 
@@ -416,6 +421,12 @@ def execute_commands(
     strictly in-order executor for *arbitrary* command sequences — with
     the coordinator's ordering (Alg. 1 emits Routes last within a cycle)
     the whole cycle still lands as one wave per instance.
+
+    With a ``lifecycle`` bus, command execution *publishes* the trajectory
+    transitions (``ROUTED`` / ``INTERRUPTED`` / ``ABORTED``, with ``inst``
+    set to mark the data plane as already handled) and the TS applies its
+    side as a subscriber; without one, the executor calls the TS directly
+    (legacy standalone mode).
     """
     res = ExecResult()
 
@@ -429,6 +440,9 @@ def execute_commands(
         for inst_id, wave in route_waves.items():
             t0 = time.perf_counter()
             instances[inst_id].route_many(wave, now)
+            if lifecycle is not None:
+                for traj in wave:
+                    lifecycle.routed(traj, inst_id, traj.v_traj)
             _timed("route", t0)
         route_waves.clear()
 
@@ -439,25 +453,37 @@ def execute_commands(
         if isinstance(cmd, Route):
             t0 = time.perf_counter()
             for tid in cmd.traj_ids:
-                traj = ts.take(tid)
+                if lifecycle is not None:
+                    traj = ts.try_take(tid)
+                    if traj is None:
+                        res.skipped_routes.append((cmd.inst, tid))
+                        continue
+                else:
+                    traj = ts.take(tid)
                 if traj.v_traj is None:
                     traj.v_traj = cmd.v_traj
                 route_waves.setdefault(cmd.inst, []).append(traj)
-            res.routed += len(cmd.traj_ids)
+                res.routed += 1
             _timed("route", t0)
             continue
         _flush_waves()
         if isinstance(cmd, Interrupt):
             t0 = time.perf_counter()
             for traj in inst.interrupt(cmd.traj_ids, now):
-                ts.put_back(traj.traj_id)
+                if lifecycle is not None:
+                    lifecycle.interrupted(traj, cmd.inst)
+                else:
+                    ts.put_back(traj.traj_id)
                 res.returned.append(traj.traj_id)
             res.interrupted += len(cmd.traj_ids)
             _timed("interrupt", t0)
         elif isinstance(cmd, Abort):
             inst.abort(cmd.traj_ids, now)
             for tid in cmd.traj_ids:
-                ts.drop(tid)
+                if lifecycle is not None:
+                    lifecycle.aborted(tid, inst=cmd.inst)
+                else:
+                    ts.drop(tid)
             res.aborted += len(cmd.traj_ids)
         elif isinstance(cmd, Pull):
             t0 = time.perf_counter()

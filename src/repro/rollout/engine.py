@@ -89,6 +89,7 @@ from repro.rollout.runners import (
     PrefillJob,
     PrefillRunner,
 )
+from repro.rollout.sampler import stream_key, stream_keys
 
 
 class RolloutInstance:
@@ -144,7 +145,12 @@ class RolloutInstance:
         self.admission_headroom_tokens = admission_headroom_tokens
         self.paged = paged
         self.kv_block_size = kv_block_size
-        self._key = jax.random.PRNGKey(seed + 7919 * inst_id)
+        # Per-slot PRNG key streams: the key for a trajectory's p-th
+        # sampled token is fold_in(fold_in(base, traj_id), p) — a pure
+        # function of (seed, traj_id, position). Deliberately NOT mixed
+        # with inst_id: a trajectory's stochastic stream must be identical
+        # wherever it decodes, so migration/compaction are invariant.
+        self._base_key = jax.random.PRNGKey(seed)
 
         # vlm caches lead with ``n_patches`` frontend positions per slot
         self._pos_offset = (
@@ -395,10 +401,14 @@ class RolloutInstance:
             return None
         members = [self.waiting.pop(0) for _ in range(g)]
         slots = [free.pop(0) for _ in range(g)]
-        keys = []
-        for _ in members:  # per-member key split, seed admission order
-            self._key, sub = jax.random.split(self._key)
-            keys.append(sub)
+        # per-member stream keys in one batched dispatch (position =
+        # n_generated, 0 for fresh members)
+        karr = stream_keys(
+            self._base_key,
+            jnp.asarray([m.traj_id for m in members], jnp.uint32),
+            jnp.asarray([m.n_generated for m in members], jnp.uint32),
+        )
+        keys = [karr[i] for i in range(g)]
         ids = [m.traj_id for m in members]
         shared, tails = self.allocator.alloc_group(ids, cache_len)
         planned_bytes += self.k5_local * bs * (len(shared) + len(tails))
@@ -501,7 +511,7 @@ class RolloutInstance:
                 self.complete_since_sync.add(nxt.traj_id)
                 self._overflow_done.append(nxt)
                 continue
-            self._key, sub = jax.random.split(self._key)
+            sub = self._sample_key(nxt)
             blocks = None
             if self.paged:
                 if fork_pk is not None:
@@ -560,6 +570,12 @@ class RolloutInstance:
         self._last_tokens = last
 
     # ----------------------------------------------------------------- step
+    def _sample_key(self, traj: Trajectory) -> jax.Array:
+        """Stream key for the trajectory's NEXT sampled token (position =
+        tokens generated so far, so a re-prefilled partial rollout resumes
+        its stream exactly where the interrupt cut it)."""
+        return stream_key(self._base_key, traj.traj_id, traj.n_generated)
+
     def _record_token(self, traj: Trajectory, token: int, blp: float) -> None:
         traj.response.append(token)
         traj.behavior_logprobs.append(blp)
@@ -622,7 +638,15 @@ class RolloutInstance:
         active = [i for i, t in enumerate(self.slots) if t is not None]
         if not active:
             return done
-        self._key, sub = jax.random.split(self._key)
+        keys = stream_keys(
+            self._base_key,
+            jnp.asarray(
+                [self.slots[s].traj_id for s in active], jnp.uint32
+            ),
+            jnp.asarray(
+                [self.slots[s].n_generated for s in active], jnp.uint32
+            ),
+        )
         if self.paged:
             tables = {
                 s: self.allocator.table(self.slots[s].traj_id) for s in active
@@ -630,7 +654,7 @@ class RolloutInstance:
             self.cache, self._last_tokens, result = (
                 self.paged_decode_runner.run(
                     self.params, self.cache, active, tables,
-                    self._last_tokens, sub,
+                    self._last_tokens, keys,
                 )
             )
         else:
@@ -639,7 +663,7 @@ class RolloutInstance:
                 self.cache,
                 active,
                 self._last_tokens,
-                sub,
+                keys,
                 compact=self.compact_decode,
             )
         self.decode_steps += 1

@@ -20,10 +20,11 @@ the CPU/TPU XLA backends both runners are **bitwise** equivalent per row to
 the seed single-row path — batched matmul rows do not interact (MoE expert
 capacity is the one documented exception: capacity is a function of batch
 size, so compaction can change token dropping at capacity limits; the
-runtime's reduced configs are dense). Sampling keys are split per
-trajectory at prefill (same order as the seed admission loop) and once per
-decode step (same as the seed), so greedy decoding reproduces the seed
-token stream exactly.
+runtime's reduced configs are dense). Sampling keys are per-trajectory
+*stream keys* (``repro.rollout.sampler.stream_keys``): token ``p`` of
+trajectory ``t`` always draws from ``fold_in(fold_in(base, t), p)``, so
+both greedy AND stochastic decoding are bit-for-bit invariant under slot
+compaction, batch composition, and migration.
 
 Both runners are pure data-plane helpers: they know nothing about the
 waiting queue, KV budget, or the coordination protocol — that policy stays
@@ -42,7 +43,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.distributed.ctx import gather_params
 from repro.models import model as M
-from repro.rollout.sampler import sample
+from repro.rollout.sampler import sample_rows
 
 Cache = Dict[str, Any]
 
@@ -62,6 +63,24 @@ def next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def pad_keys(keys: jax.Array, rows: int) -> jax.Array:
+    """Pad a (n, 2) per-slot key batch to ``rows`` rows by repeating the
+    first key (pad rows' draws are never read)."""
+    n = keys.shape[0]
+    if n >= rows:
+        return keys
+    return jnp.concatenate(
+        [keys, jnp.broadcast_to(keys[:1], (rows - n, keys.shape[1]))]
+    )
+
+
+def scatter_keys(keys: jax.Array, active: Sequence[int], rows: int) -> jax.Array:
+    """Place per-active-slot keys at their slot rows of a (rows, 2) key
+    batch (inactive rows repeat the first key; their draws are masked)."""
+    full = jnp.broadcast_to(keys[:1], (rows, keys.shape[1]))
+    return full.at[jnp.asarray(list(active), jnp.int32)].set(keys)
 
 
 def _row_index(name: str, rows: jax.Array) -> Tuple:
@@ -109,7 +128,7 @@ class PrefillJob:
 
     slot: int
     tokens: List[int]          # prompt + partial response (re-prefill)
-    key: jax.Array             # per-trajectory sampling key (seed split order)
+    key: jax.Array             # per-trajectory stream key (sampler.stream_key)
     blocks: Optional[List[int]] = None  # paged mode: the slot's block table
     # --- group admission (prefix sharing) ---
     extra_slots: List[int] = field(default_factory=list)
@@ -191,14 +210,10 @@ class PrefillRunner:
         self._jit_block_copy = jax.jit(
             M.copy_kv_blocks, static_argnames=("impl",), donate_argnums=(0,)
         )
-        # per-row sampling with per-trajectory keys, vmapped: bitwise equal
-        # to the seed's one-row sample() loop, but a single dispatch
+        # per-row sampling with per-trajectory stream keys: each member's
+        # first token is a function of (its key, its logits row) only
         self._jit_sample = jax.jit(
-            jax.vmap(
-                lambda lg, k: sample(
-                    lg[None], k, temperature=self.temperature
-                )
-            )
+            lambda lg, ks: sample_rows(lg, ks, temperature=self.temperature)
         )
 
     def bucket_of(self, n_tokens: int) -> int:
@@ -323,8 +338,8 @@ class PrefillRunner:
                 logits = logits[jnp.asarray(member_rows, jnp.int32)]
             keys = jnp.stack(member_keys)
             toks, blps = self._jit_sample(logits, keys)
-            toks_np = np.asarray(toks)[:, 0]
-            blps_np = np.asarray(blps)[:, 0]
+            toks_np = np.asarray(toks)
+            blps_np = np.asarray(blps)
             m = 0
             for job in group:
                 base = offsets[id(job)]
@@ -385,6 +400,9 @@ class DecodeRunner:
         self.temperature = temperature
         self._jit_decode = jax.jit(partial(M.decode_step, cfg))
         self._jit_gather = jax.jit(gather_rows)
+        self._jit_sample = jax.jit(
+            lambda lg, ks: sample_rows(lg, ks, temperature=self.temperature)
+        )
         # fused row-gather + decode per (bucket, n_active): one dispatch
         # per steady-state step
         self._compact_steps: Dict[Tuple[int, int], Any] = {}
@@ -449,7 +467,7 @@ class DecodeRunner:
         cache: Cache,
         active: Sequence[int],
         last_tokens: jax.Array,      # (max_slots,)
-        key: jax.Array,              # one step key (seed split order)
+        keys: jax.Array,             # (n_active, 2) per-slot stream keys
         *,
         compact: bool = True,
     ) -> Tuple[Cache, jax.Array, DecodeResult]:
@@ -457,13 +475,16 @@ class DecodeRunner:
 
         Returns (cache, last_tokens, result); ``last_tokens`` rows of
         inactive slots are preserved, as are their cache positions.
+        ``keys`` are per-slot trajectory stream keys aligned with
+        ``active`` — pad/inactive rows reuse the first key, their draws
+        are discarded.
         """
         active = list(active)
         n = len(active)
         bucket = self.max_slots if not compact else self.bucket_of(n)
         if bucket >= self.max_slots:
             cache = self.flush(cache)
-            return self._run_full(params, cache, active, last_tokens, key)
+            return self._run_full(params, cache, active, last_tokens, keys)
 
         rows_key = tuple(active)
         if self._rows != rows_key:
@@ -480,7 +501,8 @@ class DecodeRunner:
         logits, self._compact, pos_live = self._compact_step(bucket, n)(
             params, last_tokens, self._compact, self._rows_arr
         )
-        tokens, blps = sample(logits, key, temperature=self.temperature)
+        keys_pad = pad_keys(keys, bucket)
+        tokens, blps = self._jit_sample(logits, keys_pad)
         last_tokens = last_tokens.at[self._live_arr].set(tokens[:n])
         return cache, last_tokens, DecodeResult(
             slots=active,
@@ -489,7 +511,7 @@ class DecodeRunner:
             positions=np.asarray(pos_live),
         )
 
-    def _run_full(self, params, cache, active, last_tokens, key):
+    def _run_full(self, params, cache, active, last_tokens, keys):
         """Seed path: decode all ``max_slots`` rows, mask inactive ones."""
         prev_pos = cache["pos"]
         logits, new_cache = self._jit_decode(params, last_tokens, cache)
@@ -497,7 +519,8 @@ class DecodeRunner:
         mask[active] = True
         mask_j = jnp.asarray(mask)
         new_cache["pos"] = jnp.where(mask_j, new_cache["pos"], prev_pos)
-        tokens, blps = sample(logits, key, temperature=self.temperature)
+        keys_full = scatter_keys(keys, active, self.max_slots)
+        tokens, blps = self._jit_sample(logits, keys_full)
         last_tokens = jnp.where(mask_j, tokens, last_tokens)
         tokens_np = np.asarray(tokens)
         blps_np = np.asarray(blps)
@@ -546,6 +569,9 @@ class PagedDecodeRunner:
         self.impl = impl
         self.pool_sharding = pool_sharding
         self._steps: Dict[Tuple[int, int], Any] = {}
+        self._jit_sample = jax.jit(
+            lambda lg, ks: sample_rows(lg, ks, temperature=self.temperature)
+        )
 
     def bucket_of(self, n_active: int) -> int:
         return min(next_pow2(max(n_active, 1)), self.max_slots)
@@ -594,7 +620,7 @@ class PagedDecodeRunner:
         active: Sequence[int],
         block_tables: Dict[int, Sequence[int]],   # slot -> block table
         last_tokens: jax.Array,                   # (max_slots,)
-        key: jax.Array,                           # one step key
+        keys: jax.Array,                          # (n_active, 2) stream keys
     ) -> Tuple[Cache, jax.Array, DecodeResult]:
         """One decode step over ``active`` slots. Returns
         (cache, last_tokens, result)."""
@@ -611,7 +637,7 @@ class PagedDecodeRunner:
             params, last_tokens, cache,
             jnp.asarray(rows, jnp.int32), live, jnp.asarray(tables),
         )
-        tokens, blps = sample(logits, key, temperature=self.temperature)
+        tokens, blps = self._jit_sample(logits, pad_keys(keys, bucket))
         last_tokens = last_tokens.at[live].set(tokens[:n])
         return cache, last_tokens, DecodeResult(
             slots=active,

@@ -95,9 +95,11 @@ class ShardedPagedDecodeRunner(PagedDecodeRunner):
         super().__init__(*args, impl="ref", **kw)
         self.mesh = mesh
 
-    def run(self, params, cache, active, block_tables, last_tokens, key):
+    def run(self, params, cache, active, block_tables, last_tokens, keys):
         with ctx.rollout_sharding(self.mesh):
-            return super().run(params, cache, active, block_tables, last_tokens, key)
+            return super().run(
+                params, cache, active, block_tables, last_tokens, keys
+            )
 
 
 def _check_mesh(mesh: Mesh, shard_count: int) -> None:

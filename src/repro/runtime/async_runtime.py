@@ -1,13 +1,25 @@
 """End-to-end asynchronous RL runtime (the live counterpart of Fig. 6).
 
-Wires every component: trajectory server, parameter server, staleness
-manager, rollout coordinator, N rollout instances (real JAX engines),
-rule-based reward, and the training worker — and drives them with a
-cooperative scheduler whose interleaving mirrors the disaggregated
-deployment:
+``AsyncRLRuntime`` is the user-facing facade over the service-oriented data
+plane:
 
-  tick := [instances decode] -> [rewards] -> [coordinator cycle]
-          -> [trainer consume/step/push] -> [TS refill]
+* ``repro.runtime.core.RuntimeCore`` — the wired service graph (trajectory
+  server, parameter server, staleness manager, coordinator, reward server,
+  N rollout instances, trainer) connected by the trajectory-lifecycle
+  event bus;
+* ``repro.runtime.schedulers`` — the control loop, selected by
+  ``RuntimeConfig.scheduler``:
+
+  - ``"tick"`` (default): the deterministic cooperative loop whose
+    interleaving mirrors the disaggregated deployment::
+
+        tick := [instances decode] -> [rewards] -> [coordinator cycle]
+                -> [trainer consume/step/push] -> [TS refill]
+
+  - ``"threaded"``: rollout instances, reward workers, the coordinator,
+    and the trainer each on their own thread, with Push overlapped behind
+    the next training step — the actually-asynchronous shape of the
+    paper's architecture, with the same staleness guarantees.
 
 Rollout instances only sync parameters when the coordinator issues Pull
 (synchronization strategy), so training-vs-rollout version gaps — i.e.
@@ -17,384 +29,65 @@ runtime with tiny models; cluster-scale *throughput* claims use the
 discrete-event simulator instead (repro.sim).
 
 Fault tolerance & elasticity (DESIGN.md §3):
-* ``fail_instance``  — drop a replica; its resident trajectories return to
-  the TS (payloads live in Trajectory objects, migration is metadata-only)
-  and their protocol reservations survive untouched.
-* ``add_instance``   — elastic scale-up; the newcomer Pulls from the PS.
-* ``checkpoint``/``restore_runtime`` — params + optimizer + protocol +
-  in-flight TS payloads; restart may change instance count (elastic).
+* ``fail_instance``  — drop a replica (legal mid-decode under the threaded
+  scheduler); its resident trajectories return to the TS via INTERRUPTED
+  lifecycle events and their protocol reservations survive untouched.
+* ``add_instance``   — elastic scale-up; the newcomer Pulls from the PS
+  and (threaded) gets its own decode thread at the next supervisor pass.
+* ``checkpoint``/``restore`` — params + optimizer + protocol + service
+  state (reward queue, retired payloads); restart may change instance
+  count (elastic).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Callable, List, Optional
 
 from repro.configs.base import ArchConfig
-from repro.core import (
-    CostModel,
-    ParameterServer,
-    RolloutCoordinator,
-    StalenessManager,
-    StrategyConfig,
-    StrategySuite,
-    TrajectoryServer,
-    prefix_routing_strategy,
-    routing_strategy,
+from repro.runtime.config import RuntimeConfig, StepRecord
+from repro.runtime.core import RuntimeCore
+from repro.runtime.schedulers import (
+    CooperativeScheduler,
+    ThreadedScheduler,
+    make_scheduler,
 )
-from repro.core.types import Trajectory, TrajStatus
-from repro.data.tasks import ArithmeticDataset
-from repro.models import model as M
-from repro.reward.verifier import RewardModel
-from repro.rl.advantages import group_advantages
-from repro.rollout.backend import EngineBackend, create_backend, execute_commands
-from repro.training import checkpoint as ckpt_lib
-from repro.training.optimizer import AdamWConfig, init_opt_state
-from repro.training.train_step import make_rl_train_step
+
+__all__ = [
+    "AsyncRLRuntime",
+    "RuntimeConfig",
+    "StepRecord",
+    "CooperativeScheduler",
+    "ThreadedScheduler",
+]
 
 
-@dataclass
-class RuntimeConfig:
-    eta: int = 1
-    batch_size: int = 4                # protocol entries (groups) per step
-    group_size: int = 2
-    n_instances: int = 2
-    max_slots: int = 4
-    max_len: int = 64
-    max_new_tokens: int = 12
-    total_steps: int = 8
-    lr: float = 1e-3
-    temperature: float = 1.0
-    seed: int = 0
-    n_prompts: int = 4096
-    objective: str = "dapo"
-    filter_zero_signal: bool = False   # DAPO group filtering (Fig. 8c)
-    suite: StrategySuite = field(default_factory=StrategySuite.staleflow)
-    strategy_cfg: StrategyConfig = field(default_factory=StrategyConfig)
-    snapshot_every: int = 1            # coordinator cycle cadence (ticks)
-    decode_steps_per_tick: int = 4
-    reward_fn: Optional[Callable] = None  # (prompt_ids, response_ids) -> float
-    paged_kv: bool = False             # block-paged KV cache on the engines
-    kv_block_size: int = 16            # tokens per KV block when paged
-    # Prefix sharing (paged only): group members prefill their shared
-    # prompt once, full prompt blocks are refcount-shared across member
-    # block tables, and routing turns group-affine so members land where
-    # the prefix lives (StrategySuite.prefix_sharing routing).
-    share_prefix: bool = True
-    # Devices per rollout instance (paged only): > 1 spans each instance
-    # across a ("tensor",) mesh via the sharded backend — params and the
-    # paged K/V pool head-sharded, per-device memory accounting. All
-    # instances share one mesh over the first ``rollout_shards`` local
-    # devices (the same way single-device instances share device 0).
-    rollout_shards: int = 1
+class AsyncRLRuntime(RuntimeCore):
+    """RuntimeCore + the scheduler named by ``rcfg.scheduler``."""
 
-
-@dataclass
-class StepRecord:
-    step: int
-    mean_reward: float
-    loss: float
-    mean_is_ratio: float
-    staleness_hist: List[int]
-    wall_time: float
-
-
-class AsyncRLRuntime:
     def __init__(self, cfg: ArchConfig, rcfg: RuntimeConfig):
-        self.cfg = cfg
-        self.rcfg = rcfg
-        key = jax.random.PRNGKey(rcfg.seed)
-        self.params = M.init_params(cfg, key)
-        self.opt_state = init_opt_state(self.params)
-        self.train_step = jax.jit(
-            make_rl_train_step(cfg, AdamWConfig(lr=rcfg.lr), objective=rcfg.objective)
-        )
-
-        self.dataset = ArithmeticDataset(rcfg.n_prompts, seed=rcfg.seed)
-        if rcfg.reward_fn is not None:
-            self.reward_model = type(
-                "CustomReward", (), {"score": staticmethod(rcfg.reward_fn)}
-            )()
-        else:
-            self.reward_model = RewardModel(
-                lambda prompt: self.dataset.answer_for(prompt)
-            )
-        self.manager = StalenessManager(batch_size=rcfg.batch_size, eta=rcfg.eta)
-        self.ts = TrajectoryServer(
-            self.dataset.prompt_source(),
-            capacity_groups=(rcfg.eta + 1) * rcfg.batch_size,
-            group_size=rcfg.group_size,
-            max_new_tokens=rcfg.max_new_tokens,
-        )
-        self.ps = ParameterServer()
-        self.ps.push(self.params, 0)
-
-        if rcfg.rollout_shards > 1 and not rcfg.paged_kv:
-            raise ValueError(
-                "rollout_shards > 1 requires paged_kv=True (the sharded "
-                "backend shards the paged K/V pool)"
-            )
-        self._rollout_mesh = None
-        if rcfg.rollout_shards > 1:
-            from repro.launch.mesh import make_rollout_mesh
-
-            self._rollout_mesh = make_rollout_mesh(rcfg.rollout_shards)
-        k5 = 2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
-        # kv_budget is per device: the pod-wide pool (max_len * max_slots
-        # worth of k5-sized tokens) spreads evenly over the head shards
-        self.cost_model = CostModel(
-            k1=1e-12, k2=1e-3, k3=1e-4, k4=5e-3, k5=k5,
-            kv_budget=k5 * rcfg.max_len * rcfg.max_slots
-            / rcfg.rollout_shards,
-            block_size=rcfg.kv_block_size if rcfg.paged_kv else 1,
-            shard_count=rcfg.rollout_shards,
-        )
-        group_filter = None
-        if rcfg.filter_zero_signal:
-            def group_filter(members: List[Trajectory]) -> bool:
-                rs = [m.reward for m in members if m.reward is not None]
-                return len(set(rs)) > 1
-        suite = rcfg.suite
-        if (
-            rcfg.share_prefix
-            and rcfg.paged_kv
-            and rcfg.group_size > 1
-            and suite.routing is routing_strategy
-        ):
-            # group-affine routing: members of one sampling group land on a
-            # single instance so its paged engine prefills the prompt once
-            import dataclasses as _dc
-
-            suite = _dc.replace(suite, routing=prefix_routing_strategy)
-        self.coordinator = RolloutCoordinator(
-            self.manager,
-            self.ts,
-            cost_model=self.cost_model,
-            cfg=rcfg.strategy_cfg,
-            suite=suite,
-            group_sampling=rcfg.group_size > 1,
-            group_filter=group_filter,
-        )
-
-        self.instances: Dict[int, EngineBackend] = {}
-        for i in range(rcfg.n_instances):
-            self.instances[i] = self._new_instance(i)
-        self.coordinator.spec.resync(self._snapshots())
-
-        self.history: List[StepRecord] = []
-        self.model_version = 0
-        self._tick = 0
-        self._retired: Dict[int, Trajectory] = {}
-        self.ts.refill()
-        # telemetry for the time-breakdown benchmark
-        self.timers: Dict[str, float] = {
-            "decode": 0.0, "prefill": 0.0, "reward": 0.0, "train": 0.0,
-            "coordinator": 0.0, "pull": 0.0, "route": 0.0, "interrupt": 0.0,
-        }
-
-    # -------------------------------------------------------------- plumbing
-    def _new_instance(self, inst_id: int) -> EngineBackend:
-        kw = dict(
-            cfg=self.cfg,
-            params=self.ps.pull()[0],
-            version=self.ps.version,
-            max_slots=self.rcfg.max_slots,
-            max_len=self.rcfg.max_len,
-            kv_bytes_per_token=self.cost_model.k5,
-            kv_budget=self.cost_model.kv_budget,
-            temperature=self.rcfg.temperature,
-            seed=self.rcfg.seed,
-            paged=self.rcfg.paged_kv,
-            kv_block_size=self.rcfg.kv_block_size,
-            share_prefix=self.rcfg.share_prefix,
-        )
-        if self.rcfg.rollout_shards > 1:
-            return create_backend(
-                "sharded",
-                inst_id,
-                shard_count=self.rcfg.rollout_shards,
-                mesh=self._rollout_mesh,
-                **kw,
-            )
-        return create_backend("jax", inst_id, **kw)
-
-    def _snapshots(self):
-        return {i: inst.snapshot() for i, inst in self.instances.items()}
-
-    # ------------------------------------------------------------- commands
-    def _execute(self, commands) -> None:
-        execute_commands(
-            commands, self.instances, self.ts, self.ps, timers=self.timers
-        )
-
-    # ----------------------------------------------------------- the trainer
-    def _train_once(self) -> Optional[StepRecord]:
-        t0 = time.perf_counter()
-        if not self.manager.ready():
-            return None
-        batch_ids = self.coordinator.try_consume()
-        if batch_ids is None:
-            return None
-        # consume retires trajectories from the TS registry; payloads were
-        # retained in ``self._retired`` at reward time
-        trajs = [self._retired.pop(tid) for tid in batch_ids if tid in self._retired]
-        batch = self._batch_from_trajs(trajs)
-        if batch is None:
-            return None
-        self.params, self.opt_state, metrics = self.train_step(
-            self.params, self.opt_state, batch
-        )
-        self.model_version += 1
-        self.ps.push(self.params, self.model_version)
-        self.timers["train"] += time.perf_counter() - t0
-        rec = StepRecord(
-            step=self.model_version,
-            mean_reward=float(np.mean(batch["_rewards"])),
-            loss=float(metrics["loss"]),
-            mean_is_ratio=float(metrics.get("mean_is_ratio", 1.0)),
-            staleness_hist=list(self.manager.consumed_staleness[-1]),
-            wall_time=time.perf_counter(),
-        )
-        self.history.append(rec)
-        return rec
-
-    def _batch_from_trajs(self, trajs: List[Trajectory]) -> Optional[Dict[str, Any]]:
-        trajs = [t for t in trajs if t is not None and t.response]
-        if not trajs:
-            return None
-        max_t = max(t.length for t in trajs)
-        b = len(trajs)
-        tokens = np.zeros((b, max_t), np.int32)
-        blp = np.zeros((b, max_t), np.float32)
-        mask = np.zeros((b, max_t), np.float32)
-        groups, rewards = [], []
-        for i, t in enumerate(trajs):
-            seq = list(t.prompt) + list(t.response)
-            tokens[i, : len(seq)] = seq
-            plen = len(t.prompt)
-            for j, lp in enumerate(t.behavior_logprobs):
-                if plen + j < max_t:
-                    blp[i, plen + j] = lp
-                    mask[i, plen + j] = 1.0
-            groups.append(t.group_id)
-            rewards.append(t.reward or 0.0)
-        return {
-            "tokens": jnp.asarray(tokens),
-            "behavior_logprobs": jnp.asarray(blp),
-            "mask": jnp.asarray(mask),
-            "advantages": jnp.asarray(group_advantages(rewards, groups)),
-            "_rewards": rewards,
-        }
+        super().__init__(cfg, rcfg)
+        self.scheduler = make_scheduler(rcfg.scheduler, self)
 
     # ------------------------------------------------------------- main loop
-    def run(self, max_ticks: int = 100000, progress: Optional[Callable] = None):
-        seen = len(self.history)
-        while self.model_version < self.rcfg.total_steps and self._tick < max_ticks:
-            self.tick()
-            while progress and seen < len(self.history):
-                progress(self.history[seen])
-                seen += 1
-        return self.history
+    def run(
+        self,
+        max_ticks: int = 100000,
+        progress: Optional[Callable[[StepRecord], None]] = None,
+    ) -> List[StepRecord]:
+        return self.scheduler.run(max_ticks, progress)
 
     def tick(self) -> None:
-        self._tick += 1
-        rcfg = self.rcfg
+        """One cooperative tick (deterministic single-thread semantics).
 
-        # 1) rollout: each instance advances a few decode steps
-        for inst in list(self.instances.values()):
-            t0 = time.perf_counter()
-            done: List[Trajectory] = []
-            for _ in range(rcfg.decode_steps_per_tick):
-                done.extend(inst.step())
-            self.timers["decode"] += time.perf_counter() - t0
-            # 2) reward + protocol Occupy
-            for traj in done:
-                if self.ts.get(traj.traj_id) is None:
-                    continue  # aborted earlier this tick (surplus/filtering)
-                t1 = time.perf_counter()
-                self.ts.complete(traj.traj_id)
-                traj.reward = self.reward_model.score(
-                    list(traj.prompt), list(traj.response)
-                )
-                self.timers["reward"] += time.perf_counter() - t1
-                self._retired[traj.traj_id] = traj
-                to_abort = self.coordinator.on_trajectory_rewarded(traj)
-                for tid in to_abort:
-                    for other in self.instances.values():
-                        other.abort([tid])
-                    self.ts.drop(tid)
+        Only meaningful on the ``"tick"`` scheduler — the threaded
+        scheduler owns its loops and cannot be single-stepped.
+        """
+        if not isinstance(self.scheduler, CooperativeScheduler):
+            raise RuntimeError(
+                "tick() requires the cooperative scheduler "
+                "(RuntimeConfig.scheduler='tick')"
+            )
+        self.scheduler.tick()
 
-        # 3) coordinator snapshot->command cycle
-        if self._tick % rcfg.snapshot_every == 0:
-            t0 = time.perf_counter()
-            commands = self.coordinator.step(self._snapshots(), self.ps.version)
-            self.timers["coordinator"] += time.perf_counter() - t0
-            self._execute(commands)
-
-        # 4) trainer
-        self._train_once()
-
-        # 5) keep the TS full
-        self.ts.refill()
-
-    # --------------------------------------------------------- fault/elastic
-    def fail_instance(self, inst_id: int) -> List[int]:
-        """Simulate a replica failure. Returns trajectory IDs returned to TS."""
-        inst = self.instances.pop(inst_id)
-        snap = inst.snapshot()
-        resident = sorted(snap.run_trajs) + sorted(snap.wait_trajs)
-        for tid in resident:
-            traj = self.ts.get(tid)
-            if traj is not None:
-                # the replica is gone: clear the dead-instance affinity and
-                # the RUNNING status, or _abort_members would mistake these
-                # TS-resident payloads for live residents of the dead id
-                traj.status = TrajStatus.INTERRUPTED
-                traj.instance = None
-            self.ts.put_back(tid)
-        # speculative state must forget the dead instance
-        self.coordinator.spec.expectations.pop(inst_id, None)
-        return resident
-
-    def add_instance(self, inst_id: int) -> None:
-        self.instances[inst_id] = self._new_instance(inst_id)
-        self.coordinator.spec.resync({inst_id: self.instances[inst_id].snapshot()})
-
-    # ------------------------------------------------------------ checkpoint
-    def checkpoint(self, directory: str) -> str:
-        return ckpt_lib.save_checkpoint(
-            directory,
-            self.model_version,
-            self.params,
-            self.opt_state,
-            extra_meta={"model_version": self.model_version, "tick": self._tick},
-            protocol_state=ckpt_lib.dump_protocol_state(self.manager),
-        )
-
-    def restore(self, directory: str) -> None:
-        params, opt, meta = ckpt_lib.restore_checkpoint(
-            directory, self.params, self.opt_state
-        )
-        self.params = jax.tree_util.tree_map(jnp.asarray, params)
-        self.opt_state = jax.tree_util.tree_map(jnp.asarray, opt)
-        self.model_version = meta["extra"]["model_version"]
-        self.manager = ckpt_lib.load_protocol_state(meta["protocol"])
-        self.coordinator.manager = self.manager
-        self.coordinator.verifier.manager = self.manager
-        # In-flight payloads (TS / rollout slots / reward queue) died with
-        # the old process; their protocol entries would leave buffers Stuck
-        # forever. Abort them — the work is simply re-generated, and the
-        # staleness bound is unaffected (fresh trajectories get fresh
-        # reservations). Consumed history is preserved.
-        for key in self.manager.tracked_keys():
-            self.manager.abort(key)
-        self._retired.clear()
-        self.manager.check_invariants()
-        self.ps.push(self.params, self.model_version)
-        for inst in self.instances.values():
-            inst.pull(self.params, self.model_version)
-        self.coordinator.spec.resync(self._snapshots())
+    # back-compat alias (pre-service-layer name)
+    def _train_once(self) -> Optional[StepRecord]:
+        return self.train_once()

@@ -1,0 +1,67 @@
+"""Runtime configuration + per-step record (shared by core & schedulers)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core import StrategyConfig, StrategySuite
+
+
+@dataclass
+class RuntimeConfig:
+    eta: int = 1
+    batch_size: int = 4                # protocol entries (groups) per step
+    group_size: int = 2
+    n_instances: int = 2
+    max_slots: int = 4
+    max_len: int = 64
+    max_new_tokens: int = 12
+    total_steps: int = 8
+    lr: float = 1e-3
+    temperature: float = 1.0
+    seed: int = 0
+    n_prompts: int = 4096
+    objective: str = "dapo"
+    filter_zero_signal: bool = False   # DAPO group filtering (Fig. 8c)
+    suite: StrategySuite = field(default_factory=StrategySuite.staleflow)
+    strategy_cfg: StrategyConfig = field(default_factory=StrategyConfig)
+    snapshot_every: int = 1            # coordinator cycle cadence (ticks)
+    decode_steps_per_tick: int = 4
+    reward_fn: Optional[Callable] = None  # (prompt_ids, response_ids) -> float
+    paged_kv: bool = False             # block-paged KV cache on the engines
+    kv_block_size: int = 16            # tokens per KV block when paged
+    # Prefix sharing (paged only): group members prefill their shared
+    # prompt once, full prompt blocks are refcount-shared across member
+    # block tables, and routing turns group-affine so members land where
+    # the prefix lives (StrategySuite.prefix_sharing routing).
+    share_prefix: bool = True
+    # Devices per rollout instance (paged only): > 1 spans each instance
+    # across a ("tensor",) mesh via the sharded backend — params and the
+    # paged K/V pool head-sharded, per-device memory accounting. All
+    # instances share one mesh over the first ``rollout_shards`` local
+    # devices (the same way single-device instances share device 0).
+    rollout_shards: int = 1
+    # ------------------------------------------------------ service layer
+    # scheduler: "tick" = deterministic cooperative single-thread loop
+    # (seed semantics, bit-for-bit reproducible); "threaded" = rollout
+    # instances, reward workers, coordinator, and trainer on separate
+    # threads (the paper's actually-asynchronous deployment shape).
+    scheduler: str = "tick"
+    reward_workers: int = 2            # threaded reward-server pool size
+    reward_queue_capacity: int = 256   # bounded: full queue back-pressures
+    reward_latency: float = 0.0        # simulated per-score verifier latency
+    # threaded-scheduler pacing: seconds between coordinator cycles
+    coordinator_interval_s: float = 0.002
+    # threaded-scheduler wall-clock budget: run() stops (with a warning)
+    # if total_steps has not landed by then
+    threaded_wall_timeout_s: float = 300.0
+
+
+@dataclass
+class StepRecord:
+    step: int
+    mean_reward: float
+    loss: float
+    mean_is_ratio: float
+    staleness_hist: List[int]
+    wall_time: float

@@ -1,0 +1,505 @@
+"""Scheduler-agnostic runtime core: the wired service graph of Fig. 6.
+
+``RuntimeCore`` owns every component of the disaggregated deployment —
+trajectory server, parameter server, staleness manager, coordinator, reward
+server, N rollout instances, the training worker — and the **trajectory
+lifecycle bus** that connects them, but no control loop. Control loops live
+in ``repro.runtime.schedulers``:
+
+* ``CooperativeScheduler`` — the deterministic single-threaded tick
+  (decode -> reward -> coordinate -> train -> refill), preserving the seed
+  runtime's interleaving bit-for-bit;
+* ``ThreadedScheduler``    — rollout instances, reward workers, the
+  coordinator, and the trainer on separate threads, which is what the
+  paper's architecture actually runs.
+
+Service wiring (everything below is a bus subscription, not a call chain):
+
+    instance.step() completes T
+      -> lifecycle.COMPLETED ─ TS marks GENERATED
+                             └ RewardServer scores (inline or worker pool)
+           -> lifecycle.REWARDED ─ RetiredPayloadStore retains payload
+                                 └ coordinator: protocol Occupy; surplus ->
+                -> lifecycle.ABORTED ─ TS drops
+                                     ├ RetiredPayloadStore evicts
+                                     └ core aborts on every instance
+    coordinator.try_consume()
+      -> lifecycle.CONSUMED ─ TS retires registry slots
+
+Thread safety: every instance is wrapped in a ``LockedBackend``; the
+coordinator's lock is held across a whole snapshot->command->execute cycle
+(with all instance locks), so Eq. 1's speculative-state validation holds
+under real concurrency exactly as it does cooperatively.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import ExitStack
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    Abort,
+    CostModel,
+    ParameterServer,
+    RetiredPayloadStore,
+    RewardServer,
+    RewardServerConfig,
+    RolloutCoordinator,
+    StalenessManager,
+    TrajectoryLifecycle,
+    TrajectoryServer,
+    prefix_routing_strategy,
+    routing_strategy,
+)
+from repro.core.lifecycle import LifecycleEvent, LifecycleEventKind
+from repro.core.snapshot import collect as collect_snapshots
+from repro.data.tasks import ArithmeticDataset
+from repro.models import model as M
+from repro.reward.verifier import RewardModel
+from repro.rl.advantages import group_advantages
+from repro.rollout.backend import EngineBackend, create_backend, execute_commands
+from repro.runtime.config import RuntimeConfig, StepRecord
+from repro.training import checkpoint as ckpt_lib
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_rl_train_step
+
+
+class LockedBackend:
+    """An ``EngineBackend`` behind one RLock.
+
+    Each rollout instance is single-threaded *internally* but is touched
+    by several services (its decode thread, the coordinator's command
+    executor, protocol-initiated aborts). The lock serializes those; every
+    other attribute (telemetry counters, ``allocator`` etc.) passes through
+    untouched.
+
+    ``retire()`` marks a failed replica dead under its own lock: a decode
+    thread still holding the handle (it fetched it before ``fail_instance``
+    popped it from the fleet) sees its next ``step()`` return nothing
+    instead of generating on trajectories the TS already reclaimed.
+    """
+
+    def __init__(self, inner: EngineBackend):
+        self.inner = inner
+        self.lock = threading.RLock()
+        self._retired = False
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self.inner, name)
+
+    def retire(self) -> None:
+        with self.lock:
+            self._retired = True
+
+    def route(self, *a, **kw):
+        with self.lock:
+            return self.inner.route(*a, **kw)
+
+    def route_many(self, *a, **kw):
+        with self.lock:
+            return self.inner.route_many(*a, **kw)
+
+    def interrupt(self, *a, **kw):
+        with self.lock:
+            return self.inner.interrupt(*a, **kw)
+
+    def abort(self, *a, **kw):
+        with self.lock:
+            return self.inner.abort(*a, **kw)
+
+    def pull(self, *a, **kw):
+        with self.lock:
+            return self.inner.pull(*a, **kw)
+
+    def step(self, *a, **kw):
+        with self.lock:
+            if self._retired:
+                return []
+            return self.inner.step(*a, **kw)
+
+    def snapshot(self, *a, **kw):
+        with self.lock:
+            return self.inner.snapshot(*a, **kw)
+
+
+class RuntimeCore:
+    """The wired, scheduler-agnostic async-RL system (see module docstring)."""
+
+    def __init__(self, cfg: ArchConfig, rcfg: RuntimeConfig):
+        self.cfg = cfg
+        self.rcfg = rcfg
+        key = jax.random.PRNGKey(rcfg.seed)
+        self.params = M.init_params(cfg, key)
+        self.opt_state = init_opt_state(self.params)
+        self.train_step = jax.jit(
+            make_rl_train_step(cfg, AdamWConfig(lr=rcfg.lr), objective=rcfg.objective)
+        )
+
+        # ------------------------------------------------- the service bus
+        self.lifecycle = TrajectoryLifecycle()
+
+        self.dataset = ArithmeticDataset(rcfg.n_prompts, seed=rcfg.seed)
+        if rcfg.reward_fn is not None:
+            self.reward_model = type(
+                "CustomReward", (), {"score": staticmethod(rcfg.reward_fn)}
+            )()
+        else:
+            self.reward_model = RewardModel(
+                lambda prompt: self.dataset.answer_for(prompt)
+            )
+        self.manager = StalenessManager(batch_size=rcfg.batch_size, eta=rcfg.eta)
+        self.ts = TrajectoryServer(
+            self.dataset.prompt_source(),
+            capacity_groups=(rcfg.eta + 1) * rcfg.batch_size,
+            group_size=rcfg.group_size,
+            max_new_tokens=rcfg.max_new_tokens,
+        )
+        # subscription order fixes the per-event dispatch order; it mirrors
+        # the seed runtime's call order (TS transition first, then payload
+        # retention, then protocol, then instance cleanup)
+        self.ts.attach(self.lifecycle)
+        self.retired = RetiredPayloadStore(self.lifecycle)
+        self.reward_server = RewardServer(
+            self.reward_model,
+            self.lifecycle,
+            RewardServerConfig(
+                n_workers=rcfg.reward_workers,
+                queue_capacity=rcfg.reward_queue_capacity,
+                simulated_latency=rcfg.reward_latency,
+            ),
+            # aborted-while-queued completions are dropped, not scored
+            liveness=lambda t: self.ts.get(t.traj_id) is not None,
+        )
+        self.ps = ParameterServer()
+        self.ps.push(self.params, 0)
+        # schedulers may swap in a BackgroundPusher (overlapped Push)
+        self._push_fn: Callable[[Any, int], None] = self.ps.push
+
+        if rcfg.rollout_shards > 1 and not rcfg.paged_kv:
+            raise ValueError(
+                "rollout_shards > 1 requires paged_kv=True (the sharded "
+                "backend shards the paged K/V pool)"
+            )
+        self._rollout_mesh = None
+        if rcfg.rollout_shards > 1:
+            from repro.launch.mesh import make_rollout_mesh
+
+            self._rollout_mesh = make_rollout_mesh(rcfg.rollout_shards)
+        k5 = 2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 4
+        # kv_budget is per device: the pod-wide pool (max_len * max_slots
+        # worth of k5-sized tokens) spreads evenly over the head shards
+        self.cost_model = CostModel(
+            k1=1e-12, k2=1e-3, k3=1e-4, k4=5e-3, k5=k5,
+            kv_budget=k5 * rcfg.max_len * rcfg.max_slots
+            / rcfg.rollout_shards,
+            block_size=rcfg.kv_block_size if rcfg.paged_kv else 1,
+            shard_count=rcfg.rollout_shards,
+        )
+        group_filter = None
+        if rcfg.filter_zero_signal:
+            def group_filter(members) -> bool:
+                rs = [m.reward for m in members if m.reward is not None]
+                return len(set(rs)) > 1
+        suite = rcfg.suite
+        if (
+            rcfg.share_prefix
+            and rcfg.paged_kv
+            and rcfg.group_size > 1
+            and suite.routing is routing_strategy
+        ):
+            # group-affine routing: members of one sampling group land on a
+            # single instance so its paged engine prefills the prompt once
+            import dataclasses as _dc
+
+            suite = _dc.replace(suite, routing=prefix_routing_strategy)
+        self.coordinator = RolloutCoordinator(
+            self.manager,
+            self.ts,
+            cost_model=self.cost_model,
+            cfg=rcfg.strategy_cfg,
+            suite=suite,
+            group_sampling=rcfg.group_size > 1,
+            group_filter=group_filter,
+            lifecycle=self.lifecycle,
+        )
+        # protocol-initiated aborts (surplus / filtering, inst=None) must
+        # release engine residency everywhere; command-executed aborts
+        # (inst set) already did
+        self.lifecycle.subscribe(LifecycleEventKind.ABORTED, self._on_aborted)
+
+        self._instances_lock = threading.RLock()
+        self.instances: Dict[int, LockedBackend] = {}
+        for i in range(rcfg.n_instances):
+            self.instances[i] = self._new_instance(i)
+        self.coordinator.spec.resync(self._snapshots())
+
+        self._history_lock = threading.Lock()
+        self.history: List[StepRecord] = []
+        self.model_version = 0
+        self._tick = 0
+        self.ts.refill()
+        # telemetry for the time-breakdown benchmark; decode/reward are
+        # updated from N instance threads, so those adds take a lock
+        self.timers: Dict[str, float] = {
+            "decode": 0.0, "prefill": 0.0, "reward": 0.0, "train": 0.0,
+            "coordinator": 0.0, "pull": 0.0, "route": 0.0, "interrupt": 0.0,
+        }
+        self._timers_lock = threading.Lock()
+
+    # -------------------------------------------------------------- plumbing
+    @property
+    def _retired(self) -> Dict[int, Any]:
+        """Back-compat view of the retired-payload store (tests/benchmarks
+        inspected the runtime's old private dict)."""
+        return self.retired.payloads()
+
+    def _new_instance(self, inst_id: int) -> LockedBackend:
+        kw = dict(
+            cfg=self.cfg,
+            params=self.ps.pull()[0],
+            version=self.ps.version,
+            max_slots=self.rcfg.max_slots,
+            max_len=self.rcfg.max_len,
+            kv_bytes_per_token=self.cost_model.k5,
+            kv_budget=self.cost_model.kv_budget,
+            temperature=self.rcfg.temperature,
+            seed=self.rcfg.seed,
+            paged=self.rcfg.paged_kv,
+            kv_block_size=self.rcfg.kv_block_size,
+            share_prefix=self.rcfg.share_prefix,
+        )
+        if self.rcfg.rollout_shards > 1:
+            backend = create_backend(
+                "sharded",
+                inst_id,
+                shard_count=self.rcfg.rollout_shards,
+                mesh=self._rollout_mesh,
+                **kw,
+            )
+        else:
+            backend = create_backend("jax", inst_id, **kw)
+        return LockedBackend(backend)
+
+    def _snapshots(self):
+        with self._instances_lock:
+            return collect_snapshots(self.instances)
+
+    def _on_aborted(self, e: LifecycleEvent) -> None:
+        if e.inst is not None:
+            return  # executed as a command: the target instance is clean
+        with self._instances_lock:
+            handles = list(self.instances.values())
+        for h in handles:
+            h.abort([e.traj_id])
+
+    # --------------------------------------------------------- rollout side
+    def decode_instance(self, inst_id: int, n_steps: int = 1) -> int:
+        """Advance one instance ``n_steps`` decode steps and push every
+        completion into the lifecycle (reward phase onward). Returns the
+        number of completed trajectories."""
+        with self._instances_lock:
+            handle = self.instances.get(inst_id)
+        if handle is None:
+            return 0
+        t0 = time.perf_counter()
+        done = []
+        for _ in range(n_steps):
+            done.extend(handle.step())
+        with self._timers_lock:
+            self.timers["decode"] += time.perf_counter() - t0
+        for traj in done:
+            self.complete_trajectory(traj)
+        return len(done)
+
+    def complete_trajectory(self, traj) -> None:
+        """Publish a completion; the reward phase (and everything behind
+        it) hangs off the event. Silently skips trajectories aborted since
+        generation finished (surplus/filtering race)."""
+        if self.ts.get(traj.traj_id) is None:
+            return
+        t0 = time.perf_counter()
+        s0 = self.reward_server.score_time
+        self.lifecycle.completed(traj, traj.instance)
+        # timers["reward"] keeps the seed runtime's meaning — time spent
+        # *scoring* — not the whole dispatch (which also runs Occupy and
+        # abort fan-out): inline mode charges the verifier's delta,
+        # threaded mode the (tiny) enqueue cost
+        if self.reward_server.threaded:
+            dt = time.perf_counter() - t0
+        else:
+            dt = self.reward_server.score_time - s0
+        with self._timers_lock:
+            self.timers["reward"] += dt
+
+    # ------------------------------------------------------ coordinator side
+    def coordinator_cycle(self) -> int:
+        """One snapshot->command->execute cycle, atomic under the
+        coordinator lock AND every instance lock — decode, reward events,
+        and elasticity cannot interleave between observation and effect
+        (the live analog of the simulator's zero-time cycle). Returns the
+        number of commands executed."""
+        with self.coordinator.lock:
+            with self._instances_lock:
+                handles = dict(self.instances)
+            with ExitStack() as stack:
+                for i in sorted(handles):
+                    stack.enter_context(handles[i].lock)
+                t0 = time.perf_counter()
+                snaps = collect_snapshots(handles)
+                commands = self.coordinator.step(snaps, self.ps.version)
+                self.timers["coordinator"] += time.perf_counter() - t0
+                res = execute_commands(
+                    commands, handles, self.ts, self.ps,
+                    timers=self.timers, lifecycle=self.lifecycle,
+                )
+                # a Route that found its trajectory already gone (only
+                # possible across cycles under failure) must not skew P
+                for inst, tid in res.skipped_routes:
+                    self.coordinator.spec.apply(Abort(inst, (tid,)))
+                return len(commands)
+
+    # ----------------------------------------------------------- the trainer
+    def train_once(self) -> Optional[StepRecord]:
+        t0 = time.perf_counter()
+        if not self.manager.ready():
+            return None
+        batch_ids = self.coordinator.try_consume()
+        if batch_ids is None:
+            return None
+        # consume retires trajectories from the TS registry; payloads were
+        # retained by the RetiredPayloadStore at reward time
+        staleness_hist = list(self.manager.consumed_staleness[-1])
+        trajs = self.retired.take(batch_ids)
+        batch = self._batch_from_trajs(trajs)
+        if batch is None:
+            return None
+        self.params, self.opt_state, metrics = self.train_step(
+            self.params, self.opt_state, batch
+        )
+        self.model_version += 1
+        self._push_fn(self.params, self.model_version)
+        self.timers["train"] += time.perf_counter() - t0
+        rec = StepRecord(
+            step=self.model_version,
+            mean_reward=float(np.mean(batch["_rewards"])),
+            loss=float(metrics["loss"]),
+            mean_is_ratio=float(metrics.get("mean_is_ratio", 1.0)),
+            staleness_hist=staleness_hist,
+            wall_time=time.perf_counter(),
+        )
+        with self._history_lock:
+            self.history.append(rec)
+        return rec
+
+    def _batch_from_trajs(self, trajs) -> Optional[Dict[str, Any]]:
+        trajs = [t for t in trajs if t is not None and t.response]
+        if not trajs:
+            return None
+        max_t = max(t.length for t in trajs)
+        b = len(trajs)
+        tokens = np.zeros((b, max_t), np.int32)
+        blp = np.zeros((b, max_t), np.float32)
+        mask = np.zeros((b, max_t), np.float32)
+        groups, rewards = [], []
+        for i, t in enumerate(trajs):
+            seq = list(t.prompt) + list(t.response)
+            tokens[i, : len(seq)] = seq
+            plen = len(t.prompt)
+            for j, lp in enumerate(t.behavior_logprobs):
+                if plen + j < max_t:
+                    blp[i, plen + j] = lp
+                    mask[i, plen + j] = 1.0
+            groups.append(t.group_id)
+            rewards.append(t.reward or 0.0)
+        return {
+            "tokens": jnp.asarray(tokens),
+            "behavior_logprobs": jnp.asarray(blp),
+            "mask": jnp.asarray(mask),
+            "advantages": jnp.asarray(group_advantages(rewards, groups)),
+            "_rewards": rewards,
+        }
+
+    # --------------------------------------------------------- fault/elastic
+    def fail_instance(self, inst_id: int) -> List[int]:
+        """Simulate a replica failure. Returns trajectory IDs returned to TS.
+
+        Safe mid-decode under the threaded scheduler: the handle leaves the
+        fleet first (its thread exits at the next loop check), then its
+        final state is read under its lock and every still-generating
+        resident re-enters the TS via INTERRUPTED events; protocol
+        reservations survive untouched.
+        """
+        with self.coordinator.lock:
+            with self._instances_lock:
+                handle = self.instances.pop(inst_id)
+            with handle.lock:
+                # dead first: a decode thread that already fetched this
+                # handle must not generate on reclaimed trajectories when
+                # it resumes stepping after we release the lock
+                handle.retire()
+                snap = handle.snapshot()
+                resident = sorted(snap.run_trajs) + sorted(snap.wait_trajs)
+                for tid in resident:
+                    traj = self.ts.get(tid)
+                    if traj is not None:
+                        # INTERRUPTED clears the dead-instance affinity and
+                        # the RUNNING status via the TS subscriber
+                        self.lifecycle.interrupted(traj)
+            # speculative state must forget the dead instance
+            self.coordinator.drop_instance(inst_id)
+            return resident
+
+    def add_instance(self, inst_id: int) -> None:
+        handle = self._new_instance(inst_id)
+        with self.coordinator.lock:
+            with self._instances_lock:
+                self.instances[inst_id] = handle
+            self.coordinator.spec.resync({inst_id: handle.snapshot()})
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self, directory: str) -> str:
+        return ckpt_lib.save_checkpoint(
+            directory,
+            self.model_version,
+            self.params,
+            self.opt_state,
+            extra_meta={"model_version": self.model_version, "tick": self._tick},
+            protocol_state=ckpt_lib.dump_service_state(
+                self.manager,
+                reward_server=self.reward_server,
+                retired=self.retired,
+                lifecycle=self.lifecycle,
+            ),
+        )
+
+    def restore(self, directory: str) -> None:
+        params, opt, meta = ckpt_lib.restore_checkpoint(
+            directory, self.params, self.opt_state
+        )
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.opt_state = jax.tree_util.tree_map(jnp.asarray, opt)
+        self.model_version = meta["extra"]["model_version"]
+        self.manager, _services = ckpt_lib.load_service_state(meta["protocol"])
+        self.coordinator.manager = self.manager
+        self.coordinator.verifier.manager = self.manager
+        # In-flight payloads (TS / rollout slots / reward queue) died with
+        # the old process; their protocol entries would leave buffers Stuck
+        # forever. Abort them — the work is simply re-generated, and the
+        # staleness bound is unaffected (fresh trajectories get fresh
+        # reservations). Consumed history is preserved.
+        for key in self.manager.tracked_keys():
+            self.manager.abort(key)
+        self.retired.clear()
+        self.manager.check_invariants()
+        self.ps.push(self.params, self.model_version)
+        with self._instances_lock:
+            handles = dict(self.instances)
+        for h in handles.values():
+            h.pull(self.params, self.model_version)
+        self.coordinator.spec.resync(self._snapshots())

@@ -1,0 +1,232 @@
+"""Schedulers: the control loops that drive a ``RuntimeCore``.
+
+The paper's deployment (Fig. 6) runs rollout, reward, and training as
+independent *concurrent* services; the seed runtime approximated that with
+one cooperative tick. Both shapes now exist behind one interface:
+
+``CooperativeScheduler``
+    The seed loop, verbatim::
+
+        tick := [instances decode] -> [rewards] -> [coordinator cycle]
+                -> [trainer consume/step/push] -> [TS refill]
+
+    Single thread, deterministic interleaving: on a fixed seed the
+    ``StepRecord`` history (rewards, losses, staleness hists) is
+    bit-for-bit reproducible — the convergence suites run here.
+
+``ThreadedScheduler``
+    One thread per rollout instance (decode + completion events), a reward
+    worker pool (the ``RewardServer``), a coordinator thread (periodic
+    snapshot->command cycles + TS refill), a trainer thread, and a
+    background PS pusher — the writer-preference RW lock in
+    ``parameter_server.py`` finally sees concurrent readers during a
+    pending write, and Push genuinely overlaps the next training step.
+    Protocol invariants (staleness <= eta on every consumed batch, Eq. 1
+    snapshot validation) hold by construction: the consistency state is
+    lock-protected, and the coordinator freezes the fleet for the duration
+    of each cycle.
+
+Elasticity: the threaded supervisor watches ``core.instances`` — replicas
+added mid-run get a decode thread, failed replicas' threads exit on their
+own at the next loop check.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Protocol
+
+from repro.core import BackgroundPusher
+from repro.runtime.config import StepRecord
+from repro.runtime.core import RuntimeCore
+
+
+class Scheduler(Protocol):
+    """A control loop over a ``RuntimeCore``."""
+
+    def run(
+        self,
+        max_ticks: int = 100000,
+        progress: Optional[Callable[[StepRecord], None]] = None,
+    ) -> List[StepRecord]: ...
+
+
+class CooperativeScheduler:
+    """Deterministic single-threaded tick loop (seed semantics)."""
+
+    def __init__(self, core: RuntimeCore):
+        self.core = core
+
+    def tick(self) -> None:
+        core = self.core
+        rcfg = core.rcfg
+        core._tick += 1
+        # 1) rollout + 2) reward (inline, via COMPLETED events)
+        for inst_id in list(core.instances):
+            core.decode_instance(inst_id, rcfg.decode_steps_per_tick)
+        # 3) coordinator snapshot->command cycle
+        if core._tick % rcfg.snapshot_every == 0:
+            core.coordinator_cycle()
+        # 4) trainer
+        core.train_once()
+        # 5) keep the TS full
+        core.ts.refill()
+
+    def run(
+        self,
+        max_ticks: int = 100000,
+        progress: Optional[Callable[[StepRecord], None]] = None,
+    ) -> List[StepRecord]:
+        core = self.core
+        seen = len(core.history)
+        while (
+            core.model_version < core.rcfg.total_steps
+            and core._tick < max_ticks
+        ):
+            self.tick()
+            while progress and seen < len(core.history):
+                progress(core.history[seen])
+                seen += 1
+        return core.history
+
+
+class ThreadedScheduler:
+    """Truly asynchronous control: every service phase on its own thread."""
+
+    def __init__(
+        self, core: RuntimeCore, *, wall_timeout_s: Optional[float] = None
+    ):
+        self.core = core
+        self.wall_timeout_s = (
+            wall_timeout_s
+            if wall_timeout_s is not None
+            else core.rcfg.threaded_wall_timeout_s
+        )
+        self._stop = threading.Event()
+        self._threads: dict = {}
+        self.pusher: Optional[BackgroundPusher] = None
+        self.timed_out = False
+        # telemetry: per-phase busy seconds (overlap analysis); decode is
+        # updated by N instance threads, so adds go through a lock
+        self.busy = {"decode": 0.0, "train": 0.0, "coordinate": 0.0}
+        self._busy_lock = threading.Lock()
+
+    # ------------------------------------------------------------ workers
+    def _instance_loop(self, inst_id: int) -> None:
+        core = self.core
+        while not self._stop.is_set():
+            with core._instances_lock:
+                alive = inst_id in core.instances
+            if not alive:
+                return  # failed / removed: the thread retires itself
+            t0 = time.perf_counter()
+            n = core.decode_instance(inst_id, core.rcfg.decode_steps_per_tick)
+            with self._busy_lock:
+                self.busy["decode"] += time.perf_counter() - t0
+            if n == 0:
+                # idle (nothing resident / budget-starved): yield
+                time.sleep(0.0005)
+
+    def _coordinator_loop(self) -> None:
+        core = self.core
+        interval = max(core.rcfg.coordinator_interval_s, 0.0)
+        while not self._stop.is_set():
+            t0 = time.perf_counter()
+            core.coordinator_cycle()
+            core.ts.refill()
+            self.busy["coordinate"] += time.perf_counter() - t0
+            time.sleep(interval if interval > 0 else 0.0005)
+
+    def _trainer_loop(self) -> None:
+        core = self.core
+        while not self._stop.is_set():
+            if core.model_version >= core.rcfg.total_steps:
+                return
+            t0 = time.perf_counter()
+            rec = core.train_once()
+            self.busy["train"] += time.perf_counter() - t0
+            if rec is None:
+                time.sleep(0.0005)
+
+    def _spawn(self, name: str, target, *args) -> None:
+        t = threading.Thread(target=target, args=args, name=name, daemon=True)
+        self._threads[name] = t
+        t.start()
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        max_ticks: int = 100000,
+        progress: Optional[Callable[[StepRecord], None]] = None,
+    ) -> List[StepRecord]:
+        """Run until ``total_steps`` training steps (or the wall timeout).
+
+        ``max_ticks`` is accepted for interface parity with the cooperative
+        scheduler; threaded progress is time-, not tick-, bounded.
+        """
+        del max_ticks
+        core = self.core
+        self._stop.clear()
+        # overlapped parameter publication (Appendix A: Push hides behind
+        # the next training step; FIFO worker keeps versions ordered)
+        self.pusher = BackgroundPusher(core.ps).start()
+        core._push_fn = self.pusher.push
+        core.reward_server.start()
+        self._spawn("coordinator", self._coordinator_loop)
+        self._spawn("trainer", self._trainer_loop)
+        seen = len(core.history)
+        deadline = time.perf_counter() + self.wall_timeout_s
+        try:
+            while (
+                core.model_version < core.rcfg.total_steps
+                and time.perf_counter() < deadline
+            ):
+                # supervisor: give every live instance a decode thread
+                # (elastic scale-up spawns late threads; failed instances'
+                # threads exit on their own)
+                with core._instances_lock:
+                    ids = list(core.instances)
+                for inst_id in ids:
+                    name = f"instance-{inst_id}"
+                    t = self._threads.get(name)
+                    if t is None or not t.is_alive():
+                        self._spawn(name, self._instance_loop, inst_id)
+                while progress and seen < len(core.history):
+                    progress(core.history[seen])
+                    seen += 1
+                time.sleep(0.002)
+            if core.model_version < core.rcfg.total_steps:
+                self.timed_out = True
+                print(
+                    f"[ThreadedScheduler] WARNING: wall timeout "
+                    f"({self.wall_timeout_s:.0f}s) hit at "
+                    f"{core.model_version}/{core.rcfg.total_steps} steps — "
+                    f"partial history returned "
+                    f"(raise RuntimeConfig.threaded_wall_timeout_s)",
+                    flush=True,
+                )
+        finally:
+            self.shutdown()
+        while progress and seen < len(core.history):
+            progress(core.history[seen])
+            seen += 1
+        return core.history
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for t in self._threads.values():
+            t.join(timeout=10.0)
+        self._threads = {}
+        core = self.core
+        core.reward_server.stop(drain=False)
+        if self.pusher is not None:
+            self.pusher.stop()
+            core._push_fn = core.ps.push
+            self.pusher = None
+
+def make_scheduler(kind: str, core: RuntimeCore, **kw):
+    if kind in ("tick", "cooperative"):
+        return CooperativeScheduler(core)
+    if kind == "threaded":
+        return ThreadedScheduler(core, **kw)
+    raise ValueError(f"unknown scheduler {kind!r} (tick | threaded)")

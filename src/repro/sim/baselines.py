@@ -20,9 +20,9 @@ engine modeling.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-
+from repro.core.lifecycle import TrajectoryLifecycle
 from repro.core.types import Trajectory
 from repro.rollout.backend import EngineBackend, create_backend
 from repro.sim.engine import SimConfig, SimResult, _length_sampler
@@ -58,18 +58,27 @@ def _rollout_to_completion(
     instances: Dict[int, EngineBackend],
     batch: List[Trajectory],
     t_start: float,
+    lifecycle: Optional[TrajectoryLifecycle] = None,
 ) -> float:
     """Round-robin assign and advance until every trajectory completes.
     Returns the finish time (>= t_start). Within-instance waiting queues
-    model the KV budget exactly as the StaleFlow sim does."""
+    model the KV budget exactly as the StaleFlow sim does. Completions are
+    published on ``lifecycle`` when given, so baseline runs expose the
+    same event stream the coordinated systems do."""
     for i, traj in enumerate(batch):
-        instances[i % len(instances)].route(traj, t_start)
+        inst = i % len(instances)
+        instances[inst].route(traj, t_start)
+        if lifecycle is not None:
+            lifecycle.routed(traj, inst)
     now = t_start
     remaining = len(batch)
     while remaining > 0:
         for inst in instances.values():
             done = inst.step(now, cfg.dt)
             remaining -= len(done)
+            if lifecycle is not None:
+                for traj in done:
+                    lifecycle.completed(traj, traj.instance)
         now += cfg.dt
         if now - t_start > cfg.max_sim_time:
             raise RuntimeError("rollout did not converge")
@@ -83,6 +92,7 @@ def _batch_tokens(cfg: SimConfig, batch: List[Trajectory]) -> int:
 class SyncSim:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
+        self.lifecycle = TrajectoryLifecycle()  # event telemetry parity
 
     def run(self) -> SimResult:
         cfg = self.cfg
@@ -93,7 +103,9 @@ class SyncSim:
         for step in range(cfg.total_steps):
             batch = _make_batch(cfg, sampler, next_id)
             next_id += len(batch)
-            end = _rollout_to_completion(cfg, instances, batch, now)
+            end = _rollout_to_completion(
+                cfg, instances, batch, now, self.lifecycle
+            )
             loads.append((now, {i: len(inst.running) for i, inst in instances.items()}))
             bt = _batch_tokens(cfg, batch)
             train = cfg.train_fixed + cfg.train_per_token * bt
@@ -125,7 +137,9 @@ class OneStepSim:
             batch = _make_batch(cfg, sampler, next_id)
             next_id += len(batch)
             # rollout of batch k overlaps training of batch k-1
-            roll_end = _rollout_to_completion(cfg, instances, batch, now)
+            roll_end = _rollout_to_completion(
+                cfg, instances, batch, now, self.lifecycle
+            )
             train_end = now
             if pending is not None:
                 bt = _batch_tokens(cfg, pending)
@@ -156,6 +170,7 @@ class OneStepSim:
 
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
+        self.lifecycle = TrajectoryLifecycle()  # event telemetry parity
 
     def run(self) -> SimResult:
         return self.run_impl(self.cfg)

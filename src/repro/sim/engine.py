@@ -31,13 +31,17 @@ import numpy as np
 
 from repro.core import (
     CostModel,
+    FnVerifier,
     PAPER_H20_QWEN3_30B,
+    RewardServer,
     RolloutCoordinator,
     StalenessManager,
     StrategyConfig,
     StrategySuite,
+    TrajectoryLifecycle,
     TrajectoryServer,
 )
+from repro.core.lifecycle import LifecycleEvent, LifecycleEventKind
 from repro.core.types import Trajectory
 from repro.rollout.backend import (
     SimBackend,
@@ -130,10 +134,20 @@ class StaleFlowSim:
             group_redundancy=cfg.group_redundancy,
             max_new_tokens=cfg.response_cap,
         )
+        # the same trajectory-lifecycle bus the live runtime runs on: the
+        # TS, reward scoring (instant rule-based verifier), protocol
+        # Occupy, and surplus aborts are all event subscribers here too
+        self.lifecycle = TrajectoryLifecycle()
+        self.ts.attach(self.lifecycle)
+        self.reward_server = RewardServer(
+            FnVerifier(lambda prompt, response: 1.0), self.lifecycle
+        )
         self.coordinator = RolloutCoordinator(
             self.manager, self.ts, cost_model=cm, cfg=cfg.strategy_cfg,
             suite=cfg.suite, group_sampling=cfg.group_size > 1,
+            lifecycle=self.lifecycle,
         )
+        self.lifecycle.subscribe(LifecycleEventKind.ABORTED, self._on_aborted)
         self.instances: Dict[int, SimBackend] = {
             i: create_backend(
                 "sim", i, cost_model=cm,
@@ -202,17 +216,23 @@ class StaleFlowSim:
             if t.sim_target_len == 0:
                 t.sim_target_len = self._sample_len()
 
+    def _on_aborted(self, e: LifecycleEvent) -> None:
+        """Protocol-initiated aborts (surplus/filtering) release sim
+        residency; command-executed aborts (``inst`` set) already did."""
+        if e.inst is not None:
+            return
+        for inst in self.instances.values():
+            inst.abort([e.traj_id], self.now)
+
     def _on_complete(self, traj: Trajectory) -> None:
         if self.ts.get(traj.traj_id) is None:
             return  # aborted earlier this tick (redundancy surplus)
-        self.ts.complete(traj.traj_id)
         self._completed_len[traj.traj_id] = traj.sim_generated
-        traj.reward = 1.0  # rule-based reward, instant & overlapped
-        to_abort = self.coordinator.on_trajectory_rewarded(traj)
-        for tid in to_abort:
-            for inst in self.instances.values():
-                inst.abort([tid], self.now)
-            self.ts.drop(tid)
+        # the event fans out: TS marks GENERATED, the reward server scores
+        # (instant rule-based verifier), protocol Occupy + surplus aborts
+        # cascade off REWARDED — the sim and the live runtime share one
+        # lifecycle write path
+        self.lifecycle.completed(traj, traj.instance)
 
     def _coordinate(self) -> None:
         # new version becomes visible once Push lands
@@ -222,7 +242,8 @@ class StaleFlowSim:
         snaps = {i: inst.snapshot() for i, inst in self.instances.items()}
         commands = self.coordinator.step(snaps, self.ps_version)
         res = execute_commands(
-            commands, self.instances, self.ts, self.ps, now=self.now
+            commands, self.instances, self.ts, self.ps, now=self.now,
+            lifecycle=self.lifecycle,
         )
         self.result.route_count += res.routed
         self.result.interrupt_count += res.interrupted

@@ -181,6 +181,44 @@ def dump_protocol_state(manager) -> Dict[str, Any]:
         }
 
 
+def dump_service_state(
+    manager,
+    *,
+    reward_server=None,
+    retired=None,
+    lifecycle=None,
+) -> Dict[str, Any]:
+    """Protocol state plus the service-layer in-flight picture.
+
+    The staleness buffers remain the restart-critical payload
+    (``load_protocol_state`` reads them); the ``services`` section records
+    what was in flight across the reward queue, the retired-payload store,
+    and the lifecycle bus when the checkpoint was cut — the restart
+    aborts those trajectories (work is regenerated), so the dump is
+    forensic: it tells an operator exactly how much in-flight work a
+    restart at this checkpoint discards.
+    """
+    state = dump_protocol_state(manager)
+    services: Dict[str, Any] = {}
+    if reward_server is not None:
+        services["reward"] = reward_server.stats()
+    if retired is not None:
+        services["retired_ids"] = sorted(retired.ids())
+    if lifecycle is not None:
+        services["lifecycle_counts"] = {
+            k.value: v for k, v in lifecycle.counts.items()
+        }
+    state["services"] = services
+    return state
+
+
+def load_service_state(state: Dict[str, Any]):
+    """Returns ``(StalenessManager, services_dict)`` from a service-shaped
+    dump (``services`` is ``{}`` for pre-service checkpoints — the formats
+    are mutually readable)."""
+    return load_protocol_state(state), state.get("services", {})
+
+
 def load_protocol_state(state: Dict[str, Any]):
     from repro.core.staleness import Entry, EntryState, StalenessBuffer, StalenessManager
 

@@ -1,0 +1,206 @@
+"""Service layer unit tests: lifecycle bus, retired-payload store, reward
+server (inline + threaded), and the TS-as-subscriber wiring."""
+import threading
+import time
+
+from repro.core import (
+    FnVerifier,
+    RetiredPayloadStore,
+    RewardServer,
+    RewardServerConfig,
+    TrajectoryLifecycle,
+    TrajectoryServer,
+)
+from repro.core.lifecycle import LifecycleEventKind as K
+from repro.core.types import Trajectory, TrajStatus, reset_traj_ids
+
+
+def mk_traj(tid, prompt=(1, 2, 3)):
+    return Trajectory(traj_id=tid, prompt=list(prompt))
+
+
+# ------------------------------------------------------------------- the bus
+def test_bus_dispatches_in_subscription_order_and_counts():
+    bus = TrajectoryLifecycle()
+    order = []
+    bus.subscribe(K.COMPLETED, lambda e: order.append(("a", e.traj_id)))
+    bus.subscribe(K.COMPLETED, lambda e: order.append(("b", e.traj_id)))
+    bus.subscribe(K.REWARDED, lambda e: order.append(("r", e.traj_id)))
+    t = mk_traj(7)
+    bus.completed(t, inst=0)
+    bus.rewarded(t)
+    assert order == [("a", 7), ("b", 7), ("r", 7)]
+    assert bus.counts[K.COMPLETED] == 1
+    assert bus.counts[K.REWARDED] == 1
+    assert bus.counts[K.ABORTED] == 0
+
+
+def test_bus_reentrant_emit_from_handler():
+    """Surplus aborts cascade off REWARDED — emitting inside a handler must
+    not deadlock or drop events."""
+    bus = TrajectoryLifecycle()
+    seen = []
+    bus.subscribe(K.REWARDED, lambda e: bus.aborted(e.traj_id + 1))
+    bus.subscribe(K.ABORTED, lambda e: seen.append(e.traj_id))
+    bus.rewarded(mk_traj(10))
+    assert seen == [11]
+    assert bus.counts[K.ABORTED] == 1
+
+
+def test_bus_concurrent_emitters_do_not_deadlock():
+    """Regression: dispatch must not hold a global bus lock — handlers take
+    domain locks, and two services emitting concurrently used to deadlock
+    (reward worker in REWARDED->coordinator-lock vs coordinator holding its
+    lock emitting INTERRUPTED)."""
+    bus = TrajectoryLifecycle()
+    lock_a, lock_b = threading.Lock(), threading.Lock()
+    entered = threading.Barrier(2, timeout=5)
+
+    def sub_rewarded(e):  # takes A
+        entered.wait()
+        with lock_a:
+            time.sleep(0.01)
+
+    def sub_aborted(e):  # takes B
+        entered.wait()
+        with lock_b:
+            time.sleep(0.01)
+
+    bus.subscribe(K.REWARDED, sub_rewarded)
+    bus.subscribe(K.ABORTED, sub_aborted)
+    t1 = threading.Thread(target=lambda: bus.rewarded(mk_traj(1)))
+    t2 = threading.Thread(target=lambda: bus.aborted(2))
+    t1.start()
+    t2.start()
+    t1.join(timeout=5)
+    t2.join(timeout=5)
+    assert not t1.is_alive() and not t2.is_alive()
+
+
+def test_unsubscribe():
+    bus = TrajectoryLifecycle()
+    hits = []
+    fn = bus.subscribe(K.CONSUMED, lambda e: hits.append(e.traj_id))
+    bus.consumed(1)
+    bus.unsubscribe(K.CONSUMED, fn)
+    bus.consumed(2)
+    assert hits == [1]
+
+
+# --------------------------------------------------------------- the store
+def test_retired_store_retains_until_taken_and_evicts_on_abort():
+    bus = TrajectoryLifecycle()
+    store = RetiredPayloadStore(bus)
+    a, b = mk_traj(1), mk_traj(2)
+    bus.rewarded(a)
+    bus.rewarded(b)
+    assert len(store) == 2
+    # group filtering threw b away whole-group: no leak
+    bus.aborted(2)
+    assert store.ids() == [1]
+    got = store.take([1, 2, 3])  # missing ids skipped (pop-if-present)
+    assert got == [a]
+    assert len(store) == 0
+
+
+# ---------------------------------------------------------- trajectory server
+def _mk_ts(n=4):
+    prompts = iter([[1, 2]] * n)
+    return TrajectoryServer(prompts, capacity_groups=n, group_size=1)
+
+
+def test_ts_attach_applies_transitions_from_events():
+    reset_traj_ids()
+    bus = TrajectoryLifecycle()
+    ts = _mk_ts()
+    ts.attach(bus)
+    ts.refill()
+    t = ts.peek()[0]
+    ts.take(t.traj_id)
+    assert t.status == TrajStatus.RUNNING
+    bus.interrupted(t)
+    assert t.status == TrajStatus.INTERRUPTED and t.traj_id in [
+        x.traj_id for x in ts.peek()
+    ]
+    ts.take(t.traj_id)
+    bus.completed(t)
+    assert t.status == TrajStatus.GENERATED
+    bus.consumed(t.traj_id)
+    assert ts.get(t.traj_id) is None
+    # events for dropped trajectories are tolerated (abort races)
+    bus.completed(t)
+    bus.interrupted(t)
+    other = ts.peek()[0]
+    bus.aborted(other.traj_id)
+    assert ts.get(other.traj_id) is None
+
+
+# ------------------------------------------------------------- reward server
+def test_reward_server_inline_scores_synchronously():
+    bus = TrajectoryLifecycle()
+    rewarded = []
+    rs = RewardServer(FnVerifier(lambda p, r: float(len(r))), bus)
+    bus.subscribe(K.REWARDED, lambda e: rewarded.append(e.traj_id))
+    t = mk_traj(5)
+    t.response = [9, 9, 9]
+    bus.completed(t, inst=0)
+    # inline mode: by the time emit returns, the reward landed
+    assert t.reward == 3.0
+    assert rewarded == [5]
+    assert rs.stats()["scored"] == 1
+
+
+def test_reward_server_threaded_pool_scores_all_and_reports_latency():
+    bus = TrajectoryLifecycle()
+    done = []
+    rs = RewardServer(
+        FnVerifier(lambda p, r: 1.0),
+        bus,
+        RewardServerConfig(n_workers=3, queue_capacity=8,
+                           simulated_latency=0.002),
+    )
+    bus.subscribe(K.REWARDED, lambda e: done.append(e.traj_id))
+    rs.start()
+    try:
+        trajs = [mk_traj(100 + i) for i in range(12)]
+        for t in trajs:
+            bus.completed(t, inst=0)
+        assert rs.drain(timeout=30.0)
+    finally:
+        rs.stop()
+    assert sorted(done) == [100 + i for i in range(12)]
+    assert all(t.reward == 1.0 for t in trajs)
+    pct = rs.latency_percentiles((0.5, 0.99))
+    assert pct[0.5] is not None and pct[0.5] >= 0.002
+    assert rs.stats()["scored"] == 12
+
+
+def test_reward_server_drops_aborted_while_queued():
+    """A trajectory aborted between completion and scoring must be dropped
+    at the liveness gate, never scored or published REWARDED."""
+    bus = TrajectoryLifecycle()
+    alive = {1}
+    rewarded = []
+    rs = RewardServer(
+        FnVerifier(lambda p, r: 1.0), bus,
+        liveness=lambda t: t.traj_id in alive,
+    )
+    bus.subscribe(K.REWARDED, lambda e: rewarded.append(e.traj_id))
+    live, dead = mk_traj(1), mk_traj(2)
+    bus.completed(live, inst=0)
+    bus.completed(dead, inst=0)   # not in `alive`: aborted while queued
+    assert rewarded == [1]
+    assert dead.reward is None
+    s = rs.stats()
+    assert s["scored"] == 1 and s["dropped"] == 1
+
+
+def test_retired_store_skips_payloads_already_aborted():
+    """REWARDED arriving after the trajectory's ABORTED (late reward-queue
+    race) must not re-insert the evicted payload."""
+    bus = TrajectoryLifecycle()
+    store = RetiredPayloadStore(bus)
+    t = mk_traj(4)
+    t.status = TrajStatus.ABORTED  # ts.drop already ran
+    bus.rewarded(t)
+    assert len(store) == 0

@@ -1,0 +1,152 @@
+"""ParameterServer concurrency regression tests.
+
+The PS docstring has always promised database-style RW semantics (shared
+Pulls, exclusive writer-preferred Push, background-Push overlap); with the
+threaded scheduler those paths finally run under real concurrency, so the
+promises get pinned here: stale pushes dropped under racing pushers,
+concurrent Pulls sharing the read lock while a Push is pending behind
+in-flight readers, writer preference never starving a Push, and FIFO
+version ordering through the BackgroundPusher.
+"""
+import threading
+import time
+
+from repro.core import BackgroundPusher, ParameterServer
+
+
+def test_stale_push_dropped_under_racing_pushers():
+    ps = ParameterServer()
+    versions = list(range(1, 33))
+    import random
+
+    rng = random.Random(0)
+    rng.shuffle(versions)
+    barrier = threading.Barrier(8)
+
+    def pusher(chunk):
+        barrier.wait()
+        for v in chunk:
+            ps.push({"v": v}, v)
+
+    threads = [
+        threading.Thread(target=pusher, args=(versions[i::8],))
+        for i in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    params, version = ps.pull()
+    assert version == 32
+    assert params == {"v": 32}
+    # monotonicity: whatever landed last, later pushes of older versions
+    # were dropped, never published
+    ps.push({"v": 5}, 5)
+    assert ps.version == 32
+
+
+def test_concurrent_pulls_share_the_read_lock():
+    """Many Pulls must be in the critical section simultaneously (shared
+    read), and a Push issued while they hold it waits for all of them."""
+    ps = ParameterServer()
+    ps.push({"v": 0}, 0)
+    n = 6
+    in_section = []
+    max_concurrent = [0]
+    gate = threading.Event()
+    lock = threading.Lock()
+
+    real_pull = ps.pull
+
+    def slow_pull():
+        with ps._rw.read():
+            with lock:
+                in_section.append(1)
+                max_concurrent[0] = max(max_concurrent[0], len(in_section))
+            gate.wait(timeout=5)
+            with lock:
+                in_section.pop()
+            return ps._params, ps._version
+
+    readers = [threading.Thread(target=slow_pull) for _ in range(n)]
+    for t in readers:
+        t.start()
+    time.sleep(0.05)  # let every reader enter
+    push_done = threading.Event()
+
+    def pusher():
+        ps.push({"v": 1}, 1)
+        push_done.set()
+
+    w = threading.Thread(target=pusher)
+    w.start()
+    time.sleep(0.05)
+    # push is pending (writer waits for in-flight readers)...
+    assert not push_done.is_set()
+    # ...while every reader entered the section TOGETHER
+    assert max_concurrent[0] == n
+    gate.set()
+    w.join(timeout=5)
+    assert push_done.is_set()
+    assert real_pull()[1] == 1
+    for t in readers:
+        t.join(timeout=5)
+
+
+def test_writer_preference_never_starves_push():
+    """A continuous stream of Pull traffic must not starve Push: once a
+    writer waits, new readers queue behind it."""
+    ps = ParameterServer()
+    ps.push({"v": 0}, 0)
+    stop = threading.Event()
+    pulls = [0]
+
+    def reader():
+        while not stop.is_set():
+            ps.pull()
+            pulls[0] += 1
+
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    for t in readers:
+        t.start()
+    time.sleep(0.05)  # reader storm in flight
+    t0 = time.perf_counter()
+    ps.push({"v": 1}, 1)  # must acquire despite the storm
+    elapsed = time.perf_counter() - t0
+    stop.set()
+    for t in readers:
+        t.join(timeout=5)
+    assert elapsed < 2.0, f"push starved for {elapsed:.2f}s"
+    assert ps.version == 1
+    assert pulls[0] > 0
+
+
+def test_background_pusher_overlaps_and_keeps_fifo_order():
+    ps = ParameterServer()
+    ps.push({"v": 0}, 0)
+    seen = []
+    real_push = ps.push
+
+    def recording_push(params, version):
+        time.sleep(0.005)  # model DCN latency
+        seen.append(version)
+        real_push(params, version)
+
+    ps.push = recording_push
+    pusher = BackgroundPusher(ps).start()
+    t0 = time.perf_counter()
+    for v in range(1, 6):
+        pusher.push({"v": v}, v)  # returns immediately: overlap is real
+    submit_time = time.perf_counter() - t0
+    pusher.flush()
+    assert submit_time < 0.005 * 5, "push() blocked the trainer"
+    assert seen == [1, 2, 3, 4, 5]  # FIFO: version order preserved
+    assert ps.version == 5
+    pusher.stop()
+
+
+def test_background_pusher_synchronous_before_start():
+    ps = ParameterServer()
+    pusher = BackgroundPusher(ps)  # never started
+    pusher.push({"v": 3}, 3)
+    assert ps.version == 3
