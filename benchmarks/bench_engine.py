@@ -195,6 +195,84 @@ def _bench_prefix_capacity(
     )
 
 
+def _bench_fork_admission(
+    params, cfg, *, share: bool, lazy: bool = True, group_size: int = 4,
+    prompt_len: int = 37, block_size: int = 16, max_len: int = 64,
+    run_slots: int = 2,
+):
+    """Straggler-fork admission cost: a group wider than the slot count
+    admits ``run_slots`` members up front; the rest fork the still-resident
+    prefix one by one as early finishers free slots. With suffix prefill a
+    fork forwards only the prompt's partial-tail tokens (the full prefix
+    blocks are resident), so the tokens forwarded per fork drop from
+    ``prompt_len`` to ``prompt_len mod block_size``-ish.
+
+    Returns (wave prefill tokens, fork prefill tokens, pool block copies,
+    completed trajectories).
+    """
+    inst = _mk_instance(
+        params, cfg, legacy=False, slots=run_slots, max_len=max_len,
+        paged=True, kv_block_size=block_size, share_prefix=share,
+        lazy_cow=lazy,
+    )
+    prompt = list(np.random.RandomState(7777).randint(3, 200, prompt_len))
+    group = [
+        Trajectory(
+            traj_id=7700 + i, prompt=list(prompt), group_id=77,
+            # staggered budgets: finishers free slots while siblings still
+            # hold the prefix, so every straggler admission is a fork
+            max_new_tokens=4 + 2 * i,
+        )
+        for i in range(group_size)
+    ]
+    inst.route_many(group)
+    wave_tokens = inst.prefill_tokens
+    done = []
+    for _ in range(100 * group_size):
+        done.extend(inst.step())
+        if len(done) == group_size:
+            break
+    return (
+        wave_tokens,
+        inst.prefill_tokens - wave_tokens,
+        inst.block_copies,
+        len(done),
+    )
+
+
+def _bench_cow_traffic(
+    params, cfg, *, lazy: bool, group_size: int = 4, prompt_len: int = 21,
+    block_size: int = 16,
+):
+    """Pool block copies for a group whose members partly never decode:
+    half the members are interrupted between admission and their first
+    step (rebalancing storms do exactly this). Eager CoW has already
+    copied every member's tail at admission; lazy CoW copies only at
+    first divergence, so the interrupted members' copies never happen."""
+    inst = _mk_instance(
+        params, cfg, legacy=False, slots=group_size, max_len=64,
+        paged=True, kv_block_size=block_size, share_prefix=True,
+        lazy_cow=lazy,
+    )
+    group = [
+        Trajectory(
+            traj_id=7900 + i,
+            prompt=list(
+                np.random.RandomState(7900).randint(3, 200, prompt_len)
+            ),
+            group_id=79, max_new_tokens=4,
+        )
+        for i in range(group_size)
+    ]
+    inst.route_many(group)
+    inst.interrupt([7900 + i for i in range(group_size // 2)])
+    for _ in range(20):
+        if not inst.n_active():
+            break
+        inst.step()
+    return inst.block_copies
+
+
 def run(quick: bool = False) -> Dict[str, float]:
     reset_traj_ids()
     cfg = _bench_arch()
@@ -285,6 +363,32 @@ def run(quick: bool = False) -> Dict[str, float]:
                     out[f"prefixfit_noshare_{cell}_prefill_per_member"], 1e-9
                 ),
             )
+
+    note("engine: suffix prefill — tokens forwarded at straggler forks")
+    for group_size in gs_sweep:
+        if group_size < 4:               # need stragglers beyond the slots
+            continue
+        for mode, share in (("noshare", False), ("share", True)):
+            _, fork_toks, _, finished = _bench_fork_admission(
+                params, cfg, share=share, group_size=group_size,
+            )
+            assert finished == group_size
+            out[f"forkfit_{mode}_g{group_size}_fork_tokens"] = fork_toks
+            emit(
+                "engine", f"forkfit_{mode}_g{group_size}_fork_tokens",
+                fork_toks,
+            )
+        emit(
+            "engine", f"forkfit_fork_token_gain_g{group_size}",
+            out[f"forkfit_noshare_g{group_size}_fork_tokens"]
+            / max(out[f"forkfit_share_g{group_size}_fork_tokens"], 1),
+        )
+
+    note("engine: CoW traffic — lazy copy-at-first-divergence vs eager")
+    copies_lazy = _bench_cow_traffic(params, cfg, lazy=True)
+    copies_eager = _bench_cow_traffic(params, cfg, lazy=False)
+    emit("engine", "cow_copies_lazy", copies_lazy)
+    emit("engine", "cow_copies_eager", copies_eager)
     return out
 
 
@@ -339,6 +443,30 @@ def run_memfit_smoke() -> Dict[str, int]:
     assert no_saved == 0, "unshared sweep cannot save prefill tokens"
     assert sh_saved > 0, "shared sweep must save prefill tokens"
     assert no_fill <= 1.0 and sh_fill <= 1.0, "budget overrun"
+
+    note("smoke: forkfit (suffix prefill at straggler-fork admission)")
+    reset_traj_ids()
+    _, fork_no, _, fin_no = _bench_fork_admission(params, cfg, share=False)
+    reset_traj_ids()
+    _, fork_sh, _, fin_sh = _bench_fork_admission(params, cfg, share=True)
+    emit("engine", "smoke_forkfit_noshare_fork_tokens", fork_no)
+    emit("engine", "smoke_forkfit_share_fork_tokens", fork_sh)
+    assert fin_no == fin_sh, "fork sweeps must complete the same workload"
+    assert fork_no >= 5 * fork_sh, (
+        "suffix prefill must forward >= 5x fewer prompt tokens at "
+        "straggler-fork admission"
+    )
+
+    note("smoke: CoW traffic (lazy copy-at-first-divergence vs eager)")
+    reset_traj_ids()
+    copies_lazy = _bench_cow_traffic(params, cfg, lazy=True)
+    reset_traj_ids()
+    copies_eager = _bench_cow_traffic(params, cfg, lazy=False)
+    emit("engine", "smoke_cow_copies_lazy", copies_lazy)
+    emit("engine", "smoke_cow_copies_eager", copies_eager)
+    assert copies_lazy < copies_eager, (
+        "lazy CoW must copy strictly fewer blocks than eager CoW"
+    )
     note("smoke: OK")
     return {
         "kvfit_dense_admitted": int(dense_adm),
@@ -348,6 +476,10 @@ def run_memfit_smoke() -> Dict[str, int]:
         "prefixfit_noshare_prefill_tokens": int(no_ptoks),
         "prefixfit_share_prefill_tokens": int(sh_ptoks),
         "prefixfit_share_prefill_tokens_saved": int(sh_saved),
+        "forkfit_noshare_fork_prefill_tokens": int(fork_no),
+        "forkfit_share_fork_prefill_tokens": int(fork_sh),
+        "cow_block_copies_lazy": int(copies_lazy),
+        "cow_block_copies_eager": int(copies_eager),
     }
 
 

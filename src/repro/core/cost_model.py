@@ -74,19 +74,27 @@ class CostModel:
         return prompt_len // self.block_size
 
     def group_kv_bytes_for(
-        self, prompt_len: int, lengths: Sequence[int]
+        self, prompt_len: int, lengths: Sequence[int],
+        *, undiverged: int = 0,
     ) -> float:
         """Per-device bytes a shared-prefix group occupies: the prompt's
         full blocks once, plus each member's exclusive blocks (private
         tail copy + response). Without paging there is no sharing — plain
-        sum."""
+        sum.
+
+        ``undiverged`` (lazy CoW): the first that many members still share
+        the group's single partial-tail block — charged once — instead of
+        each owning a private copy. 0 (the default) is the eager/worst-case
+        view existing callers and admission decisions use."""
         if self.block_size <= 1:
             return self.token_bytes(float(sum(lengths)))
-        n_full = prompt_len // self.block_size
-        blocks = n_full + sum(
-            max(0, -(-length // self.block_size) - n_full)
-            for length in lengths
-        )
+        n_full, tail = divmod(prompt_len, self.block_size)
+        blocks = n_full + (1 if tail and undiverged > 0 else 0)
+        for i, length in enumerate(lengths):
+            excl = max(0, -(-length // self.block_size) - n_full)
+            if tail and i < undiverged:
+                excl = max(0, excl - 1)
+            blocks += excl
         return self.token_bytes(self.block_size * blocks)
 
     # ----------------------------------------------------------------- Eq. 2

@@ -41,6 +41,12 @@ class InstanceSnapshot:
     # member leaves.
     prefix_groups: Dict[int, Set[int]] = field(default_factory=dict)
     prefix_tokens: Dict[int, int] = field(default_factory=dict)
+    # lazy CoW: prefix id -> members still pointing at the group's single
+    # shared partial-tail block (not yet diverged by a decode write). A
+    # tail member's exclusive footprint is one block smaller — it owns no
+    # private tail copy — and the shared tail block itself releases once,
+    # when the last tail member leaves. Empty under eager CoW.
+    prefix_tail_members: Dict[int, Set[int]] = field(default_factory=dict)
     # devices the instance spans (sharded backend: instance = pod).
     # ``kv_cache`` is *per-device* bytes — the pool is head-sharded, so
     # each device holds 1/shard_count of every trajectory's KV — and
@@ -89,13 +95,28 @@ class InstanceSnapshot:
                 if not hit:
                     continue
                 n_full = self.prefix_tokens.get(pk, 0) // block_size
+                tail_set = self.prefix_tail_members.get(pk)
                 for t in hit & self.run_trajs:
                     length = self.traj_lengths.get(t, 0)
                     excl = max(0, -(-length // block_size) - n_full)
+                    if tail_set and t in tail_set:
+                        # undiverged member: its tail block is the group's
+                        # shared one, not part of its exclusive footprint
+                        excl = max(0, excl - 1)
                     self.kv_cache = max(
                         0.0,
                         self.kv_cache - bytes_per_token * block_size * excl,
                     )
+                if tail_set is not None:
+                    tail_set -= hit
+                    if not tail_set:
+                        # last undiverged member left: the shared lazy
+                        # tail block itself is released (one block, once)
+                        self.kv_cache = max(
+                            0.0,
+                            self.kv_cache - bytes_per_token * block_size,
+                        )
+                        del self.prefix_tail_members[pk]
                 shared_handled |= hit
                 members -= hit
                 if not members:

@@ -83,10 +83,23 @@ class Trajectory:
     # of materialized token lists (cluster-scale runs would need GBs)
     sim_generated: int = 0
     sim_target_len: int = 0
+    # lazily built (hash, tuple) of the prompt — prefix-registry lookups
+    # compare the hash first instead of rebuilding the tuple per admission
+    _prompt_key: Optional[tuple] = field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def length(self) -> int:
         return len(self.prompt) + len(self.response) + self.sim_generated
+
+    def prompt_key(self) -> tuple:
+        """Cached ``(hash(prompt_tuple), prompt_tuple)`` for registry
+        lookups. Prompts are immutable once a trajectory exists."""
+        if self._prompt_key is None:
+            tp = tuple(self.prompt)
+            self._prompt_key = (hash(tp), tp)
+        return self._prompt_key
 
     @property
     def n_generated(self) -> int:

@@ -34,6 +34,9 @@ from repro.kernels.paged_attention import (
 from repro.kernels.paged_attention import (
     paged_decode_attention_update as _paged_update_pallas,
 )
+from repro.kernels.paged_attention import (
+    paged_prefill_attention as _paged_prefill_pallas,
+)
 from repro.kernels.moe_gmm import grouped_matmul as _gmm_pallas
 from repro.kernels.moe_gmm import moe_expert_ffn as _moe_ffn_pallas
 from repro.kernels.selective_scan import selective_scan as _selective_scan_pallas
@@ -142,6 +145,30 @@ def paged_decode_attention(
         )
     return _paged_decode_pallas(
         q, k_pool, v_pool, block_tables, lengths,
+        interpret=(mode == "interpret"),
+    )
+
+
+def paged_prefill_attention(
+    q: jax.Array,             # (B, S, H, hd) suffix queries (right-padded)
+    k_pool: jax.Array,        # (N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    q_offsets: jax.Array,     # (B,) int32 absolute position of q[:, 0]
+    lengths: jax.Array,       # (B,) int32 total valid positions
+    *, impl: Optional[str] = None,
+) -> jax.Array:
+    """Suffix-prefill attention over a block-paged KV pool: queries are a
+    trajectory's suffix tokens, keys/values stream from the pool (resident
+    prefix + pre-scattered suffix rows), causal over prefix+suffix.
+    Returns (B, S, H, hd); padded query rows come back zero."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return _ref.paged_prefill_attention_ref(
+            q, k_pool, v_pool, block_tables, q_offsets, lengths
+        )
+    return _paged_prefill_pallas(
+        q, k_pool, v_pool, block_tables, q_offsets, lengths,
         interpret=(mode == "interpret"),
     )
 

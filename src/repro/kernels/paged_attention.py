@@ -23,6 +23,12 @@ token's K/V row in place: the output pool block index comes from the
 scalar-prefetched write position, the caches alias their outputs, and the
 new token's attention contribution is folded in analytically on the last
 grid step — only the single touched block ever moves back to HBM.
+
+``paged_prefill_attention`` generalizes the decode sweep to multi-token
+query blocks: Q rows are a trajectory's *suffix* tokens (absolute offset
+scalar-prefetched per row) while K/V still stream block-by-block from the
+pool — the suffix-prefill path shared-prefix forks use to skip re-running
+the resident prompt.
 """
 from __future__ import annotations
 
@@ -141,6 +147,136 @@ def paged_decode_attention(
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q,
       k_pool, v_pool)
+    return out
+
+
+def _paged_prefill_kernel(
+    tables_ref,               # SMEM (B, nb) block tables (prefetched)
+    meta_ref,                 # SMEM (2, B): row 0 = q_offset, row 1 = length
+    q_ref,                    # (1, S, H, hd) suffix queries (right-padded)
+    k_ref, v_ref,             # (1, bs, Hkv, hd) — pool block tables[b, j]
+    o_ref,                    # (1, S, H, hd)
+    acc_ref, m_ref, l_ref,    # VMEM scratch (Hkv, S*rep, hd), (Hkv, S*rep, 1) x2
+    *, bs: int, nb: int, rep: int, scale: float,
+):
+    ib = pl.program_id(0)
+    j = pl.program_id(1)
+    q_off = meta_ref[0, ib]
+    length = meta_ref[1, ib]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_lo = j * bs
+
+    @pl.when(k_lo < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # (S, H, hd)
+        k = k_ref[0].astype(jnp.float32)             # (bs, Hkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        sq, h, hd = q.shape
+        hkv = k.shape[1]
+        # group-major rows: row s*rep + r of group g is query (s, g*rep + r)
+        qg = (
+            q.reshape(sq, hkv, rep, hd)
+            .transpose(1, 0, 2, 3)
+            .reshape(hkv, sq * rep, hd)
+        )
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),               # (Hkv, hd, bs)
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ) * scale                                    # (Hkv, S*rep, bs)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        qpos = q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // rep
+        # causal over the combined prefix+suffix window; padded query rows
+        # (qpos >= length) keep l == 0 and finalize to zeros
+        s = jnp.where((kpos <= qpos) & (kpos < length), s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        out = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                            # (Hkv, S*rep, hd)
+        acc_ref[...] = acc_ref[...] * alpha + out
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        sq = q_ref.shape[1]
+        hkv, _, hd = acc_ref.shape
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o = (acc_ref[...] / l).reshape(hkv, sq, rep, hd)
+        o_ref[0] = (
+            o.transpose(1, 0, 2, 3).reshape(sq, hkv * rep, hd)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(
+    q: jax.Array,             # (B, S, H, hd) suffix queries (right-padded)
+    k_pool: jax.Array,        # (N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    q_offsets: jax.Array,     # (B,) int32 absolute position of q[:, 0]
+    lengths: jax.Array,       # (B,) int32 total valid positions
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Suffix-prefill attention over a block-paged KV pool.
+
+    Queries are a trajectory's suffix tokens (absolute positions
+    ``q_offsets[b] + i``); K/V stream from the pool via the scalar-
+    prefetched block table — the resident shared prefix plus the suffix
+    rows the caller scattered in beforehand. Causal over prefix+suffix.
+    Returns (B, S, H, hd); padded query rows come back zero.
+    """
+    b, sq, h, hd = q.shape
+    n, bs, hkv, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    rep = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    meta = jnp.stack([q_offsets.astype(jnp.int32), lengths.astype(jnp.int32)])
+
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_prefill_kernel, bs=bs, nb=nb, rep=rep, scale=scale
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, nb),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, sq, h, hd), lambda ib, j, tb, mt: (ib, 0, 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, bs, hkv, hd),
+                    lambda ib, j, tb, mt: (tb[ib, j], 0, 0, 0),
+                ),
+                pl.BlockSpec(
+                    (1, bs, hkv, hd),
+                    lambda ib, j, tb, mt: (tb[ib, j], 0, 0, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, sq, h, hd), lambda ib, j, tb, mt: (ib, 0, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((hkv, sq * rep, hd), jnp.float32),
+                pltpu.VMEM((hkv, sq * rep, 1), jnp.float32),
+                pltpu.VMEM((hkv, sq * rep, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), meta, q, k_pool, v_pool)
     return out
 
 

@@ -199,6 +199,54 @@ def paged_decode_attention_update_ref(
     return out, new_k, new_v
 
 
+def paged_prefill_attention_ref(
+    q: jax.Array,             # (B, S, H, hd) suffix queries (right-padded)
+    k_pool: jax.Array,        # (N, bs, Hkv, hd)
+    v_pool: jax.Array,        # (N, bs, Hkv, hd)
+    block_tables: jax.Array,  # (B, nb) int32
+    q_offsets: jax.Array,     # (B,) int32 absolute position of q[:, 0]
+    lengths: jax.Array,       # (B,) int32 total valid positions (prefix+suffix)
+) -> jax.Array:
+    """Suffix-prefill attention: queries are a trajectory's *suffix* tokens
+    while keys/values come from the paged pool via its block table — the
+    resident prefix (a shared-prefix fork's prompt blocks) plus the suffix
+    K/V the caller has already scattered into the pool. Causal over the
+    combined prefix+suffix window.
+
+    Bit-for-bit equal to ``flash_attention_ref`` over a contiguous cache
+    holding the same valid values *when the gathered window matches the
+    contiguous sequence length* (``nb * bs == Skv``): the op sequence
+    (einsum-logits in f32, -1e30 mask, softmax, einsum-out) is identical
+    and masked lanes contribute exact zeros either way (exp underflows to
+    +0.0). A wider window is still exact math over the same valid rows
+    but regroups the reduction sums, so equality degrades to ~1 ulp —
+    callers that need bitwise parity with a full prefill (the fork
+    admission path) must size ``block_tables`` to the full prompt's
+    padded bucket, not the pool-wide maximum. Padded query rows
+    (``q_offsets + i >= lengths``) attend nothing valid — callers mask
+    their outputs downstream.
+    """
+    b, sq, h, hd = q.shape
+    hkv = k_pool.shape[2]
+    rep = h // hkv
+    kg = paged_gather_kv(k_pool, block_tables)   # (B, nb*bs, Hkv, hd)
+    vg = paged_gather_kv(v_pool, block_tables)
+    if rep > 1:
+        kg = jnp.repeat(kg, rep, axis=2)
+        vg = jnp.repeat(vg, rep, axis=2)
+    skv = kg.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kg).astype(jnp.float32) * scale
+    qpos = q_offsets[:, None] + jnp.arange(sq)               # (B, Sq)
+    kpos = jnp.arange(skv)
+    mask = (kpos[None, None, :] <= qpos[:, :, None]) & (
+        kpos[None, None, :] < lengths[:, None, None]
+    )                                                        # (B, Sq, Skv)
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vg)
+
+
 # -------------------------------------------------------------------- MoE GMM
 def moe_gmm_ref(
     x: jax.Array,            # (E, C, D) dispatched tokens per expert

@@ -919,3 +919,84 @@ def paged_decode_step(
         new_cache["conv"], new_cache["ssm"] = outs[2], outs[3]
     new_cache["pos"] = pos + 1
     return _logits(cfg, params, x[:, 0]), new_cache
+
+
+# ======================================================== paged suffix prefill
+def paged_prefill_step(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,        # (B, S) right-padded SUFFIX tokens
+    cache: Cache,             # paged layout, per-slot entries gathered to B
+    block_tables: jax.Array,  # (B, nb) int32 full tables (prefix + suffix)
+    q_offsets: jax.Array,     # (B,) int32 absolute position of tokens[:, 0]
+    resident: jax.Array,      # (B,) int32 pool positions already written
+                              # (the shared prefix) — never re-written
+    lengths: jax.Array,       # (B,) int32 total valid positions
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Cache]:
+    """Prefill only a trajectory's *suffix* against KV already resident in
+    the paged pool — the shared-prefix fork admission path.
+
+    The transformer runs over the suffix positions only (O(suffix) FLOPs
+    instead of O(prompt)); each layer scatters the suffix K/V rows into
+    the pool, then attends causally over the table-gathered prefix+suffix
+    window. Causal masking makes prefix activations independent of the
+    suffix, so the pool rows the donor's full prefill wrote are bit-for-bit
+    the rows this trajectory's own full prefill would have produced —
+    logits and cache match the full path exactly (equivalence-tested).
+
+    ``resident`` may be below ``q_offsets`` only in the block-aligned-
+    prompt case, where the last prompt token is re-forwarded for its
+    logits: its K/V write is redirected to the null sink (position already
+    resident) while attention reads the donor's row. Suffix rows past
+    ``lengths`` are padding: writes hit the null block, outputs are zero.
+    Families with recurrent state (ssm/hybrid) or cross attention carry
+    per-position state a suffix run cannot reconstruct — callers gate to
+    dense/moe."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"suffix prefill unsupported for family {cfg.family}")
+    b, s = tokens.shape
+    bs = cache["k"].shape[2]
+    nb = block_tables.shape[1]
+    x = params["embed"][tokens]
+    positions = q_offsets[:, None] + jnp.arange(s)            # (B, S)
+    valid = (positions >= resident[:, None]) & (positions < lengths[:, None])
+    bi = jnp.clip(positions // bs, 0, nb - 1)
+    # invalid rows (padding / already-resident) write the null garbage sink
+    blk = jnp.where(valid, block_tables[jnp.arange(b)[:, None], bi], 0)
+    off = positions % bs
+
+    def body(carry, pc):
+        x, aux = carry
+        p, (k_pool, v_pool) = pc
+        h = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(h, p, cfg, positions)
+        new_k = k_pool.at[blk, off].set(k.astype(k_pool.dtype))
+        new_v = v_pool.at[blk, off].set(v.astype(v_pool.dtype))
+        o = ops.paged_prefill_attention(
+            q, new_k, new_v, block_tables, q_offsets, lengths, impl=impl
+        )
+        attn = gather(o).reshape(b, s, -1) @ p["wo"]
+        x = x + attn
+        h2 = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            f, a = _moe(h2, p, cfg, impl=impl)
+            aux = aux + a
+        else:
+            f = _ffn(h2, p)
+        x = constrain(x + f, "boundary")  # SP: RS+AG instead of all-reduce
+        return (x, aux), (new_k, new_v)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, _), outs = jax.lax.scan(
+        body, (x, aux0), (params["blocks"], (cache["k"], cache["v"])),
+        unroll=runmode.outer_unroll(),
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = outs
+    new_cache["pos"] = lengths.astype(jnp.int32)
+
+    idx = lengths - 1 - q_offsets
+    last = x[jnp.arange(b), idx]
+    return _logits(cfg, params, last), new_cache

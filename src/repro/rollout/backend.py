@@ -149,6 +149,7 @@ class SimBackend:
         pull_time: float = 0.0,
         admission_headroom_tokens: int = 64,
         share_prefix: bool = True,
+        lazy_cow: bool = True,
     ):
         self.inst_id = inst_id
         self.cm = cost_model
@@ -164,6 +165,10 @@ class SimBackend:
         # waiting-queue head admits as one unit — one prefill stall, shared
         # prompt blocks charged once. Inert at block_size 1 (dense model).
         self.share_prefix = bool(share_prefix and cost_model.block_size > 1)
+        # lazy CoW mirror: a group's partial-tail block is charged once
+        # until members diverge (first decode progress), matching the
+        # engine's copy-at-first-divergence pool accounting
+        self.lazy_cow = bool(lazy_cow and self.share_prefix)
         self.running: Dict[int, Trajectory] = {}
         self.progress: Dict[int, float] = {}   # fractional generated tokens
         self.waiting: List[Trajectory] = []
@@ -173,6 +178,7 @@ class SimBackend:
         self.prefill_tokens = 0.0
         self.preemptions = 0                   # sim pools never preempt
         self.shared_prefix_hits = 0
+        self.block_copies = 0                  # mirrored CoW tail copies
         # shared-prefix registry — the same class the engine maintains, so
         # both admission pictures and snapshot exports come from one
         # implementation and cannot drift
@@ -193,6 +199,9 @@ class SimBackend:
         group, like the engine's refcounted pool."""
         bs = self.cm.block_size
         total = self.cm.token_bytes(float(self._prefix.shared_token_total()))
+        tails = self._prefix.export_tails() if self.lazy_cow else {}
+        # each prefix with undiverged members holds ONE shared tail block
+        total += self.cm.token_bytes(float(bs * len(tails)))
         for t in self.running.values():
             pk = self._prefix.lookup(t.traj_id)
             if pk is None:
@@ -200,6 +209,9 @@ class SimBackend:
             else:
                 n_full = self._prefix.tokens(pk) // bs
                 excl = max(0, -(-t.length // bs) - n_full)
+                if t.traj_id in tails.get(pk, ()):
+                    # undiverged: the tail block is the shared one above
+                    excl = max(0, excl - 1)
                 total += self.cm.token_bytes(bs * excl)
         return total
 
@@ -237,13 +249,13 @@ class SimBackend:
                 if g >= 2:
                     members = [self.waiting.pop(0) for _ in range(g)]
                     bs = self.cm.block_size
-                    n_full = plen // bs
-                    if n_full:
+                    n_full, tail = divmod(plen, bs)
+                    lazy_tail = self.lazy_cow and tail > 0
+                    if n_full or lazy_tail:
+                        ids = [m.traj_id for m in members]
                         self._prefix.register(
-                            head.group_id,
-                            [m.traj_id for m in members],
-                            n_full * bs,
-                            head.prompt,
+                            head.group_id, ids, n_full * bs, head.prompt,
+                            tail_members=ids if lazy_tail else (),
                         )
                     # one shared prompt prefill for the whole group
                     self._admit_one(members[0], now, prefill=plen)
@@ -259,10 +271,17 @@ class SimBackend:
             if (
                 self.share_prefix
                 and nxt.group_id >= 0
-                and not nxt.response
                 and not nxt.sim_generated
             ):
-                fork_pk = self._prefix.find(nxt.group_id, nxt.prompt)
+                h, tp = nxt.prompt_key()
+                fork_pk = self._prefix.find(
+                    nxt.group_id, tp, prompt_hash=h
+                )
+                if (
+                    fork_pk is not None
+                    and self._prefix.tokens(fork_pk) == 0
+                ):
+                    fork_pk = None  # tail-only registration: no prefix
             charge = self.cm.kv_bytes_for(
                 nxt.length + self.admission_headroom_tokens
             )
@@ -345,6 +364,16 @@ class SimBackend:
             return []
         lat = self.cm.step_latency(self.kv_bytes(), len(self.running))
         steps = avail / lat
+        if self.lazy_cow:
+            # divergence mirror: every running member writes its first
+            # decode token this step, copying the shared tail into a
+            # private block (the last undiverged owner writes in place)
+            for tid in self.running:
+                if self._prefix.in_shared_tail(tid):
+                    pk = self._prefix.lookup(tid)
+                    if pk is not None and self._prefix.undiverged(pk) > 1:
+                        self.block_copies += 1
+                    self._prefix.mark_diverged(tid)
         done = []
         for tid, traj in list(self.running.items()):
             self.progress[tid] += steps
@@ -379,6 +408,7 @@ class SimBackend:
             preemptions=0,  # sim pools admit by budget, never preempt
             prefix_groups=prefix_groups,
             prefix_tokens=prefix_tokens,
+            prefix_tail_members=self._prefix.export_tails(),
             shard_count=self.cm.shard_count,
         )
 

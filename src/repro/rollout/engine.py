@@ -63,7 +63,8 @@ reproduce the seed engine's execution exactly, which the equivalence tests
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional, Sequence
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,6 +117,7 @@ class RolloutInstance:
         kv_pool_blocks: Optional[int] = None,
         admission_headroom_tokens: int = 16,
         share_prefix: bool = True,
+        lazy_cow: bool = True,
         shard_count: int = 1,
     ):
         self.inst_id = inst_id
@@ -161,6 +163,14 @@ class RolloutInstance:
         # prefix sharing needs the paged pool and a plain token frontend
         # (frontend embeddings would have to be proven identical per row)
         self.share_prefix = bool(share_prefix and paged and frontend_fn is None)
+        # lazy CoW: group tails stay shared until each member's first
+        # decode write (copy-at-first-divergence) instead of being copied
+        # eagerly at admission
+        self.lazy_cow = bool(lazy_cow and self.share_prefix)
+        # suffix prefill: fork admissions forward only the tokens past the
+        # resident shared prefix. Gated to families whose forward carries
+        # no per-position recurrent/cross state (see paged_prefill_step).
+        self._suffix_ok = self.share_prefix and cfg.family in ("dense", "moe")
         self.allocator: Optional[RefcountedBlockAllocator] = None
         if paged:
             bs = kv_block_size
@@ -184,7 +194,9 @@ class RolloutInstance:
         else:
             self.cache = M.init_cache(cfg, max_slots, max_len)
         self.slots: List[Optional[Trajectory]] = [None] * max_slots
-        self.waiting: List[Trajectory] = []
+        # deque: admission pops the head and preemption pushes the head on
+        # hot loops — both O(1) (a list pays O(n) per pop(0)/insert(0))
+        self.waiting: Deque[Trajectory] = deque()
         self.complete_since_sync: set = set()
         self._last_tokens = jnp.zeros((max_slots,), jnp.int32)
         # incrementally maintained byte counter (exact under paging via the
@@ -210,6 +222,7 @@ class RolloutInstance:
         self.preemptions = 0
         self.shared_prefix_hits = 0       # members admitted off a shared prompt
         self.prefill_tokens_saved = 0     # prompt tokens not re-prefilled
+        self.block_copies = 0             # CoW pool-block copies issued
 
         # runner construction goes through overridable factories so the
         # sharded backend swaps in its SPMD variants without duplicating
@@ -324,7 +337,7 @@ class RolloutInstance:
                 out.append(t)
             else:
                 keep.append(t)
-        self.waiting = keep
+        self.waiting = deque(keep)
         self._admit()
         return out
 
@@ -389,6 +402,9 @@ class RolloutInstance:
                          self.max_len)
         member_excl = blocks_for_tokens(pad_tokens, bs) - n_full
         while g >= 2:
+            # the budget/pool decision stays worst-case (every member
+            # eventually diverges and owns a private tail) so lazy and
+            # eager CoW admit identical schedules
             charge = self.k5_local * bs * (n_full + g * member_excl)
             need_now = n_full + (g if tail else 0)
             if (
@@ -399,7 +415,7 @@ class RolloutInstance:
             g -= 1
         if g < 2:
             return None
-        members = [self.waiting.pop(0) for _ in range(g)]
+        members = [self.waiting.popleft() for _ in range(g)]
         slots = [free.pop(0) for _ in range(g)]
         # per-member stream keys in one batched dispatch (position =
         # n_generated, 0 for fresh members)
@@ -410,11 +426,17 @@ class RolloutInstance:
         )
         keys = [karr[i] for i in range(g)]
         ids = [m.traj_id for m in members]
-        shared, tails = self.allocator.alloc_group(ids, cache_len)
+        shared, tails = self.allocator.alloc_group(
+            ids, cache_len, lazy_tail=self.lazy_cow
+        )
         planned_bytes += self.k5_local * bs * (len(shared) + len(tails))
-        if shared:
+        lazy_tail = bool(tails) and self.lazy_cow
+        if shared or lazy_tail:
+            # a lazy shared tail must be registered even with zero full
+            # shared blocks — divergence tracking hangs off the registry
             self._prefix.register(
-                members[0].group_id, ids, len(shared) * bs, prompt
+                members[0].group_id, ids, len(shared) * bs, prompt,
+                tail_members=ids if lazy_tail else (),
             )
         jobs.append(PrefillJob(
             slot=slots[0],
@@ -468,9 +490,12 @@ class RolloutInstance:
             cache_len = len(tokens) + self._pos_offset
             # cross-wave prefix join: a straggler group member admitted
             # after its siblings forks their still-resident prefix blocks
-            # instead of duplicating them (the prompt forward still runs —
-            # its first-token logits are needed — but the full-block KV it
-            # produces is discarded into the null sink)
+            # instead of duplicating them. On suffix-capable families only
+            # the tokens past the resident prefix are forwarded; otherwise
+            # the full forward runs with its full-block KV writes discarded
+            # into the null sink. A preempted member re-admitting with a
+            # partial response forks too — the shared prefix covers its
+            # prompt, and the suffix is the prompt tail plus the response.
             fork_pk = None
             shared_blocks = 0
             if (
@@ -478,14 +503,18 @@ class RolloutInstance:
                 and self.share_prefix
                 and len(tokens) < self.max_len - 1
                 and nxt.group_id >= 0
-                and not nxt.response
                 and not nxt.sim_generated
             ):
-                fork_pk = self._prefix.find(nxt.group_id, nxt.prompt)
+                h, tp = nxt.prompt_key()
+                fork_pk = self._prefix.find(
+                    nxt.group_id, tp, prompt_hash=h
+                )
                 if fork_pk is not None:
                     shared_blocks = (
                         self._prefix.tokens(fork_pk) // self.kv_block_size
                     )
+                    if shared_blocks == 0:
+                        fork_pk = None  # tail-only registration: no prefix
             charge = self._admission_charge(self._slot_len(nxt))
             charge -= self.k5_local * self.kv_block_size * shared_blocks
             if planned_bytes + max(charge, 0.0) > self.kv_budget:
@@ -502,7 +531,7 @@ class RolloutInstance:
                     and need_blocks > self.allocator.n_free
                 ):
                     break  # pool exhausted: wait for releases
-            self.waiting.pop(0)
+            self.waiting.popleft()
             slot = free.pop(0)
             if len(tokens) >= self.max_len - 1:
                 # no room to generate: finish immediately (engine-level cap)
@@ -513,6 +542,8 @@ class RolloutInstance:
                 continue
             sub = self._sample_key(nxt)
             blocks = None
+            suffix_start: Optional[int] = None
+            resident_tokens = 0
             if self.paged:
                 if fork_pk is not None:
                     shared = self.allocator.table(
@@ -520,10 +551,22 @@ class RolloutInstance:
                     )[:shared_blocks]
                     own = self.allocator.fork(nxt.traj_id, shared, cache_len)
                     self._prefix.join(fork_pk, nxt.traj_id)
-                    # scatter target: the shared blocks are already written
-                    # (identical prompt KV) — aim those rows at the null
-                    # garbage block and keep only the tail/own writes
-                    blocks = [NULL_BLOCK] * shared_blocks + own
+                    if self._suffix_ok:
+                        # suffix prefill: forward only the tokens past the
+                        # resident prefix — the real block table is passed
+                        # so attention reads the donor's resident KV.
+                        # Block-aligned forks re-forward one prompt token
+                        # for logits; its redundant K/V write is redirected
+                        # to the null sink inside paged_prefill_step.
+                        resident_tokens = shared_blocks * self.kv_block_size
+                        suffix_start = min(resident_tokens, len(tokens) - 1)
+                        blocks = shared + own
+                        self.prefill_tokens_saved += suffix_start
+                    else:
+                        # scatter target: the shared blocks are already
+                        # written (identical prompt KV) — aim those rows at
+                        # the null garbage block, keep only tail/own writes
+                        blocks = [NULL_BLOCK] * shared_blocks + own
                     planned_bytes += self.k5_local * self.kv_block_size * len(own)
                     self.shared_prefix_hits += 1
                 else:
@@ -533,9 +576,10 @@ class RolloutInstance:
                     )
             else:
                 planned_bytes += self.k5_local * (self._slot_len(nxt) + 1)
-            jobs.append(
-                PrefillJob(slot=slot, tokens=tokens, key=sub, blocks=blocks)
-            )
+            jobs.append(PrefillJob(
+                slot=slot, tokens=tokens, key=sub, blocks=blocks,
+                suffix_start=suffix_start, resident_tokens=resident_tokens,
+            ))
             trajs.append(nxt)
         if not jobs:
             return
@@ -548,6 +592,7 @@ class RolloutInstance:
             self.params, self.cache, jobs
         )
         self.prefill_tokens += result.prefill_tokens
+        self.block_copies += result.tail_copies
         member_slots: List[int] = []
         member_lens: List[int] = []
         for job in jobs:
@@ -589,14 +634,21 @@ class RolloutInstance:
         re-admission — the standard partial-rollout path)."""
         t = self._release_slot(slot)
         t.status = TrajStatus.INTERRUPTED
-        self.waiting.insert(0, t)
+        self.waiting.appendleft(t)
         self.preemptions += 1
 
     def _ensure_decode_blocks(self) -> None:
         """Grow each resident's block table to cover its next write
         position; on pool exhaustion preempt the *youngest* resident
         (vLLM-style LIFO preemption — the oldest trajectories, closest to
-        completion, keep their blocks)."""
+        completion, keep their blocks).
+
+        Lazy CoW: a group member still pointing at its group's shared tail
+        block diverges here, at its first decode write — the tail is copied
+        into a private block *before* the decode dispatch so the write
+        cannot clobber siblings. The last undiverged owner writes in place
+        (no copy needed: nobody else reads the block anymore)."""
+        copies: List[Tuple[int, int]] = []
         for slot in sorted(
             (i for i, t in enumerate(self.slots) if t is not None),
             key=lambda i: self._slot_seq[i],
@@ -607,6 +659,19 @@ class RolloutInstance:
             while True:
                 try:
                     self.allocator.extend_to(t.traj_id, self._slot_pos[slot] + 1)
+                    if self.lazy_cow and self._prefix.in_shared_tail(
+                        t.traj_id
+                    ):
+                        # first write lands in the shared tail block
+                        # (tail member => no decode writes yet => next
+                        # write position is inside the prompt's tail)
+                        pair = self.allocator.cow(
+                            t.traj_id,
+                            self._slot_pos[slot] // self.kv_block_size,
+                        )
+                        self._prefix.mark_diverged(t.traj_id)
+                        if pair is not None:
+                            copies.append(pair)
                     break
                 except BlockExhausted:
                     victims = [
@@ -625,6 +690,9 @@ class RolloutInstance:
                         # to the next victim rather than re-preempting it.
                         raise
                     self._preempt(max(victims, key=lambda i: self._slot_seq[i]))
+        if copies:
+            self.block_copies += len(copies)
+            self.cache = self.prefill_runner.copy_blocks(self.cache, copies)
 
     def step(self, now: float = 0.0, dt: float = 0.0) -> List[Trajectory]:
         """One batched decode step over the active slots. Returns completed
@@ -710,5 +778,6 @@ class RolloutInstance:
             preemptions=self.preemptions,
             prefix_groups=prefix_groups,
             prefix_tokens=prefix_tokens,
+            prefix_tail_members=self._prefix.export_tails(),
             shard_count=self.shard_count,
         )

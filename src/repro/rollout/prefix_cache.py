@@ -12,12 +12,18 @@ group size. This module adds the sharing layer:
   when its last owner releases it.
 * ``alloc_group(owners, n_tokens)`` — the group-admission primitive: the
   prompt's **full** blocks are allocated once and mapped read-only into
-  every member's table, while the partially-filled tail block (if the
-  prompt does not end on a block boundary) gets one private copy per
-  member. The tail is the only prompt block decode will ever write into
-  (the next token's cache position lands inside it), so copying it eagerly
-  at admission is exactly copy-on-write with the write time known upfront:
-  members never alias a writable block.
+  every member's table. The partially-filled tail block (if the prompt
+  does not end on a block boundary) is the only prompt block decode will
+  ever write into. Eager mode gives each member a private tail copy at
+  admission; **lazy mode** (``lazy_tail=True``) maps ONE shared tail into
+  every table and defers the copy to each member's first write
+  (``cow``) — members that finish, preempt, or abort before writing
+  never pay for a private tail, in blocks or in copy bandwidth.
+* ``cow(owner, idx)`` — copy-at-first-divergence: swap table entry
+  ``idx`` to a fresh private block (refcount on the old one decremented)
+  and return ``(old, new)`` so the caller device-copies the KV. The last
+  undiverged co-owner returns ``None`` and keeps writing the original in
+  place — nothing else reads positions past the prompt.
 * ``fork(owner, shared, n_tokens)`` — join an existing shared prefix:
   refcounts on ``shared`` are bumped and fresh exclusive blocks cover the
   remainder. Used when members admit against a still-resident prefix.
@@ -27,7 +33,10 @@ cache positions ``[i*bs, (i+1)*bs)`` and decode only ever writes position
 ``pos`` (monotonically increasing, ``pos >= prompt_len``). A *full* prompt
 block ends at ``prompt_len - tail <= prompt_len``, so no decode write can
 land in it — sharing is sound without write tracking. The tail block spans
-``prompt_len`` itself, hence the per-member copy.
+``prompt_len`` itself, hence the per-member copy — eagerly at admission,
+or lazily at the first decode write (``PrefixRegistry`` tracks which
+members still alias the shared tail; the engine copies before dispatching
+the write).
 
 Accounting: ``used_blocks``/``used_tokens`` count **distinct** allocated
 blocks, so shared prefix blocks are charged once per group — the property
@@ -72,13 +81,14 @@ def shareable_run(waiting: Sequence, max_prompt_len: Optional[int] = None) -> in
     pictures cannot drift. ``max_prompt_len`` excludes prompts that the
     caller's overflow path finishes immediately.
     """
-    head = waiting[0]
+    it = iter(waiting)  # deque-friendly: no slicing
+    head = next(it)
     if head.group_id < 0 or head.response or head.sim_generated:
         return 1
     if max_prompt_len is not None and len(head.prompt) >= max_prompt_len:
         return 1
     n = 1
-    for t in waiting[1:]:
+    for t in it:
         if (
             t.group_id == head.group_id
             and not t.response
@@ -110,19 +120,32 @@ class PrefixRegistry:
         self._by_member: Dict[int, int] = {}
         self._by_group: Dict[int, int] = {}   # group_id -> latest live pk
         self._prompt: Dict[int, tuple] = {}
+        self._hash: Dict[int, int] = {}       # pk -> hash(prompt tuple)
+        # lazy CoW: members still aliasing the group's SHARED tail block
+        # (their first decode write must copy-then-diverge)
+        self._tail_members: Dict[int, Set[int]] = {}
         self._seq = 0
 
     def register(
         self, group_id: int, member_ids: Sequence[int],
         shared_tokens: int, prompt: Sequence[int],
+        *, tail_members: Sequence[int] = (),
     ) -> int:
-        """Record a freshly admitted shared prefix. Returns its id."""
+        """Record a freshly admitted shared prefix. Returns its id.
+
+        ``tail_members`` names the members admitted aliasing one shared
+        tail block (lazy CoW); empty under eager CoW or block-aligned
+        prompts."""
         pk = self._seq
         self._seq += 1
         self._members[pk] = set(member_ids)
         self._tokens[pk] = shared_tokens
         self._by_group[group_id] = pk
-        self._prompt[pk] = tuple(prompt)
+        tp = tuple(prompt)
+        self._prompt[pk] = tp
+        self._hash[pk] = hash(tp)
+        if tail_members:
+            self._tail_members[pk] = set(tail_members)
         for tid in member_ids:
             self._by_member[tid] = pk
         return pk
@@ -137,20 +160,64 @@ class PrefixRegistry:
         pk = self._by_member.pop(tid, None)
         if pk is None:
             return
+        self.mark_diverged_pk(pk, tid)
         members = self._members[pk]
         members.discard(tid)
         if not members:
             del self._members[pk]
             del self._tokens[pk]
             del self._prompt[pk]
+            del self._hash[pk]
             for gid, live in list(self._by_group.items()):
                 if live == pk:
                     del self._by_group[gid]
 
-    def find(self, group_id: int, prompt: Sequence[int]) -> Optional[int]:
-        """The live prefix id for ``group_id`` if its prompt matches."""
+    # -------------------------------------------------- lazy CoW tail state
+    def in_shared_tail(self, tid: int) -> bool:
+        """True while ``tid`` still aliases its group's shared tail block —
+        its next decode write must trigger the divergence copy first."""
+        pk = self._by_member.get(tid)
+        return pk is not None and tid in self._tail_members.get(pk, ())
+
+    def mark_diverged(self, tid: int) -> None:
+        """``tid`` got (or no longer needs) a private tail."""
+        pk = self._by_member.get(tid)
+        if pk is not None:
+            self.mark_diverged_pk(pk, tid)
+
+    def mark_diverged_pk(self, pk: int, tid: int) -> None:
+        tails = self._tail_members.get(pk)
+        if tails is not None:
+            tails.discard(tid)
+            if not tails:
+                del self._tail_members[pk]
+
+    def undiverged(self, pk: int) -> int:
+        """Members of ``pk`` still aliasing the shared tail block."""
+        return len(self._tail_members.get(pk, ()))
+
+    def export_tails(self) -> Dict[int, Set[int]]:
+        """Snapshot-ready copy of the shared-tail membership."""
+        return {pk: set(m) for pk, m in self._tail_members.items()}
+
+    def find(
+        self, group_id: int, prompt: Sequence[int],
+        *, prompt_hash: Optional[int] = None,
+    ) -> Optional[int]:
+        """The live prefix id for ``group_id`` if its prompt matches.
+
+        ``prompt_hash`` (pass ``hash(tuple(prompt))``, e.g. a trajectory's
+        cached ``prompt_key()``) short-circuits the comparison: the full
+        tuple is only compared on a hash match, so the admission-loop hot
+        path stops rebuilding and comparing whole prompt tuples."""
         pk = self._by_group.get(group_id)
-        if pk is not None and self._prompt[pk] == tuple(prompt):
+        if pk is None:
+            return None
+        if prompt_hash is not None and self._hash[pk] != prompt_hash:
+            return None
+        if self._prompt[pk] == (
+            prompt if isinstance(prompt, tuple) else tuple(prompt)
+        ):
             return pk
         return None
 
@@ -252,15 +319,18 @@ class RefcountedBlockAllocator(BlockAllocator):
         return own
 
     def alloc_group(
-        self, owners: Sequence[int], n_tokens: int
+        self, owners: Sequence[int], n_tokens: int, *, lazy_tail: bool = False
     ) -> Tuple[List[int], List[int]]:
         """Allocate tables for a group of owners sharing one ``n_tokens``
-        prompt. Full blocks are allocated once and mapped into every table;
-        a partial tail gets one private block per owner (the caller copies
-        the prefilled tail KV into them — eager CoW).
+        prompt. Full blocks are allocated once and mapped into every table.
+        A partial tail gets one private block per owner (the caller copies
+        the prefilled tail KV into them — eager CoW), or with
+        ``lazy_tail`` ONE shared block mapped into every table whose
+        private copies are deferred to each owner's first write (``cow``).
 
         Returns ``(shared_full_blocks, tail_blocks)`` with ``tail_blocks``
-        aligned with ``owners`` (empty when the prompt is block-aligned).
+        aligned with ``owners`` — or a single shared entry under
+        ``lazy_tail`` — and empty when the prompt is block-aligned.
         Atomic: raises ``BlockExhausted`` allocating nothing on shortfall.
         """
         owners = list(owners)
@@ -270,20 +340,41 @@ class RefcountedBlockAllocator(BlockAllocator):
             if o in self._tables:
                 raise ValueError(f"owner {o} already has a block table")
         n_full, tail = divmod(n_tokens, self.block_size)
-        need = n_full + (len(owners) if tail else 0)
+        n_tails = (1 if lazy_tail else len(owners)) if tail else 0
+        need = n_full + n_tails
         if need > len(self._free):
             raise BlockExhausted(f"need {need} blocks, {len(self._free)} free")
         shared = [self._free.pop() for _ in range(n_full)]
         for b in shared:
             self._ref[b] = len(owners)
-        tails: List[int] = []
-        if tail:
-            tails = [self._free.pop() for _ in range(len(owners))]
-            for b in tails:
-                self._ref[b] = 1
+        tails: List[int] = [self._free.pop() for _ in range(n_tails)]
+        for b in tails:
+            self._ref[b] = len(owners) if lazy_tail else 1
         for i, o in enumerate(owners):
-            self._tables[o] = list(shared) + ([tails[i]] if tail else [])
+            own = ([tails[0]] if lazy_tail else [tails[i]]) if tail else []
+            self._tables[o] = list(shared) + own
         return shared, tails
+
+    def cow(self, owner: int, idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-at-first-divergence: give ``owner`` a private copy of the
+        shared block at table index ``idx`` before its first write there.
+
+        Returns ``(old_block, new_block)`` for the caller to device-copy,
+        or ``None`` if the block is already exclusive (the last undiverged
+        co-owner writes the original in place — nothing else reads
+        positions past the prompt, so skipping the copy is bitwise
+        identical). Raises ``BlockExhausted`` without side effects on
+        shortfall."""
+        table = self._tables[owner]
+        old = table[idx]
+        if self._ref[old] <= 1:
+            return None
+        if not self._free:
+            raise BlockExhausted("need 1 block, 0 free")
+        new = self._take(1)[0]
+        table[idx] = new
+        self._ref[old] -= 1
+        return old, new
 
     # ------------------------------------------------------------ invariants
     def check(self) -> None:

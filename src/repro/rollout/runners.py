@@ -135,6 +135,15 @@ class PrefillJob:
     extra_keys: List[jax.Array] = field(default_factory=list)
     tail_src: Optional[int] = None       # prefill-written partial tail block
     tail_dsts: List[int] = field(default_factory=list)  # one per extra member
+    # --- suffix mode (shared-prefix fork, paged mode only) ---
+    # ``suffix_start`` set => only tokens[suffix_start:] run through the
+    # model; positions below it are already resident in the pool via the
+    # leading shared entries of ``blocks`` (the donor's prefix blocks).
+    # ``resident_tokens`` is the pool-resident position count — the write
+    # boundary (== suffix_start except block-aligned forks, which re-read
+    # the last resident position for its logits without re-writing it).
+    suffix_start: Optional[int] = None
+    resident_tokens: int = 0
 
     @property
     def bucket_len(self) -> int:
@@ -151,11 +160,14 @@ class PrefillResult:
     flattened member-wise (a job's primary member first, then its
     ``extra_slots`` in order; plain jobs contribute one entry).
     ``prefill_tokens`` counts tokens actually run through the model — a
-    shared group prompt counts once, which is the saving."""
+    shared group prompt counts once and suffix jobs count only their
+    suffix, which is the saving. ``tail_copies`` counts pool-block copies
+    issued for eager CoW tails (zero under lazy CoW)."""
 
     tokens: List[int] = field(default_factory=list)
     logprobs: List[float] = field(default_factory=list)
     prefill_tokens: int = 0
+    tail_copies: int = 0
 
 
 class PrefillRunner:
@@ -215,6 +227,8 @@ class PrefillRunner:
         self._jit_sample = jax.jit(
             lambda lg, ks: sample_rows(lg, ks, temperature=self.temperature)
         )
+        # suffix-prefill dispatches, one per (suffix bucket, batch rows)
+        self._suffix_steps: Dict[Tuple[int, int], Any] = {}
 
     def bucket_of(self, n_tokens: int) -> int:
         return min(round_up(max(n_tokens, 1), self.prefill_bucket), self.max_len)
@@ -250,6 +264,115 @@ class PrefillRunner:
             )
         return out
 
+    def copy_blocks(
+        self, cache: Cache, copies: Sequence[Tuple[int, int]]
+    ) -> Cache:
+        """Device-copy pool blocks ``src -> dst``, padded to a power-of-two
+        copy count aimed at the null garbage block to bound compiled
+        shapes. Used for eager CoW tails at admission and by the engine's
+        lazy copy-at-first-divergence."""
+        pad = next_pow2(len(copies)) - len(copies)
+        src = [s for s, _ in copies] + [self.paged_null_block] * pad
+        dst = [d for _, d in copies] + [self.paged_null_block] * pad
+        return self._jit_block_copy(
+            cache,
+            jnp.asarray(src, jnp.int32),
+            jnp.asarray(dst, jnp.int32),
+            impl=self.impl,
+        )
+
+    def _suffix_step(self, bucket: int, n: int):
+        """Jitted suffix prefill for ``n`` single-member fork jobs whose
+        padded suffixes fit ``bucket`` tokens: gather the members' small
+        state rows, run ``paged_prefill_step`` against the shared pools,
+        scatter the advanced positions back."""
+        fn = self._suffix_steps.get((bucket, n))
+        if fn is None:
+            def step(params, cache, rows, slots, tables, q_off, res, lens):
+                view = {
+                    "pos": cache["pos"][slots],
+                    "k": cache["k"],
+                    "v": cache["v"],
+                }
+                logits, new = M.paged_prefill_step(
+                    self.cfg, gather_params(params), rows, view,
+                    tables, q_off, res, lens, impl=self.impl,
+                )
+                out = {
+                    nm: v for nm, v in cache.items() if nm not in ("k", "v")
+                }
+                out["pos"] = cache["pos"].at[slots].set(new["pos"])
+                out["k"], out["v"] = new["k"], new["v"]
+                if self.pool_sharding is not None:
+                    out["k"] = jax.lax.with_sharding_constraint(
+                        out["k"], self.pool_sharding
+                    )
+                    out["v"] = jax.lax.with_sharding_constraint(
+                        out["v"], self.pool_sharding
+                    )
+                return logits, out
+
+            fn = jax.jit(step)
+            self._suffix_steps[(bucket, n)] = fn
+        return fn
+
+    def _run_suffix(
+        self, params: Any, cache: Cache, jobs: Sequence[PrefillJob],
+        offsets: Dict[int, int], result: PrefillResult,
+    ) -> Cache:
+        """Admit suffix-mode fork jobs: forward only each job's suffix
+        against its donor's resident prefix blocks. Jobs are bucketed by
+        (padded suffix length, table width) — one dispatch per bucket.
+
+        The table width is ``ceil(full-prompt bucket / block_size)``, NOT
+        the pool-wide ``max_len // block_size``: the gathered attention
+        window must reduce over exactly as many K/V rows as the regular
+        prefill's flash attention does for the same prompt, or the float
+        summation grouping (softmax denominator, probs@V contraction)
+        differs at the ulp level and the fork is no longer bit-for-bit
+        equal to the full-prefill path."""
+        by_bucket: Dict[Tuple[int, int], List[PrefillJob]] = {}
+        order: List[Tuple[int, int]] = []
+        for job in jobs:
+            sb = self.bucket_of(len(job.tokens) - job.suffix_start)
+            nbw = -(-self.bucket_of(len(job.tokens)) // self.paged_block_size)
+            key = (sb, nbw)
+            if key not in by_bucket:
+                by_bucket[key] = []
+                order.append(key)
+            by_bucket[key].append(job)
+        for b, nb in order:
+            group = by_bucket[(b, nb)]
+            n = len(group)
+            rows = np.zeros((n, b), np.int32)
+            q_off = np.zeros((n,), np.int32)
+            res = np.zeros((n,), np.int32)
+            lens = np.zeros((n,), np.int32)
+            tables = np.full((n, nb), self.paged_null_block, np.int32)
+            for r, job in enumerate(group):
+                sfx = job.tokens[job.suffix_start:]
+                rows[r, : len(sfx)] = sfx
+                q_off[r] = job.suffix_start
+                res[r] = job.resident_tokens
+                lens[r] = len(job.tokens)
+                tables[r, : len(job.blocks)] = job.blocks
+            slots = jnp.asarray([job.slot for job in group], jnp.int32)
+            logits, cache = self._suffix_step(b, n)(
+                params, cache, jnp.asarray(rows), slots,
+                jnp.asarray(tables), jnp.asarray(q_off),
+                jnp.asarray(res), jnp.asarray(lens),
+            )
+            keys = jnp.stack([job.key for job in group])
+            toks, blps = self._jit_sample(logits, keys)
+            toks_np = np.asarray(toks)
+            blps_np = np.asarray(blps)
+            for r, job in enumerate(group):
+                base = offsets[id(job)]
+                result.tokens[base] = int(toks_np[r])
+                result.logprobs[base] = float(blps_np[r])
+                result.prefill_tokens += len(job.tokens) - job.suffix_start
+        return cache
+
     def _groups(self, jobs: Sequence[PrefillJob]) -> List[List[PrefillJob]]:
         """Group jobs by padded bucket length, preserving admission order,
         splitting groups at ``batch_limit`` rows."""
@@ -284,6 +407,14 @@ class PrefillRunner:
             offsets[id(job)] = total
             total += job.n_members
         result = PrefillResult(tokens=[0] * total, logprobs=[0.0] * total)
+        suffix_jobs = [j for j in jobs if j.suffix_start is not None]
+        for job in suffix_jobs:
+            if not self.paged_block_size or job.extra_slots:
+                raise ValueError(
+                    "suffix prefill requires the paged cache and "
+                    "single-member jobs"
+                )
+        jobs = [j for j in jobs if j.suffix_start is None]
         copies: List[Tuple[int, int]] = []
         for group in self._groups(jobs):
             bucket = self.bucket_of(max(len(j.tokens) for j in group))
@@ -350,17 +481,11 @@ class PrefillRunner:
                 result.prefill_tokens += len(job.tokens)
         if copies:
             # eager CoW: duplicate prefilled tail blocks into each member's
-            # private block, padded to a power-of-two copy count aimed at
-            # the null garbage block to bound compiled shapes
-            pad = next_pow2(len(copies)) - len(copies)
-            src = [s for s, _ in copies] + [self.paged_null_block] * pad
-            dst = [d for _, d in copies] + [self.paged_null_block] * pad
-            cache = self._jit_block_copy(
-                cache,
-                jnp.asarray(src, jnp.int32),
-                jnp.asarray(dst, jnp.int32),
-                impl=self.impl,
-            )
+            # private block
+            cache = self.copy_blocks(cache, copies)
+            result.tail_copies = len(copies)
+        if suffix_jobs:
+            cache = self._run_suffix(params, cache, suffix_jobs, offsets, result)
         return cache, result
 
 

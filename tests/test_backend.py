@@ -333,19 +333,28 @@ def test_sim_and_engine_shared_prefix_kv_parity():
     def group(base):
         return [
             Trajectory(traj_id=base + i, prompt=list(prompt), group_id=0,
-                       max_new_tokens=50)
+                       max_new_tokens=50, sim_target_len=50)
             for i in range(g)
         ]
 
     sim.route_many(group(80), 0.0)
     jaxp.route_many(group(80), 0.0)
     n_full = plen // bs
-    expected = k5 * bs * (n_full + g)   # shared once + one tail each
+    # lazy CoW (the default): shared prompt blocks once, plus ONE shared
+    # tail block — nobody has decoded yet, so nobody owns a private copy
+    expected = k5 * bs * (n_full + 1)
     assert sim.snapshot().kv_cache == expected
     assert jaxp.snapshot().kv_cache == expected
     # the coordinator's routing math prices the same group identically
-    # (each engine member holds prompt + 1 sampled token, same block count)
-    assert cm.group_kv_bytes_for(plen, [plen + 1] * g) == expected
+    # when told every member is still undiverged (each engine member holds
+    # prompt + 1 sampled token, same block count)
+    assert cm.group_kv_bytes_for(
+        plen, [plen + 1] * g, undiverged=g
+    ) == expected
+    # the default (eager/worst-case) view the admission decisions use
+    assert cm.group_kv_bytes_for(plen, [plen + 1] * g) == (
+        k5 * bs * (n_full + g)
+    )
     assert sim.shared_prefix_hits == g - 1
     # snapshots agree on the prefix structure the discard math needs
     ssim, sjax = sim.snapshot(), jaxp.snapshot()
@@ -354,6 +363,20 @@ def test_sim_and_engine_shared_prefix_kv_parity():
     assert set(map(frozenset, ssim.prefix_groups.values())) == set(
         map(frozenset, sjax.prefix_groups.values())
     )
+    assert set(map(frozenset, ssim.prefix_tail_members.values())) == set(
+        map(frozenset, sjax.prefix_tail_members.values())
+    )
+    # first decode write diverges the engine members (tail copied per
+    # member); the sim mirrors at its first progress step
+    jaxp.step()
+    # past the prefill stall, under one token of progress: members diverge
+    # without finishing (the divergence mirror fires at the first step)
+    sim.step(0.0, 0.005)
+    assert jaxp.snapshot().kv_cache == k5 * bs * (n_full + g)
+    assert jaxp.block_copies == g - 1  # last owner wrote in place
+    assert sim.block_copies == g - 1
+    assert not jaxp.snapshot().prefix_tail_members
+    assert not sim.snapshot().prefix_tail_members
     # members leave one by one: both release the tail only, then the
     # shared prefix with the last member
     sim.interrupt([80], 1.0)

@@ -420,21 +420,46 @@ def test_group_shared_prefix_matches_independent(prompt_len):
 
 def test_group_admission_allocates_prefix_blocks_once():
     """Acceptance: a group of G members over a P-token prompt allocates
-    blocks_for(P) blocks for the shared prompt exactly once (full blocks
-    refcounted G ways, the partial tail copied per member) and prefills P
-    tokens once."""
+    blocks_for(P) blocks for the whole group exactly once — full blocks
+    refcounted G ways and (lazy CoW, the default) ONE shared tail block
+    that members only copy at first divergence — and prefills P tokens
+    once. The first decode step diverges every member: the tail is then
+    copied per member (minus the last owner, who writes in place)."""
     reset_traj_ids()
     bs, P, G = 16, 37, 4                  # 2 full blocks + 5-token tail
     inst = mk_sharing(share=True, slots=G, block_size=bs)
     inst.route_many(mk_group(1100, G, prompt_len=P))
     n_full, tail = divmod(P, bs)
     assert inst.n_active() == G
-    assert inst.allocator.used_blocks == n_full + G * (1 if tail else 0)
-    assert inst.allocator.shared_blocks == n_full
+    assert inst.allocator.used_blocks == n_full + (1 if tail else 0)
+    assert inst.allocator.shared_blocks == n_full + (1 if tail else 0)
     assert inst.prefill_tokens == P       # one pass over the prompt
     assert inst.shared_prefix_hits == G - 1
     assert inst.prefill_tokens_saved == (G - 1) * P
+    assert inst.kv_bytes() == inst.k5 * bs * (n_full + 1)
+    assert inst.block_copies == 0         # nobody diverged yet
+    inst.allocator.check()
+    inst.step()                           # first decode write: divergence
+    assert inst.block_copies == G - 1     # last owner wrote in place
+    assert inst.allocator.used_blocks == n_full + G
     assert inst.kv_bytes() == inst.k5 * bs * (n_full + G)
+    inst.allocator.check()
+
+
+def test_group_admission_eager_cow_allocates_tails_up_front():
+    """lazy_cow=False restores the eager PR-3 behavior: the partial tail
+    is copied into a private block per member at admission."""
+    reset_traj_ids()
+    bs, P, G = 16, 37, 4
+    inst = mk_sharing(share=True, slots=G, block_size=bs, lazy_cow=False)
+    inst.route_many(mk_group(1100, G, prompt_len=P))
+    n_full = P // bs
+    assert inst.allocator.used_blocks == n_full + G
+    assert inst.allocator.shared_blocks == n_full
+    assert inst.block_copies == G - 1     # eager tail copies at admission
+    assert inst.kv_bytes() == inst.k5 * bs * (n_full + G)
+    inst.step()
+    assert inst.block_copies == G - 1     # no further copies at decode
     inst.allocator.check()
 
 
@@ -496,29 +521,41 @@ def test_group_preemption_and_readmission_matches_unconstrained():
     inst_small.allocator.check()
 
 
-def test_group_interrupt_releases_shared_blocks_once():
+@pytest.mark.parametrize("lazy", [True, False])
+def test_group_interrupt_releases_shared_blocks_once(lazy):
     """Interrupting members one by one frees only their exclusive blocks;
-    the shared prompt blocks return to the pool with the last member."""
+    the shared prompt blocks return to the pool with the last member.
+    Under lazy CoW undiverged members own NO exclusive blocks — the whole
+    group footprint (full blocks + one shared tail) releases with the
+    last member."""
     reset_traj_ids()
     bs, P, G = 16, 37, 3
-    inst = mk_sharing(share=True, slots=G, block_size=bs)
+    inst = mk_sharing(share=True, slots=G, block_size=bs, lazy_cow=lazy)
     group = mk_group(1400, G, prompt_len=P)
     inst.route_many(group)
     used = inst.allocator.used_blocks
+    n_full = P // bs
+    assert used == n_full + (1 if lazy else G)
     inst.interrupt([group[0].traj_id])
-    assert inst.allocator.used_blocks == used - 1          # its tail only
+    # lazy: member 0 never diverged, so it frees nothing (refs drop only);
+    # eager: its private tail copy returns to the pool
+    assert inst.allocator.used_blocks == used - (0 if lazy else 1)
     inst.interrupt([group[1].traj_id])
-    assert inst.allocator.used_blocks == used - 2
+    assert inst.allocator.used_blocks == used - (0 if lazy else 2)
     inst.interrupt([group[2].traj_id])
     assert inst.allocator.used_blocks == 0                 # prefix released
     assert inst.snapshot().prefix_groups == {}
+    assert inst.snapshot().prefix_tail_members == {}
     inst.allocator.check()
 
 
-def test_group_straggler_forks_resident_prefix_across_waves():
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_group_straggler_forks_resident_prefix_across_waves(temperature):
     """A member admitted AFTER its siblings (no free slot in their wave)
     forks the still-resident prefix: no duplicate prompt blocks, and the
-    token stream still matches the all-independent path bit-for-bit."""
+    token stream still matches the all-independent path bit-for-bit —
+    greedy AND stochastic (suffix prefill keeps logits bitwise equal, and
+    sampling keys are pure functions of (seed, traj_id, position))."""
     reset_traj_ids()
     bs, P = 16, 37                       # 2 full shared blocks + tail
     NO_EOS = -1
@@ -526,7 +563,7 @@ def test_group_straggler_forks_resident_prefix_across_waves():
     def run(share):
         inst = RolloutInstance(
             0, CFG, PARAMS, 0, max_slots=2, max_len=64,
-            temperature=0.0, seed=0, eos_id=NO_EOS,
+            temperature=temperature, seed=0, eos_id=NO_EOS,
             paged=True, kv_block_size=bs, share_prefix=share,
         )
         group = mk_group(1600, 3, prompt_len=P, max_new=6)
@@ -536,8 +573,9 @@ def test_group_straggler_forks_resident_prefix_across_waves():
         inst.route_many(group)           # only 2 slots: member 3 waits
         assert inst.n_active() == 2
         if share:
-            # two members share; the third joins when a slot frees
-            assert inst.allocator.used_blocks == 2 + 2
+            # two members share fully (two full blocks + the one lazy
+            # tail); the third joins when a slot frees
+            assert inst.allocator.used_blocks == 2 + 1
         done = []
         for _ in range(100):
             done.extend(inst.step())
@@ -552,6 +590,94 @@ def test_group_straggler_forks_resident_prefix_across_waves():
     assert_same_streams(done_s, done_i)
     assert inst_s.allocator.used_blocks == 0
     inst_s.allocator.check()
+
+
+def test_straggler_fork_survives_donor_interrupt_mid_decode():
+    """Regression: a straggler forks the resident prefix, then its DONOR is
+    interrupted mid-decode. The forked blocks are refcounted, so the
+    donor's release must not free them out from under the straggler — the
+    allocator invariants hold at every step and the straggler's stream
+    still matches the all-independent path bit-for-bit."""
+    reset_traj_ids()
+    bs, P = 16, 37
+    NO_EOS = -1
+
+    def run(share):
+        inst = RolloutInstance(
+            0, CFG, PARAMS, 0, max_slots=2, max_len=64,
+            temperature=0.0, seed=0, eos_id=NO_EOS,
+            paged=True, kv_block_size=bs, share_prefix=share,
+        )
+        group = mk_group(1700, 3, prompt_len=P, max_new=8)
+        group[0].max_new_tokens = 2      # frees a slot while member 1 decodes
+        inst.route_many(group)
+        done = []
+        for _ in range(100):
+            done.extend(inst.step())
+            inst.allocator.check()
+            if any(t.traj_id == 1700 for t in done):
+                break
+        # the straggler was admitted in the wave that freed the slot; the
+        # donor (member 1) is mid-decode — kick the donor now
+        tbl = list(inst.allocator.table(1702))
+        kicked = inst.interrupt([1701])
+        assert [t.traj_id for t in kicked] == [1701]
+        inst.allocator.check()
+        if share:
+            # the straggler is now the sole owner of the forked prompt
+            # blocks: the donor's release decremented, not freed, them
+            for blk in tbl[:2]:
+                assert inst.allocator.refcount(blk) == 1
+        for _ in range(100):
+            done.extend(inst.step())
+            inst.allocator.check()
+            if any(t.traj_id == 1702 for t in done):
+                break
+        return inst, [t for t in done if t.traj_id == 1702]
+
+    inst_s, done_s = run(True)
+    inst_i, done_i = run(False)
+    assert inst_s.shared_prefix_hits == 2
+    assert len(done_s) == 1
+    assert_same_streams(done_s, done_i)
+    assert inst_s.allocator.used_blocks == 0
+    inst_s.allocator.check()
+
+
+def test_lazy_cow_skips_copies_for_members_that_never_decode():
+    """Copy traffic is strictly lower under lazy CoW: members interrupted
+    between admission and their first decode step never diverge, so their
+    tail copies never happen — eager CoW has already paid them at
+    admission. The surviving member's stream is unchanged (the last
+    undiverged owner appends in place)."""
+    reset_traj_ids()
+
+    def run(lazy):
+        inst = mk_sharing(share=True, slots=4, lazy_cow=lazy)
+        group = mk_group(1800, 3, prompt_len=21, max_new=4)
+        inst.route_many(group)
+        admission_copies = inst.block_copies
+        # coordinator kicks two members before the first decode dispatch
+        inst.interrupt([1801, 1802])
+        inst.allocator.check()
+        done = []
+        for _ in range(20):
+            done.extend(inst.step())
+            inst.allocator.check()
+            if done:
+                break
+        return inst, admission_copies, done
+
+    inst_l, adm_l, done_l = run(True)
+    inst_e, adm_e, done_e = run(False)
+    assert adm_e == 2                    # eager: G-1 tail copies up front
+    assert adm_l == 0
+    assert inst_e.block_copies == 2
+    assert inst_l.block_copies == 0      # survivor was the last owner
+    assert inst_l.block_copies < inst_e.block_copies
+    assert_same_streams(done_l, done_e)
+    assert inst_l.allocator.used_blocks == 0
+    inst_l.allocator.check()
 
 
 def test_group_partial_members_do_not_share():

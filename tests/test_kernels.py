@@ -13,6 +13,7 @@ from repro.kernels.moe_gmm import grouped_matmul, moe_expert_ffn
 from repro.kernels.paged_attention import (
     paged_decode_attention,
     paged_decode_attention_update,
+    paged_prefill_attention,
 )
 
 KEY = jax.random.PRNGKey(0)
@@ -234,6 +235,105 @@ def test_paged_decode_attention_update_fused(dtype, write_pos):
     np.testing.assert_array_equal(np.asarray(nv), np.asarray(ev))
 
 
+# --------------------------------------------------- paged prefill attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,n_pool,bs,nb,sq,h,hkv,hd",
+    [
+        (2, 12, 64, 4, 64, 4, 4, 64),    # MHA, block-aligned suffix
+        (3, 16, 32, 4, 48, 8, 2, 64),    # GQA 4:1, suffix spans blocks
+        (2, 24, 128, 8, 128, 8, 1, 128), # MQA, wide head
+    ],
+)
+def test_paged_prefill_attention_matches_ref(
+    dtype, b, n_pool, bs, nb, sq, h, hkv, hd
+):
+    q = rnd((b, sq, h, hd), dtype, salt=161)
+    kp = rnd((n_pool, bs, hkv, hd), dtype, salt=162)
+    vp = rnd((n_pool, bs, hkv, hd), dtype, salt=163)
+    tables = _mk_tables(b, nb, n_pool, salt=164)
+    # each row starts its suffix mid-stream and ends mid-suffix: exercises
+    # resident-prefix attention, the causal frontier, and padded q rows
+    q_offsets = (jnp.arange(b) * bs // 2).astype(jnp.int32)
+    lengths = (q_offsets + 1 + jnp.arange(b) * (sq // b) + sq // 2).astype(
+        jnp.int32
+    )
+    out = paged_prefill_attention(
+        q, kp, vp, tables, q_offsets, lengths, interpret=True
+    )
+    expect = ref.paged_prefill_attention_ref(
+        q, kp, vp, tables, q_offsets, lengths
+    )
+    valid = (
+        q_offsets[:, None] + jnp.arange(sq)[None] < lengths[:, None]
+    )[..., None, None]
+    np.testing.assert_allclose(
+        jnp.where(valid, out, 0.0).astype(jnp.float32),
+        jnp.where(valid, expect, 0.0).astype(jnp.float32),
+        **tol(dtype),
+    )
+
+
+def test_paged_prefill_attention_matches_flash_contiguous():
+    """A suffix window gathered through an identity block table must equal
+    flash attention over the same values laid out contiguously, rows
+    compared at the suffix positions (the paged layout is an indirection;
+    equal window length makes the reductions identical)."""
+    b, s, bs, h, hkv, hd = 2, 256, 64, 8, 2, 64
+    nb = s // bs
+    kc = rnd((b, s, hkv, hd), salt=171)
+    vc = rnd((b, s, hkv, hd), salt=172)
+    qc = rnd((b, s, h, hd), salt=173)
+    kp = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, hd)), kc.reshape(b * nb, bs, hkv, hd)]
+    )
+    vp = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, hd)), vc.reshape(b * nb, bs, hkv, hd)]
+    )
+    tables = (jnp.arange(b * nb, dtype=jnp.int32) + 1).reshape(b, nb)
+    suffix = 96
+    q_offsets = jnp.array([s - suffix, s - suffix], jnp.int32)
+    lengths = jnp.array([s - 32, s], jnp.int32)
+    out = paged_prefill_attention(
+        qc[:, s - suffix :], kp, vp, tables, q_offsets, lengths,
+        interpret=True,
+    )
+    expect = ref.flash_attention_ref(qc, kc, vc, causal=True)
+    valid = (
+        q_offsets[:, None] + jnp.arange(suffix)[None] < lengths[:, None]
+    )[..., None, None]
+    np.testing.assert_allclose(
+        jnp.where(valid, out, 0.0),
+        jnp.where(valid, expect[:, s - suffix :], 0.0),
+        atol=2e-5, rtol=2e-5,
+    )
+
+
+def test_paged_prefill_attention_ref_bitwise_flash_parity():
+    """The ref op IS flash_attention_ref when the gathered window equals
+    the contiguous length — bit-for-bit, not allclose. This is the
+    contract the fork admission path relies on (the runner sizes block
+    tables to the full-prefill bucket for exactly this reason)."""
+    b, s, bs, h, hkv, hd = 1, 128, 32, 4, 2, 64
+    nb = s // bs
+    kc = rnd((b, s, hkv, hd), salt=181)
+    vc = rnd((b, s, hkv, hd), salt=182)
+    qc = rnd((b, s, h, hd), salt=183)
+    kp = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, hd)), kc.reshape(b * nb, bs, hkv, hd)]
+    )
+    vp = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, hd)), vc.reshape(b * nb, bs, hkv, hd)]
+    )
+    tables = (jnp.arange(nb, dtype=jnp.int32) + 1).reshape(b, nb)
+    lengths = jnp.array([s], jnp.int32)
+    out = ref.paged_prefill_attention_ref(
+        qc, kp, vp, tables, jnp.zeros((b,), jnp.int32), lengths
+    )
+    expect = ref.flash_attention_ref(qc, kc, vc, causal=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
 def test_paged_ops_dispatch():
     """ops.paged_* route ref and interpret impls to the same numbers."""
     b, n_pool, bs, nb, h, hkv, hd = 2, 10, 32, 4, 4, 2, 32
@@ -247,6 +347,21 @@ def test_paged_ops_dispatch():
         q, kp, vp, tables, lengths, impl="interpret"
     )
     np.testing.assert_allclose(a, c, atol=2e-5, rtol=2e-5)
+    qs = rnd((b, 32, h, hd), salt=85)
+    q_off = jnp.array([8, 96], jnp.int32)
+    pa = ops.paged_prefill_attention(
+        qs, kp, vp, tables, q_off, lengths, impl="ref"
+    )
+    pc = ops.paged_prefill_attention(
+        qs, kp, vp, tables, q_off, lengths, impl="interpret"
+    )
+    valid = (q_off[:, None] + jnp.arange(32)[None] < lengths[:, None])[
+        ..., None, None
+    ]
+    np.testing.assert_allclose(
+        jnp.where(valid, pa, 0.0), jnp.where(valid, pc, 0.0),
+        atol=2e-5, rtol=2e-5,
+    )
 
 
 # --------------------------------------------------------------- block copy

@@ -363,10 +363,19 @@ def test_sharded_engine_sim_costmodel_kv_parity_subprocess():
         sim.route_many(group(80), 0.0)
         eng.route_many(group(80), 0.0)
         n_full = plen // bs
-        expected = k5 * bs * (n_full + g) / shards
+        # lazy CoW (the default): shared prompt blocks once, plus ONE
+        # shared tail block — nobody has decoded yet, so nobody owns a
+        # private copy. Per-device bytes at shard_count=2.
+        expected = k5 * bs * (n_full + 1) / shards
         assert sim.snapshot().kv_cache == expected
         assert eng.snapshot().kv_cache == expected
-        assert cm.group_kv_bytes_for(plen, [plen + 1] * g) == expected
+        assert cm.group_kv_bytes_for(
+            plen, [plen + 1] * g, undiverged=g
+        ) == expected
+        # the default (eager/worst-case) view admission decisions use
+        assert cm.group_kv_bytes_for(plen, [plen + 1] * g) == (
+            k5 * bs * (n_full + g) / shards
+        )
         assert sim.snapshot().shard_count == shards
         assert eng.snapshot().shard_count == shards
         # per-member interrupts release per-device exclusive bytes,
