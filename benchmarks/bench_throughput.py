@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import threading
 import time
 
 from benchmarks.common import emit, note, sim_cfg
@@ -57,22 +59,99 @@ def run(quick: bool = False) -> dict:
 
 
 # -------------------------------------------------- live scheduler compare
-def _run_live(scheduler: str, *, total_steps: int, reward_latency: float):
+def _pct(samples, q):
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+class _LifecycleProbe:
+    """Pipeline-latency observer on the trajectory-lifecycle bus.
+
+    * route latency: a COMPLETED (or command-executed ABORTED) frees KV
+      capacity on an instance -> how long until the next ROUTED lands
+      there? Under the cycle barrier this waits for the next full
+      coordinator pass; streaming admission answers within one event
+      dispatch.
+    * consume latency: REWARDED -> CONSUMED per trajectory — how long a
+      finished sample waits for the trainer (partial batches shorten it).
+    """
+
+    def __init__(self, lifecycle):
+        from repro.core.lifecycle import LifecycleEventKind as K
+
+        self._K = K
+        self._lifecycle = lifecycle
+        self._lock = threading.Lock()
+        self._freed = {}     # inst -> earliest unserved freed-at timestamp
+        self._rewarded = {}  # traj_id -> rewarded-at timestamp
+        self.route_lat = []
+        self.consume_lat = []
+        lifecycle.subscribe_many([K.COMPLETED, K.ABORTED], self._on_freed)
+        lifecycle.subscribe(K.ROUTED, self._on_routed)
+        lifecycle.subscribe(K.REWARDED, self._on_rewarded)
+        lifecycle.subscribe(K.CONSUMED, self._on_consumed)
+
+    def detach(self):
+        K = self._K
+        self._lifecycle.unsubscribe_many([K.COMPLETED, K.ABORTED], self._on_freed)
+        self._lifecycle.unsubscribe(K.ROUTED, self._on_routed)
+        self._lifecycle.unsubscribe(K.REWARDED, self._on_rewarded)
+        self._lifecycle.unsubscribe(K.CONSUMED, self._on_consumed)
+
+    def _on_freed(self, e):
+        if e.inst is None:
+            return  # protocol abort: no single instance freed capacity
+        with self._lock:
+            self._freed.setdefault(e.inst, time.perf_counter())
+
+    def _on_routed(self, e):
+        now = time.perf_counter()
+        with self._lock:
+            t0 = self._freed.pop(e.inst, None)
+            if t0 is not None:
+                self.route_lat.append(now - t0)
+
+    def _on_rewarded(self, e):
+        with self._lock:
+            self._rewarded[e.traj_id] = time.perf_counter()
+
+    def _on_consumed(self, e):
+        now = time.perf_counter()
+        with self._lock:
+            t0 = self._rewarded.pop(e.traj_id, None)
+            if t0 is not None:
+                self.consume_lat.append(now - t0)
+
+
+def _run_live(
+    scheduler: str,
+    *,
+    total_steps: int,
+    reward_latency: float,
+    streaming: bool = False,
+    probe: bool = False,
+    **rcfg_kw,
+):
     from repro.configs import get_arch
     from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
 
     reset_traj_ids()
-    rt = AsyncRLRuntime(
-        get_arch("qwen2-1.5b").reduced(),
-        RuntimeConfig(
-            eta=1, batch_size=2, group_size=2, n_instances=2, max_slots=4,
-            max_len=48, max_new_tokens=10, total_steps=total_steps, seed=0,
-            scheduler=scheduler, reward_latency=reward_latency,
-        ),
+    cfg = dict(
+        eta=1, batch_size=2, group_size=2, n_instances=2, max_slots=4,
+        max_len=48, max_new_tokens=10, total_steps=total_steps, seed=0,
+        scheduler=scheduler, reward_latency=reward_latency,
+        streaming=streaming, stream_min_fill=1,
     )
+    cfg.update(rcfg_kw)
+    rt = AsyncRLRuntime(get_arch("qwen2-1.5b").reduced(), RuntimeConfig(**cfg))
+    lat = _LifecycleProbe(rt.lifecycle) if probe else None
     t0 = time.perf_counter()
     rt.run(max_ticks=20000)
     wall = time.perf_counter() - t0
+    if lat is not None:
+        lat.detach()
 
     reward = rt.reward_server
     if scheduler == "threaded":
@@ -97,6 +176,23 @@ def _run_live(scheduler: str, *, total_steps: int, reward_latency: float):
         "reward_p99_s": pct[0.99] or 0.0,
         "max_staleness": rt.manager.max_consumed_staleness(),
     }
+    if lat is not None:
+        from repro.core.lifecycle import LifecycleEventKind as K
+
+        stats = rt.coordinator.stats
+        consumed = rt.lifecycle.counts[K.CONSUMED]
+        metrics.update({
+            "route_p50_s": _pct(lat.route_lat, 0.5),
+            "route_p95_s": _pct(lat.route_lat, 0.95),
+            "consume_p50_s": _pct(lat.consume_lat, 0.5),
+            "consume_p95_s": _pct(lat.consume_lat, 0.95),
+            "route_samples": len(lat.route_lat),
+            "stream_cycles": stats.stream_cycles,
+            "stream_routes": stats.stream_routes,
+            # full-barrier cycles paid per consumed trajectory: streaming
+            # should push routing into the cheap fast path instead
+            "cycles_per_traj": stats.cycles / consumed if consumed else 0.0,
+        })
     assert metrics["max_staleness"] <= rt.rcfg.eta
     return metrics
 
@@ -129,6 +225,62 @@ def run_schedulers(
     return out
 
 
+# ------------------------------------------------ streaming vs barrier
+def run_streaming(
+    quick: bool = False,
+    reward_latency: float = 0.002,
+    json_path: str = "BENCH_throughput.json",
+) -> dict:
+    """Cycle-barrier vs streaming pipeline on the SAME threaded workload.
+
+    The streaming run admits per event (``route_instance``), consumes
+    partial batches, and wakes services off lifecycle events; the barrier
+    run is the seed threaded scheduler (all-instance-locks snapshot every
+    coordinator interval). Reported: overlap fraction, route latency
+    (capacity freed -> next Route on that instance), consume latency
+    (REWARDED -> CONSUMED), and full cycles paid per consumed trajectory.
+    The eta bound is asserted inside each run.
+    """
+    note("bench_throughput --streaming: threaded barrier vs streaming")
+    steps = 2 if quick else 3
+    # queue-pressured shape: protocol capacity ((eta+1)*batch_size groups)
+    # well above resident slots, so completions always have waiting work
+    # to admit — the regime where admission latency is the bottleneck and
+    # the cycle barrier actually costs something
+    shape = dict(eta=2, batch_size=4, group_size=2, n_instances=2, max_slots=4)
+    barrier = _run_live("threaded", total_steps=steps,
+                        reward_latency=reward_latency, probe=True, **shape)
+    stream = _run_live("threaded", total_steps=steps,
+                       reward_latency=reward_latency, streaming=True,
+                       probe=True, **shape)
+    comparison = {
+        "overlap_gain": stream["overlap_fraction"] - barrier["overlap_fraction"],
+        "route_p50_speedup": (
+            barrier["route_p50_s"] / stream["route_p50_s"]
+            if stream["route_p50_s"] else 0.0
+        ),
+        "consume_p50_speedup": (
+            barrier["consume_p50_s"] / stream["consume_p50_s"]
+            if stream["consume_p50_s"] else 0.0
+        ),
+        "cycles_per_traj_ratio": (
+            stream["cycles_per_traj"] / barrier["cycles_per_traj"]
+            if barrier["cycles_per_traj"] else 0.0
+        ),
+    }
+    out = {"barrier": barrier, "streaming": stream, "comparison": comparison}
+    for name, m in (("barrier", barrier), ("streaming", stream)):
+        for k, v in m.items():
+            emit("throughput", f"{name}_{k}", v)
+    for k, v in comparison.items():
+        emit("throughput", k, v)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        note(f"wrote {json_path}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -136,14 +288,27 @@ if __name__ == "__main__":
         help="run the LIVE runtime under this scheduler (both: compare) "
              "instead of the simulator sweep",
     )
+    ap.add_argument(
+        "--streaming", action="store_true",
+        help="compare the threaded cycle-barrier scheduler against the "
+             "streaming pipeline (incremental admission + partial-batch "
+             "consumption + event-driven wakeups) on the live runtime",
+    )
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--reward-latency", type=float, default=0.002,
         help="simulated per-score verifier latency (seconds) for the live "
              "comparison",
     )
+    ap.add_argument(
+        "--json", default="BENCH_throughput.json",
+        help="path for the --streaming comparison JSON ('' disables)",
+    )
     args = ap.parse_args()
-    if args.scheduler is None:
+    if args.streaming:
+        run_streaming(quick=args.quick, reward_latency=args.reward_latency,
+                      json_path=args.json)
+    elif args.scheduler is None:
         run(quick=args.quick)
     else:
         scheds = (

@@ -27,7 +27,7 @@ from repro.core.lifecycle import (
     LifecycleEventKind,
     TrajectoryLifecycle,
 )
-from repro.core.snapshot import Snapshot, clone_snapshot
+from repro.core.snapshot import InstanceSnapshot, Snapshot, clone_snapshot
 from repro.core.speculative import SpeculativeState
 from repro.core.staleness import StalenessManager
 from repro.core.strategies import StrategyConfig, StrategySuite
@@ -118,6 +118,13 @@ class CoordinatorStats:
     commands: Dict[str, int] = field(
         default_factory=lambda: {"Pull": 0, "Route": 0, "Interrupt": 0, "Abort": 0}
     )
+    # streaming fast path (``route_instance``): event-driven admission
+    # decisions, routes they issued, and single-instance snapshots rejected
+    # by Eq. 1 (counted separately so full-cycle rejection telemetry keeps
+    # its seed meaning)
+    stream_cycles: int = 0
+    stream_routes: int = 0
+    stream_rejected: int = 0
 
 
 class RolloutCoordinator:
@@ -166,6 +173,16 @@ class RolloutCoordinator:
         # cost model's routing penalty consumes
         self._preempt_seen: Dict[int, int] = {}
         self._lock = threading.RLock()
+        # thread currently inside a routing decision (full ``step`` or the
+        # ``route_instance`` fast path). Event subscribers that trigger
+        # incremental admission re-entrantly — e.g. an ABORTED published by
+        # this cycle's own command execution — check ``in_cycle`` and bail:
+        # the running cycle already accounts for the freed capacity.
+        self._cycle_thread: Optional[int] = None
+
+    def in_cycle(self) -> bool:
+        """True iff the *calling thread* is inside a routing decision."""
+        return self._cycle_thread == threading.get_ident()
 
     @property
     def lock(self) -> threading.RLock:
@@ -222,74 +239,137 @@ class RolloutCoordinator:
             if not self.spec.validate(snapshot):
                 self.stats.snapshots_rejected += 1
                 return []
+            self._cycle_thread = threading.get_ident()
+            try:
+                return self._step_locked(snapshot, ps_version)
+            finally:
+                self._cycle_thread = None
 
-            s = clone_snapshot(snapshot)
-            # rewrite cumulative preemption counters into the rate since
-            # the previous cycle (only on the local clone the strategies
-            # see — the caller's snapshot is untouched)
-            for inst_id, si in s.items():
-                total = si.preemptions
-                si.preemptions = max(
+    def _step_locked(self, snapshot: Snapshot, ps_version: int) -> CommandList:
+        s = clone_snapshot(snapshot)
+        # rewrite cumulative preemption counters into the rate since
+        # the previous cycle (only on the local clone the strategies
+        # see — the caller's snapshot is untouched)
+        for inst_id, si in s.items():
+            total = si.preemptions
+            si.preemptions = max(
+                0, total - self._preempt_seen.get(inst_id, 0)
+            )
+            self._preempt_seen[inst_id] = total
+        commands: CommandList = []
+        ts_trajs = list(self.ts.peek())
+        k5 = self.cost_model.k5
+        kv_bs = self.cost_model.block_size
+
+        # ---- redundancy surplus + protocol-dropped payload aborts
+        for cmd in self._collect_aborts(s):
+            commands.append(cmd)
+            self.spec.apply(cmd, ps_version=ps_version)
+            s[cmd.inst].discard(
+                cmd.traj_ids, bytes_per_token=k5, block_size=kv_bs
+            )
+
+        # ---- Alg. 1 line 3: synchronization strategy
+        for inst in self.suite.synchronization(
+            s, ts_trajs, ps_version, self.cost_model, self.verifier, self.cfg
+        ):
+            resident = sorted(s[inst].resident())
+            if resident:
+                cmd_i = Interrupt(inst, tuple(resident))
+                commands.append(cmd_i)
+                self.spec.apply(cmd_i, ps_version=ps_version)
+            cmd_p = Pull(inst)
+            commands.append(cmd_p)
+            self.spec.apply(cmd_p, ps_version=ps_version)
+            s[inst].discard(resident, bytes_per_token=k5, block_size=kv_bs)
+            s[inst].complete_trajs = set()
+            s[inst].inst_version = ps_version
+            ts_trajs.extend(
+                t for tid in resident if (t := self.ts.get(tid)) is not None
+            )
+
+        # ---- Alg. 1 line 9: migration strategy
+        for inst, trajs in self.suite.migration(s, self.cost_model, self.cfg):
+            cmd = Interrupt(inst, tuple(trajs))
+            commands.append(cmd)
+            self.spec.apply(cmd, ps_version=ps_version)
+            s[inst].discard(trajs, bytes_per_token=k5, block_size=kv_bs)
+            ts_trajs.extend(
+                t for tid in trajs if (t := self.ts.get(tid)) is not None
+            )
+
+        # ---- Alg. 1 line 13: routing strategy
+        for inst, traj, version in self.suite.routing(
+            s, ts_trajs, self.cost_model, self.verifier, self.cfg
+        ):
+            if not self._reserve_on_route(traj, version):
+                continue  # discriminator said no at issue time
+            if traj.v_traj is None:
+                traj.v_traj = version
+            cmd = Route(inst, (traj.traj_id,), v_traj=version)
+            commands.append(cmd)
+            self.spec.apply(cmd, ps_version=ps_version)
+
+        for c in commands:
+            self.stats.commands[type(c).__name__] += 1
+        return commands
+
+    # ------------------------------------------- streaming incremental path
+    def route_instance(
+        self, snap: "InstanceSnapshot", ps_version: int
+    ) -> CommandList:
+        """Event-driven incremental admission (streaming fast path).
+
+        One instance just freed capacity (COMPLETED/ABORTED): make a
+        routing-only decision for *that instance* under the coordinator
+        lock — the caller holds the instance's lock, no fleet barrier.
+        Reuses the full waterfall routing strategy (Alg. 3 ->
+        ``CostModel.marginal_gain`` / ``admit_group``) and the
+        ``StalenessVerifier.can_assign`` gate over a one-instance snapshot,
+        so admission decisions are identical to what a global cycle would
+        route to this instance. Sync, migration, and surplus aborts stay
+        with the rarer background ``step`` rebalance.
+
+        Returns the issued Route commands (the caller executes them). The
+        single-instance snapshot is still Eq. 1-validated: commands whose
+        effects haven't landed on this instance yet reject it, and the
+        admission simply retries on the next event or background cycle.
+        """
+        with self._lock:
+            if self.in_cycle():
+                return []  # re-entrant emit from a running cycle's dispatch
+            self.stats.stream_cycles += 1
+            inst_id = snap.inst_id
+            if not self.spec.validate({inst_id: snap}):
+                self.stats.stream_rejected += 1
+                return []
+            self._cycle_thread = threading.get_ident()
+            try:
+                ts_trajs = list(self.ts.peek())
+                if not ts_trajs:
+                    return []
+                s = {inst_id: clone_snapshot({inst_id: snap})[inst_id]}
+                total = s[inst_id].preemptions
+                s[inst_id].preemptions = max(
                     0, total - self._preempt_seen.get(inst_id, 0)
                 )
                 self._preempt_seen[inst_id] = total
-            commands: CommandList = []
-            ts_trajs = list(self.ts.peek())
-            k5 = self.cost_model.k5
-            kv_bs = self.cost_model.block_size
-
-            # ---- redundancy surplus + protocol-dropped payload aborts
-            for cmd in self._collect_aborts(s):
-                commands.append(cmd)
-                self.spec.apply(cmd, ps_version=ps_version)
-                s[cmd.inst].discard(
-                    cmd.traj_ids, bytes_per_token=k5, block_size=kv_bs
-                )
-
-            # ---- Alg. 1 line 3: synchronization strategy
-            for inst in self.suite.synchronization(
-                s, ts_trajs, ps_version, self.cost_model, self.verifier, self.cfg
-            ):
-                resident = sorted(s[inst].resident())
-                if resident:
-                    cmd_i = Interrupt(inst, tuple(resident))
-                    commands.append(cmd_i)
-                    self.spec.apply(cmd_i, ps_version=ps_version)
-                cmd_p = Pull(inst)
-                commands.append(cmd_p)
-                self.spec.apply(cmd_p, ps_version=ps_version)
-                s[inst].discard(resident, bytes_per_token=k5, block_size=kv_bs)
-                s[inst].complete_trajs = set()
-                s[inst].inst_version = ps_version
-                ts_trajs.extend(
-                    t for tid in resident if (t := self.ts.get(tid)) is not None
-                )
-
-            # ---- Alg. 1 line 9: migration strategy
-            for inst, trajs in self.suite.migration(s, self.cost_model, self.cfg):
-                cmd = Interrupt(inst, tuple(trajs))
-                commands.append(cmd)
-                self.spec.apply(cmd, ps_version=ps_version)
-                s[inst].discard(trajs, bytes_per_token=k5, block_size=kv_bs)
-                ts_trajs.extend(
-                    t for tid in trajs if (t := self.ts.get(tid)) is not None
-                )
-
-            # ---- Alg. 1 line 13: routing strategy
-            for inst, traj, version in self.suite.routing(
-                s, ts_trajs, self.cost_model, self.verifier, self.cfg
-            ):
-                if not self._reserve_on_route(traj, version):
-                    continue  # discriminator said no at issue time
-                if traj.v_traj is None:
-                    traj.v_traj = version
-                cmd = Route(inst, (traj.traj_id,), v_traj=version)
-                commands.append(cmd)
-                self.spec.apply(cmd, ps_version=ps_version)
-
-            for c in commands:
-                self.stats.commands[type(c).__name__] += 1
-            return commands
+                commands: CommandList = []
+                for inst, traj, version in self.suite.routing(
+                    s, ts_trajs, self.cost_model, self.verifier, self.cfg
+                ):
+                    if not self._reserve_on_route(traj, version):
+                        continue
+                    if traj.v_traj is None:
+                        traj.v_traj = version
+                    cmd = Route(inst, (traj.traj_id,), v_traj=version)
+                    commands.append(cmd)
+                    self.spec.apply(cmd, ps_version=ps_version)
+                    self.stats.commands["Route"] += 1
+                self.stats.stream_routes += len(commands)
+                return commands
+            finally:
+                self._cycle_thread = None
 
     def _collect_aborts(self, s: Snapshot) -> List[Abort]:
         """Redundancy surplus (batch level) and stale-protocol filtering."""
@@ -380,14 +460,23 @@ class RolloutCoordinator:
                 self.manager.occupy(key)
             return []
 
-    def try_consume(self) -> Optional[List[int]]:
+    def try_consume(
+        self, min_fill: Optional[int] = None
+    ) -> Optional[List[int]]:
         """Trainer-side Consume: returns the batch's trajectory IDs or None.
 
         For grouped entries the returned IDs are the *rewarded members* of
         each consumed group.
+
+        ``min_fill`` enables streaming partial-batch consumption (see
+        ``StalenessManager.consume``). Keys the manager had to drop while
+        re-homing leftovers under the advanced train floor are aborted here
+        — their payloads can never legally train, and under streaming the
+        floor advances often enough that leaving them would leak TS
+        registry slots and KV residency.
         """
         with self._lock:
-            keys = self.manager.consume()
+            keys = self.manager.consume(min_fill)
             if keys is None:
                 return None
             traj_ids: List[int] = []
@@ -402,4 +491,13 @@ class RolloutCoordinator:
                 else:
                     traj_ids.append(key)
                     self.lifecycle.consumed(key)
+            for key in self.manager.take_evicted():
+                if key >= GroupBook.GROUP_KEY_BASE and self.groups is not None:
+                    gid = key - GroupBook.GROUP_KEY_BASE
+                    group = self.ts.groups.get(gid)
+                    members = sorted(group.traj_ids) if group else []
+                    self._abort_members(members)
+                    self.groups.forget(gid)
+                else:
+                    self._abort_members([key])
             return traj_ids

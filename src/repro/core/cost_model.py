@@ -52,6 +52,13 @@ class CostModel:
     # kv_budget) is *per device* — the head-sharded pool spreads each
     # token's KV evenly, so per-device bytes are total / shard_count.
     shard_count: int = 1
+    # Engine decode-slot cap (live engines run a fixed number of concurrent
+    # sequences regardless of KV headroom — trajectories much shorter than
+    # max_len would otherwise let the byte budget admit past the pool and
+    # pile the excess into engine wait queues, whose presence then zeroes
+    # every later marginal gain). 0 = unlimited (the simulator's pools
+    # admit purely by byte budget).
+    max_concurrency: int = 0
 
     def token_bytes(self, tokens: float) -> float:
         """Per-device bytes of ``tokens`` worth of KV."""
@@ -113,6 +120,7 @@ class CostModel:
         return (
             s.kv_cache + self.kv_bytes_for(length) <= self.kv_budget
             and s.n_wait == 0
+            and (self.max_concurrency <= 0 or s.n_run < self.max_concurrency)
         )
 
     def with_routed(self, s: InstanceSnapshot, traj_id: int, length: int) -> InstanceSnapshot:
@@ -152,6 +160,10 @@ class CostModel:
             s.kv_cache + self.group_kv_bytes_for(prompt_len, lengths)
             <= self.kv_budget
             and s.n_wait == 0
+            and (
+                self.max_concurrency <= 0
+                or s.n_run + len(lengths) <= self.max_concurrency
+            )
         )
 
     def with_routed_group(

@@ -99,10 +99,25 @@ class TrajectoryLifecycle:
             self._subs[kind].append(fn)
         return fn
 
+    def subscribe_many(
+        self, kinds: List[LifecycleEventKind], fn: Subscriber
+    ) -> Subscriber:
+        """Subscribe one handler to several kinds (event-driven scheduler
+        wakeups, benchmark latency probes). Unsubscribe per kind."""
+        for kind in kinds:
+            self.subscribe(kind, fn)
+        return fn
+
     def unsubscribe(self, kind: LifecycleEventKind, fn: Subscriber) -> None:
         with self._lock:
             if fn in self._subs[kind]:
                 self._subs[kind].remove(fn)
+
+    def unsubscribe_many(
+        self, kinds: List[LifecycleEventKind], fn: Subscriber
+    ) -> None:
+        for kind in kinds:
+            self.unsubscribe(kind, fn)
 
     def emit(self, event: LifecycleEvent) -> None:
         # The bus lock guards only the subscriber table and counters —

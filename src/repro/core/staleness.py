@@ -145,6 +145,14 @@ class StalenessManager:
         self._lock = threading.RLock()
         # telemetry: staleness (V_buf - V_traj) histogram per consumed buffer
         self.consumed_staleness: List[List[int]] = []
+        # keys dropped by a Consume because their entry could not be
+        # re-homed under the advanced train floor (version + eta <
+        # train_version, or no empty slot). The payloads behind them are
+        # orphaned until the coordinator drains this via ``take_evicted``
+        # and Aborts them — under streaming partial consumption the floor
+        # advances fast enough for this to happen routinely, so silent
+        # drops would leak TS registry slots.
+        self._evicted: List[int] = []
 
     # ------------------------------------------------------------- internals
     def _buffer(self, v_buf: int) -> StalenessBuffer:
@@ -333,25 +341,52 @@ class StalenessManager:
                         return
             self._cascade_fill(v_buf, slot)
 
-    def ready(self) -> bool:
-        with self._lock:
-            buf = self._buffer(self.train_version)
-            return buf.n_occupied >= self.batch_size
+    def _consumable_locked(self, min_occupied: Optional[int]) -> bool:
+        """Is the train-floor buffer consumable? Full-batch rule by default;
+        with ``min_occupied`` set (streaming partial consumption) the buffer
+        is also consumable once it holds that many occupied entries, or as
+        soon as any occupied entry sits at the ``eta`` bound (it cannot get
+        staler — waiting buys nothing, so the partial batch ships)."""
+        buf = self._buffer(self.train_version)
+        n_occ = buf.n_occupied
+        if n_occ >= self.batch_size:
+            return True
+        if min_occupied is None or min_occupied <= 0 or n_occ == 0:
+            return False
+        if n_occ >= min_occupied:
+            return True
+        return any(
+            e.state == EntryState.OCCUPIED
+            and e.version is not None
+            and e.version + self.eta <= self.train_version
+            for e in buf.entries
+        )
 
-    def consume(self) -> Optional[List[int]]:
+    def ready(self, min_occupied: Optional[int] = None) -> bool:
+        with self._lock:
+            return self._consumable_locked(min_occupied)
+
+    def consume(self, min_occupied: Optional[int] = None) -> Optional[List[int]]:
         """Retire the earliest buffer if Ready; returns its keys (batch) or None.
 
         Under batch redundancy a buffer is consumable once ``batch_size``
         entries are occupied; surplus entries are left for the caller to
         Abort (they are reported by ``surplus_keys`` *before* consuming).
+
+        ``min_occupied`` enables streaming partial-batch mode: the buffer is
+        retired once it holds that many occupied entries (or an occupied
+        entry hits the ``eta`` bound) even if not full — see
+        ``_consumable_locked``. At most ``batch_size`` keys are returned
+        either way, and the staleness bound is unaffected: partial consumes
+        only ever advance the floor *earlier*, never admit staler entries.
         """
         with self._lock:
             buf = self._buffer(self.train_version)
+            if not self._consumable_locked(min_occupied):
+                return None
             occupied = [
                 (s, e) for s, e in enumerate(buf.entries) if e.state == EntryState.OCCUPIED
             ]
-            if len(occupied) < self.batch_size:
-                return None
             take = occupied[: self.batch_size]
             keys = [e.key for _, e in take]
             self.consumed_staleness.append(
@@ -370,6 +405,8 @@ class StalenessManager:
                 # Re-insert under the new floor; abort if now illegal.
                 if e.version is not None and e.version + self.eta >= self.train_version:
                     self._reinsert(e)
+                else:
+                    self._evicted.append(e.key)
             return keys
 
     def _reinsert(self, e: Entry) -> None:
@@ -380,8 +417,16 @@ class StalenessManager:
                 buf.entries[slot] = Entry(e.state, e.key, e.version)
                 self._index[e.key] = (v, slot)
                 return
-        # No room under the advanced floor: the entry is dropped; the
-        # coordinator sees it vanish from tracked_keys and aborts the payload.
+        # No room under the advanced floor: the entry is dropped and its
+        # key reported via ``take_evicted`` so the coordinator can Abort
+        # the orphaned payload.
+        self._evicted.append(e.key)
+
+    def take_evicted(self) -> List[int]:
+        """Drain keys dropped by Consume re-homing (see ``_evicted``)."""
+        with self._lock:
+            out, self._evicted = self._evicted, []
+            return out
 
     def surplus_keys(self) -> List[int]:
         """Keys that redundancy has made unnecessary (buffer already has

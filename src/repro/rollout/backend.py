@@ -427,6 +427,12 @@ class ExecResult:
     # execution (possible only under concurrent schedulers); the caller
     # must rebalance the speculative state for these (inst, traj_id) pairs
     skipped_routes: List[Tuple[int, int]] = field(default_factory=list)
+    # Interrupt/Abort targets the engine no longer held at execution time
+    # (completed or already removed since the snapshot — possible only
+    # under relaxed/streaming snapshot collection). The command had no
+    # data-plane effect, so the caller must undo its speculative decrement
+    # unless a later Pull in the same batch re-zeroed the expectation.
+    missed_removals: List[Tuple[int, int]] = field(default_factory=list)
 
 
 def execute_commands(
@@ -499,22 +505,30 @@ def execute_commands(
         _flush_waves()
         if isinstance(cmd, Interrupt):
             t0 = time.perf_counter()
+            removed = set()
             for traj in inst.interrupt(cmd.traj_ids, now):
+                removed.add(traj.traj_id)
                 if lifecycle is not None:
                     lifecycle.interrupted(traj, cmd.inst)
                 else:
                     ts.put_back(traj.traj_id)
                 res.returned.append(traj.traj_id)
             res.interrupted += len(cmd.traj_ids)
+            res.missed_removals.extend(
+                (cmd.inst, tid) for tid in cmd.traj_ids if tid not in removed
+            )
             _timed("interrupt", t0)
         elif isinstance(cmd, Abort):
-            inst.abort(cmd.traj_ids, now)
+            removed = {t.traj_id for t in inst.abort(cmd.traj_ids, now)}
             for tid in cmd.traj_ids:
                 if lifecycle is not None:
                     lifecycle.aborted(tid, inst=cmd.inst)
                 else:
                     ts.drop(tid)
             res.aborted += len(cmd.traj_ids)
+            res.missed_removals.extend(
+                (cmd.inst, tid) for tid in cmd.traj_ids if tid not in removed
+            )
         elif isinstance(cmd, Pull):
             t0 = time.perf_counter()
             params, version = param_source.pull()

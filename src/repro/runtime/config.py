@@ -55,6 +55,25 @@ class RuntimeConfig:
     # threaded-scheduler wall-clock budget: run() stops (with a warning)
     # if total_steps has not landed by then
     threaded_wall_timeout_s: float = 300.0
+    # ------------------------------------------------- streaming pipeline
+    # Continuous per-trajectory streaming (opt-in; the tick scheduler's
+    # seed path is bit-for-bit unchanged while this is False):
+    #  * COMPLETED/ABORTED events trigger an incremental single-instance
+    #    routing decision (RolloutCoordinator.route_instance) so freed KV
+    #    blocks refill within one event dispatch,
+    #  * the full coordinator_cycle rebalance becomes a rarer background
+    #    pass whose per-instance snapshots are collected without the
+    #    all-instance-locks barrier (races resolve at execute time),
+    #  * the trainer consumes partial batches (see stream_min_fill).
+    streaming: bool = False
+    # minimum occupied entries in the train-floor buffer before a partial
+    # consume ships (an entry hitting the eta bound also triggers); the
+    # full batch_size still consumes immediately. <= 0 disables partial
+    # consumption (full batches only).
+    stream_min_fill: int = 1
+    # background full-rebalance pacing under streaming (migration, sync,
+    # surplus aborts); incremental admission handles routing in between
+    stream_rebalance_interval_s: float = 0.02
 
 
 @dataclass

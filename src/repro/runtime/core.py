@@ -45,6 +45,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import (
     Abort,
+    Pull,
     CostModel,
     ParameterServer,
     RetiredPayloadStore,
@@ -143,6 +144,14 @@ class RuntimeCore:
 
         # ------------------------------------------------- the service bus
         self.lifecycle = TrajectoryLifecycle()
+        # coordinator-cycle dirty flag: any lifecycle event (or decode
+        # progress, marked in decode_instance) means the next cycle may
+        # have work; a quiet system lets coordinator_cycle short-circuit
+        # without re-sorting and re-entering every instance lock
+        self._coord_dirty = True
+        self._coord_last_ps_version = -1
+        for _kind in LifecycleEventKind:
+            self.lifecycle.subscribe(_kind, self._mark_coord_dirty)
 
         self.dataset = ArithmeticDataset(rcfg.n_prompts, seed=rcfg.seed)
         if rcfg.reward_fn is not None:
@@ -200,6 +209,11 @@ class RuntimeCore:
             / rcfg.rollout_shards,
             block_size=rcfg.kv_block_size if rcfg.paged_kv else 1,
             shard_count=rcfg.rollout_shards,
+            # admission stops at the engines' slot pool: short trajectories
+            # would let the byte budget overcommit into engine wait queues,
+            # and resident waiters zero marginal_gain for every later
+            # routing decision (the streaming fast path in particular)
+            max_concurrency=rcfg.max_slots,
         )
         group_filter = None
         if rcfg.filter_zero_signal:
@@ -232,6 +246,16 @@ class RuntimeCore:
         # release engine residency everywhere; command-executed aborts
         # (inst set) already did
         self.lifecycle.subscribe(LifecycleEventKind.ABORTED, self._on_aborted)
+        # streaming pipeline: freed capacity (COMPLETED; ABORTED is handled
+        # inside _on_aborted, which knows which instance actually released
+        # the trajectory) triggers an incremental admission decision.
+        # Subscribed after the TS/reward/protocol handlers so scoring and
+        # Occupy have cascaded before the routing decision looks at the
+        # staleness discriminator.
+        if rcfg.streaming:
+            self.lifecycle.subscribe(
+                LifecycleEventKind.COMPLETED, self._on_stream_completed
+            )
 
         self._instances_lock = threading.RLock()
         self.instances: Dict[int, LockedBackend] = {}
@@ -290,13 +314,25 @@ class RuntimeCore:
         with self._instances_lock:
             return collect_snapshots(self.instances)
 
+    def _mark_coord_dirty(self, e: LifecycleEvent) -> None:
+        self._coord_dirty = True
+
+    def _on_stream_completed(self, e: LifecycleEvent) -> None:
+        self.stream_admit(e.inst)
+
     def _on_aborted(self, e: LifecycleEvent) -> None:
         if e.inst is not None:
             return  # executed as a command: the target instance is clean
         with self._instances_lock:
             handles = list(self.instances.values())
+        freed: Optional[int] = None
         for h in handles:
-            h.abort([e.traj_id])
+            if h.abort([e.traj_id]):
+                freed = h.inst_id
+        if self.rcfg.streaming and freed is not None:
+            # a protocol abort released KV blocks outside any cycle:
+            # refill the freed instance within this event dispatch
+            self.stream_admit(freed)
 
     # --------------------------------------------------------- rollout side
     def decode_instance(self, inst_id: int, n_steps: int = 1) -> int:
@@ -313,9 +349,20 @@ class RuntimeCore:
             done.extend(handle.step())
         with self._timers_lock:
             self.timers["decode"] += time.perf_counter() - t0
+        if handle.n_active() > 0:
+            # resident KV grew: migration/routing inputs changed even
+            # without a completion, so the next cycle must run
+            self._coord_dirty = True
         for traj in done:
             self.complete_trajectory(traj)
         return len(done)
+
+    def instance_busy(self, inst_id: int) -> bool:
+        """Does the instance have active decode slots right now? (Lock-free
+        telemetry read for the event-driven scheduler's idle decision.)"""
+        with self._instances_lock:
+            handle = self.instances.get(inst_id)
+        return handle is not None and handle.n_active() > 0
 
     def complete_trajectory(self, traj) -> None:
         """Publish a completion; the reward phase (and everything behind
@@ -339,37 +386,123 @@ class RuntimeCore:
 
     # ------------------------------------------------------ coordinator side
     def coordinator_cycle(self) -> int:
-        """One snapshot->command->execute cycle, atomic under the
-        coordinator lock AND every instance lock — decode, reward events,
-        and elasticity cannot interleave between observation and effect
-        (the live analog of the simulator's zero-time cycle). Returns the
-        number of commands executed."""
+        """One snapshot->command->execute cycle. Returns the number of
+        commands executed.
+
+        Barrier mode (default): atomic under the coordinator lock AND every
+        instance lock — decode, reward events, and elasticity cannot
+        interleave between observation and effect (the live analog of the
+        simulator's zero-time cycle).
+
+        Streaming mode: the cycle is the rarer background *rebalance* pass
+        (sync, migration, surplus aborts). Per-instance snapshots are
+        collected without the all-locks barrier, so decode threads keep
+        stepping while the coordinator deliberates; races are resolved at
+        execute time — vanished Route targets via ``ts.try_take`` /
+        ``skipped_routes``, vanished Interrupt/Abort targets via
+        ``missed_removals`` — and the speculative state is compensated for
+        both so Eq. 1 keeps validating.
+
+        Short-circuit: with no routable work, no lifecycle event or decode
+        progress since the last cycle, and no new parameter version, a full
+        cycle is provably a no-op — skip it without re-sorting and
+        re-entering every instance lock.
+        """
+        if (
+            not self._coord_dirty
+            and self.ts.n_available == 0
+            and self.ps.version == self._coord_last_ps_version
+        ):
+            return 0
         with self.coordinator.lock:
+            # reset *before* snapshotting: events landing mid-cycle re-mark
+            # the flag, so their effects are observed by the next cycle
+            self._coord_dirty = False
+            ps_version = self.ps.version
             with self._instances_lock:
                 handles = dict(self.instances)
-            with ExitStack() as stack:
-                for i in sorted(handles):
-                    stack.enter_context(handles[i].lock)
-                t0 = time.perf_counter()
-                snaps = collect_snapshots(handles)
-                commands = self.coordinator.step(snaps, self.ps.version)
-                self.timers["coordinator"] += time.perf_counter() - t0
-                res = execute_commands(
-                    commands, handles, self.ts, self.ps,
-                    timers=self.timers, lifecycle=self.lifecycle,
-                )
-                # a Route that found its trajectory already gone (only
-                # possible across cycles under failure) must not skew P
-                for inst, tid in res.skipped_routes:
-                    self.coordinator.spec.apply(Abort(inst, (tid,)))
-                return len(commands)
+            if self.rcfg.streaming:
+                n = self._cycle_body(handles, ps_version)
+            else:
+                with ExitStack() as stack:
+                    for i in sorted(handles):
+                        stack.enter_context(handles[i].lock)
+                    n = self._cycle_body(handles, ps_version)
+            self._coord_last_ps_version = ps_version
+            return n
+
+    def _cycle_body(self, handles: Dict[int, LockedBackend], ps_version: int) -> int:
+        t0 = time.perf_counter()
+        snaps = collect_snapshots(handles)
+        commands = self.coordinator.step(snaps, ps_version)
+        self.timers["coordinator"] += time.perf_counter() - t0
+        res = execute_commands(
+            commands, handles, self.ts, self.ps,
+            timers=self.timers, lifecycle=self.lifecycle,
+        )
+        # a Route that found its trajectory already gone (cross-cycle
+        # failure races; any concurrent mutation under streaming's relaxed
+        # snapshots) must not skew P
+        for inst, tid in res.skipped_routes:
+            self.coordinator.spec.apply(Abort(inst, (tid,)))
+        if res.missed_removals:
+            # an Interrupt/Abort whose target completed between the relaxed
+            # snapshot and execution had no data-plane effect: undo its
+            # speculative decrement — unless a later Pull for the same
+            # instance re-zeroed the expectation (sync interrupts), in
+            # which case both sides already agree
+            pulled = {c.inst for c in commands if isinstance(c, Pull)}
+            for inst, tid in res.missed_removals:
+                if inst not in pulled:
+                    self.coordinator.spec.ensure(inst).accum_traj_num += 1
+        return len(commands)
+
+    def stream_admit(self, inst_id: Optional[int]) -> int:
+        """Event-driven incremental admission (streaming fast path).
+
+        An instance freed KV capacity (COMPLETED / protocol ABORTED): make
+        a single-instance routing decision under only the coordinator lock
+        plus that instance's lock and execute it within this event
+        dispatch — the rest of the fleet never stops decoding. Returns the
+        number of Route commands executed.
+        """
+        if inst_id is None or not self.rcfg.streaming:
+            return 0
+        if self.coordinator.in_cycle():
+            # emitted from a running cycle's own command execution: that
+            # cycle already routes against the freed capacity
+            return 0
+        with self._instances_lock:
+            handle = self.instances.get(inst_id)
+        if handle is None:
+            return 0
+        t0 = time.perf_counter()
+        with self.coordinator.lock:
+            with handle.lock:
+                snap = handle.snapshot()
+                commands = self.coordinator.route_instance(snap, self.ps.version)
+                if commands:
+                    res = execute_commands(
+                        commands, {inst_id: handle}, self.ts, self.ps,
+                        lifecycle=self.lifecycle,
+                    )
+                    for inst, tid in res.skipped_routes:
+                        self.coordinator.spec.apply(Abort(inst, (tid,)))
+        with self._timers_lock:
+            self.timers["coordinator"] += time.perf_counter() - t0
+        return len(commands)
 
     # ----------------------------------------------------------- the trainer
     def train_once(self) -> Optional[StepRecord]:
         t0 = time.perf_counter()
-        if not self.manager.ready():
+        # streaming consumption: rewarded groups drain into the train-floor
+        # buffer (the staleness-ordered ready queue, bounded at
+        # (eta+1)*capacity entries) and a partial batch ships once
+        # stream_min_fill occupied entries — or the eta bound — is reached
+        min_fill = self.rcfg.stream_min_fill if self.rcfg.streaming else None
+        if not self.manager.ready(min_fill):
             return None
-        batch_ids = self.coordinator.try_consume()
+        batch_ids = self.coordinator.try_consume(min_fill)
         if batch_ids is None:
             return None
         # consume retires trajectories from the TS registry; payloads were

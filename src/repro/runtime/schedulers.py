@@ -37,8 +37,44 @@ import time
 from typing import Callable, List, Optional, Protocol
 
 from repro.core import BackgroundPusher
+from repro.core.lifecycle import LifecycleEventKind
 from repro.runtime.config import StepRecord
 from repro.runtime.core import RuntimeCore
+
+
+class EventGate:
+    """Lost-wakeup-free sleep: a ``threading.Condition`` plus a monotone
+    generation counter.
+
+    A service loop snapshots ``seq()`` *before* doing (and checking for)
+    work, then calls ``wait(seen, timeout)`` when idle: any ``notify`` that
+    landed in between bumped the counter, so the wait returns immediately
+    instead of losing the wakeup. ``notify`` accepts (and ignores) an
+    argument so it can be subscribed to the lifecycle bus directly; the
+    condition is a leaf lock — nothing is held while notifying subscribers'
+    domain locks, so signaling from any service thread is deadlock-free.
+    """
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._seq = 0
+
+    def seq(self) -> int:
+        with self._cond:
+            return self._seq
+
+    def notify(self, _event=None) -> None:
+        with self._cond:
+            self._seq += 1
+            self._cond.notify_all()
+
+    def wait(self, seen: int, timeout: float) -> bool:
+        """Block until the counter moves past ``seen`` (or ``timeout`` s);
+        returns True if signaled."""
+        with self._cond:
+            if self._seq != seen:
+                return True
+            return self._cond.wait_for(lambda: self._seq != seen, timeout)
 
 
 class Scheduler(Protocol):
@@ -106,47 +142,114 @@ class ThreadedScheduler:
         self._threads: dict = {}
         self.pusher: Optional[BackgroundPusher] = None
         self.timed_out = False
-        # telemetry: per-phase busy seconds (overlap analysis); decode is
-        # updated by N instance threads, so adds go through a lock
+        # telemetry: per-phase busy seconds (overlap analysis); every loop
+        # updates through the lock — instance threads are many, and the
+        # coordinator/trainer adds race against run()'s final read
         self.busy = {"decode": 0.0, "train": 0.0, "coordinate": 0.0}
         self._busy_lock = threading.Lock()
+        # event-driven wakeups (no 0.5 ms polling): each service loop
+        # sleeps on its gate and lifecycle events signal it — wake latency
+        # is one dispatch, idle threads cost nothing. Timeouts below are
+        # safety nets, not pacing.
+        self.gates = {
+            "instance": EventGate(),
+            "coordinator": EventGate(),
+            "trainer": EventGate(),
+        }
+        self._gate_subs: list = []
+
+    def _wire_gates(self) -> None:
+        """Signal routing: which lifecycle transitions can unblock whom.
+
+        * instances: a ROUTED admits new work; an ABORTED frees KV budget
+          so a starved instance may admit its waiters.
+        * trainer: REWARDED occupies a buffer entry; ABORTED can
+          forward-fill one — both can make the train floor consumable.
+        * coordinator: completions / interrupts / consumes change routable
+          work or capacity. Under streaming the incremental fast path
+          already handles admission in the event dispatch, so the
+          background rebalance stays interval-paced and only CONSUMED
+          (registry slots retired -> refill can top up the TS) wakes it.
+        """
+        L = self.core.lifecycle
+        K = LifecycleEventKind
+        wiring = [
+            ([K.ROUTED, K.ABORTED], self.gates["instance"].notify),
+            ([K.REWARDED, K.ABORTED], self.gates["trainer"].notify),
+        ]
+        if self.core.rcfg.streaming:
+            wiring.append(([K.CONSUMED], self.gates["coordinator"].notify))
+        else:
+            wiring.append((
+                [K.COMPLETED, K.ABORTED, K.INTERRUPTED, K.REWARDED,
+                 K.CONSUMED],
+                self.gates["coordinator"].notify,
+            ))
+        for kinds, fn in wiring:
+            L.subscribe_many(kinds, fn)
+            self._gate_subs.append((kinds, fn))
+
+    def _unwire_gates(self) -> None:
+        for kinds, fn in self._gate_subs:
+            self.core.lifecycle.unsubscribe_many(kinds, fn)
+        self._gate_subs = []
 
     # ------------------------------------------------------------ workers
     def _instance_loop(self, inst_id: int) -> None:
         core = self.core
+        gate = self.gates["instance"]
         while not self._stop.is_set():
             with core._instances_lock:
                 alive = inst_id in core.instances
             if not alive:
                 return  # failed / removed: the thread retires itself
+            seen = gate.seq()
             t0 = time.perf_counter()
             n = core.decode_instance(inst_id, core.rcfg.decode_steps_per_tick)
             with self._busy_lock:
                 self.busy["decode"] += time.perf_counter() - t0
-            if n == 0:
-                # idle (nothing resident / budget-starved): yield
-                time.sleep(0.0005)
+            if n == 0 and not core.instance_busy(inst_id):
+                # nothing decoding (empty or budget-starved): sleep until
+                # a Route / freed budget signals. The pre-step seq read
+                # means a signal during decode_instance wakes immediately.
+                gate.wait(seen, timeout=0.05)
 
     def _coordinator_loop(self) -> None:
         core = self.core
-        interval = max(core.rcfg.coordinator_interval_s, 0.0)
+        gate = self.gates["coordinator"]
+        rcfg = core.rcfg
+        if rcfg.streaming:
+            # background rebalance pacing: incremental admission handles
+            # per-event routing, so full passes are deliberately rare
+            interval = max(rcfg.stream_rebalance_interval_s, 0.001)
+        else:
+            interval = (
+                rcfg.coordinator_interval_s
+                if rcfg.coordinator_interval_s > 0
+                else 0.0005
+            )
         while not self._stop.is_set():
+            seen = gate.seq()
             t0 = time.perf_counter()
-            core.coordinator_cycle()
             core.ts.refill()
-            self.busy["coordinate"] += time.perf_counter() - t0
-            time.sleep(interval if interval > 0 else 0.0005)
+            core.coordinator_cycle()
+            with self._busy_lock:
+                self.busy["coordinate"] += time.perf_counter() - t0
+            gate.wait(seen, timeout=interval)
 
     def _trainer_loop(self) -> None:
         core = self.core
+        gate = self.gates["trainer"]
         while not self._stop.is_set():
             if core.model_version >= core.rcfg.total_steps:
                 return
+            seen = gate.seq()
             t0 = time.perf_counter()
             rec = core.train_once()
-            self.busy["train"] += time.perf_counter() - t0
+            with self._busy_lock:
+                self.busy["train"] += time.perf_counter() - t0
             if rec is None:
-                time.sleep(0.0005)
+                gate.wait(seen, timeout=0.05)
 
     def _spawn(self, name: str, target, *args) -> None:
         t = threading.Thread(target=target, args=args, name=name, daemon=True)
@@ -167,6 +270,7 @@ class ThreadedScheduler:
         del max_ticks
         core = self.core
         self._stop.clear()
+        self._wire_gates()
         # overlapped parameter publication (Appendix A: Push hides behind
         # the next training step; FIFO worker keeps versions ordered)
         self.pusher = BackgroundPusher(core.ps).start()
@@ -214,9 +318,12 @@ class ThreadedScheduler:
 
     def shutdown(self) -> None:
         self._stop.set()
+        for gate in self.gates.values():
+            gate.notify()  # wake sleepers so they observe the stop flag
         for t in self._threads.values():
             t.join(timeout=10.0)
         self._threads = {}
+        self._unwire_gates()
         core = self.core
         core.reward_server.stop(drain=False)
         if self.pusher is not None:

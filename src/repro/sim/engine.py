@@ -77,6 +77,13 @@ class SimConfig:
     group_redundancy: int = 0
     batch_redundancy: int = 0
     max_sim_time: float = 1e7
+    # streaming pipeline mirror (same semantics as RuntimeConfig.streaming):
+    # completions/aborts trigger RolloutCoordinator.route_instance on the
+    # freed instance, and the trainer consumes partial batches — keeps the
+    # sim's control plane exercising the exact live cost-model/verifier
+    # code paths under streaming
+    streaming: bool = False
+    stream_min_fill: int = 1
 
 
 @dataclass
@@ -221,18 +228,43 @@ class StaleFlowSim:
         residency; command-executed aborts (``inst`` set) already did."""
         if e.inst is not None:
             return
-        for inst in self.instances.values():
-            inst.abort([e.traj_id], self.now)
+        freed = None
+        for inst_id, inst in self.instances.items():
+            if inst.abort([e.traj_id], self.now):
+                freed = inst_id
+        if self.cfg.streaming and freed is not None:
+            self._stream_admit(freed)
 
     def _on_complete(self, traj: Trajectory) -> None:
         if self.ts.get(traj.traj_id) is None:
             return  # aborted earlier this tick (redundancy surplus)
         self._completed_len[traj.traj_id] = traj.sim_generated
+        inst_id = traj.instance
         # the event fans out: TS marks GENERATED, the reward server scores
         # (instant rule-based verifier), protocol Occupy + surplus aborts
         # cascade off REWARDED — the sim and the live runtime share one
         # lifecycle write path
-        self.lifecycle.completed(traj, traj.instance)
+        self.lifecycle.completed(traj, inst_id)
+        if self.cfg.streaming:
+            # streaming mirror: the freed KV capacity is refilled by an
+            # incremental single-instance routing decision, same fast path
+            # the live runtime drives off this event
+            self._stream_admit(inst_id)
+
+    def _stream_admit(self, inst_id) -> None:
+        inst = self.instances.get(inst_id)
+        if inst is None or self.coordinator.in_cycle():
+            return
+        commands = self.coordinator.route_instance(
+            inst.snapshot(), self.ps_version
+        )
+        if not commands:
+            return
+        res = execute_commands(
+            commands, {inst_id: inst}, self.ts, self.ps, now=self.now,
+            lifecycle=self.lifecycle,
+        )
+        self.result.route_count += res.routed
 
     def _coordinate(self) -> None:
         # new version becomes visible once Push lands
@@ -255,9 +287,10 @@ class StaleFlowSim:
     def _trainer(self) -> None:
         if self.now < self.trainer_busy_until:
             return
-        if not self.manager.ready():
+        min_fill = self.cfg.stream_min_fill if self.cfg.streaming else None
+        if not self.manager.ready(min_fill):
             return
-        ids = self.coordinator.try_consume()
+        ids = self.coordinator.try_consume(min_fill)
         if ids is None:
             return
         # batch token count: look up retired trajectories' final lengths

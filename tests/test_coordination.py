@@ -547,3 +547,111 @@ def test_coordinator_never_violates_staleness(batch_size, eta, n_inst):
         ts.refill()
     for hist in mgr.consumed_staleness:
         assert all(0 <= x <= eta for x in hist)
+
+
+# --------------------------------------- streaming incremental admission
+def test_route_instance_routes_single_instance():
+    """The event-driven fast path routes to the freed instance alone,
+    reserving protocol entries exactly like a full cycle would."""
+    mgr, ts, coord = _mk_coordinator()
+    s0 = snap(0)
+    coord.spec.resync({0: s0})
+    cmds = coord.route_instance(s0, ps_version=0)
+    routes = [c for c in cmds if isinstance(c, Route)]
+    assert routes and all(isinstance(c, Route) for c in cmds)
+    assert all(c.inst == 0 for c in routes)
+    assert mgr.in_flight() == len(routes)
+    assert coord.stats.stream_cycles == 1
+    assert coord.stats.stream_routes == len(routes)
+    # seed counters untouched: stream cycles are accounted separately
+    assert coord.stats.cycles == 0
+    assert coord.stats.snapshots_rejected == 0
+
+
+def test_route_instance_validates_snapshot():
+    """A stale single-instance snapshot (its Route effects not yet
+    landed) is Eq. 1-rejected without disturbing the seed counters."""
+    mgr, ts, coord = _mk_coordinator()
+    s0 = snap(0)
+    coord.spec.resync({0: s0})
+    assert coord.route_instance(s0, ps_version=0)  # P moved ahead
+    cmds = coord.route_instance(s0, ps_version=0)  # same stale snapshot
+    assert cmds == []
+    assert coord.stats.stream_rejected == 1
+    assert coord.stats.snapshots_rejected == 0
+
+
+def test_route_instance_noop_on_empty_ts():
+    mgr, ts, coord = _mk_coordinator(n_prompts=0)
+    s0 = snap(0)
+    coord.spec.resync({0: s0})
+    assert coord.route_instance(s0, ps_version=0) == []
+    assert mgr.in_flight() == 0
+
+
+def test_route_instance_respects_staleness_gate():
+    """The verifier gate carries over: with protocol capacity exhausted,
+    the fast path admits nothing."""
+    mgr, ts, coord = _mk_coordinator(batch_size=1, eta=0)
+    s0 = snap(0)
+    coord.spec.resync({0: s0})
+    first = coord.route_instance(s0, ps_version=0)
+    assert len(first) == 1  # (eta+1)*batch_size = 1 protocol slot
+    for c in first:
+        t = ts.take(c.traj_ids[0])  # what execute_commands would do
+        s0.run_trajs.add(c.traj_ids[0])
+        s0.traj_lengths[c.traj_ids[0]] = t.length
+        s0.kv_cache += CM.k5 * t.length
+    # snapshot now validates, but no protocol slot is free
+    assert coord.route_instance(s0, ps_version=0) == []
+    assert mgr.in_flight() == 1
+
+
+def test_route_instance_guarded_against_reentry():
+    """A lifecycle subscriber firing inside a running cycle's dispatch
+    must not recurse into admission (the coordinator lock is held)."""
+    mgr, ts, coord = _mk_coordinator()
+    s0 = snap(0)
+    coord.spec.resync({0: s0})
+    observed = []
+
+    real_routing = coord.suite.routing
+
+    def probing_routing(*a, **kw):
+        # we are inside step() -> in_cycle() is True for this thread,
+        # so a re-entrant fast-path call must bail out empty
+        observed.append(coord.in_cycle())
+        observed.append(coord.route_instance(s0, ps_version=0))
+        return real_routing(*a, **kw)
+
+    coord.suite = type(coord.suite)(
+        routing=probing_routing,
+        synchronization=coord.suite.synchronization,
+        migration=coord.suite.migration,
+    )
+    cmds = coord.step({0: s0}, ps_version=0)
+    assert [c for c in cmds if isinstance(c, Route)]
+    assert observed[0] is True
+    assert observed[1] == []  # re-entrant admission refused
+
+
+def test_route_instance_then_full_cycle_consume():
+    """Admission via the fast path feeds the same protocol pipeline: the
+    routed trajectories complete, reward, and consume under the bound."""
+    mgr, ts, coord = _mk_coordinator(batch_size=2, eta=1)
+    s0 = snap(0)
+    coord.spec.resync({0: s0})
+    cmds = coord.route_instance(s0, ps_version=0)
+    assert cmds
+    for c in cmds:
+        for tid in c.traj_ids:
+            t = ts.take(tid)
+            t.response = [5] * 4
+            ts.complete(tid)
+            t.reward = 1.0
+            coord.on_trajectory_rewarded(t)
+    batch = coord.try_consume(min_fill=1)
+    assert batch is not None and 1 <= len(batch) <= 2
+    assert mgr.train_version == 1
+    for hist in mgr.consumed_staleness:
+        assert all(0 <= s <= 1 for s in hist)

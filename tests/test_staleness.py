@@ -213,3 +213,92 @@ def test_random_op_sequences_never_violate_bound(batch_size, eta, seed, n_ops):
         m.check_invariants()
     for hist in m.consumed_staleness:
         assert all(0 <= s <= eta for s in hist)
+
+
+# ------------------------------------------- streaming partial consumption
+def test_ready_partial_requires_min_occupied():
+    m = StalenessManager(batch_size=4, eta=1)
+    assert not m.ready(2)  # empty buffer is never consumable
+    for k in range(2):
+        m.reserve(k, 0)
+        m.occupy(k)
+    assert not m.ready()       # full-batch rule: 2 < 4
+    assert not m.ready(3)      # below the partial floor
+    assert m.ready(2)          # at the partial floor
+    assert not m.ready(0)      # <= 0 disables partial mode
+    m.check_invariants()
+
+
+def test_partial_consume_returns_occupied_and_advances_floor():
+    m = StalenessManager(batch_size=4, eta=1)
+    for k in range(2):
+        m.reserve(k, 0)
+        m.occupy(k)
+    keys = m.consume(2)
+    assert sorted(keys) == [0, 1]
+    assert m.train_version == 1
+    # partial consumes record real staleness samples and respect eta
+    assert m.consumed_staleness[-1] == [0, 0]
+    m.check_invariants()
+
+
+def test_partial_consume_triggers_at_eta_bound():
+    """An occupied entry at the eta bound cannot get staler — the partial
+    batch ships even below min_occupied."""
+    m = StalenessManager(batch_size=4, eta=1)
+    m.reserve(1, 0)
+    m.occupy(1)  # occupied at the floor buffer, staleness-if-consumed 0
+    assert not m.ready(2)       # 1 < min_occupied=2 and not at the bound
+    assert m.consume(1) == [1]  # partial floor met -> floor advances to 1
+    assert m.train_version == 1
+    # a version-0 entry under floor 1: staleness 1 == eta, cannot worsen
+    m.reserve(10, 0)
+    m.occupy(10)
+    assert m.ready(2)  # eta-bound rule overrides min_occupied
+    assert m.consume(2) == [10]
+    assert m.consumed_staleness[-1] == [1]
+    m.check_invariants()
+
+
+def test_partial_consume_evicts_unrehomeable_leftovers():
+    """Leftover entries whose version is illegal under the advanced floor
+    are reported via take_evicted (the coordinator Aborts the payloads)."""
+    m = StalenessManager(batch_size=2, eta=0)
+    # buffer 0: one occupied (consumable partial), one reserved straggler
+    m.reserve(1, 0)
+    m.occupy(1)
+    m.reserve(2, 0)
+    keys = m.consume(1)
+    assert keys == [1]
+    assert m.train_version == 1
+    # key 2 (version 0, eta 0) cannot live in buffer >= 1 -> evicted
+    assert m.take_evicted() == [2]
+    assert m.take_evicted() == []  # drained
+    assert not m.is_tracked(2)
+    m.check_invariants()
+
+
+def test_partial_consume_never_violates_staleness_bound():
+    """Fuzz partial consumption: the eta bound holds for every consumed
+    sample regardless of min_occupied interleavings."""
+    rng = random.Random(7)
+    m = StalenessManager(batch_size=3, eta=2)
+    next_key = 0
+    for _ in range(200):
+        op = rng.choice(["produce", "consume", "consume_partial"])
+        if op == "produce":
+            v = m.min_admissible_version(
+                at_least=max(0, m.train_version - m.eta)
+            )
+            if v is not None and m.can_reserve(v):
+                m.reserve(next_key, v)
+                m.occupy(next_key)
+                next_key += 1
+        elif op == "consume":
+            m.consume()
+        else:
+            m.consume(rng.randint(1, 3))
+        m.take_evicted()
+        m.check_invariants()
+    for hist in m.consumed_staleness:
+        assert all(0 <= s <= m.eta for s in hist)

@@ -149,3 +149,81 @@ def test_tick_refused_on_threaded_scheduler():
     with pytest.raises(RuntimeError):
         rt.tick()
     rt.scheduler.shutdown()
+
+
+# ------------------------------------------------- streaming pipeline
+def test_threaded_streaming_trains_with_staleness_bound():
+    """Streaming smoke: event-driven admission (route_instance off
+    COMPLETED/ABORTED), partial-batch consumption, and the event-gated
+    scheduler together still honor eta on every consumed batch."""
+    rt = mk_runtime(scheduler="threaded", total_steps=2, streaming=True,
+                    stream_min_fill=1)
+    rt.scheduler.wall_timeout_s = 240.0
+    history = rt.run()
+    assert rt.model_version == 2
+    for rec in history:
+        assert np.isfinite(rec.loss)
+        assert all(0 <= s <= rt.rcfg.eta for s in rec.staleness_hist)
+    assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+    rt.manager.check_invariants()
+    # the incremental fast path actually ran (not just background cycles)
+    assert rt.coordinator.stats.stream_cycles > 0
+
+
+@pytest.mark.slow
+def test_threaded_streaming_stress_elastic_fleet():
+    """Streaming stress: partial-batch consumption + incremental admission
+    under real thread interleavings, with a replica failure and an elastic
+    scale-up mid-run. The staleness bound and protocol invariants must
+    survive every transition."""
+    rt = mk_runtime(
+        scheduler="threaded", total_steps=3, n_instances=2, eta=2,
+        batch_size=2, streaming=True, stream_min_fill=1,
+        stream_rebalance_interval_s=0.01,
+    )
+    rt.scheduler.wall_timeout_s = 280.0
+    runner = threading.Thread(target=rt.run, daemon=True)
+    runner.start()
+    deadline = time.perf_counter() + 120
+    while time.perf_counter() < deadline:
+        if rt.instances[1].decode_steps > 0 and rt.model_version >= 1:
+            break
+        time.sleep(0.05)
+    assert rt.instances[1].decode_steps > 0, "instance 1 never decoded"
+
+    rt.fail_instance(1)
+    rt.manager.check_invariants()  # replica loss under streaming admission
+    rt.add_instance(9)
+    rt.manager.check_invariants()  # elastic scale-up
+
+    runner.join(timeout=280)
+    assert not runner.is_alive(), "threaded streaming run did not finish"
+    assert rt.model_version == 3
+    rt.manager.check_invariants()
+    assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+    for hist in rt.manager.consumed_staleness:
+        assert all(0 <= s <= rt.rcfg.eta for s in hist)
+    assert 9 in rt.instances
+    # lifecycle conservation: everything consumed was first rewarded
+    counts = rt.lifecycle.counts
+    from repro.core.lifecycle import LifecycleEventKind as K
+    assert counts[K.CONSUMED] <= counts[K.REWARDED]
+    assert counts[K.COMPLETED] >= counts[K.REWARDED] - counts[K.ABORTED]
+
+
+def test_tick_streaming_is_deterministic():
+    """Streaming under the cooperative scheduler stays single-threaded:
+    incremental admission runs inside the deterministic event dispatch, so
+    fixed seed still means bit-for-bit identical histories."""
+    hists = []
+    for _ in range(2):
+        rt = mk_runtime(total_steps=2, max_slots=2, streaming=True,
+                        stream_min_fill=1)
+        h = rt.run(max_ticks=3000)
+        assert rt.model_version == 2
+        assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+        assert rt.coordinator.stats.stream_cycles > 0
+        hists.append(
+            [(r.loss, r.mean_reward, tuple(r.staleness_hist)) for r in h]
+        )
+    assert hists[0] == hists[1]
