@@ -12,12 +12,12 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import threading
 import time
 
 from benchmarks.common import emit, note, sim_cfg
 from repro.core import StrategySuite
 from repro.core.types import reset_traj_ids
+from repro.obs.stats import percentile
 from repro.sim.baselines import OneStepSim, SyncSim
 from repro.sim.engine import StaleFlowSim
 
@@ -59,72 +59,6 @@ def run(quick: bool = False) -> dict:
 
 
 # -------------------------------------------------- live scheduler compare
-def _pct(samples, q):
-    if not samples:
-        return 0.0
-    s = sorted(samples)
-    return s[min(len(s) - 1, int(q * len(s)))]
-
-
-class _LifecycleProbe:
-    """Pipeline-latency observer on the trajectory-lifecycle bus.
-
-    * route latency: a COMPLETED (or command-executed ABORTED) frees KV
-      capacity on an instance -> how long until the next ROUTED lands
-      there? Under the cycle barrier this waits for the next full
-      coordinator pass; streaming admission answers within one event
-      dispatch.
-    * consume latency: REWARDED -> CONSUMED per trajectory — how long a
-      finished sample waits for the trainer (partial batches shorten it).
-    """
-
-    def __init__(self, lifecycle):
-        from repro.core.lifecycle import LifecycleEventKind as K
-
-        self._K = K
-        self._lifecycle = lifecycle
-        self._lock = threading.Lock()
-        self._freed = {}     # inst -> earliest unserved freed-at timestamp
-        self._rewarded = {}  # traj_id -> rewarded-at timestamp
-        self.route_lat = []
-        self.consume_lat = []
-        lifecycle.subscribe_many([K.COMPLETED, K.ABORTED], self._on_freed)
-        lifecycle.subscribe(K.ROUTED, self._on_routed)
-        lifecycle.subscribe(K.REWARDED, self._on_rewarded)
-        lifecycle.subscribe(K.CONSUMED, self._on_consumed)
-
-    def detach(self):
-        K = self._K
-        self._lifecycle.unsubscribe_many([K.COMPLETED, K.ABORTED], self._on_freed)
-        self._lifecycle.unsubscribe(K.ROUTED, self._on_routed)
-        self._lifecycle.unsubscribe(K.REWARDED, self._on_rewarded)
-        self._lifecycle.unsubscribe(K.CONSUMED, self._on_consumed)
-
-    def _on_freed(self, e):
-        if e.inst is None:
-            return  # protocol abort: no single instance freed capacity
-        with self._lock:
-            self._freed.setdefault(e.inst, time.perf_counter())
-
-    def _on_routed(self, e):
-        now = time.perf_counter()
-        with self._lock:
-            t0 = self._freed.pop(e.inst, None)
-            if t0 is not None:
-                self.route_lat.append(now - t0)
-
-    def _on_rewarded(self, e):
-        with self._lock:
-            self._rewarded[e.traj_id] = time.perf_counter()
-
-    def _on_consumed(self, e):
-        now = time.perf_counter()
-        with self._lock:
-            t0 = self._rewarded.pop(e.traj_id, None)
-            if t0 is not None:
-                self.consume_lat.append(now - t0)
-
-
 def _run_live(
     scheduler: str,
     *,
@@ -143,15 +77,15 @@ def _run_live(
         max_len=48, max_new_tokens=10, total_steps=total_steps, seed=0,
         scheduler=scheduler, reward_latency=reward_latency,
         streaming=streaming, stream_min_fill=1,
+        # pipeline latencies now come from the unified observability
+        # plane (the tracer's rings replaced the old private bus probe)
+        observability=probe,
     )
     cfg.update(rcfg_kw)
     rt = AsyncRLRuntime(get_arch("qwen2-1.5b").reduced(), RuntimeConfig(**cfg))
-    lat = _LifecycleProbe(rt.lifecycle) if probe else None
     t0 = time.perf_counter()
     rt.run(max_ticks=20000)
     wall = time.perf_counter() - t0
-    if lat is not None:
-        lat.detach()
 
     reward = rt.reward_server
     if scheduler == "threaded":
@@ -176,17 +110,19 @@ def _run_live(
         "reward_p99_s": pct[0.99] or 0.0,
         "max_staleness": rt.manager.max_consumed_staleness(),
     }
-    if lat is not None:
+    if probe:
         from repro.core.lifecycle import LifecycleEventKind as K
 
+        route_lat = rt.tracer.route_lat.values()
+        consume_lat = rt.tracer.consume_lat.values()
         stats = rt.coordinator.stats
         consumed = rt.lifecycle.counts[K.CONSUMED]
         metrics.update({
-            "route_p50_s": _pct(lat.route_lat, 0.5),
-            "route_p95_s": _pct(lat.route_lat, 0.95),
-            "consume_p50_s": _pct(lat.consume_lat, 0.5),
-            "consume_p95_s": _pct(lat.consume_lat, 0.95),
-            "route_samples": len(lat.route_lat),
+            "route_p50_s": percentile(route_lat, 0.5, default=0.0),
+            "route_p95_s": percentile(route_lat, 0.95, default=0.0),
+            "consume_p50_s": percentile(consume_lat, 0.5, default=0.0),
+            "consume_p95_s": percentile(consume_lat, 0.95, default=0.0),
+            "route_samples": len(route_lat),
             "stream_cycles": stats.stream_cycles,
             "stream_routes": stats.stream_routes,
             # full-barrier cycles paid per consumed trajectory: streaming

@@ -1,0 +1,97 @@
+"""Traced threaded-streaming smoke: the observability plane end to end.
+
+Runs a tiny threaded streaming runtime with tracing enabled, then gates
+on the three properties the plane promises:
+
+* the exported Chrome trace is schema-valid (``validate_chrome_trace``);
+* span conservation holds — every ROUTED trajectory span closed with
+  exactly one terminal event (CONSUMED or ABORTED);
+* the staleness the tracer *reconstructs* from span versions matches the
+  protocol's own accounting (``StalenessManager.max_consumed_staleness``)
+  and respects the eta bound.
+
+CI uploads the trace JSON as an artifact (open it at
+https://ui.perfetto.dev); exit code is non-zero on any violation.
+
+    PYTHONPATH=src python -m benchmarks.bench_trace_smoke \
+        --json BENCH_trace_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit, note
+from repro.core.types import reset_traj_ids
+
+
+def run(json_path: str = "BENCH_trace_smoke.json", total_steps: int = 2) -> int:
+    note("bench_trace_smoke: traced threaded streaming runtime")
+    from repro.configs import get_arch
+    from repro.obs.export import load_trace, validate_chrome_trace
+    from repro.obs.report import summarize
+    from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
+
+    reset_traj_ids()
+    rcfg = RuntimeConfig(
+        eta=1, batch_size=2, group_size=2, n_instances=2, max_slots=4,
+        max_len=48, max_new_tokens=10, total_steps=total_steps, seed=0,
+        scheduler="threaded", streaming=True, stream_min_fill=1,
+        reward_latency=0.002, observability=True, trace_path=json_path,
+    )
+    rt = AsyncRLRuntime(get_arch("qwen2-1.5b").reduced(), rcfg)
+    t0 = time.perf_counter()
+    rt.run(max_ticks=20000)
+    wall = time.perf_counter() - t0
+
+    failures = []
+    trace = load_trace(json_path)
+    schema_errors = validate_chrome_trace(trace)
+    if schema_errors:
+        failures.append(f"{len(schema_errors)} schema errors")
+        for e in schema_errors[:10]:
+            note(f"SCHEMA ERROR: {e}")
+
+    violations = rt.tracer.check_conservation(allow_open=True)
+    if violations:
+        failures.append(f"{len(violations)} conservation violations")
+        for v in violations[:10]:
+            note(f"CONSERVATION: {v}")
+
+    traced = rt.tracer.realized_max_staleness()
+    managed = rt.manager.max_consumed_staleness()
+    if traced != managed:
+        failures.append(
+            f"staleness mismatch: trace says {traced}, manager {managed}"
+        )
+    if traced > rcfg.eta:
+        failures.append(f"staleness {traced} exceeds eta={rcfg.eta}")
+
+    emit("trace_smoke", "wall_s", wall)
+    emit("trace_smoke", "steps", rt.model_version)
+    emit("trace_smoke", "trace_events", len(trace["traceEvents"]))
+    emit("trace_smoke", "spans", trace["otherData"]["spans"])
+    emit("trace_smoke", "max_realized_staleness", traced)
+    emit("trace_smoke", "schema_errors", len(schema_errors))
+    emit("trace_smoke", "conservation_violations", len(violations))
+    note(f"wrote {json_path}")
+    print(summarize(trace))
+
+    if failures:
+        for f in failures:
+            note(f"FAIL: {f}")
+        return 1
+    note("trace smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json", default="BENCH_trace_smoke.json",
+        help="path for the exported Chrome trace (also the CI artifact)",
+    )
+    ap.add_argument("--steps", type=int, default=2)
+    args = ap.parse_args()
+    sys.exit(run(json_path=args.json, total_steps=args.steps))

@@ -22,6 +22,7 @@ and the ``bench_sync_overhead`` benchmark.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
@@ -131,7 +132,7 @@ class BackgroundPusher:
     published version.
     """
 
-    def __init__(self, ps: ParameterServer):
+    def __init__(self, ps: ParameterServer, *, tracer=None, metrics=None):
         import queue
 
         self.ps = ps
@@ -142,6 +143,11 @@ class BackgroundPusher:
         self._started = False
         self.pushes = 0
         self.errors = 0
+        self._tracer = tracer
+        self._m_pushes = (
+            metrics.counter("ps_background_pushes")
+            if metrics is not None else None
+        )
 
     def start(self) -> "BackgroundPusher":
         if not self._started:
@@ -164,8 +170,16 @@ class BackgroundPusher:
                     return
                 params, version = item
                 try:
+                    t0 = time.perf_counter()
                     self.ps.push(params, version)
                     self.pushes += 1
+                    if self._m_pushes is not None:
+                        self._m_pushes.inc()
+                    if self._tracer is not None:
+                        self._tracer.activity(
+                            "push", t0, time.perf_counter(),
+                            args={"version": version},
+                        )
                 except Exception as exc:  # keep the push thread alive:
                     self.errors += 1      # a dead pusher hangs flush/stop
                     if self.errors == 1:  # and freezes the PS version

@@ -37,6 +37,7 @@ from repro.core.lifecycle import (
     TrajectoryLifecycle,
 )
 from repro.core.types import Trajectory
+from repro.obs.stats import Ring, percentiles
 
 
 class FnVerifier:
@@ -69,11 +70,21 @@ class RewardServer:
         *,
         clock: Callable[[], float] = time.perf_counter,
         liveness: Optional[Callable[[Trajectory], bool]] = None,
+        metrics=None,
+        tracer=None,
     ):
         self.verifier = verifier
         self.lifecycle = lifecycle
         self.cfg = cfg or RewardServerConfig()
         self._clock = clock
+        # observability (optional): submit->rewarded latency histogram on
+        # the registry, per-score activity spans on the tracer's
+        # reward-worker track
+        self._m_latency = (
+            metrics.histogram("reward_submit_to_rewarded_s")
+            if metrics is not None else None
+        )
+        self._tracer = tracer
         # liveness gate re-checked at scoring time: a trajectory aborted
         # (surplus/filtering) while sitting in the queue is dropped, not
         # scored — without this, threaded mode would publish REWARDED for
@@ -95,8 +106,7 @@ class RewardServer:
         # submit -> rewarded seconds, true ring buffer: once full, the
         # oldest samples are overwritten so percentiles track steady state
         # (not warm-up) on long runs
-        self._latencies: List[float] = []
-        self._lat_pos = 0
+        self._latencies = Ring(self.cfg.max_latency_samples)
         lifecycle.subscribe(LifecycleEventKind.COMPLETED, self._on_completed)
 
     # ----------------------------------------------------------- lifecycle
@@ -205,13 +215,13 @@ class RewardServer:
         with self._lock:
             self.scored += 1
             self.score_time += now - t0
-            if len(self._latencies) < self.cfg.max_latency_samples:
-                self._latencies.append(now - t_submit)
-            else:
-                self._latencies[self._lat_pos] = now - t_submit
-                self._lat_pos = (
-                    self._lat_pos + 1
-                ) % self.cfg.max_latency_samples
+        self._latencies.append(now - t_submit)
+        if self._m_latency is not None:
+            self._m_latency.observe(now - t_submit)
+        if self._tracer is not None:
+            self._tracer.activity(
+                "score", t0, now, args={"traj": traj.traj_id}
+            )
         self.lifecycle.rewarded(traj)
 
     def _worker_loop(self) -> None:
@@ -237,16 +247,7 @@ class RewardServer:
     ) -> dict:
         """Submit->rewarded latency percentiles, seconds. ``{q: None}`` when
         nothing has been scored yet."""
-        with self._lock:
-            lat = sorted(self._latencies)
-        out = {}
-        for q in qs:
-            if not lat:
-                out[q] = None
-            else:
-                idx = min(len(lat) - 1, int(q * len(lat)))
-                out[q] = lat[idx]
-        return out
+        return percentiles(self._latencies.values(), qs)
 
     def stats(self) -> dict:
         with self._lock:

@@ -5,6 +5,10 @@
 
 Reduced configs execute numerically on CPU; the full-size serve_step for
 every (arch x decode shape) cell is exercised by the dry-run.
+
+``--trace PATH`` exports a Perfetto-loadable Chrome trace of the run
+(queue/decode segments per request, reward-worker activity); ``--log-json``
+switches the structured log to NDJSON.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ from repro.core.types import Trajectory, next_traj_id
 from repro.data.tasks import ArithmeticDataset
 from repro.data.tokenizer import decode as tok_decode
 from repro.models import model as M
+from repro.obs import get_logger, setup_logging
 from repro.rollout.backend import create_backend
 
 
@@ -75,7 +80,17 @@ def main() -> None:
         "--reward-workers", type=int, default=2,
         help="reward worker threads with --score",
     )
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="export a Chrome trace (Perfetto-loadable) of the run",
+    )
+    ap.add_argument(
+        "--log-json", action="store_true",
+        help="structured NDJSON logs instead of human-readable lines",
+    )
     args = ap.parse_args()
+    setup_logging(json_mode=args.log_json)
+    log = get_logger("serve")
 
     cfg = get_arch(args.arch).reduced()
     if args.kv_heads:
@@ -94,66 +109,122 @@ def main() -> None:
         if not args.paged:
             raise SystemExit("--shards requires --paged (sharded KV pool)")
         inst = create_backend("sharded", 0, shard_count=args.shards, **kw)
-        print(f"sharded replica over {args.shards} devices "
-              f"({jax.device_count()} visible)")
+        log.info(
+            "sharded replica",
+            extra={"shards": args.shards, "visible": jax.device_count()},
+        )
     else:
         inst = create_backend("jax", 0, **kw)
     ds = ArithmeticDataset(args.requests, seed=2)
     n_requests = args.requests * args.group_size
 
-    reward_server = None
+    tracer = None
     lifecycle = None
-    if args.score:
-        from repro.core import (
-            RewardServer,
-            RewardServerConfig,
-            TrajectoryLifecycle,
-        )
-        from repro.reward.verifier import RewardModel
+    if args.trace or args.score:
+        from repro.core import TrajectoryLifecycle
 
         lifecycle = TrajectoryLifecycle()
+    if args.trace:
+        from repro.obs import TrajectoryTracer
+
+        tracer = TrajectoryTracer(lifecycle)
+        inst.on_admit = tracer.on_admit
+        inst.on_preempt = tracer.on_preempt
+
+    reward_server = None
+    if args.score:
+        from repro.core import RewardServer, RewardServerConfig
+        from repro.reward.verifier import RewardModel
+
         reward_server = RewardServer(
             RewardModel(lambda prompt: ds.answer_for(prompt)),
             lifecycle,
             RewardServerConfig(n_workers=args.reward_workers),
+            tracer=tracer,
         )
         reward_server.start()  # worker pool: scoring overlaps decode
 
     for gid, p in enumerate(ds.problems):
-        inst.route_many([
+        wave = [
             Trajectory(
                 traj_id=next_traj_id(), prompt=list(p.prompt_ids),
                 group_id=gid if args.group_size > 1 else -1,
                 max_new_tokens=args.max_new,
             )
             for _ in range(args.group_size)
-        ])
+        ]
+        if lifecycle is not None:
+            # span opens at route — before route_many, which may admit
+            # synchronously (the same ordering execute_commands uses)
+            for t in wave:
+                lifecycle.routed(t, inst.inst_id, 0)
+        inst.route_many(wave)
 
     t0 = time.time()
     done = []
     while len(done) < n_requests and time.time() - t0 < 120:
-        for t in inst.step():
+        s0 = time.perf_counter()
+        finished = inst.step()
+        if tracer is not None:
+            tracer.activity("decode", s0, time.perf_counter(), track="serve")
+        for t in finished:
             done.append(t)
-            print(f"  '{tok_decode(t.prompt)}' -> '{tok_decode(t.response)}'")
+            log.info(
+                "completion",
+                extra={
+                    "prompt": tok_decode(t.prompt),
+                    "response": tok_decode(t.response),
+                },
+            )
             if lifecycle is not None:
                 lifecycle.completed(t, inst.inst_id)
     dt = time.time() - t0
-    print(f"\n{len(done)} requests, {inst.decode_tokens} tokens in {dt:.2f}s "
-          f"({inst.decode_tokens/dt:.1f} tok/s, "
-          f"{inst.decode_tokens/max(inst.decode_steps,1):.2f} tok/step batched)")
+    log.info(
+        "served",
+        extra={
+            "requests": len(done),
+            "decode_tokens": inst.decode_tokens,
+            "wall_s": round(dt, 2),
+            "tok_per_s": round(inst.decode_tokens / dt, 1),
+            "tok_per_step": round(
+                inst.decode_tokens / max(inst.decode_steps, 1), 2
+            ),
+        },
+    )
     if args.group_size > 1 and args.paged:
-        print(f"prefix sharing: {inst.shared_prefix_hits} members admitted "
-              f"off a shared prompt, {inst.prefill_tokens_saved} prefill "
-              f"tokens saved")
+        log.info(
+            "prefix sharing",
+            extra={
+                "shared_admits": inst.shared_prefix_hits,
+                "prefill_tokens_saved": inst.prefill_tokens_saved,
+            },
+        )
     if reward_server is not None:
         reward_server.drain()
         reward_server.stop()
         correct = sum(1 for t in done if t.reward == 1.0)
         pct = reward_server.latency_percentiles((0.5, 0.95))
-        print(f"reward server: {reward_server.scored} scored "
-              f"({correct} correct), queue latency "
-              f"p50={1e3 * (pct[0.5] or 0):.2f}ms "
-              f"p95={1e3 * (pct[0.95] or 0):.2f}ms")
+        log.info(
+            "reward server",
+            extra={
+                "scored": reward_server.scored,
+                "correct": correct,
+                "queue_p50_ms": round(1e3 * (pct[0.5] or 0), 2),
+                "queue_p95_ms": round(1e3 * (pct[0.95] or 0), 2),
+            },
+        )
+    if tracer is not None:
+        from repro.obs import export_chrome_trace
+
+        trace = export_chrome_trace(tracer, args.trace)
+        log.info(
+            "trace written",
+            extra={
+                "path": args.trace,
+                "events": len(trace["traceEvents"]),
+                "spans": trace["otherData"]["spans"],
+            },
+        )
 
 
 if __name__ == "__main__":

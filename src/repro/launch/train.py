@@ -9,6 +9,10 @@ initialization + the identical mesh/sharding code paths).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
         --steps 3 --batch 8 --seq 64 [--compress-dp] [--ckpt-dir DIR]
+
+``--trace PATH`` exports a Chrome trace of the step loop (train-step
+spans, background PS-push activity); ``--log-json`` switches the
+structured log to NDJSON.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ from repro.distributed import sharding as shd
 from repro.distributed.collectives import make_dp_allreduce
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.obs import get_logger, setup_logging
 from repro.training import checkpoint as ckpt_lib
 from repro.training.optimizer import AdamWConfig, init_opt_state
 from repro.training.train_step import make_rl_train_step
@@ -46,14 +51,34 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (only sensible on real HW)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome trace (Perfetto-loadable) of the "
+                         "step loop")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured NDJSON logs instead of human-readable "
+                         "lines")
     args = ap.parse_args()
+    setup_logging(json_mode=args.log_json)
+    log = get_logger("train")
+
+    tracer = None
+    if args.trace:
+        from repro.obs import TrajectoryTracer
+
+        tracer = TrajectoryTracer()  # activity tracks only: no lifecycle
 
     cfg = get_arch(args.arch)
     if not args.full_size:
         cfg = cfg.reduced()
     mesh = make_host_mesh()
-    print(f"mesh={dict(mesh.shape)} arch={cfg.name} "
-          f"({cfg.n_params/1e6:.1f}M params)")
+    log.info(
+        "mesh built",
+        extra={
+            "mesh": dict(mesh.shape),
+            "arch": cfg.name,
+            "params_m": round(cfg.n_params / 1e6, 1),
+        },
+    )
 
     key = jax.random.PRNGKey(0)
     params = M.init_params(cfg, key)
@@ -85,7 +110,7 @@ def main() -> None:
         # demonstration: grads would flow through the compressed DP
         # all-reduce on a multi-host mesh; on 1 device it's an identity
         make_dp_allreduce(mesh, compress=True)
-        print("compressed DP all-reduce enabled (int8, global-scale psum)")
+        log.info("compressed DP all-reduce enabled (int8, global-scale psum)")
 
     pusher = None
     if args.ps_push:
@@ -93,28 +118,57 @@ def main() -> None:
 
         ps = ParameterServer()
         ps.push(params, 0)
-        pusher = BackgroundPusher(ps).start()
-        print("background PS push enabled (overlaps the next step)")
+        pusher = BackgroundPusher(ps, tracer=tracer).start()
+        log.info("background PS push enabled (overlaps the next step)")
 
     for i in range(args.steps):
         t0 = time.time()
+        s0 = time.perf_counter()
         params, opt, metrics = step(params, opt, batch)
         loss = float(metrics["loss"])
+        if tracer is not None:
+            tracer.activity(
+                "train_step", s0, time.perf_counter(),
+                track="trainer", args={"step": i},
+            )
         if pusher is not None:
             pusher.push(params, i + 1)  # returns immediately
-        print(f"step {i}: loss={loss:+.4f} "
-              f"grad_norm={float(metrics['grad_norm']):.3f} "
-              f"({time.time()-t0:.2f}s)")
+        log.info(
+            "step",
+            extra={
+                "step": i,
+                "loss": round(loss, 4),
+                "grad_norm": round(float(metrics["grad_norm"]), 3),
+                "wall_s": round(time.time() - t0, 2),
+            },
+        )
 
     if pusher is not None:
         pusher.flush()
-        print(f"PS at version {pusher.ps.version} "
-              f"({pusher.pushes} background pushes landed)")
+        log.info(
+            "PS published",
+            extra={
+                "version": pusher.ps.version,
+                "background_pushes": pusher.pushes,
+            },
+        )
         pusher.stop()
 
     if args.ckpt_dir:
         path = ckpt_lib.save_checkpoint(args.ckpt_dir, args.steps, params, opt)
-        print("checkpoint ->", path)
+        log.info("checkpoint written", extra={"path": path})
+
+    if tracer is not None:
+        from repro.obs import export_chrome_trace
+
+        trace = export_chrome_trace(tracer, args.trace)
+        log.info(
+            "trace written",
+            extra={
+                "path": args.trace,
+                "events": len(trace["traceEvents"]),
+            },
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,257 @@
+"""Chrome-trace-format exporter (Perfetto-loadable JSON).
+
+Lays a :class:`repro.obs.tracer.TrajectoryTracer` out as the Trace Event
+Format that ``chrome://tracing`` and https://ui.perfetto.dev open
+directly:
+
+* **pid 1 "trajectories"** — one thread track per rollout instance;
+  every trajectory segment is a complete (``ph:"X"``) event named
+  ``queue``/``decode`` carrying ``traj``/``group``/``v_route``/``hops``/
+  ``staleness`` args, so a trajectory's migration across instance tracks
+  and its realized staleness are visible by clicking any slice;
+* **pid 2 "scheduler"** — one track per service thread (instance decode
+  loops, coordinator cycles, trainer steps, reward workers, background
+  PS push) from the tracer's activity ring;
+* **pid 3 "fleet"** — counter (``ph:"C"``) tracks from the periodic
+  fleet sampler: per-instance occupancy and KV fill, staleness-buffer
+  reserve/occupy state, TS depth.
+
+Timestamps are microseconds relative to the tracer epoch (its clock may
+be wall time or simulated seconds — the layout is identical).
+``otherData`` carries the text-report summary inputs (latency
+percentiles, staleness histogram, conservation status) so
+``repro.obs.report`` can summarize a trace file without the live tracer.
+
+``validate_chrome_trace`` is the schema gate CI runs on the smoke
+artifact: structural errors (missing ph/ts, negative durations,
+non-numeric counters) are returned as strings, empty list == valid.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.stats import percentiles
+from repro.obs.tracer import TrajectoryTracer
+
+PID_TRAJ = 1
+PID_SCHED = 2
+PID_FLEET = 3
+
+
+def _meta(pid: int, name: str) -> dict:
+    return {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": name}}
+
+
+def _thread_meta(pid: int, tid: int, name: str) -> dict:
+    return {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+            "args": {"name": name}}
+
+
+def export_chrome_trace(
+    tracer: TrajectoryTracer, path: Optional[str] = None
+) -> dict:
+    """Build (and optionally write) the trace dict for ``tracer``."""
+    t0 = tracer.t0
+    us = lambda t: max(0.0, (t - t0) * 1e6)  # noqa: E731
+    end = tracer.now()
+    events: List[dict] = [
+        _meta(PID_TRAJ, "trajectories"),
+        _meta(PID_SCHED, "scheduler"),
+        _meta(PID_FLEET, "fleet"),
+    ]
+
+    # ---- trajectory spans: instance id == tid on the trajectories process
+    with tracer._lock:
+        spans = list(tracer.spans.values())
+        activities = list(tracer.activities)
+        counter_samples = list(tracer.counter_samples)
+    inst_ids = sorted({
+        seg.inst for span in spans for seg in span.segments
+    })
+    for inst in inst_ids:
+        label = "ts-pending" if inst < 0 else f"instance-{inst}"
+        events.append(_thread_meta(PID_TRAJ, inst, label))
+    for span in spans:
+        args = {
+            "traj": span.traj_id,
+            "group": span.group_id,
+            "v_route": span.v_route,
+            "hops": span.hops,
+            "preemptions": span.preemptions,
+            "terminal": span.terminal,
+            "staleness": span.staleness,
+        }
+        for seg in span.segments:
+            t1 = seg.t1 if seg.t1 is not None else end
+            events.append({
+                "name": seg.kind,
+                "cat": "trajectory",
+                "ph": "X",
+                "pid": PID_TRAJ,
+                "tid": seg.inst,
+                "ts": us(seg.t0),
+                "dur": max(0.0, (t1 - seg.t0) * 1e6),
+                "args": args,
+            })
+
+    # ---- scheduler-thread activity: one tid per track name
+    track_tids: Dict[str, int] = {}
+    for act in activities:
+        tid = track_tids.get(act.track)
+        if tid is None:
+            tid = len(track_tids)
+            track_tids[act.track] = tid
+            events.append(_thread_meta(PID_SCHED, tid, act.track))
+        ev = {
+            "name": act.name,
+            "cat": "scheduler",
+            "ph": "X",
+            "pid": PID_SCHED,
+            "tid": tid,
+            "ts": us(act.t0),
+            "dur": max(0.0, (act.t1 - act.t0) * 1e6),
+        }
+        if act.args:
+            ev["args"] = act.args
+        events.append(ev)
+
+    # ---- fleet counter tracks
+    counter_tids: Dict[str, int] = {}
+    for track, ts, values in counter_samples:
+        tid = counter_tids.get(track)
+        if tid is None:
+            tid = len(counter_tids)
+            counter_tids[track] = tid
+        events.append({
+            "name": track,
+            "cat": "fleet",
+            "ph": "C",
+            "pid": PID_FLEET,
+            "tid": tid,
+            "ts": us(ts),
+            "args": {k: float(v) for k, v in values.items()},
+        })
+
+    qs = (0.5, 0.95, 0.99)
+    latencies = {
+        name: {
+            f"p{int(q * 100)}": v
+            for q, v in percentiles(ring.values(), qs, default=0.0).items()
+        }
+        for name, ring in (
+            ("route_s", tracer.route_lat),
+            ("queue_s", tracer.queue_lat),
+            ("reward_s", tracer.reward_lat),
+            ("consume_s", tracer.consume_lat),
+        )
+    }
+    decode_samples = [
+        s.decode_time() for s in spans if s.terminal is not None
+    ]
+    latencies["decode_s"] = {
+        f"p{int(q * 100)}": v
+        for q, v in percentiles(decode_samples, qs, default=0.0).items()
+    }
+    trace = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "tool": "repro.obs",
+            "spans": len(spans),
+            "open_spans": sum(1 for s in spans if s.terminal is None),
+            "staleness_hist": {
+                str(k): v for k, v in tracer.staleness_histogram().items()
+            },
+            "max_realized_staleness": tracer.realized_max_staleness(),
+            "latencies": latencies,
+            "busy_s_by_instance": {
+                str(k): v
+                for k, v in tracer.busy_seconds_by_instance().items()
+            },
+            "wall_s": max(0.0, end - t0),
+            "conservation_violations": tracer.check_conservation(
+                allow_open=True
+            ),
+        },
+    }
+    if path:
+        with open(path, "w") as f:
+            json.dump(trace, f, indent=1, sort_keys=True)
+    return trace
+
+
+# ------------------------------------------------------------- validation
+_PHASES_REQ_TS = {"X", "C", "I", "B", "E"}
+
+
+def validate_chrome_trace(trace: object) -> List[str]:
+    """Structural schema check for the exported trace (CI gate).
+
+    Checks the subset of the Trace Event Format this exporter emits:
+    top-level shape, per-event required fields by phase, non-negative
+    times, numeric counter args. Returns error strings; [] == valid.
+    """
+    errors: List[str] = []
+    if not isinstance(trace, dict):
+        return ["top level: expected an object"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents: expected a list"]
+    if not events:
+        errors.append("traceEvents: empty")
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: expected an object")
+            continue
+        ph = ev.get("ph")
+        if not isinstance(ph, str) or not ph:
+            errors.append(f"{where}: missing ph")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errors.append(f"{where}: missing name")
+        if not isinstance(ev.get("pid"), int):
+            errors.append(f"{where}: missing pid")
+        if not isinstance(ev.get("tid"), int):
+            errors.append(f"{where}: missing tid")
+        if ph in _PHASES_REQ_TS:
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)):
+                errors.append(f"{where}: ph={ph} missing numeric ts")
+            elif ts < 0:
+                errors.append(f"{where}: negative ts {ts}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)):
+                errors.append(f"{where}: ph=X missing numeric dur")
+            elif dur < 0:
+                errors.append(f"{where}: negative dur {dur}")
+        if ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"{where}: ph=C needs non-empty args")
+            else:
+                for k, v in args.items():
+                    if not isinstance(v, (int, float)):
+                        errors.append(
+                            f"{where}: counter series {k!r} non-numeric"
+                        )
+        if ph == "M":
+            if ev.get("name") not in ("process_name", "thread_name"):
+                errors.append(f"{where}: unknown metadata {ev.get('name')!r}")
+            args = ev.get("args")
+            if not isinstance(args, dict) or not isinstance(
+                args.get("name"), str
+            ):
+                errors.append(f"{where}: metadata needs args.name")
+        if len(errors) > 50:
+            errors.append("... (truncated)")
+            break
+    return errors
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,87 @@
+"""Structured logging for the launchers (and any long-running service).
+
+``setup_logging(json_mode=...)`` configures the root ``repro`` logger
+once: human-readable single-line records by default, or newline-
+delimited JSON (``--log-json``) so long threaded runs are greppable /
+machine-parseable (one object per line: ts, level, logger, msg, plus
+any ``extra={...}`` fields the call site attached).
+"""
+from __future__ import annotations
+
+import json
+import logging
+import time
+from typing import Optional
+
+_RESERVED = frozenset(logging.LogRecord(
+    "", 0, "", 0, "", (), None
+).__dict__) | {"message", "asctime", "taskName"}
+
+
+class JsonFormatter(logging.Formatter):
+    """One JSON object per record; ``extra`` kwargs become fields."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        out = {
+            "ts": round(record.created, 6),
+            "level": record.levelname,
+            "logger": record.name,
+            "msg": record.getMessage(),
+        }
+        for k, v in record.__dict__.items():
+            if k not in _RESERVED and not k.startswith("_"):
+                try:
+                    json.dumps(v)
+                    out[k] = v
+                except (TypeError, ValueError):
+                    out[k] = repr(v)
+        if record.exc_info:
+            out["exc"] = self.formatException(record.exc_info)
+        return json.dumps(out, sort_keys=True)
+
+
+class HumanFormatter(logging.Formatter):
+    """``HH:MM:SS.mmm LEVEL logger: msg`` with extras appended k=v."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        t = time.strftime("%H:%M:%S", time.localtime(record.created))
+        ms = int((record.created % 1) * 1000)
+        extras = " ".join(
+            f"{k}={v}"
+            for k, v in record.__dict__.items()
+            if k not in _RESERVED and not k.startswith("_")
+        )
+        base = (
+            f"{t}.{ms:03d} {record.levelname[0]} "
+            f"{record.name}: {record.getMessage()}"
+        )
+        if extras:
+            base = f"{base}  [{extras}]"
+        if record.exc_info:
+            base = f"{base}\n{self.formatException(record.exc_info)}"
+        return base
+
+
+def setup_logging(
+    json_mode: bool = False,
+    level: int = logging.INFO,
+    logger_name: str = "repro",
+    stream=None,
+) -> logging.Logger:
+    """Idempotent: reconfigures the handler on repeat calls."""
+    logger = logging.getLogger(logger_name)
+    logger.setLevel(level)
+    logger.propagate = False
+    for h in list(logger.handlers):
+        logger.removeHandler(h)
+    handler = logging.StreamHandler(stream)
+    handler.setFormatter(JsonFormatter() if json_mode else HumanFormatter())
+    logger.addHandler(handler)
+    return logger
+
+
+def get_logger(name: Optional[str] = None) -> logging.Logger:
+    return logging.getLogger(
+        f"repro.{name}" if name and not name.startswith("repro") else
+        (name or "repro")
+    )

@@ -1,0 +1,293 @@
+"""Thread-safe metrics registry: Counter / Gauge / Histogram with labels.
+
+The single query surface for telemetry that was previously smeared across
+plain attributes on a dozen components (engine preemption/prefix/CoW
+counters, ``CoordinatorStats``, reward-server rings, PS push counts,
+scheduler busy-seconds). Components keep their cheap plain counters as
+the source of truth on hot paths — several are *functional* (the
+coordinator differences ``preemptions`` into its routing penalty) — and
+the registry mirrors them two ways:
+
+* **scrape**: ``RuntimeCore.scrape_metrics`` (and the fleet sampler)
+  periodically copies the scattered totals into labeled instruments, so
+  one ``registry.snapshot()`` answers "what happened" without knowing
+  which component owns which attribute;
+* **direct observation** for distributions a total can't carry: the
+  reward server observes submit->rewarded latency into a histogram, the
+  trainer observes per-entry realized staleness.
+
+Disabled mode (``MetricsRegistry(enabled=False)``, and the module-level
+``NOOP_REGISTRY``): every instrument request returns a shared no-op
+singleton whose methods do nothing — call sites stay unconditional and
+cost one attribute lookup + an empty call, so the default (observability
+off) path stays effectively free and, critically, allocation-free after
+the first lookup.
+
+Histograms use fixed bucket upper bounds (default: exponential decades
+from 100 us to ~100 s). ``Histogram.percentile`` answers from bucket
+counts — the bucket upper bound at the quantile rank — which is the
+usual fixed-bucket estimate: exact enough for p50/p99 latency reporting
+at zero per-observation allocation.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+LabelSet = Tuple[Tuple[str, str], ...]
+
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 100.0,
+)
+
+
+def _labelset(labels: Dict[str, object]) -> LabelSet:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class Counter:
+    """Monotone counter. ``inc`` only; ``set_total`` exists for scrapes
+    that mirror an externally-owned monotone total."""
+
+    __slots__ = ("name", "labels", "_value", "_lock")
+
+    def __init__(self, name: str, labels: LabelSet = ()):
+        self.name = name
+        self.labels = labels
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    def set_total(self, total: float) -> None:
+        with self._lock:
+            if total > self._value:
+                self._value = total
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    __slots__ = ("name", "labels", "_value", "_lock")
+
+    def __init__(self, name: str, labels: LabelSet = ()):
+        self.name = name
+        self.labels = labels
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = float(value)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Histogram:
+    """Fixed-bucket histogram with percentile estimation.
+
+    ``buckets`` are inclusive upper bounds; observations above the last
+    bound land in a +inf overflow bucket. No per-observation allocation.
+    """
+
+    __slots__ = ("name", "labels", "buckets", "_counts", "_sum", "_count",
+                 "_min", "_max", "_lock")
+
+    def __init__(
+        self,
+        name: str,
+        labels: LabelSet = (),
+        buckets: Optional[Sequence[float]] = None,
+    ):
+        self.name = name
+        self.labels = labels
+        self.buckets: Tuple[float, ...] = tuple(buckets or DEFAULT_BUCKETS)
+        self._counts = [0] * (len(self.buckets) + 1)  # +1: overflow
+        self._sum = 0.0
+        self._count = 0
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def observe(self, value: float) -> None:
+        # linear scan: bucket lists are short (<= ~20) and observations
+        # are off the per-token hot path
+        idx = len(self.buckets)
+        for i, ub in enumerate(self.buckets):
+            if value <= ub:
+                idx = i
+                break
+        with self._lock:
+            self._counts[idx] += 1
+            self._sum += value
+            self._count += 1
+            if self._min is None or value < self._min:
+                self._min = value
+            if self._max is None or value > self._max:
+                self._max = value
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def bucket_counts(self) -> List[int]:
+        with self._lock:
+            return list(self._counts)
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Bucket-upper-bound estimate at quantile ``q`` (None if empty).
+        Overflow-bucket hits answer with the observed max."""
+        with self._lock:
+            if self._count == 0:
+                return None
+            rank = min(self._count - 1, int(q * self._count))
+            acc = 0
+            for i, c in enumerate(self._counts):
+                acc += c
+                if rank < acc:
+                    if i < len(self.buckets):
+                        return self.buckets[i]
+                    return self._max
+            return self._max  # unreachable; defensive
+
+    def summary(self) -> Dict[str, Optional[float]]:
+        with self._lock:
+            count, total = self._count, self._sum
+            mn, mx = self._min, self._max
+        return {
+            "count": count,
+            "sum": total,
+            "mean": (total / count) if count else None,
+            "min": mn,
+            "max": mx,
+            "p50": self.percentile(0.5),
+            "p99": self.percentile(0.99),
+        }
+
+
+class _Noop:
+    """Shared do-nothing instrument handed out by a disabled registry."""
+
+    __slots__ = ()
+    name = "noop"
+    labels: LabelSet = ()
+    value = 0.0
+    count = 0
+    sum = 0.0
+    buckets: Tuple[float, ...] = ()
+
+    def inc(self, n: float = 1.0) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def set_total(self, total: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def bucket_counts(self) -> List[int]:
+        return []
+
+    def percentile(self, q: float) -> Optional[float]:
+        return None
+
+    def summary(self) -> Dict[str, Optional[float]]:
+        return {"count": 0, "sum": 0.0, "mean": None, "min": None,
+                "max": None, "p50": None, "p99": None}
+
+
+_NOOP_INSTRUMENT = _Noop()
+
+
+class MetricsRegistry:
+    """Instrument factory + store, keyed by ``(name, labelset)``.
+
+    ``counter``/``gauge``/``histogram`` are get-or-create and cheap to
+    call repeatedly, but hot paths should hold the returned instrument.
+    A disabled registry returns the shared no-op singleton from every
+    factory call.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._instruments: Dict[Tuple[str, str, LabelSet], object] = {}
+
+    def _get(self, kind: str, name: str, labels: Dict[str, object], factory):
+        if not self.enabled:
+            return _NOOP_INSTRUMENT
+        key = (kind, name, _labelset(labels))
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is None:
+                inst = factory(name, key[2])
+                self._instruments[key] = inst
+            return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(
+        self, name: str, buckets: Optional[Sequence[float]] = None, **labels
+    ) -> Histogram:
+        return self._get(
+            "histogram", name, labels,
+            lambda n, ls: Histogram(n, ls, buckets=buckets),
+        )
+
+    def find(self, name: str) -> List[object]:
+        """Every instrument registered under ``name`` (any labels)."""
+        with self._lock:
+            return [
+                inst for (kind, n, ls), inst in self._instruments.items()
+                if n == name
+            ]
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """``{name{labels}: {...}}`` — counters/gauges report ``value``,
+        histograms their ``summary()``."""
+        with self._lock:
+            items = list(self._instruments.items())
+        out: Dict[str, Dict[str, object]] = {}
+        for (kind, name, labels), inst in sorted(
+            items, key=lambda kv: (kv[0][1], kv[0][2])
+        ):
+            label_s = ",".join(f"{k}={v}" for k, v in labels)
+            full = f"{name}{{{label_s}}}" if label_s else name
+            if kind == "histogram":
+                out[full] = {"kind": kind, **inst.summary()}
+            else:
+                out[full] = {"kind": kind, "value": inst.value}
+        return out
+
+
+#: Module-level disabled registry: components default their ``metrics``
+#: parameter to this so instrumentation is unconditional at call sites.
+NOOP_REGISTRY = MetricsRegistry(enabled=False)

@@ -1,0 +1,116 @@
+"""Text summary of an observability run.
+
+Two entry points:
+
+* ``summarize(trace)`` — render the report from an exported Chrome
+  trace dict (``repro.obs.export.export_chrome_trace``), so it works on
+  a trace file long after the run;
+* CLI: ``PYTHONPATH=src python -m repro.obs.report TRACE.json``
+  (optionally ``--validate`` to schema-check first).
+
+Reported: realized-staleness histogram, per-instance decode busy
+fraction, and p50/p95/p99 of the pipeline latencies (route = capacity
+freed -> next ROUTED on that instance; queue = routed/preempted ->
+admitted into a decode slot; decode = total generating seconds per
+trajectory; reward = COMPLETED -> REWARDED; consume = REWARDED ->
+CONSUMED), plus span conservation status.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+
+def _fmt_s(v) -> str:
+    if v is None:
+        return "-"
+    if v >= 1.0:
+        return f"{v:7.2f}s "
+    return f"{v * 1e3:7.2f}ms"
+
+
+def summarize(trace: dict) -> str:
+    other = trace.get("otherData", {})
+    lines: List[str] = []
+    wall = other.get("wall_s", 0.0)
+    lines.append(
+        f"observability report: {other.get('spans', 0)} trajectory spans "
+        f"({other.get('open_spans', 0)} open) over {wall:.2f}s"
+    )
+
+    hist = other.get("staleness_hist", {})
+    if hist:
+        total = sum(hist.values()) or 1
+        lines.append("realized staleness (consumed trajectories):")
+        for k in sorted(hist, key=int):
+            n = hist[k]
+            bar = "#" * max(1, round(40 * n / total))
+            lines.append(f"  s={k:>2}  {n:6d}  {bar}")
+        lines.append(
+            f"  max realized staleness: "
+            f"{other.get('max_realized_staleness', 0)}"
+        )
+
+    busy = other.get("busy_s_by_instance", {})
+    if busy and wall:
+        lines.append("per-instance decode busy fraction:")
+        for inst in sorted(busy, key=int):
+            frac = busy[inst] / wall
+            bar = "#" * max(0, round(40 * min(frac, 1.0)))
+            lines.append(
+                f"  instance-{inst}: {frac * 100:5.1f}%  {bar}"
+            )
+
+    lat = other.get("latencies", {})
+    if lat:
+        lines.append("pipeline latencies:")
+        lines.append(f"  {'stage':<10} {'p50':>9} {'p95':>9} {'p99':>9}")
+        for stage in ("route_s", "queue_s", "decode_s", "reward_s",
+                      "consume_s"):
+            p = lat.get(stage)
+            if p is None:
+                continue
+            lines.append(
+                f"  {stage[:-2]:<10} {_fmt_s(p.get('p50'))} "
+                f"{_fmt_s(p.get('p95'))} {_fmt_s(p.get('p99'))}"
+            )
+
+    violations = other.get("conservation_violations", [])
+    if violations:
+        lines.append(f"CONSERVATION VIOLATIONS ({len(violations)}):")
+        lines.extend(f"  {v}" for v in violations[:10])
+    else:
+        lines.append("span conservation: OK "
+                     "(every closed span has exactly one terminal)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize a repro.obs Chrome trace"
+    )
+    ap.add_argument("trace", help="path to the exported trace JSON")
+    ap.add_argument(
+        "--validate", action="store_true",
+        help="schema-validate the trace first (non-zero exit on errors)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.trace) as f:
+        trace = json.load(f)
+    if args.validate:
+        from repro.obs.export import validate_chrome_trace
+
+        errors = validate_chrome_trace(trace)
+        if errors:
+            for e in errors:
+                print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+            return 1
+        print(f"schema OK ({len(trace['traceEvents'])} events)")
+    print(summarize(trace))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+"""Periodic fleet sampler: occupancy / KV fill / staleness-buffer state.
+
+A daemon thread that, every ``interval_s``, takes lock-free (or
+leaf-locked) telemetry reads across the runtime and records them as
+counter-track samples on the tracer — rendered as stacked counter
+charts under the "fleet" process in the exported Chrome trace — while
+also mirroring the scattered component counters into the metrics
+registry via ``RuntimeCore.scrape_metrics``.
+
+Sampled per tick:
+
+* per instance: active decode slots, waiting-queue depth, KV fill
+  fraction (bytes / budget);
+* staleness manager: reserved/occupied entries in the train-floor
+  buffer, total in-flight protocol entries, current train version;
+* trajectory server: available (unrouted) trajectories;
+* reward server: queue depth.
+
+Reads are cheap snapshots of internally-locked state — the sampler
+never takes an instance's command lock, so a 10 ms cadence does not
+perturb decode. Works under both schedulers (the cooperative tick loop
+simply gets sampled from outside its thread).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class FleetSampler:
+    def __init__(self, core, interval_s: float = 0.01):
+        self.core = core
+        self.interval_s = max(0.001, float(interval_s))
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.samples = 0
+
+    def start(self) -> "FleetSampler":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name="fleet-sampler", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def sample_once(self) -> None:
+        core = self.core
+        tracer = core.tracer
+        if tracer is None:
+            return
+        ts = tracer.now()
+        with core._instances_lock:
+            handles = dict(core.instances)
+        for inst_id, h in sorted(handles.items()):
+            try:
+                kv = h.kv_bytes()
+                budget = getattr(h, "kv_budget", 0.0) or 0.0
+                tracer.sample(
+                    f"instance-{inst_id}",
+                    {
+                        "active": h.n_active(),
+                        "waiting": len(h.waiting),
+                        "kv_fill": (kv / budget) if budget else 0.0,
+                    },
+                    ts=ts,
+                )
+            except Exception:
+                # a replica failing mid-sample is an expected race under
+                # the elasticity tests; skip it this tick
+                continue
+        snap = core.manager.snapshot()
+        floor = core.manager.train_version
+        floor_buf = snap.get(floor, {})
+        tracer.sample(
+            "staleness-buffers",
+            {
+                "floor_reserved": floor_buf.get("reserved", 0),
+                "floor_occupied": floor_buf.get("occupied", 0),
+                "in_flight": core.manager.in_flight(),
+                "train_version": floor,
+            },
+            ts=ts,
+        )
+        tracer.sample(
+            "servers",
+            {
+                "ts_available": core.ts.n_available,
+                "reward_queue": core.reward_server.queue_depth(),
+            },
+            ts=ts,
+        )
+        core.scrape_metrics()
+        self.samples += 1
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.sample_once()
+            except Exception:
+                pass  # telemetry must never take the run down
+            self._stop.wait(self.interval_s)

@@ -1,0 +1,94 @@
+"""Shared summary-statistics helpers for the observability plane.
+
+One home for the percentile convention and the fixed-size ring buffer
+that were independently reimplemented by ``RewardServer`` (submit->
+rewarded latency telemetry) and ``bench_throughput`` (lifecycle-probe
+route/consume latencies). Both now import from here, so every latency
+number the repo reports is computed the same way:
+
+    percentile(samples, q) == sorted(samples)[min(len - 1, int(q * len))]
+
+(the seed convention — nearest-rank, no interpolation — kept so
+longitudinal benchmark JSONs stay comparable across PRs).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence
+
+
+def percentile(
+    samples: Sequence[float], q: float, default: Optional[float] = None
+):
+    """Nearest-rank percentile with the repo-wide seed convention.
+
+    Returns ``default`` (``None`` unless overridden) on an empty sample
+    set — callers that want the old bench behavior pass ``default=0.0``.
+    """
+    if not samples:
+        return default
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def percentiles(
+    samples: Sequence[float],
+    qs: Iterable[float] = (0.5, 0.95, 0.99),
+    default: Optional[float] = None,
+) -> Dict[float, Optional[float]]:
+    """``{q: percentile(samples, q)}`` — sorts once for all quantiles."""
+    s = sorted(samples)
+    out: Dict[float, Optional[float]] = {}
+    for q in qs:
+        if not s:
+            out[q] = default
+        else:
+            out[q] = s[min(len(s) - 1, int(q * len(s)))]
+    return out
+
+
+class Ring:
+    """Fixed-capacity overwrite-oldest sample buffer (thread-safe).
+
+    Once full, new samples overwrite the oldest so percentiles track
+    steady state (not warm-up) on long runs — the exact semantics the
+    reward server's hand-rolled ``_latencies``/``_lat_pos`` pair had.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = max(1, int(capacity))
+        self._items: List[float] = []
+        self._pos = 0
+        self._total = 0
+        self._lock = threading.Lock()
+
+    def append(self, value: float) -> None:
+        with self._lock:
+            self._total += 1
+            if len(self._items) < self.capacity:
+                self._items.append(value)
+            else:
+                self._items[self._pos] = value
+                self._pos = (self._pos + 1) % self.capacity
+
+    def values(self) -> List[float]:
+        """Snapshot of the retained samples (unordered semantics)."""
+        with self._lock:
+            return list(self._items)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    @property
+    def total(self) -> int:
+        """Samples ever appended (retained + overwritten)."""
+        with self._lock:
+            return self._total
+
+    def percentiles(
+        self,
+        qs: Iterable[float] = (0.5, 0.95, 0.99),
+        default: Optional[float] = None,
+    ) -> Dict[float, Optional[float]]:
+        return percentiles(self.values(), qs, default)

@@ -1,0 +1,394 @@
+"""TrajectoryTracer: per-trajectory spans off the lifecycle bus, plus
+scheduler-thread activity spans and fleet counter samples.
+
+The lifecycle bus (PR 5) already carries every trajectory transition::
+
+    ROUTED -> (INTERRUPTED ->)* COMPLETED -> REWARDED -> CONSUMED
+                                                      \\-> ABORTED
+
+The tracer subscribes to all six kinds and folds them into one
+``TrajSpan`` per trajectory:
+
+* **instance timeline segments** — ``queue`` (routed/preempted, waiting
+  for a slot) vs ``decode`` (admitted, generating), split by the engine
+  admission/preemption hooks (``RolloutInstance.on_admit`` /
+  ``on_preempt``), with the instance id on every segment so migration
+  hops are visible;
+* **PS version at route vs consume** — ``v_route`` is the min version
+  over the span's ROUTED events (a group entry's protocol version is the
+  min over members, lowered on late joins), and at CONSUMED the realized
+  staleness is ``train_floor - v_route``. CONSUMED events are published
+  synchronously under the coordinator lock *after*
+  ``StalenessManager.consume`` advanced ``train_version``, so the floor
+  of the batch just consumed is ``floor_source() - 1`` — which makes the
+  per-span max provably equal to ``manager.max_consumed_staleness()``;
+* **conservation accounting** — every ROUTED span must end in exactly
+  one terminal event (CONSUMED or ABORTED); ``check_conservation``
+  returns the violations (stress-tested under mid-run fail/add
+  instance).
+
+Beyond trajectories, the tracer records **activity spans** for service
+threads (decode batches, coordinator cycles, reward scoring, background
+PS pushes, train steps) keyed by thread name, and **counter samples**
+from the fleet sampler (occupancy, KV fill, staleness-buffer state).
+``repro.obs.export`` lays all three out as a Chrome trace.
+
+Thread safety: one leaf lock around tracer state; handlers are called
+synchronously from emitter threads (bus dispatch) and engine hooks run
+under instance locks — the tracer never calls out while holding its
+lock. Clock is injectable so the discrete-event simulator can trace in
+sim seconds with the same machinery.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.lifecycle import (
+    LifecycleEvent,
+    LifecycleEventKind,
+    TrajectoryLifecycle,
+)
+from repro.obs.stats import Ring
+
+K = LifecycleEventKind
+
+
+@dataclass
+class Segment:
+    kind: str                 # "queue" | "decode"
+    inst: int
+    t0: float
+    t1: Optional[float] = None
+
+    @property
+    def duration(self) -> float:
+        return (self.t1 - self.t0) if self.t1 is not None else 0.0
+
+
+@dataclass
+class TrajSpan:
+    traj_id: int
+    group_id: int = -1
+    t_open: float = 0.0
+    v_route: Optional[int] = None        # min PS version over ROUTED events
+    segments: List[Segment] = field(default_factory=list)
+    hops: int = 0                        # re-routes beyond the first
+    preemptions: int = 0
+    instances: List[int] = field(default_factory=list)  # visit order
+    t_completed: Optional[float] = None
+    t_rewarded: Optional[float] = None
+    t_terminal: Optional[float] = None
+    terminal: Optional[str] = None       # "consumed" | "aborted"
+    terminal_events: int = 0             # conservation: must end at 1
+    staleness: Optional[int] = None      # realized, set at CONSUMED
+
+    def queue_wait(self) -> float:
+        return sum(s.duration for s in self.segments if s.kind == "queue")
+
+    def decode_time(self) -> float:
+        return sum(s.duration for s in self.segments if s.kind == "decode")
+
+    @property
+    def open_segment(self) -> Optional[Segment]:
+        if self.segments and self.segments[-1].t1 is None:
+            return self.segments[-1]
+        return None
+
+
+@dataclass
+class Activity:
+    track: str
+    name: str
+    t0: float
+    t1: float
+    args: Optional[dict] = None
+
+
+class TrajectoryTracer:
+    """Lifecycle-bus subscriber building per-trajectory spans (+ thread
+    activity and counter tracks). See module docstring."""
+
+    def __init__(
+        self,
+        lifecycle: Optional[TrajectoryLifecycle] = None,
+        *,
+        clock: Callable[[], float] = time.perf_counter,
+        floor_source: Optional[Callable[[], int]] = None,
+        registry=None,
+        max_activities: int = 200_000,
+        max_counter_samples: int = 200_000,
+        latency_samples: int = 65_536,
+    ):
+        self._clock = clock
+        self._floor = floor_source
+        self._lifecycle = lifecycle
+        self._lock = threading.RLock()
+        self.t0 = clock()
+        self.spans: Dict[int, TrajSpan] = {}
+        self.activities: Deque[Activity] = deque(maxlen=max_activities)
+        # (track, ts, {series: value})
+        self.counter_samples: Deque[Tuple[str, float, Dict[str, float]]] = (
+            deque(maxlen=max_counter_samples)
+        )
+        # pipeline latencies (same definitions the old bench probe used)
+        self.route_lat = Ring(latency_samples)    # capacity freed -> ROUTED
+        self.queue_lat = Ring(latency_samples)    # routed/preempt -> admit
+        self.reward_lat = Ring(latency_samples)   # COMPLETED -> REWARDED
+        self.consume_lat = Ring(latency_samples)  # REWARDED -> CONSUMED
+        self._freed: Dict[int, float] = {}        # inst -> freed-at ts
+        self.unrouted_events = 0                  # events with no open span
+        self.staleness_samples: List[int] = []
+        # optional registry mirror for realized staleness / queue waits
+        self._m_staleness = (
+            registry.histogram(
+                "trace_staleness", buckets=tuple(range(0, 17))
+            )
+            if registry is not None else None
+        )
+        if lifecycle is not None:
+            self._handlers = {
+                K.ROUTED: self._on_routed,
+                K.INTERRUPTED: self._on_interrupted,
+                K.COMPLETED: self._on_completed,
+                K.REWARDED: self._on_rewarded,
+                K.CONSUMED: self._on_consumed,
+                K.ABORTED: self._on_aborted,
+            }
+            for kind, fn in self._handlers.items():
+                lifecycle.subscribe(kind, fn)
+        else:
+            self._handlers = {}
+
+    def detach(self) -> None:
+        if self._lifecycle is not None:
+            for kind, fn in self._handlers.items():
+                self._lifecycle.unsubscribe(kind, fn)
+            self._handlers = {}
+
+    # ------------------------------------------------------------- helpers
+    def now(self) -> float:
+        return self._clock()
+
+    def _close_segment(self, span: TrajSpan, t: float) -> None:
+        seg = span.open_segment
+        if seg is not None:
+            seg.t1 = t
+
+    # ---------------------------------------------------- lifecycle events
+    def _on_routed(self, e: LifecycleEvent) -> None:
+        t = self._clock()
+        with self._lock:
+            t_free = self._freed.pop(e.inst, None) if e.inst is not None else None
+            if t_free is not None:
+                self.route_lat.append(t - t_free)
+            span = self.spans.get(e.traj_id)
+            if span is None:
+                span = TrajSpan(
+                    traj_id=e.traj_id,
+                    group_id=(e.traj.group_id if e.traj is not None else -1),
+                    t_open=t,
+                )
+                self.spans[e.traj_id] = span
+            else:
+                span.hops += 1
+            if e.version is not None:
+                span.v_route = (
+                    e.version if span.v_route is None
+                    else min(span.v_route, e.version)
+                )
+            self._close_segment(span, t)  # defensive: should be closed
+            inst = e.inst if e.inst is not None else -1
+            span.segments.append(Segment("queue", inst, t))
+            if not span.instances or span.instances[-1] != inst:
+                span.instances.append(inst)
+
+    def _on_interrupted(self, e: LifecycleEvent) -> None:
+        t = self._clock()
+        with self._lock:
+            span = self.spans.get(e.traj_id)
+            if span is None:
+                self.unrouted_events += 1
+                return
+            self._close_segment(span, t)
+
+    def _on_completed(self, e: LifecycleEvent) -> None:
+        t = self._clock()
+        with self._lock:
+            if e.inst is not None:
+                self._freed.setdefault(e.inst, t)
+            span = self.spans.get(e.traj_id)
+            if span is None:
+                self.unrouted_events += 1
+                return
+            self._close_segment(span, t)
+            span.t_completed = t
+
+    def _on_rewarded(self, e: LifecycleEvent) -> None:
+        t = self._clock()
+        with self._lock:
+            span = self.spans.get(e.traj_id)
+            if span is None:
+                self.unrouted_events += 1
+                return
+            span.t_rewarded = t
+            if span.t_completed is not None:
+                self.reward_lat.append(t - span.t_completed)
+
+    def _on_consumed(self, e: LifecycleEvent) -> None:
+        t = self._clock()
+        with self._lock:
+            span = self.spans.get(e.traj_id)
+            if span is None:
+                self.unrouted_events += 1
+                return
+            span.terminal_events += 1
+            if span.terminal is None:
+                span.terminal = "consumed"
+                span.t_terminal = t
+            self._close_segment(span, t)
+            if span.t_rewarded is not None:
+                self.consume_lat.append(t - span.t_rewarded)
+            if self._floor is not None and span.v_route is not None:
+                # CONSUMED is published under the coordinator lock right
+                # after consume() advanced train_version past the batch's
+                # floor buffer — the consumed floor is floor_source() - 1
+                span.staleness = max(0, self._floor() - 1 - span.v_route)
+                self.staleness_samples.append(span.staleness)
+                if self._m_staleness is not None:
+                    self._m_staleness.observe(span.staleness)
+
+    def _on_aborted(self, e: LifecycleEvent) -> None:
+        t = self._clock()
+        with self._lock:
+            if e.inst is not None:
+                self._freed.setdefault(e.inst, t)
+            span = self.spans.get(e.traj_id)
+            if span is None:
+                # protocol abort of a never-routed trajectory (e.g. a
+                # surplus group member still waiting in the TS): no span
+                self.unrouted_events += 1
+                return
+            span.terminal_events += 1
+            if span.terminal is None:
+                span.terminal = "aborted"
+                span.t_terminal = t
+            self._close_segment(span, t)
+
+    # ------------------------------------------------- engine admission hooks
+    def on_admit(self, inst_id: int, traj_ids: Sequence[int]) -> None:
+        """Engine hook: waiting trajectories entered decode slots — close
+        their queue segments, open decode segments."""
+        t = self._clock()
+        with self._lock:
+            for tid in traj_ids:
+                span = self.spans.get(tid)
+                if span is None:
+                    continue  # standalone engine use without ROUTED events
+                seg = span.open_segment
+                if seg is not None and seg.kind == "queue":
+                    seg.t1 = t
+                    self.queue_lat.append(seg.duration)
+                span.segments.append(Segment("decode", inst_id, t))
+
+    def on_preempt(self, inst_id: int, traj_id: int) -> None:
+        """Engine hook: a decoding trajectory was evicted back to the
+        waiting queue (KV exhaustion)."""
+        t = self._clock()
+        with self._lock:
+            span = self.spans.get(traj_id)
+            if span is None:
+                return
+            span.preemptions += 1
+            self._close_segment(span, t)
+            span.segments.append(Segment("queue", inst_id, t))
+
+    # -------------------------------------------------- activity + counters
+    def activity(
+        self,
+        name: str,
+        t0: float,
+        t1: float,
+        track: Optional[str] = None,
+        args: Optional[dict] = None,
+    ) -> None:
+        """Record one scheduler-thread work interval. ``track`` defaults to
+        the current thread's name, so the threaded scheduler's named
+        service threads (instance-N, coordinator, trainer, reward-N,
+        ps-push) each get their own exporter track for free."""
+        if track is None:
+            track = threading.current_thread().name
+        with self._lock:
+            self.activities.append(Activity(track, name, t0, t1, args))
+
+    def sample(
+        self, track: str, values: Dict[str, float], ts: Optional[float] = None
+    ) -> None:
+        """Record one counter-track sample (fleet sampler)."""
+        if ts is None:
+            ts = self._clock()
+        with self._lock:
+            self.counter_samples.append((track, ts, dict(values)))
+
+    # ----------------------------------------------------------- accounting
+    def finished_spans(self) -> List[TrajSpan]:
+        with self._lock:
+            return [s for s in self.spans.values() if s.terminal is not None]
+
+    def open_spans(self) -> List[TrajSpan]:
+        with self._lock:
+            return [s for s in self.spans.values() if s.terminal is None]
+
+    def check_conservation(self, allow_open: bool = False) -> List[str]:
+        """Every ROUTED span must close with exactly one terminal event.
+
+        Returns human-readable violations (empty == conserved). With
+        ``allow_open`` spans still in flight are tolerated (mid-run
+        checks); after a drained run nothing may remain open.
+        """
+        problems: List[str] = []
+        with self._lock:
+            for span in self.spans.values():
+                if span.terminal is None:
+                    if not allow_open:
+                        problems.append(
+                            f"traj {span.traj_id}: routed but never "
+                            f"consumed/aborted"
+                        )
+                    continue
+                if span.terminal_events != 1:
+                    problems.append(
+                        f"traj {span.traj_id}: {span.terminal_events} "
+                        f"terminal events (want exactly 1)"
+                    )
+                if span.open_segment is not None:
+                    problems.append(
+                        f"traj {span.traj_id}: dangling open segment after "
+                        f"terminal {span.terminal}"
+                    )
+        return problems
+
+    def realized_max_staleness(self) -> int:
+        """Max realized staleness over consumed spans (0 when none)."""
+        with self._lock:
+            return max(self.staleness_samples, default=0)
+
+    def staleness_histogram(self) -> Dict[int, int]:
+        with self._lock:
+            hist: Dict[int, int] = {}
+            for s in self.staleness_samples:
+                hist[s] = hist.get(s, 0) + 1
+            return dict(sorted(hist.items()))
+
+    def busy_seconds_by_instance(self) -> Dict[int, float]:
+        """Total decode-segment seconds per instance id."""
+        with self._lock:
+            out: Dict[int, float] = {}
+            for span in self.spans.values():
+                for seg in span.segments:
+                    if seg.kind == "decode" and seg.t1 is not None:
+                        out[seg.inst] = out.get(seg.inst, 0.0) + seg.duration
+            return dict(sorted(out.items()))

@@ -179,6 +179,8 @@ class SimBackend:
         self.preemptions = 0                   # sim pools never preempt
         self.shared_prefix_hits = 0
         self.block_copies = 0                  # mirrored CoW tail copies
+        # observability hook (same protocol as RolloutInstance.on_admit)
+        self.on_admit = None
         # shared-prefix registry — the same class the engine maintains, so
         # both admission pictures and snapshot exports come from one
         # implementation and cannot drift
@@ -233,6 +235,8 @@ class SimBackend:
                 max(self.stall_until, now) + prefill / self._prefill_tps
             )
             self.prefill_tokens += prefill
+        if self.on_admit is not None:
+            self.on_admit(self.inst_id, [traj.traj_id])
 
     def _admit(self, now: float) -> None:
         while self.waiting:
@@ -475,10 +479,13 @@ def execute_commands(
     def _flush_waves() -> None:
         for inst_id, wave in route_waves.items():
             t0 = time.perf_counter()
-            instances[inst_id].route_many(wave, now)
+            # publish ROUTED before the data-plane route: ``route_many``
+            # may admit synchronously, and admission-time observers (the
+            # tracer's on_admit hook) need the span opened first
             if lifecycle is not None:
                 for traj in wave:
                     lifecycle.routed(traj, inst_id, traj.v_traj)
+            instances[inst_id].route_many(wave, now)
             _timed("route", t0)
         route_waves.clear()
 

@@ -223,6 +223,11 @@ class RolloutInstance:
         self.shared_prefix_hits = 0       # members admitted off a shared prompt
         self.prefill_tokens_saved = 0     # prompt tokens not re-prefilled
         self.block_copies = 0             # CoW pool-block copies issued
+        # observability hooks (set by the runtime when tracing is on):
+        # on_admit(inst_id, traj_ids) after waiting trajectories enter
+        # decode slots; on_preempt(inst_id, traj_id) on KV eviction
+        self.on_admit = None
+        self.on_preempt = None
 
         # runner construction goes through overridable factories so the
         # sharded backend swaps in its SPMD variants without duplicating
@@ -613,6 +618,8 @@ class RolloutInstance:
             if not self.paged:
                 self._kv_bytes += self.k5 * self._slot_len(traj)
         self._last_tokens = last
+        if self.on_admit is not None:
+            self.on_admit(self.inst_id, [t.traj_id for t in trajs])
 
     # ----------------------------------------------------------------- step
     def _sample_key(self, traj: Trajectory) -> jax.Array:
@@ -636,6 +643,8 @@ class RolloutInstance:
         t.status = TrajStatus.INTERRUPTED
         self.waiting.appendleft(t)
         self.preemptions += 1
+        if self.on_preempt is not None:
+            self.on_preempt(self.inst_id, t.traj_id)
 
     def _ensure_decode_blocks(self) -> None:
         """Grow each resident's block table to cover its next write

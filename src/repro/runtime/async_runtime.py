@@ -73,7 +73,20 @@ class AsyncRLRuntime(RuntimeCore):
         max_ticks: int = 100000,
         progress: Optional[Callable[[StepRecord], None]] = None,
     ) -> List[StepRecord]:
-        return self.scheduler.run(max_ticks, progress)
+        sampler = None
+        if self.tracer is not None:
+            from repro.obs import FleetSampler
+
+            sampler = FleetSampler(
+                self, interval_s=self.rcfg.obs_sample_interval_s
+            ).start()
+        try:
+            return self.scheduler.run(max_ticks, progress)
+        finally:
+            if sampler is not None:
+                sampler.stop()
+            if self.rcfg.trace_path:
+                self.export_trace(self.rcfg.trace_path)
 
     def tick(self) -> None:
         """One cooperative tick (deterministic single-thread semantics).

@@ -74,6 +74,18 @@ class RuntimeConfig:
     # background full-rebalance pacing under streaming (migration, sync,
     # surplus aborts); incremental admission handles routing in between
     stream_rebalance_interval_s: float = 0.02
+    # ------------------------------------------------- observability plane
+    # Attach the metrics registry + trajectory tracer (repro.obs): per-
+    # trajectory lifecycle spans (queue vs decode segments, realized
+    # staleness at consume), scheduler-thread activity spans, and the
+    # periodic fleet sampler. Off by default: every instrumentation site
+    # no-ops and the tick seed path stays byte-identical.
+    observability: bool = False
+    # write a Perfetto-loadable Chrome trace here after run() (implies
+    # observability); open at https://ui.perfetto.dev
+    trace_path: Optional[str] = None
+    # fleet-sampler cadence (occupancy / KV fill / staleness buffers)
+    obs_sample_interval_s: float = 0.01
 
 
 @dataclass

@@ -163,6 +163,34 @@ class RuntimeCore:
                 lambda prompt: self.dataset.answer_for(prompt)
             )
         self.manager = StalenessManager(batch_size=rcfg.batch_size, eta=rcfg.eta)
+        # ------------------------------------------- observability plane
+        # Opt-in registry + tracer (repro.obs). Disabled (default): the
+        # registry is the shared no-op and the tracer stays None, so every
+        # instrumentation site below is a None-check or a no-op call and
+        # the seed paths are byte-identical. The tracer subscribes to the
+        # lifecycle bus *before* the TS/reward/protocol handlers attach,
+        # so its timestamps mark event publication, not dispatch tails.
+        self.obs_enabled = bool(rcfg.observability or rcfg.trace_path)
+        if self.obs_enabled:
+            from repro.obs import MetricsRegistry, TrajectoryTracer
+
+            self.metrics = MetricsRegistry()
+            self.tracer: Optional[TrajectoryTracer] = TrajectoryTracer(
+                self.lifecycle,
+                # CONSUMED events are published under the coordinator lock
+                # right after consume() advanced the floor: the consumed
+                # batch's floor is train_version - 1 (see tracer docstring)
+                floor_source=lambda: self.manager.train_version,
+                registry=self.metrics,
+            )
+        else:
+            from repro.obs.metrics import NOOP_REGISTRY
+
+            self.metrics = NOOP_REGISTRY
+            self.tracer = None
+        self._m_staleness = self.metrics.histogram(
+            "consumed_staleness", buckets=tuple(range(0, 17))
+        )
         self.ts = TrajectoryServer(
             self.dataset.prompt_source(),
             capacity_groups=(rcfg.eta + 1) * rcfg.batch_size,
@@ -184,6 +212,8 @@ class RuntimeCore:
             ),
             # aborted-while-queued completions are dropped, not scored
             liveness=lambda t: self.ts.get(t.traj_id) is not None,
+            metrics=self.metrics,
+            tracer=self.tracer,
         )
         self.ps = ParameterServer()
         self.ps.push(self.params, 0)
@@ -308,6 +338,12 @@ class RuntimeCore:
             )
         else:
             backend = create_backend("jax", inst_id, **kw)
+        if self.tracer is not None:
+            # admission/preemption hooks split each span's queue-wait from
+            # its decode segments (set on the inner engine: LockedBackend
+            # only forwards attribute *reads*)
+            backend.on_admit = self.tracer.on_admit
+            backend.on_preempt = self.tracer.on_preempt
         return LockedBackend(backend)
 
     def _snapshots(self):
@@ -347,8 +383,11 @@ class RuntimeCore:
         done = []
         for _ in range(n_steps):
             done.extend(handle.step())
+        t1 = time.perf_counter()
         with self._timers_lock:
-            self.timers["decode"] += time.perf_counter() - t0
+            self.timers["decode"] += t1 - t0
+        if self.tracer is not None:
+            self.tracer.activity(f"decode[{inst_id}]", t0, t1)
         if handle.n_active() > 0:
             # resident KV grew: migration/routing inputs changed even
             # without a completion, so the next cycle must run
@@ -414,6 +453,7 @@ class RuntimeCore:
             and self.ps.version == self._coord_last_ps_version
         ):
             return 0
+        t_cycle = time.perf_counter()
         with self.coordinator.lock:
             # reset *before* snapshotting: events landing mid-cycle re-mark
             # the flag, so their effects are observed by the next cycle
@@ -429,6 +469,11 @@ class RuntimeCore:
                         stack.enter_context(handles[i].lock)
                     n = self._cycle_body(handles, ps_version)
             self._coord_last_ps_version = ps_version
+            if self.tracer is not None:
+                self.tracer.activity(
+                    "cycle", t_cycle, time.perf_counter(),
+                    args={"commands": n},
+                )
             return n
 
     def _cycle_body(self, handles: Dict[int, LockedBackend], ps_version: int) -> int:
@@ -488,8 +533,13 @@ class RuntimeCore:
                     )
                     for inst, tid in res.skipped_routes:
                         self.coordinator.spec.apply(Abort(inst, (tid,)))
+        t1 = time.perf_counter()
         with self._timers_lock:
-            self.timers["coordinator"] += time.perf_counter() - t0
+            self.timers["coordinator"] += t1 - t0
+        if self.tracer is not None and commands:
+            self.tracer.activity(
+                "stream_admit", t0, t1, args={"routes": len(commands)}
+            )
         return len(commands)
 
     # ----------------------------------------------------------- the trainer
@@ -517,7 +567,14 @@ class RuntimeCore:
         )
         self.model_version += 1
         self._push_fn(self.params, self.model_version)
-        self.timers["train"] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.timers["train"] += t1 - t0
+        for s in staleness_hist:
+            self._m_staleness.observe(s)
+        if self.tracer is not None:
+            self.tracer.activity(
+                "train_step", t0, t1, args={"step": self.model_version}
+            )
         rec = StepRecord(
             step=self.model_version,
             mean_reward=float(np.mean(batch["_rewards"])),
@@ -594,6 +651,79 @@ class RuntimeCore:
             with self._instances_lock:
                 self.instances[inst_id] = handle
             self.coordinator.spec.resync({inst_id: handle.snapshot()})
+
+    # --------------------------------------------------------- observability
+    _ENGINE_COUNTERS = (
+        "decode_steps",
+        "prefill_tokens",
+        "decode_tokens",
+        "preemptions",
+        "shared_prefix_hits",
+        "prefill_tokens_saved",
+        "block_copies",
+    )
+
+    def scrape_metrics(self) -> None:
+        """Mirror the scattered component counters into the registry.
+
+        The plain Python counters stay the source of truth (the engine's
+        ``preemptions`` even feeds the coordinator's routing penalty);
+        this just projects them onto the registry so one ``snapshot()``
+        sees the whole fleet. Called by the FleetSampler each tick and
+        by ``export_trace`` — a no-op when observability is off.
+        """
+        m = self.metrics
+        if not m.enabled:
+            return
+        with self._instances_lock:
+            handles = dict(self.instances)
+        for inst_id, h in sorted(handles.items()):
+            for name in self._ENGINE_COUNTERS:
+                v = getattr(h, name, None)
+                if v is not None:
+                    m.counter(f"engine_{name}", instance=inst_id).set_total(v)
+        st = self.coordinator.stats
+        m.counter("coordinator_cycles").set_total(st.cycles)
+        m.counter("coordinator_snapshots_rejected").set_total(
+            st.snapshots_rejected
+        )
+        for kind, n in st.commands.items():
+            m.counter("coordinator_commands", kind=kind).set_total(n)
+        m.counter("coordinator_stream_cycles").set_total(st.stream_cycles)
+        m.counter("coordinator_stream_routes").set_total(st.stream_routes)
+        m.counter("coordinator_stream_rejected").set_total(st.stream_rejected)
+        m.counter("ps_pushes").set_total(self.ps.push_count)
+        m.counter("ps_pulls").set_total(self.ps.pull_count)
+        for name, v in self.reward_server.stats().items():
+            if isinstance(v, bool):
+                continue
+            m.gauge(f"reward_{name}").set(v)
+        for kind, n in self.lifecycle.counts.items():
+            m.counter("lifecycle_events", kind=kind.name.lower()).set_total(n)
+        m.gauge("model_version").set(self.model_version)
+        m.gauge("staleness_in_flight").set(self.manager.in_flight())
+        with self._timers_lock:
+            timers = dict(self.timers)
+        for name, v in timers.items():
+            m.gauge(f"timer_{name}_s").set(v)
+        sched = getattr(self, "scheduler", None)
+        busy = getattr(sched, "busy", None)
+        if busy is not None:
+            lock = getattr(sched, "_busy_lock", None)
+            if lock is not None:
+                with lock:
+                    busy = dict(busy)
+            for name, v in busy.items():
+                m.gauge("sched_busy_s", thread=name).set(v)
+
+    def export_trace(self, path: Optional[str] = None) -> Optional[dict]:
+        """Final metrics scrape + Chrome-trace export (None when off)."""
+        if self.tracer is None:
+            return None
+        from repro.obs.export import export_chrome_trace
+
+        self.scrape_metrics()
+        return export_chrome_trace(self.tracer, path)
 
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self, directory: str) -> str:

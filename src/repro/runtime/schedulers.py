@@ -273,7 +273,9 @@ class ThreadedScheduler:
         self._wire_gates()
         # overlapped parameter publication (Appendix A: Push hides behind
         # the next training step; FIFO worker keeps versions ordered)
-        self.pusher = BackgroundPusher(core.ps).start()
+        self.pusher = BackgroundPusher(
+            core.ps, tracer=core.tracer, metrics=core.metrics
+        ).start()
         core._push_fn = self.pusher.push
         core.reward_server.start()
         self._spawn("coordinator", self._coordinator_loop)

@@ -84,6 +84,10 @@ class SimConfig:
     # code paths under streaming
     streaming: bool = False
     stream_min_fill: int = 1
+    # observability mirror (same semantics as RuntimeConfig): a
+    # TrajectoryTracer on the sim's lifecycle bus, clocked in sim seconds
+    observability: bool = False
+    trace_path: Optional[str] = None
 
 
 @dataclass
@@ -155,6 +159,18 @@ class StaleFlowSim:
             lifecycle=self.lifecycle,
         )
         self.lifecycle.subscribe(LifecycleEventKind.ABORTED, self._on_aborted)
+        self.now = 0.0
+        # optional tracer, driven by the sim clock: the exported trace has
+        # the exact layout of a live run, just with sim-second timestamps
+        self.tracer = None
+        if cfg.observability or cfg.trace_path:
+            from repro.obs import TrajectoryTracer
+
+            self.tracer = TrajectoryTracer(
+                self.lifecycle,
+                clock=lambda: self.now,
+                floor_source=lambda: self.manager.train_version,
+            )
         self.instances: Dict[int, SimBackend] = {
             i: create_backend(
                 "sim", i, cost_model=cm,
@@ -162,6 +178,9 @@ class StaleFlowSim:
             )
             for i in range(cfg.n_instances)
         }
+        if self.tracer is not None:
+            for inst in self.instances.values():
+                inst.on_admit = self.tracer.on_admit
         self._sample_len = _length_sampler(cfg)
         self._completed_len: Dict[int, int] = {}
         self.now = 0.0
@@ -207,6 +226,24 @@ class StaleFlowSim:
                 self.result.instance_load.append(
                     (self.now, {i: len(inst.running) for i, inst in self.instances.items()})
                 )
+                if self.tracer is not None:
+                    for i, inst in self.instances.items():
+                        self.tracer.sample(
+                            f"instance-{i}",
+                            {
+                                "active": len(inst.running),
+                                "waiting": len(inst.waiting),
+                                "kv_fill": inst.kv_bytes()
+                                / max(cfg.cost_model.kv_budget, 1e-9),
+                            },
+                        )
+                    self.tracer.sample(
+                        "staleness-buffers",
+                        {
+                            "in_flight": self.manager.in_flight(),
+                            "train_version": self.manager.train_version,
+                        },
+                    )
                 next_load_sample = self.now + 10.0
             self.now += cfg.dt
 
@@ -216,6 +253,10 @@ class StaleFlowSim:
         r.staleness_hists = [list(h) for h in self.manager.consumed_staleness]
         r.decode_tokens = sum(i.decode_tokens for i in self.instances.values())
         r.prefill_tokens = sum(i.prefill_tokens for i in self.instances.values())
+        if self.tracer is not None and self.cfg.trace_path:
+            from repro.obs import export_chrome_trace
+
+            export_chrome_trace(self.tracer, self.cfg.trace_path)
         return r
 
     def _assign_targets(self) -> None:
@@ -307,6 +348,11 @@ class StaleFlowSim:
         self.result.train_busy += dur
         self.result.total_tokens += tokens
         self.result.steps += 1
+        if self.tracer is not None:
+            self.tracer.activity(
+                "train_step", self.now, self.trainer_busy_until,
+                track="trainer", args={"step": self.result.steps},
+            )
         new_version = (
             self.ps_version + 1
             if self.pending_version is None

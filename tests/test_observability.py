@@ -1,0 +1,341 @@
+"""Unified observability plane: metrics registry, lifecycle tracing,
+Chrome trace export.
+
+Covers:
+
+* the registry primitives (counter/gauge/histogram, labels, the no-op
+  fast path when disabled);
+* ``obs.stats`` — the shared nearest-rank percentile convention the
+  RewardServer and the benchmarks both migrated onto, plus the
+  overwrite-oldest Ring;
+* a traced cooperative (tick) run: span conservation, tracer-vs-manager
+  staleness agreement, schema-valid export, and observability *off* by
+  default;
+* (slow) trace conservation under the threaded streaming stress with a
+  mid-run replica failure and elastic scale-up — every ROUTED span must
+  close with exactly one terminal event and realized staleness must
+  match the protocol's accounting.
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro.obs import (
+    MetricsRegistry,
+    NOOP_REGISTRY,
+    Ring,
+    TrajectoryTracer,
+    export_chrome_trace,
+    percentile,
+    percentiles,
+    validate_chrome_trace,
+)
+
+
+# ------------------------------------------------------------ metrics
+def test_counter_gauge_labels():
+    m = MetricsRegistry()
+    m.counter("requests", inst=0).inc()
+    m.counter("requests", inst=0).inc(2)
+    m.counter("requests", inst=1).inc()
+    assert m.counter("requests", inst=0).value == 3
+    assert m.counter("requests", inst=1).value == 1
+    g = m.gauge("depth")
+    g.set(5)
+    g.inc(-2)
+    assert g.value == 3
+    snap = m.snapshot()
+    assert snap["requests{inst=0}"]["value"] == 3
+    assert snap["depth"]["value"] == 3
+
+
+def test_counter_set_total_is_monotone():
+    m = MetricsRegistry()
+    c = m.counter("scraped")
+    c.set_total(10)
+    c.set_total(7)  # a scrape racing an increment must not go backwards
+    assert c.value == 10
+    c.set_total(12)
+    assert c.value == 12
+
+
+def test_histogram_percentile_and_summary():
+    m = MetricsRegistry()
+    h = m.histogram("lat", buckets=(0.001, 0.01, 0.1, 1.0))
+    for v in (0.0005, 0.005, 0.005, 0.05, 2.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 5
+    assert s["max"] == 2.0
+    # overflow percentile falls back to the observed max
+    assert h.percentile(0.99) == 2.0
+    # p50 lands in the 0.01 bucket (upper-bound estimate)
+    assert h.percentile(0.5) == 0.01
+
+
+def test_disabled_registry_is_noop():
+    assert not NOOP_REGISTRY.enabled
+    c = NOOP_REGISTRY.counter("x")
+    c.inc(5)
+    NOOP_REGISTRY.gauge("y").set(3)
+    NOOP_REGISTRY.histogram("z").observe(1.0)
+    assert NOOP_REGISTRY.snapshot() == {}
+    # all instruments collapse to the same shared no-op object
+    assert c is NOOP_REGISTRY.gauge("y")
+
+
+# ------------------------------------------------------------ stats
+def test_percentile_matches_repo_convention():
+    # the nearest-rank rule every telemetry site used pre-unification:
+    # sorted(samples)[min(len - 1, int(q * len))]
+    samples = [5.0, 1.0, 3.0, 2.0, 4.0]
+    s = sorted(samples)
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        assert percentile(samples, q) == s[min(len(s) - 1, int(q * len(s)))]
+    assert percentile([], 0.5) is None
+    assert percentile([], 0.5, default=0.0) == 0.0
+    assert percentiles([], (0.5, 0.99)) == {0.5: None, 0.99: None}
+
+
+def test_ring_overwrites_oldest():
+    r = Ring(4)
+    for i in range(10):
+        r.append(float(i))
+    assert len(r) == 4
+    assert r.total == 10
+    assert sorted(r.values()) == [6.0, 7.0, 8.0, 9.0]
+
+
+def test_reward_server_percentiles_unchanged():
+    """The RewardServer's public percentile contract survived the
+    migration onto obs.stats: same convention, None when empty."""
+    from repro.core import (
+        FnVerifier,
+        RewardServer,
+        TrajectoryLifecycle,
+    )
+
+    lifecycle = TrajectoryLifecycle()
+    rs = RewardServer(FnVerifier(lambda p, r: 1.0), lifecycle)
+    assert rs.latency_percentiles((0.5,)) == {0.5: None}
+    rs._latencies.append(0.2)
+    rs._latencies.append(0.1)
+    assert rs.latency_percentiles((0.5, 0.99)) == {0.5: 0.2, 0.99: 0.2}
+
+
+# ------------------------------------------------------- tracer units
+def test_tracer_span_lifecycle_and_conservation():
+    from repro.core import TrajectoryLifecycle
+    from repro.core.types import Trajectory
+
+    lifecycle = TrajectoryLifecycle()
+    clock = {"t": 0.0}
+    tracer = TrajectoryTracer(
+        lifecycle, clock=lambda: clock["t"], floor_source=lambda: 3
+    )
+    t = Trajectory(traj_id=1, prompt=[1, 2], group_id=0)
+    lifecycle.routed(t, 0, 1)
+    clock["t"] = 1.0
+    tracer.on_admit(0, [1])
+    clock["t"] = 2.0
+    lifecycle.completed(t, 0)
+    clock["t"] = 2.5
+    lifecycle.rewarded(t)
+    clock["t"] = 3.0
+    lifecycle.consumed(1)
+
+    assert tracer.check_conservation() == []
+    span = tracer.spans[1]
+    assert span.terminal == "consumed"
+    assert [s.kind for s in span.segments] == ["queue", "decode"]
+    assert span.queue_wait() == 1.0
+    assert span.decode_time() == 1.0
+    # floor_source() - 1 - v_route = 3 - 1 - 1
+    assert span.staleness == 1
+    assert tracer.queue_lat.values() == [1.0]
+    assert tracer.reward_lat.values() == [0.5]
+    assert tracer.consume_lat.values() == [0.5]
+
+
+def test_tracer_flags_double_terminal_and_unclosed():
+    from repro.core import TrajectoryLifecycle
+    from repro.core.types import Trajectory
+
+    lifecycle = TrajectoryLifecycle()
+    tracer = TrajectoryTracer(lifecycle)
+    t = Trajectory(traj_id=7, prompt=[1], group_id=0)
+    lifecycle.routed(t, 0, 0)
+    problems = tracer.check_conservation()
+    assert len(problems) == 1 and "never" in problems[0]
+    assert tracer.check_conservation(allow_open=True) == []
+    lifecycle.consumed(7)
+    lifecycle.aborted(7)  # bug injection: second terminal
+    problems = tracer.check_conservation()
+    assert len(problems) == 1 and "2 terminal" in problems[0]
+
+
+def test_tracer_migration_hops_and_preemption():
+    from repro.core import TrajectoryLifecycle
+    from repro.core.types import Trajectory
+
+    lifecycle = TrajectoryLifecycle()
+    tracer = TrajectoryTracer(lifecycle)
+    t = Trajectory(traj_id=2, prompt=[1], group_id=0)
+    lifecycle.routed(t, 0, 5)
+    tracer.on_admit(0, [2])
+    tracer.on_preempt(0, 2)
+    lifecycle.interrupted(t)
+    lifecycle.routed(t, 1, 4)  # migrated; late join lowers the version
+    tracer.on_admit(1, [2])
+    lifecycle.completed(t, 1)
+    lifecycle.rewarded(t)
+    lifecycle.consumed(2)
+    span = tracer.spans[2]
+    assert span.hops == 1
+    assert span.preemptions == 1
+    assert span.v_route == 4  # min over ROUTED versions
+    assert span.instances == [0, 1]
+    assert tracer.check_conservation() == []
+
+
+def test_export_schema_and_validator():
+    tracer = TrajectoryTracer()
+    tracer.activity("work", 0.0, 1.0, track="t0", args={"n": 1})
+    tracer.sample("fleet", {"active": 2.0}, ts=0.5)
+    trace = export_chrome_trace(tracer)
+    assert validate_chrome_trace(trace) == []
+    phases = {e["ph"] for e in trace["traceEvents"]}
+    assert {"M", "X", "C"} <= phases
+    # validator catches structural damage
+    bad = json.loads(json.dumps(trace))
+    x_ev = next(e for e in bad["traceEvents"] if e["ph"] == "X")
+    c_ev = next(e for e in bad["traceEvents"] if e["ph"] == "C")
+    x_ev["ts"] = -1
+    del c_ev["ph"]
+    errs = validate_chrome_trace(bad)
+    assert len(errs) == 2
+
+
+# ------------------------------------------------- traced tick runtime
+ARCH = None
+
+
+def _mk_runtime(**kw):
+    global ARCH
+    from repro.configs import get_arch
+    from repro.core.types import reset_traj_ids
+    from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
+
+    if ARCH is None:
+        ARCH = get_arch("qwen2-1.5b").reduced()
+    reset_traj_ids()
+    defaults = dict(
+        eta=1, batch_size=2, group_size=2, n_instances=2, max_slots=2,
+        max_len=48, max_new_tokens=8, total_steps=2, seed=0,
+    )
+    defaults.update(kw)
+    return AsyncRLRuntime(ARCH, RuntimeConfig(**defaults))
+
+
+def test_observability_off_by_default():
+    rt = _mk_runtime()
+    assert rt.tracer is None
+    assert not rt.metrics.enabled
+    # trace_path alone implies observability
+    rt2 = _mk_runtime(trace_path="unused.json")
+    assert rt2.tracer is not None
+
+
+def test_traced_tick_run_reconstructs_staleness(tmp_path):
+    path = str(tmp_path / "trace.json")
+    rt = _mk_runtime(observability=True, trace_path=path)
+    rt.run(max_ticks=3000)
+    assert rt.model_version == 2
+    assert rt.tracer.check_conservation(allow_open=True) == []
+    # the trace's realized staleness is reconstructed from span versions
+    # alone — it must agree with the protocol's own accounting
+    assert (
+        rt.tracer.realized_max_staleness()
+        == rt.manager.max_consumed_staleness()
+    )
+    trace = json.loads(open(path).read())
+    assert validate_chrome_trace(trace) == []
+    other = trace["otherData"]
+    assert other["conservation_violations"] == []
+    assert other["spans"] > 0
+    # engine hooks split queue vs decode: decode segments must exist
+    assert any(
+        e["name"] == "decode" and e["pid"] == 1
+        for e in trace["traceEvents"]
+    )
+    # the registry mirrored the fleet counters on export
+    assert rt.metrics.find("engine_decode_steps")
+    assert rt.metrics.find("ps_pushes")
+
+
+def test_traced_sim_run(tmp_path):
+    from repro.sim.engine import SimConfig, StaleFlowSim
+
+    path = str(tmp_path / "sim_trace.json")
+    cfg = SimConfig(
+        n_instances=2, batch_size=4, group_size=2, total_steps=2,
+        observability=True, trace_path=path,
+    )
+    sim = StaleFlowSim(cfg)
+    sim.run()
+    assert sim.tracer.check_conservation(allow_open=True) == []
+    assert (
+        sim.tracer.realized_max_staleness()
+        == sim.manager.max_consumed_staleness()
+    )
+    trace = json.loads(open(path).read())
+    assert validate_chrome_trace(trace) == []
+
+
+# --------------------------------------- threaded streaming conservation
+@pytest.mark.slow
+def test_trace_conservation_under_threaded_streaming_stress():
+    """Trace conservation under the elastic streaming stress: with a
+    replica failing and a new one joining mid-run, every ROUTED span must
+    still close with exactly one terminal event, and the staleness the
+    tracer reconstructs must match the manager and respect eta."""
+    rt = _mk_runtime(
+        scheduler="threaded", total_steps=3, n_instances=2, eta=2,
+        streaming=True, stream_min_fill=1,
+        stream_rebalance_interval_s=0.01,
+        observability=True,
+    )
+    rt.scheduler.wall_timeout_s = 280.0
+    runner = threading.Thread(target=rt.run, daemon=True)
+    runner.start()
+    deadline = time.perf_counter() + 120
+    while time.perf_counter() < deadline:
+        if rt.instances[1].decode_steps > 0 and rt.model_version >= 1:
+            break
+        time.sleep(0.05)
+    assert rt.instances[1].decode_steps > 0, "instance 1 never decoded"
+
+    rt.fail_instance(1)
+    rt.manager.check_invariants()
+    rt.add_instance(9)
+    rt.manager.check_invariants()
+
+    runner.join(timeout=280)
+    assert not runner.is_alive(), "threaded streaming run did not finish"
+    assert rt.model_version == 3
+
+    # exactly one terminal per closed span, even across fail/add
+    assert rt.tracer.check_conservation(allow_open=True) == []
+    traced = rt.tracer.realized_max_staleness()
+    assert traced == rt.manager.max_consumed_staleness()
+    assert traced <= rt.rcfg.eta
+    for s in rt.tracer.staleness_samples:
+        assert 0 <= s <= rt.rcfg.eta
+    # consumed spans outnumber steps*batch floor; export stays valid
+    consumed = [
+        s for s in rt.tracer.finished_spans() if s.terminal == "consumed"
+    ]
+    assert len(consumed) >= rt.rcfg.batch_size * rt.rcfg.group_size
+    assert validate_chrome_trace(export_chrome_trace(rt.tracer)) == []
