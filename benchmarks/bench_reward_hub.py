@@ -1,0 +1,241 @@
+"""Reward-hub integration smoke: the hermetic scenarios the ``reward-hub``
+CI job gates on.
+
+Everything runs against the stdlib :class:`StubJudge` on the loopback
+interface or a local subprocess — **no external network**. Five
+scenarios, each with explicit pass conditions:
+
+* **happy** — submit-then-poll against a healthy judge: all scores land,
+  the poll loop actually polled.
+* **retry** — the judge 500s the first N submits: the client backs off,
+  retries, and still lands every score; retry counters prove it.
+* **breaker** — the judge is gone (connection refused): consecutive
+  failures trip the breaker open, later calls fail fast (no socket
+  touched), and the hub resolves every failure to the deterministic
+  fallback score.
+* **sandbox** — a scoring program that loops forever is SIGKILLed at the
+  wall deadline (kill counted); a healthy program scores fine.
+* **threaded** — the full stack under the RewardServer worker pool with
+  seeded fault injection: every submitted completion reaches exactly one
+  disposition, no worker dies, and the faults demonstrably fired.
+
+Writes ``BENCH_reward_hub.json`` (the CI artifact) and exits non-zero on
+any violated condition.
+
+    PYTHONPATH=src python -m benchmarks.bench_reward_hub \
+        --json BENCH_reward_hub.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import emit, note
+from repro.core import (
+    FnVerifier,
+    RewardServer,
+    RewardServerConfig,
+    TrajectoryLifecycle,
+)
+from repro.core.types import Trajectory, next_traj_id, reset_traj_ids
+from repro.reward import (
+    BreakerState,
+    CircuitBreaker,
+    FaultInjectingVerifier,
+    FaultSchedule,
+    HttpVerifier,
+    RetryPolicy,
+    RewardHub,
+    SandboxVerifier,
+    StubJudge,
+)
+
+FAST = RetryPolicy(
+    max_attempts=3, request_timeout_s=2.0,
+    backoff_base_s=0.002, backoff_cap_s=0.02,
+)
+
+
+def scenario_happy(failures: list) -> dict:
+    with StubJudge(score_fn=lambda p, r, task: float(len(r)),
+                   pending_polls=2) as judge:
+        v = HttpVerifier(judge.url, policy=FAST, total_timeout_s=5.0,
+                         poll_interval_s=0.002)
+        scores = [v.score([1, 2], [3] * (i + 1)) for i in range(8)]
+    if scores != [float(i + 1) for i in range(8)]:
+        failures.append(f"happy: wrong scores {scores}")
+    if judge.polls < 8 * 3:  # 2 pendings + 1 done per job
+        failures.append(f"happy: poll loop did not poll ({judge.polls})")
+    return {"scores": len(scores), "polls": judge.polls,
+            "requests": v.requests}
+
+
+def scenario_retry(failures: list) -> dict:
+    with StubJudge(fail_first=2, inline=True) as judge:
+        v = HttpVerifier(judge.url, policy=FAST, total_timeout_s=5.0)
+        score = v.score([1], [2])
+    if score != 1.0:
+        failures.append(f"retry: expected 1.0 after retries, got {score}")
+    if v.retries < 2:
+        failures.append(f"retry: client did not retry ({v.retries})")
+    if judge.errors_served != 2:
+        failures.append(f"retry: judge served {judge.errors_served} errors")
+    return {"score": score, "retries": v.retries,
+            "errors_served": judge.errors_served}
+
+
+def scenario_breaker(failures: list) -> dict:
+    # a judge that is not there: connection refused on every request
+    judge = StubJudge()  # never started; grab a port that refuses
+    dead_url = judge.url
+    judge._server.server_close()
+    breaker = CircuitBreaker(failure_threshold=4, reset_timeout_s=60.0)
+    v = HttpVerifier(
+        dead_url,
+        policy=RetryPolicy(max_attempts=2, request_timeout_s=0.2,
+                           backoff_base_s=0.001, backoff_cap_s=0.005),
+        breaker=breaker, total_timeout_s=2.0,
+    )
+    hub = RewardHub(on_failure="fallback", fallback_score=-1.0)
+    hub.register("remote", v)
+    hub.register("", v)
+    scores = [hub.score([1], [2]) for _ in range(12)]
+    if any(s != -1.0 for s in scores):
+        failures.append(f"breaker: non-fallback score in {scores}")
+    if breaker.state is not BreakerState.OPEN:
+        failures.append(f"breaker: state {breaker.state} after dead judge")
+    if breaker.fast_failures == 0:
+        failures.append("breaker: never failed fast (open gate untested)")
+    route = hub.stats()["routes"]["default"]
+    if route["fallbacks"] != 12:
+        failures.append(f"breaker: {route['fallbacks']} fallbacks != 12")
+    return {
+        "fallbacks": route["fallbacks"],
+        "breaker_opened": breaker.opened,
+        "fast_failures": breaker.fast_failures,
+        "requests": v.requests,
+    }
+
+
+def scenario_sandbox(failures: list) -> dict:
+    good = SandboxVerifier(
+        "def score(p, r):\n    return float(len(r))", timeout_s=5.0
+    )
+    if good.score([1], [2, 3]) != 2.0:
+        failures.append("sandbox: healthy program scored wrong")
+    hang = SandboxVerifier(
+        "import time\n"
+        "def score(p, r):\n"
+        "    time.sleep(3600)\n"
+        "    return 0.0",
+        timeout_s=0.5,
+    )
+    hub = RewardHub(on_failure="fallback", fallback_score=0.0)
+    hub.register("code", hang)
+    t0 = time.perf_counter()
+    t = Trajectory(traj_id=next_traj_id(), prompt=[1], task="code")
+    t.response = [2]
+    score = hub.score_trajectory(t)
+    wall = time.perf_counter() - t0
+    if score != 0.0:
+        failures.append(f"sandbox: hung program scored {score}")
+    if hang.kills != 1:
+        failures.append(f"sandbox: kill not counted ({hang.kills})")
+    if wall > 5.0:
+        failures.append(f"sandbox: kill took {wall:.1f}s (deadline 0.5s)")
+    return {"good_calls": good.calls, "kills": hang.kills,
+            "kill_wall_s": round(wall, 3)}
+
+
+def scenario_threaded(failures: list) -> dict:
+    n = 64
+    with StubJudge(pending_polls=1) as judge:
+        remote = HttpVerifier(judge.url, policy=FAST, total_timeout_s=5.0,
+                              poll_interval_s=0.002)
+        faulty = FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(seed=3, error_rate=0.2, crash_rate=0.1,
+                          drop_rate=0.05, delay_rate=0.2, delay_s=0.002),
+            drop_hang_s=0.002,
+        )
+        hub = RewardHub(
+            default=FnVerifier(lambda p, r: 1.0),
+            on_failure="fallback", fallback_score=0.0,
+        )
+        hub.register("remote", remote)
+        hub.register("faulty", faulty)
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            hub, lifecycle, RewardServerConfig(n_workers=4)
+        )
+        server.start()
+        tags = ["remote", "faulty", "math-ish"]  # third tag -> default route
+        for i in range(n):
+            t = Trajectory(traj_id=next_traj_id(), prompt=[1, i],
+                           task=tags[i % 3])
+            t.response = [2]
+            lifecycle.completed(t)
+        drained = server.drain(timeout=60.0)
+        workers_alive = server.alive_workers()
+        server.stop()
+    if not drained:
+        failures.append("threaded: drain timed out (stuck completion)")
+    disposed = server.scored + server.dropped + server.aborted
+    if disposed != server.submitted:
+        failures.append(
+            f"threaded: {disposed} dispositions != {server.submitted} "
+            f"submitted"
+        )
+    if workers_alive != 4:
+        failures.append(f"threaded: {workers_alive}/4 workers alive")
+    if faulty.injected() == 0:
+        failures.append("threaded: no faults fired — scenario proves nothing")
+    return {
+        "submitted": server.submitted,
+        "scored": server.scored,
+        "workers_alive": workers_alive,
+        "worker_errors": server.worker_errors,
+        "injected_faults": faulty.injected(),
+        "fault_counts": dict(faulty.counts),
+        "hub": hub.stats(),
+    }
+
+
+def run(json_path: str = "BENCH_reward_hub.json") -> int:
+    note("bench_reward_hub: hermetic verifier-fault scenarios "
+         "(loopback + subprocess only)")
+    reset_traj_ids()
+    failures: list = []
+    results = {}
+    for name, fn in (
+        ("happy", scenario_happy),
+        ("retry", scenario_retry),
+        ("breaker", scenario_breaker),
+        ("sandbox", scenario_sandbox),
+        ("threaded", scenario_threaded),
+    ):
+        t0 = time.perf_counter()
+        results[name] = fn(failures)
+        results[name]["wall_s"] = round(time.perf_counter() - t0, 3)
+        emit("reward_hub", f"{name}_wall_s", results[name]["wall_s"])
+    emit("reward_hub", "failures", len(failures))
+    results["failures"] = failures
+    with open(json_path, "w", encoding="utf-8") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    note(f"wrote {json_path}")
+    if failures:
+        for msg in failures:
+            note(f"FAIL: {msg}")
+        return 1
+    note("reward hub smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_reward_hub.json",
+                    help="results path (also the CI artifact)")
+    args = ap.parse_args()
+    sys.exit(run(json_path=args.json))

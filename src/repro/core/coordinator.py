@@ -460,6 +460,52 @@ class RolloutCoordinator:
                 self.manager.occupy(key)
             return []
 
+    def abort_unverifiable(self, traj: Trajectory) -> List[int]:
+        """Terminal verification failure (reward hub ``on_failure="abort"``):
+        release the trajectory's protocol entry and publish clean ABORTED
+        events instead of REWARDED.
+
+        Grouped trajectories abort the *whole group*: the protocol entry
+        lives at group granularity, and a group that can never reach
+        ``group_size`` rewarded members would leave its buffer entry
+        Reserved forever (training stalls on a stuck entry). Mirrors the
+        group-filter abort path in ``on_trajectory_rewarded``.
+
+        Idempotent under concurrency: a second worker aborting a sibling
+        of an already-aborted group (or a trajectory consumed/aborted in
+        the meantime) is a no-op — the ``ts.get`` / status gate runs under
+        the coordinator lock, so at most one caller publishes the
+        terminal events (tracer span conservation depends on this).
+        Returns the aborted member IDs.
+        """
+        with self._lock:
+            t = self.ts.get(traj.traj_id)
+            if t is None or t.status in (
+                TrajStatus.ABORTED, TrajStatus.CONSUMED
+            ):
+                return []
+            # mark this thread as inside a routing decision: the ABORTED
+            # events below wake streaming admission re-entrantly, and the
+            # freed capacity is already visible to the next event/cycle
+            prev = self._cycle_thread
+            self._cycle_thread = threading.get_ident()
+            try:
+                key = self._protocol_key(traj)
+                if traj.group_id >= 0 and self.groups is not None:
+                    group = self.ts.groups.get(traj.group_id)
+                    members = (
+                        list(group.traj_ids) if group else [traj.traj_id]
+                    )
+                    self.manager.abort(key)  # idempotent on untracked keys
+                    self._abort_members(members)
+                    self.groups.forget(traj.group_id)
+                    return members
+                self.manager.abort(key)
+                self._abort_members([traj.traj_id])
+                return [traj.traj_id]
+            finally:
+                self._cycle_thread = prev
+
     def try_consume(
         self, min_fill: Optional[int] = None
     ) -> Optional[List[int]]:

@@ -19,9 +19,21 @@ to a first-class service on the trajectory-lifecycle bus:
 
 The verifier is pluggable: anything with ``score(prompt_ids, response_ids)
 -> float`` (``repro.reward.verifier.RewardModel``, or a bare callable via
-``FnVerifier``). ``simulated_latency`` models slow verifiers (sandboxed
-code execution, remote judges) so overlap behavior is observable in
-benchmarks.
+``FnVerifier``); verifiers that care about routing expose
+``score_trajectory(traj)`` instead and the server prefers it — this is
+how a ``repro.reward.RewardHub`` (per-task routing to remote/sandboxed
+verifiers) drops in. ``simulated_latency`` models slow verifiers so
+overlap behavior is observable in benchmarks.
+
+Failure contract (the hub's tentpole invariant): scoring a completion
+must end in **exactly one** terminal disposition — REWARDED (real or
+fallback score), a clean ABORTED through ``on_abort`` (the hub raised
+``VerificationAbort``), or a counted drop (liveness/shutdown). No
+exception may escape ``_score``: a worker thread dying silently would
+shrink the pool for the rest of the run, and an unscored trajectory
+would leave its staleness entry Reserved forever (buffer stuck, training
+stalls). Worker-side exceptions are counted in ``worker_errors`` and
+mirrored to the ``reward_worker_errors`` metric.
 """
 from __future__ import annotations
 
@@ -38,6 +50,7 @@ from repro.core.lifecycle import (
 )
 from repro.core.types import Trajectory
 from repro.obs.stats import Ring, percentiles
+from repro.reward.retry import VerificationAbort
 
 
 class FnVerifier:
@@ -72,16 +85,26 @@ class RewardServer:
         liveness: Optional[Callable[[Trajectory], bool]] = None,
         metrics=None,
         tracer=None,
+        on_abort: Optional[Callable[[Trajectory], object]] = None,
     ):
         self.verifier = verifier
         self.lifecycle = lifecycle
         self.cfg = cfg or RewardServerConfig()
         self._clock = clock
+        # terminal verification failure (hub on_failure="abort"): called
+        # instead of publishing REWARDED. The runtime wires the
+        # coordinator's abort_unverifiable (protocol release + group-wide
+        # ABORTED); standalone use defaults to a bare ABORTED event.
+        self._on_abort = on_abort
         # observability (optional): submit->rewarded latency histogram on
         # the registry, per-score activity spans on the tracer's
         # reward-worker track
         self._m_latency = (
             metrics.histogram("reward_submit_to_rewarded_s")
+            if metrics is not None else None
+        )
+        self._m_worker_errors = (
+            metrics.counter("reward_worker_errors")
             if metrics is not None else None
         )
         self._tracer = tracer
@@ -101,6 +124,8 @@ class RewardServer:
         self.submitted = 0
         self.scored = 0
         self.errors = 0                  # verifier exceptions (scored as 0.0)
+        self.aborted = 0                 # VerificationAbort -> clean ABORTED
+        self.worker_errors = 0           # exceptions past the scoring guard
         self.dropped = 0                 # aborted-while-queued / shutdown
         self.score_time = 0.0            # seconds spent inside the verifier
         # submit -> rewarded seconds, true ring buffer: once full, the
@@ -162,7 +187,8 @@ class RewardServer:
         deadline = self._clock() + timeout
         while self._clock() < deadline:
             with self._lock:
-                if self.scored + self.dropped >= self.submitted:
+                done = self.scored + self.dropped + self.aborted
+                if done >= self.submitted:
                     return True
             time.sleep(0.001)
         return False
@@ -187,18 +213,60 @@ class RewardServer:
             self._score(e.traj, self._clock())
 
     # ------------------------------------------------------------- scoring
+    def _call_verifier(self, traj: Trajectory) -> float:
+        """Dispatch to the verifier: routing-aware verifiers (the reward
+        hub) take the whole trajectory; plain ones the token lists."""
+        fn = getattr(self.verifier, "score_trajectory", None)
+        if fn is not None:
+            return fn(traj)
+        return self.verifier.score(list(traj.prompt), list(traj.response))
+
+    def _count_worker_error(self, where: str, exc: BaseException) -> None:
+        with self._lock:
+            self.worker_errors += 1
+            first = self.worker_errors == 1
+        if self._m_worker_errors is not None:
+            self._m_worker_errors.inc()
+        if first:
+            print(f"[RewardServer] WARNING: {where} raised {exc!r}; "
+                  f"worker kept alive (further errors counted silently)",
+                  flush=True)
+
+    def _abort(self, traj: Trajectory) -> None:
+        """Publish the clean-ABORTED disposition for an unverifiable
+        trajectory. Must not raise into the worker loop."""
+        try:
+            if self._on_abort is not None:
+                self._on_abort(traj)
+            else:
+                self.lifecycle.aborted(traj.traj_id, traj)
+        except Exception as exc:
+            self._count_worker_error("abort dispatch", exc)
+
     def _score(self, traj: Trajectory, t_submit: float) -> None:
-        if self._liveness is not None and not self._liveness(traj):
+        """Score one completion. Never raises: every path ends in exactly
+        one disposition — REWARDED, ABORTED (via ``_abort``), or a counted
+        drop — and worker threads survive any verifier/subscriber bug."""
+        try:
+            live = self._liveness is None or self._liveness(traj)
+        except Exception as exc:
+            # a liveness probe that raises must not strand the completion
+            # in limbo: treat it as dead (the abort path already ran or
+            # will run for it; scoring into torn-down state is worse)
+            self._count_worker_error("liveness probe", exc)
+            live = False
+        if not live:
             with self._lock:
                 self.dropped += 1
             return
         t0 = self._clock()
         if self.cfg.simulated_latency > 0.0:
             time.sleep(self.cfg.simulated_latency)
+        abort_exc: Optional[BaseException] = None
         try:
-            traj.reward = self.verifier.score(
-                list(traj.prompt), list(traj.response)
-            )
+            traj.reward = self._call_verifier(traj)
+        except VerificationAbort as exc:
+            abort_exc = exc
         except Exception as exc:  # pluggable verifier: stay alive
             # score as 0.0 and keep the protocol flowing — an unscored
             # trajectory would leave its staleness entry Reserved forever
@@ -213,16 +281,30 @@ class RewardServer:
                       flush=True)
         now = self._clock()
         with self._lock:
-            self.scored += 1
             self.score_time += now - t0
+            if abort_exc is None:
+                self.scored += 1
+            else:
+                self.aborted += 1
         self._latencies.append(now - t_submit)
         if self._m_latency is not None:
             self._m_latency.observe(now - t_submit)
         if self._tracer is not None:
             self._tracer.activity(
-                "score", t0, now, args={"traj": traj.traj_id}
+                "score", t0, now,
+                args={"traj": traj.traj_id,
+                      "outcome": "abort" if abort_exc else "ok"},
             )
-        self.lifecycle.rewarded(traj)
+        if abort_exc is not None:
+            self._abort(traj)
+            return
+        try:
+            self.lifecycle.rewarded(traj)
+        except Exception as exc:
+            # a downstream REWARDED subscriber raised mid-dispatch: count
+            # it and keep the worker; the bug is in the subscriber, and a
+            # dead pool would turn one bad event into a stalled run
+            self._count_worker_error("REWARDED dispatch", exc)
 
     def _worker_loop(self) -> None:
         while True:
@@ -232,15 +314,18 @@ class RewardServer:
                     return
                 try:
                     self._score(*item)
-                except Exception:  # downstream subscriber raised: the
-                    with self._lock:  # worker must outlive one bad event
-                        self.errors += 1
+                except Exception as exc:  # belt and braces: _score already
+                    self._count_worker_error("scoring", exc)  # guards
             finally:
                 self._queue.task_done()
 
     # ----------------------------------------------------------- telemetry
     def queue_depth(self) -> int:
         return self._queue.qsize()
+
+    def alive_workers(self) -> int:
+        """Worker threads still running (pool-shrink regression probe)."""
+        return sum(1 for t in self._workers if t.is_alive())
 
     def latency_percentiles(
         self, qs: Sequence[float] = (0.5, 0.95, 0.99)
@@ -255,6 +340,8 @@ class RewardServer:
                 "submitted": self.submitted,
                 "scored": self.scored,
                 "errors": self.errors,
+                "aborted": self.aborted,
+                "worker_errors": self.worker_errors,
                 "dropped": self.dropped,
                 "queue_depth": self._queue.qsize(),
                 "score_time_s": self.score_time,

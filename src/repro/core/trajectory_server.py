@@ -33,7 +33,7 @@ from repro.core.types import Trajectory, TrajectoryGroup, TrajStatus, next_traj_
 class TrajectoryServer:
     def __init__(
         self,
-        prompt_source: Iterator[List[int]],
+        prompt_source: Iterator,  # List[int] or (List[int], task) tuples
         *,
         capacity_groups: int,
         group_size: int = 1,
@@ -78,10 +78,16 @@ class TrajectoryServer:
         with self._lock:
             while self._live_groups < self.capacity_groups and not self._exhausted:
                 try:
-                    prompt = next(self._source)
+                    item = next(self._source)
                 except StopIteration:
                     self._exhausted = True
                     break
+                # tagged sources yield (prompt_ids, task); plain sources
+                # yield bare prompt_ids (task "" -> hub default route)
+                if isinstance(item, tuple):
+                    prompt, task = item
+                else:
+                    prompt, task = item, ""
                 gid = self._group_counter
                 self._group_counter += 1
                 group = TrajectoryGroup(
@@ -96,6 +102,7 @@ class TrajectoryServer:
                         group_id=gid,
                         max_new_tokens=self.max_new_tokens,
                         created_at=self._clock(),
+                        task=task,
                     )
                     group.traj_ids.append(t.traj_id)
                     self._available[t.traj_id] = t

@@ -83,6 +83,9 @@ class Trajectory:
     # of materialized token lists (cluster-scale runs would need GBs)
     sim_generated: int = 0
     sim_target_len: int = 0
+    # reward-hub routing tag ("math", "code", "remote", ...); "" takes the
+    # hub's default route
+    task: str = ""
     # lazily built (hash, tuple) of the prompt — prefix-registry lookups
     # compare the hash first instead of rebuilding the tuple per admission
     _prompt_key: Optional[tuple] = field(

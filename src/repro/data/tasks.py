@@ -52,6 +52,15 @@ class ArithmeticDataset:
         for p in self.problems:
             yield list(p.prompt_ids)
 
+    def tagged_source(
+        self, tags: List[str], seed: int = 0
+    ) -> Iterator[Tuple[List[int], str]]:
+        """Prompt source yielding ``(prompt_ids, task)`` for reward-hub
+        routing: each prompt draws a tag from ``tags`` deterministically."""
+        rng = random.Random(seed)
+        for p in self.problems:
+            yield list(p.prompt_ids), rng.choice(tags)
+
     def answer_for(self, prompt_ids: List[int]) -> str:
         return self._by_prompt[tuple(prompt_ids)]
 

@@ -81,6 +81,30 @@ def main() -> None:
         help="reward worker threads with --score",
     )
     ap.add_argument(
+        "--score-url", default=None, metavar="URL",
+        help="route completions through a RewardHub whose default route is "
+             "a remote submit-then-poll judge at URL (HttpVerifier: "
+             "per-request timeout, capped-backoff retries, circuit "
+             "breaker); implies --score. The in-process RewardModel keeps "
+             "the 'math' tag",
+    )
+    ap.add_argument(
+        "--score-sandbox", default=None, metavar="SPEC",
+        help="register a subprocess-sandboxed code-execution verifier "
+             "under the 'code' task tag (resource/time-limited, "
+             "kill-on-timeout); SPEC is inline Python source defining "
+             "score(prompt_ids, response_ids), or @path/to/program.py; "
+             "implies --score",
+    )
+    ap.add_argument(
+        "--score-timeout", type=float, default=5.0,
+        help="per-request / sandbox wall deadline (s) for hub verifiers",
+    )
+    ap.add_argument(
+        "--score-retries", type=int, default=3,
+        help="bounded attempts per remote-judge protocol step",
+    )
+    ap.add_argument(
         "--trace", default=None, metavar="PATH",
         help="export a Chrome trace (Perfetto-loadable) of the run",
     )
@@ -89,6 +113,8 @@ def main() -> None:
         help="structured NDJSON logs instead of human-readable lines",
     )
     args = ap.parse_args()
+    if args.score_url or args.score_sandbox:
+        args.score = True
     setup_logging(json_mode=args.log_json)
     log = get_logger("serve")
 
@@ -132,12 +158,44 @@ def main() -> None:
         inst.on_preempt = tracer.on_preempt
 
     reward_server = None
+    hub = None
     if args.score:
         from repro.core import RewardServer, RewardServerConfig
         from repro.reward.verifier import RewardModel
 
+        verifier = RewardModel(lambda prompt: ds.answer_for(prompt))
+        if args.score_url or args.score_sandbox:
+            from repro.reward import (
+                DEFAULT_ROUTE,
+                CircuitBreaker,
+                HttpVerifier,
+                RetryPolicy,
+                RewardHub,
+                SandboxVerifier,
+            )
+
+            hub = RewardHub(default=verifier, tracer=tracer)
+            hub.register("math", verifier)
+            if args.score_sandbox:
+                hub.register("code", SandboxVerifier.from_spec(
+                    args.score_sandbox, timeout_s=args.score_timeout,
+                ))
+            if args.score_url:
+                remote = HttpVerifier(
+                    args.score_url,
+                    policy=RetryPolicy(
+                        max_attempts=max(1, args.score_retries),
+                        request_timeout_s=args.score_timeout,
+                    ),
+                    breaker=CircuitBreaker(),
+                    total_timeout_s=args.score_timeout * 4,
+                )
+                hub.register("remote", remote)
+                hub.register(DEFAULT_ROUTE, remote)
+            verifier = hub
+            log.info("reward hub routes", extra={"tags": hub.tags()})
         reward_server = RewardServer(
-            RewardModel(lambda prompt: ds.answer_for(prompt)),
+            verifier,
             lifecycle,
             RewardServerConfig(n_workers=args.reward_workers),
             tracer=tracer,
@@ -213,6 +271,8 @@ def main() -> None:
                 "queue_p95_ms": round(1e3 * (pct[0.95] or 0), 2),
             },
         )
+        if hub is not None:
+            log.info("reward hub", extra={"stats": hub.stats()})
     if tracer is not None:
         from repro.obs import export_chrome_trace
 

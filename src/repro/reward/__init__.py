@@ -1,0 +1,56 @@
+"""Reward hub: per-task verifier routing with failure handling.
+
+``RewardModel``/``FnVerifier`` (in-process), ``HttpVerifier`` (remote
+submit-then-poll judge), and ``SandboxVerifier`` (resource-limited
+subprocess) all speak one scoring protocol; :class:`RewardHub` routes
+trajectories between them by task tag and resolves terminal failures to
+a deterministic fallback score or a clean ABORTED. ``retry`` holds the
+shared retry/breaker machinery, ``faults`` the deterministic fault
+injector, ``stub_judge`` the hermetic loopback judge used by tests, the
+benchmark, and the ``reward-hub`` CI job.
+"""
+from repro.reward.faults import (
+    Fault,
+    FaultInjectingVerifier,
+    FaultSchedule,
+    InjectedCrash,
+)
+from repro.reward.http_verifier import HttpVerifier
+from repro.reward.hub import DEFAULT_ROUTE, RewardHub
+from repro.reward.retry import (
+    BreakerState,
+    CircuitBreaker,
+    RetryPolicy,
+    RetryingVerifier,
+    VerificationAbort,
+    VerifierError,
+    VerifierTimeout,
+    VerifierUnavailable,
+    run_with_retries,
+)
+from repro.reward.sandbox import SandboxVerifier
+from repro.reward.stub_judge import StubJudge
+from repro.reward.verifier import RewardModel, verify_arithmetic
+
+__all__ = [
+    "BreakerState",
+    "CircuitBreaker",
+    "DEFAULT_ROUTE",
+    "Fault",
+    "FaultInjectingVerifier",
+    "FaultSchedule",
+    "HttpVerifier",
+    "InjectedCrash",
+    "RetryPolicy",
+    "RetryingVerifier",
+    "RewardHub",
+    "RewardModel",
+    "SandboxVerifier",
+    "StubJudge",
+    "VerificationAbort",
+    "VerifierError",
+    "VerifierTimeout",
+    "VerifierUnavailable",
+    "run_with_retries",
+    "verify_arithmetic",
+]

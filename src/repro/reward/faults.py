@@ -1,0 +1,182 @@
+"""Deterministic fault injection for verifiers.
+
+The tentpole's provability requirement: under a *seeded schedule* of
+verifier faults — transient errors, latency spikes, dropped requests,
+hard crashes — every ROUTED trajectory must still reach exactly one
+terminal lifecycle event, staleness must stay ≤ η, and no reward worker
+thread may die. :class:`FaultInjectingVerifier` wraps any verifier and
+injects those faults on a schedule that is a **pure function of the
+call index**, so the same seed produces the same fault for call *i*
+regardless of thread interleaving — totals are reproducible even under
+the threaded scheduler.
+
+Fault kinds:
+
+* ``ok``    — pass through to the inner verifier;
+* ``error`` — raise ``VerifierError`` (transient; retry wrappers eat it);
+* ``crash`` — raise a non-verifier ``InjectedCrash`` (models the verifier
+  process itself blowing up — the worker-survival bugfix's regression
+  vector);
+* ``delay`` — sleep ``delay_s`` then pass through (latency spike);
+* ``drop``  — hang ``drop_hang_s`` then raise ``VerifierTimeout`` (the
+  request vanished; models a judge that never answers).
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Union
+
+from repro.reward.retry import VerifierError, VerifierTimeout
+
+FAULT_KINDS = ("ok", "error", "crash", "delay", "drop")
+
+
+class InjectedCrash(RuntimeError):
+    """A non-verifier exception: the verifier itself blew up."""
+
+
+@dataclass(frozen=True)
+class Fault:
+    kind: str = "ok"
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class FaultSchedule:
+    """Per-call fault plan, deterministic in the call index.
+
+    Two modes, composable into neither:
+
+    * **explicit**: ``FaultSchedule(["ok", "error", "drop"])`` — the
+      sequence is consumed by call index; past the end it is either
+      cycled (``cycle=True``) or everything is ``ok``.
+    * **seeded rates**: ``FaultSchedule(seed=7, error_rate=0.2, ...)`` —
+      call *i* draws its fault from ``random.Random((seed, i))``, so the
+      decision for a given call index never depends on which thread got
+      there first.
+    """
+
+    def __init__(
+        self,
+        faults: Optional[Sequence[Union[Fault, str]]] = None,
+        *,
+        cycle: bool = False,
+        seed: int = 0,
+        error_rate: float = 0.0,
+        crash_rate: float = 0.0,
+        drop_rate: float = 0.0,
+        delay_rate: float = 0.0,
+        delay_s: float = 0.01,
+    ):
+        self._explicit: Optional[List[Fault]] = None
+        if faults is not None:
+            self._explicit = [
+                f if isinstance(f, Fault) else Fault(f) for f in faults
+            ]
+        self._cycle = cycle
+        self._seed = seed
+        self._rates = (
+            ("error", error_rate),
+            ("crash", crash_rate),
+            ("drop", drop_rate),
+            ("delay", delay_rate),
+        )
+        self._delay_s = delay_s
+
+    def at(self, i: int) -> Fault:
+        if self._explicit is not None:
+            if i < len(self._explicit):
+                return self._explicit[i]
+            if self._cycle and self._explicit:
+                return self._explicit[i % len(self._explicit)]
+            return Fault("ok")
+        # seeded-rate mode: one draw per call index, order-independent.
+        # Integer seed mix (not a tuple: tuple seeding is hash-based and
+        # varies with PYTHONHASHSEED — faults must reproduce across runs)
+        u = random.Random(self._seed * 0x9E3779B1 + i).random()
+        edge = 0.0
+        for kind, rate in self._rates:
+            edge += rate
+            if u < edge:
+                return Fault(kind, delay_s=self._delay_s)
+        return Fault("ok")
+
+
+class FaultInjectingVerifier:
+    """Wrap a verifier with a deterministic fault schedule.
+
+    Call indices are assigned atomically; each index's fault comes from
+    ``schedule.at(i)``. Per-kind counts are kept so tests can assert the
+    faults actually fired (a fault-injection test that injected nothing
+    proves nothing).
+    """
+
+    def __init__(
+        self,
+        inner,
+        schedule: FaultSchedule,
+        *,
+        drop_hang_s: float = 0.02,
+        sleep: Callable[[float], None] = time.sleep,
+        name: Optional[str] = None,
+    ):
+        self.inner = inner
+        self.schedule = schedule
+        self.drop_hang_s = drop_hang_s
+        self.name = name or f"faulty[{type(inner).__name__}]"
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        self._next = 0
+        self.counts = {k: 0 for k in FAULT_KINDS}
+
+    def _fault(self) -> Fault:
+        with self._lock:
+            i = self._next
+            self._next += 1
+        f = self.schedule.at(i)
+        with self._lock:
+            self.counts[f.kind] += 1
+        return f
+
+    def _call(self, fn: Callable[[], float]) -> float:
+        f = self._fault()
+        if f.kind == "error":
+            raise VerifierError("injected transient error")
+        if f.kind == "crash":
+            raise InjectedCrash("injected verifier crash")
+        if f.kind == "drop":
+            self._sleep(self.drop_hang_s)
+            raise VerifierTimeout("injected drop: request never answered")
+        if f.kind == "delay":
+            self._sleep(f.delay_s)
+        return fn()
+
+    def score(self, prompt_ids: List[int], response_ids: List[int]) -> float:
+        return self._call(lambda: self.inner.score(prompt_ids, response_ids))
+
+    def score_trajectory(self, traj) -> float:
+        fn = getattr(self.inner, "score_trajectory", None)
+        if fn is None:
+            return self._call(
+                lambda: self.inner.score(
+                    list(traj.prompt), list(traj.response)
+                )
+            )
+        return self._call(lambda: fn(traj))
+
+    def injected(self) -> int:
+        """Total non-ok faults fired so far."""
+        with self._lock:
+            return sum(v for k, v in self.counts.items() if k != "ok")
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = {f"fault_{k}": v for k, v in self.counts.items()}
+            out["calls"] = self._next
+        return out

@@ -1,0 +1,235 @@
+"""Reward hub: per-task routing of trajectories to registered verifiers.
+
+ROLL-Flash-style asynchronous reward routing: each trajectory carries a
+task tag (``Trajectory.task``) and the hub dispatches it to the verifier
+registered for that tag — an in-process ``RewardModel``/``FnVerifier``
+for math, a subprocess :class:`~repro.reward.sandbox.SandboxVerifier`
+for code, an :class:`~repro.reward.http_verifier.HttpVerifier` for a
+remote judge — all behind the one scoring protocol the
+:class:`~repro.core.reward_server.RewardServer` already consumes. The
+hub *is* a verifier (``score`` / ``score_trajectory``), so it drops into
+the server unchanged and composes with the retry / breaker / fault
+-injection wrappers.
+
+Failure policy — the tentpole's invariant. A verifier that fails
+terminally (retries exhausted, breaker open, sandbox killed, no route)
+must never leave a ROUTED trajectory without a terminal lifecycle event:
+
+* ``on_failure="fallback"`` (default): the hub swallows the failure and
+  returns the deterministic ``fallback_score`` — the trajectory proceeds
+  to REWARDED like any other (counted per route as ``fallbacks``).
+* ``on_failure="abort"``: the hub raises
+  :class:`~repro.reward.retry.VerificationAbort`; the RewardServer
+  publishes a clean ABORTED through the coordinator instead of REWARDED,
+  releasing the staleness entry and (for groups) the whole group.
+
+Observability: per-route latency histograms + failure/fallback counters
+on the metrics registry, and per-score ``verify[tag]`` activity segments
+on the tracer's reward track.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.obs.stats import Ring, percentiles
+from repro.reward.retry import VerificationAbort
+
+DEFAULT_ROUTE = ""   # tag of the default route; also matches untagged work
+
+
+class _Route:
+    """A registered verifier + its per-route telemetry."""
+
+    def __init__(self, tag: str, verifier, max_latency_samples: int = 2048):
+        self.tag = tag
+        self.verifier = verifier
+        self.lock = threading.Lock()
+        self.calls = 0
+        self.failures = 0    # terminal verifier failures seen by the hub
+        self.fallbacks = 0   # failures resolved to the fallback score
+        self.aborts = 0      # failures escalated to VerificationAbort
+        self.latencies = Ring(max_latency_samples)
+
+    def name(self) -> str:
+        return getattr(self.verifier, "name", type(self.verifier).__name__)
+
+    def stats(self) -> dict:
+        with self.lock:
+            out = {
+                "verifier": self.name(),
+                "calls": self.calls,
+                "failures": self.failures,
+                "fallbacks": self.fallbacks,
+                "aborts": self.aborts,
+            }
+        out["latency"] = percentiles(self.latencies.values(), (0.5, 0.99))
+        inner = getattr(self.verifier, "stats", None)
+        if callable(inner):
+            out["inner"] = inner()
+        return out
+
+
+class RewardHub:
+    """Route trajectories by task tag to registered verifiers."""
+
+    def __init__(
+        self,
+        default=None,
+        routes: Optional[Dict[str, object]] = None,
+        *,
+        on_failure: str = "fallback",
+        fallback_score: float = 0.0,
+        task_of: Optional[Callable[[object], str]] = None,
+        metrics=None,
+        tracer=None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if on_failure not in ("fallback", "abort"):
+            raise ValueError(
+                f"on_failure must be 'fallback' or 'abort', "
+                f"got {on_failure!r}"
+            )
+        self.on_failure = on_failure
+        self.fallback_score = fallback_score
+        self._task_of = task_of
+        self._clock = clock
+        self._tracer = tracer
+        self._metrics = metrics
+        self._routes: Dict[str, _Route] = {}
+        self._lock = threading.Lock()
+        self.unrouted = 0    # trajectories whose tag matched no route
+        if default is not None:
+            self.register(DEFAULT_ROUTE, default)
+        for tag, verifier in (routes or {}).items():
+            self.register(tag, verifier)
+    def _m(self, kind: str, name: str, tag: str):
+        """Labeled instrument for a route (get-or-create is cheap)."""
+        if self._metrics is None:
+            return None
+        factory = getattr(self._metrics, kind)
+        return factory(name, route=tag or "default")
+
+    # -------------------------------------------------------------- routing
+    def register(self, tag: str, verifier) -> "RewardHub":
+        """Register (or replace) the verifier for ``tag``; chains."""
+        with self._lock:
+            self._routes[tag] = _Route(tag, verifier)
+        return self
+
+    def tags(self) -> List[str]:
+        with self._lock:
+            return sorted(self._routes)
+
+    def route_for(self, tag: str) -> Optional[_Route]:
+        """The route for ``tag``, falling back to the default route."""
+        with self._lock:
+            route = self._routes.get(tag)
+            if route is None:
+                route = self._routes.get(DEFAULT_ROUTE)
+            return route
+
+    def _tag_of(self, traj) -> str:
+        if self._task_of is not None:
+            return self._task_of(traj)
+        return getattr(traj, "task", "") or DEFAULT_ROUTE
+
+    # -------------------------------------------------------------- scoring
+    def score(self, prompt_ids: List[int], response_ids: List[int]) -> float:
+        """Verifier-protocol entry: untagged work takes the default route."""
+        return self._dispatch(
+            DEFAULT_ROUTE, None,
+            lambda v: v.score(prompt_ids, response_ids),
+        )
+
+    def score_trajectory(self, traj) -> float:
+        tag = self._tag_of(traj)
+
+        def call(verifier) -> float:
+            fn = getattr(verifier, "score_trajectory", None)
+            if fn is not None and verifier is not self:
+                return fn(traj)
+            return verifier.score(list(traj.prompt), list(traj.response))
+
+        return self._dispatch(tag, getattr(traj, "traj_id", None), call)
+
+    def _dispatch(
+        self,
+        tag: str,
+        traj_id: Optional[int],
+        call: Callable[[object], float],
+    ) -> float:
+        route = self.route_for(tag)
+        if route is None:
+            with self._lock:
+                self.unrouted += 1
+            return self._resolve_failure(
+                tag, traj_id, None,
+                RuntimeError(f"no verifier registered for task {tag!r} "
+                             f"and no default route"),
+            )
+        with route.lock:
+            route.calls += 1
+        t0 = self._clock()
+        try:
+            score = call(route.verifier)
+        except VerificationAbort:
+            # an inner hub/wrapper already decided: count + propagate
+            with route.lock:
+                route.failures += 1
+                route.aborts += 1
+            raise
+        except Exception as exc:
+            with route.lock:
+                route.failures += 1
+            m = self._m("counter", "reward_hub_failures", route.tag)
+            if m is not None:
+                m.inc()
+            return self._resolve_failure(tag, traj_id, route, exc)
+        now = self._clock()
+        route.latencies.append(now - t0)
+        m = self._m("counter", "reward_hub_scores", route.tag)
+        if m is not None:
+            m.inc()
+        m = self._m("histogram", "reward_hub_verify_s", route.tag)
+        if m is not None:
+            m.observe(now - t0)
+        if self._tracer is not None:
+            self._tracer.activity(
+                f"verify[{route.tag or 'default'}]", t0, now,
+                args={} if traj_id is None else {"traj": traj_id},
+            )
+        return score
+
+    def _resolve_failure(
+        self,
+        tag: str,
+        traj_id: Optional[int],
+        route: Optional[_Route],
+        exc: BaseException,
+    ) -> float:
+        """Terminal failure -> deterministic fallback score, or abort."""
+        if self.on_failure == "abort":
+            if route is not None:
+                with route.lock:
+                    route.aborts += 1
+            raise VerificationAbort(tag, traj_id, cause=exc)
+        if route is not None:
+            with route.lock:
+                route.fallbacks += 1
+        return self.fallback_score
+
+    # ----------------------------------------------------------- telemetry
+    def stats(self) -> dict:
+        with self._lock:
+            routes = dict(self._routes)
+            unrouted = self.unrouted
+        return {
+            "on_failure": self.on_failure,
+            "unrouted": unrouted,
+            "routes": {
+                (tag or "default"): route.stats()
+                for tag, route in sorted(routes.items())
+            },
+        }

@@ -1,0 +1,295 @@
+"""Retry state machine for unreliable verifiers: bounded retries with
+capped exponential backoff + deterministic jitter, and a circuit breaker.
+
+The paper's disaggregated reward phase assumes verifiers are slow, flaky,
+*external* services (remote judges, sandboxed executors). This module is
+the failure-handling vocabulary every such verifier shares:
+
+* :class:`RetryPolicy` — how many attempts, how long each may take, and
+  how long to back off between them. Jitter is drawn from a seeded RNG so
+  a fixed seed reproduces the exact retry schedule (the fault-injection
+  suites depend on this).
+* :class:`CircuitBreaker` — consecutive-failure trip wire. After
+  ``failure_threshold`` consecutive failures the breaker *opens* and
+  every call fails fast (``VerifierUnavailable``) without touching the
+  backend; after ``reset_timeout_s`` it *half-opens* and admits exactly
+  one probe — success closes it, failure re-opens it.
+* :func:`run_with_retries` — the attempt loop both the generic
+  :class:`RetryingVerifier` wrapper and the HTTP client drive.
+
+Exception taxonomy (shared by the whole reward hub):
+
+* ``VerifierError``       — the verifier failed (transient or final).
+* ``VerifierTimeout``     — a deadline expired (request or end-to-end).
+* ``VerifierUnavailable`` — the breaker is open; no attempt was made.
+* ``VerificationAbort``   — terminal *decision*: the trajectory cannot be
+  scored and must leave the pipeline via a clean ABORTED (raised by the
+  hub when ``on_failure="abort"``), never a stuck REWARDED-pending span.
+"""
+from __future__ import annotations
+
+import enum
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+class VerifierError(RuntimeError):
+    """A verifier attempt (or all of them) failed."""
+
+
+class VerifierTimeout(VerifierError):
+    """A per-request or end-to-end verification deadline expired."""
+
+
+class VerifierUnavailable(VerifierError):
+    """The circuit breaker is open: the call failed fast, untried."""
+
+
+class VerificationAbort(RuntimeError):
+    """Terminal verification failure: abort the trajectory cleanly.
+
+    Carries the route tag and the underlying cause so telemetry can say
+    *which* verifier gave up on *what*.
+    """
+
+    def __init__(self, tag: str, traj_id: Optional[int] = None,
+                 cause: Optional[BaseException] = None):
+        super().__init__(
+            f"verification aborted (route {tag!r}"
+            + (f", traj {traj_id}" if traj_id is not None else "")
+            + (f"): {cause!r}" if cause is not None else ")")
+        )
+        self.tag = tag
+        self.traj_id = traj_id
+        self.cause = cause
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with capped exponential backoff + seeded jitter.
+
+    ``backoff(attempt)`` for attempt ``k`` (0-based) is
+    ``min(base * 2**k, cap) * (1 + U[0, jitter))`` — capped exponential
+    with multiplicative jitter, the standard shape for not synchronizing
+    a fleet of retriers onto a struggling backend.
+    """
+
+    max_attempts: int = 3
+    request_timeout_s: float = 5.0   # per-attempt deadline (HTTP/subprocess)
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    jitter: float = 0.5              # fraction of the backoff, uniform
+
+    def backoff(self, attempt: int, rng: random.Random) -> float:
+        base = min(self.backoff_base_s * (2.0 ** attempt), self.backoff_cap_s)
+        if self.jitter <= 0.0:
+            return base
+        return base * (1.0 + rng.random() * self.jitter)
+
+
+class BreakerState(enum.Enum):
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker (closed -> open -> half-open).
+
+    Thread-safe; the clock is injectable so tests drive state transitions
+    without sleeping. ``allow()`` is the gate callers consult *before*
+    each attempt; ``record_success``/``record_failure`` feed it back.
+    """
+
+    def __init__(
+        self,
+        failure_threshold: int = 5,
+        reset_timeout_s: float = 30.0,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if failure_threshold <= 0:
+            raise ValueError("failure_threshold must be positive")
+        self.failure_threshold = failure_threshold
+        self.reset_timeout_s = reset_timeout_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._state = BreakerState.CLOSED
+        self._consecutive = 0
+        self._opened_at = 0.0
+        self._probe_in_flight = False
+        # telemetry
+        self.opened = 0          # times the breaker tripped open
+        self.fast_failures = 0   # calls rejected while open
+
+    @property
+    def state(self) -> BreakerState:
+        with self._lock:
+            return self._state
+
+    def allow(self) -> bool:
+        """May an attempt proceed right now? Half-open admits one probe."""
+        with self._lock:
+            if self._state is BreakerState.CLOSED:
+                return True
+            if self._state is BreakerState.OPEN:
+                if self._clock() - self._opened_at >= self.reset_timeout_s:
+                    self._state = BreakerState.HALF_OPEN
+                    self._probe_in_flight = True
+                    return True
+                self.fast_failures += 1
+                return False
+            # HALF_OPEN: exactly one probe at a time
+            if self._probe_in_flight:
+                self.fast_failures += 1
+                return False
+            self._probe_in_flight = True
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._state = BreakerState.CLOSED
+            self._consecutive = 0
+            self._probe_in_flight = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._consecutive += 1
+            if (
+                self._state is BreakerState.HALF_OPEN
+                or self._consecutive >= self.failure_threshold
+            ):
+                if self._state is not BreakerState.OPEN:
+                    self.opened += 1
+                self._state = BreakerState.OPEN
+                self._opened_at = self._clock()
+                self._probe_in_flight = False
+
+
+def run_with_retries(
+    fn: Callable[[], T],
+    policy: RetryPolicy,
+    *,
+    breaker: Optional[CircuitBreaker] = None,
+    rng: Optional[random.Random] = None,
+    sleep: Callable[[float], None] = time.sleep,
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+) -> T:
+    """Drive ``fn`` through the retry state machine.
+
+    Each attempt consults the breaker first (``VerifierUnavailable`` when
+    open — the caller decides fallback vs abort); failures back off per
+    ``policy`` and are reported to ``on_retry(attempt, exc)`` before the
+    next attempt. ``VerificationAbort`` passes straight through: it is a
+    terminal decision, not a failure to retry.
+    """
+    rng = rng or random.Random(0)
+    last: Optional[BaseException] = None
+    for attempt in range(max(1, policy.max_attempts)):
+        if breaker is not None and not breaker.allow():
+            raise VerifierUnavailable(
+                f"circuit breaker open (after {breaker.opened} trips)"
+            )
+        try:
+            out = fn()
+        except VerificationAbort:
+            raise
+        except Exception as exc:
+            if breaker is not None:
+                breaker.record_failure()
+            last = exc
+            if attempt + 1 < policy.max_attempts:
+                if on_retry is not None:
+                    on_retry(attempt, exc)
+                sleep(policy.backoff(attempt, rng))
+            continue
+        if breaker is not None:
+            breaker.record_success()
+        return out
+    raise VerifierError(
+        f"verifier failed after {policy.max_attempts} attempts: {last!r}"
+    ) from last
+
+
+class RetryingVerifier:
+    """Retry + breaker wrapper around any verifier.
+
+    Satisfies both scoring protocols (``score`` and ``score_trajectory``)
+    and delegates to whichever the inner verifier provides, so it can wrap
+    an ``FnVerifier``, an ``HttpVerifier``, or a fault-injected stack
+    transparently. Terminal failure raises ``VerifierError`` /
+    ``VerifierUnavailable`` for the hub's failure policy to resolve.
+    """
+
+    def __init__(
+        self,
+        inner,
+        policy: Optional[RetryPolicy] = None,
+        breaker: Optional[CircuitBreaker] = None,
+        *,
+        seed: int = 0,
+        sleep: Callable[[float], None] = time.sleep,
+        name: Optional[str] = None,
+    ):
+        self.inner = inner
+        self.policy = policy or RetryPolicy()
+        self.breaker = breaker
+        self.name = name or type(inner).__name__
+        self._rng = random.Random(seed)
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        # telemetry
+        self.calls = 0
+        self.retries = 0
+        self.failures = 0        # attempts that raised
+        self.exhausted = 0       # calls that ran out of attempts
+
+    def _drive(self, fn: Callable[[], float]) -> float:
+        with self._lock:
+            self.calls += 1
+
+        def note_retry(attempt: int, exc: BaseException) -> None:
+            with self._lock:
+                self.retries += 1
+                self.failures += 1
+
+        try:
+            return run_with_retries(
+                fn, self.policy, breaker=self.breaker, rng=self._rng,
+                sleep=self._sleep, on_retry=note_retry,
+            )
+        except VerificationAbort:
+            raise
+        except VerifierError:
+            with self._lock:
+                self.failures += 1
+                self.exhausted += 1
+            raise
+
+    def score(self, prompt_ids: List[int], response_ids: List[int]) -> float:
+        return self._drive(lambda: self.inner.score(prompt_ids, response_ids))
+
+    def score_trajectory(self, traj) -> float:
+        fn = getattr(self.inner, "score_trajectory", None)
+        if fn is None:
+            return self.score(list(traj.prompt), list(traj.response))
+        return self._drive(lambda: fn(traj))
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = {
+                "calls": self.calls,
+                "retries": self.retries,
+                "failures": self.failures,
+                "exhausted": self.exhausted,
+            }
+        if self.breaker is not None:
+            out["breaker_state"] = self.breaker.state.value
+            out["breaker_opened"] = self.breaker.opened
+            out["breaker_fast_failures"] = self.breaker.fast_failures
+        return out

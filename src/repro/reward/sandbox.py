@@ -1,0 +1,202 @@
+"""Subprocess-sandboxed code-execution verifier.
+
+Runs an *untrusted* scoring program in a separate, resource-limited
+Python subprocess and kills it on timeout — the sandbox every
+code-execution reward path needs before trajectories can carry
+model-written programs.
+
+Contract with the sandboxed program: it must define
+
+    def score(prompt_ids, response_ids):
+        return <float>
+
+The harness feeds ``{"program", "prompt_ids", "response_ids", "task"}``
+as JSON on stdin, executes the program in a bare namespace, calls its
+``score`` and prints ``{"score": s}`` as the *last* line of stdout (the
+program may print freely before that).
+
+Isolation, in decreasing order of hardness:
+
+* ``python -I`` (isolated mode): no user site-packages, no cwd on
+  ``sys.path``, environment-variable hooks ignored;
+* a scrubbed environment (only ``PATH``) — no proxy variables, tokens,
+  or credentials leak in;
+* ``resource.setrlimit`` in the child pre-exec hook: CPU seconds
+  (``RLIMIT_CPU``), address space (``RLIMIT_AS``), no core dumps;
+* own session (``setsid``) so a timeout kill takes the whole process
+  group, including anything the program spawned;
+* wall-clock timeout enforced by the parent: ``SIGKILL`` to the group,
+  then ``VerifierTimeout`` — the hub's failure policy decides fallback
+  vs ABORTED.
+
+"No network" is enforced by construction on the judge side (nothing is
+listening for it) and by the scrubbed environment; a true network
+namespace requires privileges this runtime does not assume — see
+``docs/architecture.md``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from typing import Callable, List, Optional
+
+from repro.reward.retry import VerifierError, VerifierTimeout
+
+_RUNNER = r"""
+import json, sys
+payload = json.loads(sys.stdin.read())
+ns = {}
+exec(compile(payload["program"], "<sandboxed-verifier>", "exec"), ns)
+fn = ns.get("score")
+if fn is None:
+    raise SystemExit("sandboxed program defines no score()")
+out = fn(payload["prompt_ids"], payload["response_ids"])
+print(json.dumps({"score": float(out)}))
+"""
+
+
+def _make_preexec(cpu_seconds: Optional[int], memory_bytes: Optional[int]):
+    """Child-side pre-exec hook: new session + rlimits (best effort)."""
+
+    def preexec() -> None:
+        os.setsid()
+        try:
+            import resource
+
+            if cpu_seconds is not None:
+                resource.setrlimit(
+                    resource.RLIMIT_CPU, (cpu_seconds, cpu_seconds + 1)
+                )
+            if memory_bytes is not None:
+                resource.setrlimit(
+                    resource.RLIMIT_AS, (memory_bytes, memory_bytes)
+                )
+            resource.setrlimit(resource.RLIMIT_CORE, (0, 0))
+        except Exception:
+            pass  # platform without resource limits: wall timeout still holds
+
+    return preexec
+
+
+class SandboxVerifier:
+    """Resource/time-limited subprocess verifier with kill-on-timeout."""
+
+    def __init__(
+        self,
+        program: str,
+        *,
+        timeout_s: float = 5.0,
+        cpu_seconds: Optional[int] = 5,
+        memory_bytes: Optional[int] = 512 * 1024 * 1024,
+        python: str = sys.executable,
+        name: str = "sandbox",
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.program = program
+        self.timeout_s = timeout_s
+        self.cpu_seconds = cpu_seconds
+        self.memory_bytes = memory_bytes
+        self.python = python
+        self.name = name
+        self._clock = clock
+        self._lock = threading.Lock()
+        # telemetry
+        self.calls = 0
+        self.kills = 0           # wall-timeout SIGKILLs
+        self.failures = 0        # nonzero exit / bad output / rlimit death
+        self.exec_time = 0.0
+
+    @classmethod
+    def from_spec(cls, spec: str, **kw) -> "SandboxVerifier":
+        """Build from a CLI spec: ``@path/to/program.py`` or inline source."""
+        if spec.startswith("@"):
+            with open(spec[1:], "r", encoding="utf-8") as f:
+                return cls(f.read(), **kw)
+        return cls(spec, **kw)
+
+    def score(self, prompt_ids: List[int], response_ids: List[int],
+              task: str = "") -> float:
+        with self._lock:
+            self.calls += 1
+        payload = json.dumps({
+            "program": self.program,
+            "prompt_ids": list(prompt_ids),
+            "response_ids": list(response_ids),
+            "task": task,
+        })
+        t0 = self._clock()
+        proc = subprocess.Popen(
+            [self.python, "-I", "-c", _RUNNER],
+            stdin=subprocess.PIPE,
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+            env={"PATH": os.environ.get("PATH", "/usr/bin:/bin")},
+            preexec_fn=_make_preexec(self.cpu_seconds, self.memory_bytes),
+            text=True,
+        )
+        try:
+            out, err = proc.communicate(payload, timeout=self.timeout_s)
+        except subprocess.TimeoutExpired:
+            self._kill(proc)
+            with self._lock:
+                self.kills += 1
+                self.failures += 1
+                self.exec_time += self._clock() - t0
+            raise VerifierTimeout(
+                f"sandboxed verifier exceeded {self.timeout_s}s wall "
+                f"clock; process group killed"
+            )
+        with self._lock:
+            self.exec_time += self._clock() - t0
+        if proc.returncode != 0:
+            with self._lock:
+                self.failures += 1
+            raise VerifierError(
+                f"sandboxed verifier exited {proc.returncode}: "
+                f"{(err or '').strip()[-200:]!r}"
+            )
+        # the score is the last stdout line; anything before is program noise
+        lines = [ln for ln in (out or "").splitlines() if ln.strip()]
+        try:
+            return float(json.loads(lines[-1])["score"])
+        except Exception as exc:
+            with self._lock:
+                self.failures += 1
+            raise VerifierError(
+                f"sandboxed verifier produced no score line: "
+                f"{(out or '').strip()[-200:]!r}"
+            ) from exc
+
+    def score_trajectory(self, traj) -> float:
+        return self.score(
+            list(traj.prompt), list(traj.response),
+            task=getattr(traj, "task", ""),
+        )
+
+    def _kill(self, proc: subprocess.Popen) -> None:
+        """SIGKILL the whole process group, then reap."""
+        try:
+            os.killpg(proc.pid, signal.SIGKILL)
+        except Exception:
+            try:
+                proc.kill()
+            except Exception:
+                pass
+        try:
+            proc.communicate(timeout=5.0)
+        except Exception:
+            pass
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "calls": self.calls,
+                "kills": self.kills,
+                "failures": self.failures,
+                "exec_time_s": self.exec_time,
+            }

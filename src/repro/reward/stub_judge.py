@@ -1,0 +1,153 @@
+"""Hermetic stub judge: a stdlib HTTP server speaking the remote-judge
+protocol on the loopback interface.
+
+This is the other end of :class:`repro.reward.http_verifier.HttpVerifier`
+for tests, benchmarks, the demo, and the ``reward-hub`` CI job — all of
+which must run with **no external network access**. It binds
+``127.0.0.1`` on an ephemeral port (never an external interface), serves
+from a daemon thread, and is fully scriptable:
+
+* ``score_fn(prompt_ids, response_ids, task)`` computes the verdict
+  (default: constant 1.0);
+* ``pending_polls=N`` makes each job answer ``pending`` N times before
+  ``done`` — exercises the poll loop and end-to-end deadline;
+* ``fail_first=N`` makes the first N submit requests return HTTP 500 —
+  exercises timeout→retry→success and breaker trips;
+* ``inline=True`` returns ``{"score": ...}`` straight from submit —
+  exercises the synchronous-judge path.
+
+Counters (``submits``, ``polls``, ``errors_served``) let tests assert the
+client actually retried/polled rather than silently short-circuiting.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, List, Optional
+
+
+class StubJudge:
+    """Scriptable submit-then-poll judge on ``127.0.0.1:<ephemeral>``."""
+
+    def __init__(
+        self,
+        score_fn: Optional[
+            Callable[[List[int], List[int], str], float]
+        ] = None,
+        *,
+        pending_polls: int = 0,
+        fail_first: int = 0,
+        inline: bool = False,
+    ):
+        self.score_fn = score_fn or (lambda p, r, task: 1.0)
+        self.pending_polls = pending_polls
+        self.inline = inline
+        self._lock = threading.Lock()
+        self._fail_remaining = fail_first
+        self._jobs: dict = {}       # job_id -> {"score": s, "polls": n}
+        self._next_job = 0
+        # telemetry
+        self.submits = 0
+        self.polls = 0
+        self.errors_served = 0
+
+        judge = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, fmt, *args):  # silence request log
+                pass
+
+            def _reply(self, code: int, body: dict) -> None:
+                data = json.dumps(body).encode("utf-8")
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+
+            def do_POST(self):
+                if self.path != "/submit":
+                    self._reply(404, {"error": "not found"})
+                    return
+                n = int(self.headers.get("Content-Length", 0))
+                payload = json.loads(self.rfile.read(n) or b"{}")
+                with judge._lock:
+                    judge.submits += 1
+                    if judge._fail_remaining > 0:
+                        judge._fail_remaining -= 1
+                        judge.errors_served += 1
+                        self._reply(500, {"error": "injected submit failure"})
+                        return
+                score = float(judge.score_fn(
+                    payload.get("prompt_ids", []),
+                    payload.get("response_ids", []),
+                    payload.get("task", ""),
+                ))
+                if judge.inline:
+                    self._reply(200, {"score": score})
+                    return
+                with judge._lock:
+                    job_id = f"job-{judge._next_job}"
+                    judge._next_job += 1
+                    judge._jobs[job_id] = {"score": score, "polls": 0}
+                self._reply(200, {"job_id": job_id})
+
+            def do_GET(self):
+                if not self.path.startswith("/result/"):
+                    self._reply(404, {"error": "not found"})
+                    return
+                job_id = self.path[len("/result/"):]
+                with judge._lock:
+                    judge.polls += 1
+                    job = judge._jobs.get(job_id)
+                    if job is None:
+                        self._reply(404, {"error": f"unknown job {job_id}"})
+                        return
+                    job["polls"] += 1
+                    if job["polls"] <= judge.pending_polls:
+                        self._reply(200, {"status": "pending"})
+                        return
+                    self._reply(
+                        200, {"status": "done", "score": job["score"]}
+                    )
+
+        # loopback only: hermetic by construction, no external egress
+        self._server = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+        self._server.daemon_threads = True
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def url(self) -> str:
+        host, port = self._server.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "StubJudge":
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="stub-judge", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "StubJudge":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "submits": self.submits,
+                "polls": self.polls,
+                "errors_served": self.errors_served,
+                "jobs": len(self._jobs),
+            }

@@ -28,6 +28,27 @@ class RuntimeConfig:
     snapshot_every: int = 1            # coordinator cycle cadence (ticks)
     decode_steps_per_tick: int = 4
     reward_fn: Optional[Callable] = None  # (prompt_ids, response_ids) -> float
+    # ---------------------------------------------------------- reward hub
+    # Explicit verifier override: any object with score(prompt, response)
+    # or score_trajectory(traj) — e.g. a fully-wired repro.reward.RewardHub
+    # or a FaultInjectingVerifier stack. Takes precedence over reward_fn
+    # and the flags below.
+    verifier: Optional[object] = None
+    # Build a RewardHub automatically: score_url registers an HttpVerifier
+    # (submit-then-poll remote judge) under the "remote" tag and makes it
+    # the default route; score_sandbox registers a SandboxVerifier
+    # (resource-limited subprocess; "@path.py" or inline source) under the
+    # "code" tag. The in-process RewardModel keeps the "math" tag (and the
+    # default route when no score_url).
+    score_url: Optional[str] = None
+    score_sandbox: Optional[str] = None
+    # Terminal verifier failure policy: "fallback" scores the trajectory
+    # reward_fallback_score and proceeds to REWARDED; "abort" releases the
+    # protocol entry and publishes clean ABORTED (group-wide) instead.
+    reward_on_failure: str = "fallback"
+    reward_fallback_score: float = 0.0
+    reward_timeout_s: float = 5.0      # per-request / sandbox wall deadline
+    reward_retries: int = 3            # bounded attempts per protocol step
     paged_kv: bool = False             # block-paged KV cache on the engines
     kv_block_size: int = 16            # tokens per KV block when paged
     # Prefix sharing (paged only): group members prefill their shared

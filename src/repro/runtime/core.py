@@ -202,8 +202,23 @@ class RuntimeCore:
         # retention, then protocol, then instance cleanup)
         self.ts.attach(self.lifecycle)
         self.retired = RetiredPayloadStore(self.lifecycle)
+        # ------------------------------------------------------ reward hub
+        # Verifier resolution: an explicit rcfg.verifier wins; score_url /
+        # score_sandbox auto-build a RewardHub around the in-process
+        # RewardModel; otherwise the RewardModel scores directly (seed
+        # behavior, bit-for-bit).
+        verifier = rcfg.verifier
+        if verifier is None and (rcfg.score_url or rcfg.score_sandbox):
+            verifier = self._build_reward_hub()
+        if verifier is None:
+            verifier = self.reward_model
+        from repro.reward.hub import RewardHub as _RewardHub
+
+        self.reward_hub: Optional[_RewardHub] = (
+            verifier if isinstance(verifier, _RewardHub) else None
+        )
         self.reward_server = RewardServer(
-            self.reward_model,
+            verifier,
             self.lifecycle,
             RewardServerConfig(
                 n_workers=rcfg.reward_workers,
@@ -214,6 +229,10 @@ class RuntimeCore:
             liveness=lambda t: self.ts.get(t.traj_id) is not None,
             metrics=self.metrics,
             tracer=self.tracer,
+            # terminal verification failure (hub on_failure="abort"):
+            # release the protocol entry + publish group-wide ABORTED.
+            # Deferred attribute lookup: the coordinator is built below.
+            on_abort=lambda traj: self.coordinator.abort_unverifiable(traj),
         )
         self.ps = ParameterServer()
         self.ps.push(self.params, 0)
@@ -307,6 +326,51 @@ class RuntimeCore:
         self._timers_lock = threading.Lock()
 
     # -------------------------------------------------------------- plumbing
+    def _build_reward_hub(self):
+        """Auto-wire a RewardHub from score_url / score_sandbox flags.
+
+        Routes: "math" -> in-process RewardModel; "code" -> sandboxed
+        subprocess verifier (when score_sandbox); "remote" -> HTTP
+        submit-then-poll judge (when score_url), which also becomes the
+        default route — otherwise the RewardModel keeps the default.
+        """
+        from repro.reward import (
+            DEFAULT_ROUTE,
+            CircuitBreaker,
+            HttpVerifier,
+            RetryPolicy,
+            RewardHub,
+            SandboxVerifier,
+        )
+
+        rcfg = self.rcfg
+        hub = RewardHub(
+            default=self.reward_model,
+            on_failure=rcfg.reward_on_failure,
+            fallback_score=rcfg.reward_fallback_score,
+            metrics=self.metrics,
+            tracer=self.tracer,
+        )
+        hub.register("math", self.reward_model)
+        if rcfg.score_sandbox:
+            hub.register("code", SandboxVerifier.from_spec(
+                rcfg.score_sandbox, timeout_s=rcfg.reward_timeout_s,
+            ))
+        if rcfg.score_url:
+            remote = HttpVerifier(
+                rcfg.score_url,
+                policy=RetryPolicy(
+                    max_attempts=max(1, rcfg.reward_retries),
+                    request_timeout_s=rcfg.reward_timeout_s,
+                ),
+                breaker=CircuitBreaker(),
+                total_timeout_s=rcfg.reward_timeout_s * 4,
+                seed=rcfg.seed,
+            )
+            hub.register("remote", remote)
+            hub.register(DEFAULT_ROUTE, remote)
+        return hub
+
     @property
     def _retired(self) -> Dict[int, Any]:
         """Back-compat view of the retired-payload store (tests/benchmarks
@@ -698,6 +762,24 @@ class RuntimeCore:
             if isinstance(v, bool):
                 continue
             m.gauge(f"reward_{name}").set(v)
+        if self.reward_hub is not None:
+            hs = self.reward_hub.stats()
+            m.counter("reward_hub_unrouted").set_total(hs["unrouted"])
+            for tag, rs in hs["routes"].items():
+                for k in ("calls", "failures", "fallbacks", "aborts"):
+                    m.counter(
+                        f"reward_route_{k}", route=tag
+                    ).set_total(rs[k])
+                inner = rs.get("inner") or {}
+                for k in ("retries", "timeouts", "kills"):
+                    if k in inner:
+                        m.counter(
+                            f"reward_route_{k}", route=tag
+                        ).set_total(inner[k])
+                if "breaker_state" in inner:
+                    m.gauge("reward_route_breaker_open", route=tag).set(
+                        0.0 if inner["breaker_state"] == "closed" else 1.0
+                    )
         for kind, n in self.lifecycle.counts.items():
             m.counter("lifecycle_events", kind=kind.name.lower()).set_total(n)
         m.gauge("model_version").set(self.model_version)

@@ -88,6 +88,12 @@ class SimConfig:
     # TrajectoryTracer on the sim's lifecycle bus, clocked in sim seconds
     observability: bool = False
     trace_path: Optional[str] = None
+    # reward-hub mirror (same semantics as RuntimeConfig.verifier): any
+    # score/score_trajectory object — a RewardHub, a FaultInjectingVerifier
+    # stack, ... — replaces the instant constant-1.0 verifier, and terminal
+    # verification failures (VerificationAbort) release the protocol entry
+    # through the coordinator exactly as the live runtime does
+    verifier: Optional[object] = None
 
 
 @dataclass
@@ -151,7 +157,14 @@ class StaleFlowSim:
         self.lifecycle = TrajectoryLifecycle()
         self.ts.attach(self.lifecycle)
         self.reward_server = RewardServer(
-            FnVerifier(lambda prompt, response: 1.0), self.lifecycle
+            cfg.verifier
+            if cfg.verifier is not None
+            else FnVerifier(lambda prompt, response: 1.0),
+            self.lifecycle,
+            # hub on_failure="abort" mirrors the live runtime: release the
+            # protocol entry + group-wide ABORTED (deferred: the
+            # coordinator is constructed just below)
+            on_abort=lambda traj: self.coordinator.abort_unverifiable(traj),
         )
         self.coordinator = RolloutCoordinator(
             self.manager, self.ts, cost_model=cm, cfg=cfg.strategy_cfg,

@@ -1,0 +1,875 @@
+"""Reward hub: remote/sandboxed verifiers with timeouts, retries & fault
+injection.
+
+Four layers, bottom up:
+
+* retry machinery — backoff shape, bounded attempts, circuit-breaker
+  state machine (injectable clock, no sleeping);
+* verifier clients — HTTP submit-then-poll against the hermetic
+  loopback :class:`StubJudge`, and the resource-limited subprocess
+  sandbox (kill-on-timeout);
+* the hub + RewardServer failure contract — every completion reaches
+  exactly one disposition (REWARDED, clean ABORTED, counted drop), no
+  worker thread dies, backpressure is real (satellites 3 & 4);
+* runtime acceptance — the threaded scheduler under seeded fault
+  injection: tracer span conservation, staleness <= eta, full worker
+  pool alive, and the faults demonstrably fired (the tentpole's
+  provability gate).
+
+Everything is hermetic: loopback HTTP + local subprocesses only.
+"""
+import time
+
+import pytest
+
+from repro.core import (
+    FnVerifier,
+    RewardServer,
+    RewardServerConfig,
+    TrajectoryLifecycle,
+)
+from repro.core.lifecycle import LifecycleEventKind
+from repro.core.types import Trajectory, next_traj_id, reset_traj_ids
+from repro.reward import (
+    BreakerState,
+    CircuitBreaker,
+    Fault,
+    FaultInjectingVerifier,
+    FaultSchedule,
+    HttpVerifier,
+    InjectedCrash,
+    RetryPolicy,
+    RetryingVerifier,
+    RewardHub,
+    SandboxVerifier,
+    StubJudge,
+    VerificationAbort,
+    VerifierError,
+    VerifierTimeout,
+    run_with_retries,
+)
+
+FAST = RetryPolicy(
+    max_attempts=3, request_timeout_s=2.0,
+    backoff_base_s=0.001, backoff_cap_s=0.01,
+)
+
+
+def mk_traj(task="", prompt=None, response=None, group_id=-1):
+    t = Trajectory(
+        traj_id=next_traj_id(), prompt=prompt or [1, 2],
+        group_id=group_id, task=task,
+    )
+    t.response = response or [3, 4]
+    return t
+
+
+# =========================================================== retry machinery
+class TestRetryPolicy:
+    def test_backoff_grows_exponentially_to_cap(self):
+        import random
+
+        p = RetryPolicy(backoff_base_s=0.1, backoff_cap_s=0.5, jitter=0.0)
+        rng = random.Random(0)
+        waits = [p.backoff(k, rng) for k in range(5)]
+        assert waits == [0.1, 0.2, 0.4, 0.5, 0.5]
+
+    def test_jitter_bounded_multiplicative(self):
+        import random
+
+        p = RetryPolicy(backoff_base_s=0.1, backoff_cap_s=10.0, jitter=0.5)
+        rng = random.Random(7)
+        for k in range(4):
+            w = p.backoff(k, rng)
+            base = 0.1 * 2 ** k
+            assert base <= w < base * 1.5
+
+    def test_succeeds_after_transient_failures(self):
+        calls = {"n": 0}
+        slept = []
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise VerifierError("transient")
+            return 42.0
+
+        retried = []
+        out = run_with_retries(
+            flaky, FAST, sleep=slept.append,
+            on_retry=lambda a, e: retried.append(a),
+        )
+        assert out == 42.0
+        assert calls["n"] == 3
+        assert len(slept) == 2 and retried == [0, 1]
+
+    def test_exhaustion_raises_with_cause(self):
+        def dead():
+            raise VerifierError("always")
+
+        with pytest.raises(VerifierError) as ei:
+            run_with_retries(dead, FAST, sleep=lambda s: None)
+        assert "3 attempts" in str(ei.value)
+        assert isinstance(ei.value.__cause__, VerifierError)
+
+    def test_verification_abort_passes_through_untried(self):
+        calls = {"n": 0}
+
+        def aborting():
+            calls["n"] += 1
+            raise VerificationAbort("code", 7)
+
+        with pytest.raises(VerificationAbort):
+            run_with_retries(aborting, FAST, sleep=lambda s: None)
+        assert calls["n"] == 1  # terminal decision: never retried
+
+
+class TestCircuitBreaker:
+    def test_opens_after_threshold_then_half_open_probe(self):
+        clock = {"t": 0.0}
+        b = CircuitBreaker(
+            failure_threshold=3, reset_timeout_s=10.0,
+            clock=lambda: clock["t"],
+        )
+        for _ in range(3):
+            assert b.allow()
+            b.record_failure()
+        assert b.state is BreakerState.OPEN
+        assert not b.allow() and b.fast_failures == 1
+
+        clock["t"] = 11.0  # past the reset timeout: half-open
+        assert b.allow()
+        assert b.state is BreakerState.HALF_OPEN
+        assert not b.allow()  # single probe at a time
+        b.record_success()
+        assert b.state is BreakerState.CLOSED
+        assert b.allow()
+
+    def test_half_open_probe_failure_reopens(self):
+        clock = {"t": 0.0}
+        b = CircuitBreaker(2, 5.0, clock=lambda: clock["t"])
+        b.record_failure(), b.record_failure()
+        assert b.state is BreakerState.OPEN
+        clock["t"] = 6.0
+        assert b.allow()
+        b.record_failure()  # probe failed
+        assert b.state is BreakerState.OPEN
+        assert not b.allow()  # re-opened with a fresh timeout
+        assert b.opened == 2
+
+    def test_open_breaker_fails_fast_in_retry_loop(self):
+        b = CircuitBreaker(1, 1000.0)
+        b.record_failure()
+        calls = {"n": 0}
+
+        def fn():
+            calls["n"] += 1
+            return 1.0
+
+        from repro.reward import VerifierUnavailable
+
+        with pytest.raises(VerifierUnavailable):
+            run_with_retries(fn, FAST, breaker=b, sleep=lambda s: None)
+        assert calls["n"] == 0  # backend never touched
+
+
+class TestRetryingVerifier:
+    def test_absorbs_transients_and_counts(self):
+        calls = {"n": 0}
+
+        def fn(p, r):
+            calls["n"] += 1
+            if calls["n"] % 2 == 1:
+                raise ValueError("flaky")
+            return 1.0
+
+        v = RetryingVerifier(FnVerifier(fn), FAST, sleep=lambda s: None)
+        assert v.score([1], [2]) == 1.0
+        assert v.score([1], [2]) == 1.0
+        s = v.stats()
+        assert s["calls"] == 2 and s["retries"] == 2 and s["exhausted"] == 0
+
+    def test_exhaustion_counted_and_raised(self):
+        def fn(p, r):
+            raise ValueError("dead verifier")
+
+        v = RetryingVerifier(FnVerifier(fn), FAST, sleep=lambda s: None)
+        with pytest.raises(VerifierError):
+            v.score([1], [2])
+        assert v.stats()["exhausted"] == 1
+
+
+# ====================================================== HTTP verifier client
+class TestHttpVerifier:
+    def test_submit_then_poll_happy_path(self):
+        with StubJudge(score_fn=lambda p, r, task: float(sum(r)),
+                       pending_polls=2) as judge:
+            v = HttpVerifier(judge.url, policy=FAST, total_timeout_s=10.0,
+                             poll_interval_s=0.001)
+            assert v.score([1], [2, 3]) == 5.0
+        # 1 submit + 2 pending polls + 1 done poll
+        assert judge.submits == 1 and judge.polls == 3
+        assert v.requests == 4 and v.retries == 0
+
+    def test_inline_judge_short_circuits_polling(self):
+        with StubJudge(inline=True) as judge:
+            v = HttpVerifier(judge.url, policy=FAST)
+            assert v.score([1], [2]) == 1.0
+        assert judge.polls == 0
+
+    def test_retries_through_injected_500s(self):
+        with StubJudge(fail_first=2, inline=True) as judge:
+            v = HttpVerifier(judge.url, policy=FAST)
+            assert v.score([1], [2]) == 1.0
+        assert v.retries == 2 and judge.errors_served == 2
+
+    def test_end_to_end_deadline_raises_timeout(self):
+        with StubJudge(pending_polls=10_000) as judge:
+            v = HttpVerifier(judge.url, policy=FAST, total_timeout_s=0.05,
+                             poll_interval_s=0.001)
+            with pytest.raises(VerifierTimeout):
+                v.score([1], [2])
+        assert v.timeouts == 1 and v.failures == 1
+
+    def test_unreachable_judge_exhausts_attempts(self):
+        judge = StubJudge()  # bound but never started, then closed:
+        url = judge.url      # connection refused on every request
+        judge._server.server_close()
+        v = HttpVerifier(
+            url,
+            policy=RetryPolicy(max_attempts=2, request_timeout_s=0.2,
+                               backoff_base_s=0.001, backoff_cap_s=0.005),
+        )
+        with pytest.raises(VerifierError):
+            v.score([1], [2])
+        assert v.requests == 2 and v.failures == 1
+
+    def test_score_trajectory_carries_task_tag(self):
+        seen = {}
+
+        def score_fn(p, r, task):
+            seen["task"] = task
+            return 1.0
+
+        with StubJudge(score_fn=score_fn, inline=True) as judge:
+            v = HttpVerifier(judge.url, policy=FAST)
+            v.score_trajectory(mk_traj(task="code"))
+        assert seen["task"] == "code"
+
+
+# =========================================================== sandbox verifier
+class TestSandboxVerifier:
+    def test_scores_inline_program(self):
+        v = SandboxVerifier(
+            "def score(p, r):\n    return float(len(p) + len(r))",
+            timeout_s=10.0,
+        )
+        assert v.score([1, 2], [3]) == 3.0
+        assert v.stats()["calls"] == 1 and v.stats()["failures"] == 0
+
+    def test_from_spec_reads_program_file(self, tmp_path):
+        prog = tmp_path / "scorer.py"
+        prog.write_text("def score(p, r):\n    return 0.25")
+        v = SandboxVerifier.from_spec(f"@{prog}", timeout_s=10.0)
+        assert v.score([1], [2]) == 0.25
+
+    def test_stdout_noise_before_score_line_is_tolerated(self):
+        v = SandboxVerifier(
+            "print('debug noise')\n"
+            "def score(p, r):\n"
+            "    print('more noise')\n"
+            "    return 1.0",
+            timeout_s=10.0,
+        )
+        assert v.score([1], [2]) == 1.0
+
+    def test_hung_program_is_killed_at_wall_deadline(self):
+        v = SandboxVerifier(
+            "import time\n"
+            "def score(p, r):\n"
+            "    time.sleep(3600)",
+            timeout_s=0.5,
+        )
+        t0 = time.perf_counter()
+        with pytest.raises(VerifierTimeout):
+            v.score([1], [2])
+        assert time.perf_counter() - t0 < 10.0  # killed, not waited out
+        assert v.kills == 1 and v.failures == 1
+
+    def test_program_without_score_fn_is_an_error(self):
+        v = SandboxVerifier("x = 1", timeout_s=10.0)
+        with pytest.raises(VerifierError):
+            v.score([1], [2])
+        assert v.failures == 1
+
+    def test_crashing_program_is_an_error_not_a_hang(self):
+        v = SandboxVerifier(
+            "def score(p, r):\n    raise RuntimeError('boom')",
+            timeout_s=10.0,
+        )
+        with pytest.raises(VerifierError) as ei:
+            v.score([1], [2])
+        assert "boom" in str(ei.value)
+
+    def test_environment_is_scrubbed(self):
+        import os
+
+        os.environ["REWARD_HUB_SECRET_CANARY"] = "leak"
+        try:
+            v = SandboxVerifier(
+                "import os\n"
+                "def score(p, r):\n"
+                "    return 1.0 if 'REWARD_HUB_SECRET_CANARY' in os.environ"
+                " else 0.0",
+                timeout_s=10.0,
+            )
+            assert v.score([1], [2]) == 0.0
+        finally:
+            del os.environ["REWARD_HUB_SECRET_CANARY"]
+
+
+# ============================================================ fault injection
+class TestFaultSchedule:
+    def test_explicit_sequence_then_ok(self):
+        s = FaultSchedule(["error", "drop", "ok"])
+        assert [s.at(i).kind for i in range(5)] == \
+            ["error", "drop", "ok", "ok", "ok"]
+
+    def test_explicit_cycle(self):
+        s = FaultSchedule(["ok", "crash"], cycle=True)
+        assert [s.at(i).kind for i in range(4)] == \
+            ["ok", "crash", "ok", "crash"]
+
+    def test_seeded_rates_are_order_independent(self):
+        a = FaultSchedule(seed=9, error_rate=0.3, drop_rate=0.2)
+        b = FaultSchedule(seed=9, error_rate=0.3, drop_rate=0.2)
+        idx = list(range(200))
+        import random as _r
+
+        _r.Random(1).shuffle(idx)
+        got_a = {i: a.at(i).kind for i in range(200)}
+        got_b = {i: b.at(i).kind for i in idx}  # different visit order
+        assert got_a == got_b
+        kinds = set(got_a.values())
+        assert "error" in kinds and "ok" in kinds  # rates actually draw
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            Fault("meltdown")
+
+
+class TestFaultInjectingVerifier:
+    def test_each_kind_maps_to_its_exception(self):
+        inner = FnVerifier(lambda p, r: 1.0)
+        v = FaultInjectingVerifier(
+            inner,
+            FaultSchedule(["ok", "error", "crash", "drop", Fault("delay",
+                                                                 0.001)]),
+            drop_hang_s=0.0, sleep=lambda s: None,
+        )
+        assert v.score([1], [2]) == 1.0
+        with pytest.raises(VerifierError):
+            v.score([1], [2])
+        with pytest.raises(InjectedCrash):
+            v.score([1], [2])
+        with pytest.raises(VerifierTimeout):
+            v.score([1], [2])
+        assert v.score([1], [2]) == 1.0  # delay then pass through
+        assert v.counts == {"ok": 1, "error": 1, "crash": 1, "drop": 1,
+                            "delay": 1}
+        assert v.injected() == 4
+
+
+# ==================================================================== the hub
+class TestRewardHub:
+    def test_routes_by_task_tag_with_default(self):
+        hub = RewardHub(default=FnVerifier(lambda p, r: 0.0))
+        hub.register("math", FnVerifier(lambda p, r: 1.0))
+        hub.register("code", FnVerifier(lambda p, r: 2.0))
+        assert hub.score_trajectory(mk_traj(task="math")) == 1.0
+        assert hub.score_trajectory(mk_traj(task="code")) == 2.0
+        assert hub.score_trajectory(mk_traj(task="prose")) == 0.0  # default
+        assert hub.score([1], [2]) == 0.0  # bare protocol -> default
+        routes = hub.stats()["routes"]
+        assert routes["math"]["calls"] == 1
+        assert routes["default"]["calls"] == 2
+
+    def test_unrouted_without_default_resolves_to_fallback(self):
+        hub = RewardHub(on_failure="fallback", fallback_score=-3.0)
+        hub.register("math", FnVerifier(lambda p, r: 1.0))
+        assert hub.score_trajectory(mk_traj(task="unknown")) == -3.0
+        assert hub.stats()["unrouted"] == 1
+
+    def test_verifier_failure_resolves_to_fallback_score(self):
+        def boom(p, r):
+            raise RuntimeError("verifier down")
+
+        hub = RewardHub(default=FnVerifier(boom), fallback_score=0.5)
+        assert hub.score_trajectory(mk_traj()) == 0.5
+        route = hub.stats()["routes"]["default"]
+        assert route["failures"] == 1 and route["fallbacks"] == 1
+
+    def test_abort_mode_raises_verification_abort_with_context(self):
+        def boom(p, r):
+            raise RuntimeError("verifier down")
+
+        hub = RewardHub(on_failure="abort")
+        hub.register("code", FnVerifier(boom))
+        t = mk_traj(task="code")
+        with pytest.raises(VerificationAbort) as ei:
+            hub.score_trajectory(t)
+        assert ei.value.tag == "code" and ei.value.traj_id == t.traj_id
+        assert isinstance(ei.value.cause, RuntimeError)
+        assert hub.stats()["routes"]["code"]["aborts"] == 1
+
+    def test_invalid_failure_policy_rejected(self):
+        with pytest.raises(ValueError):
+            RewardHub(on_failure="shrug")
+
+    def test_per_route_metrics_labeled(self):
+        from repro.obs import MetricsRegistry
+
+        m = MetricsRegistry()
+        hub = RewardHub(default=FnVerifier(lambda p, r: 1.0), metrics=m)
+        hub.register("math", FnVerifier(lambda p, r: 1.0))
+        hub.score_trajectory(mk_traj(task="math"))
+        hub.score_trajectory(mk_traj())
+        snap = m.snapshot()
+        names = set(snap)
+        assert any("reward_hub_scores" in n and "math" in n for n in names)
+        assert any("reward_hub_scores" in n and "default" in n
+                   for n in names)
+
+
+# ======================================= RewardServer failure contract (sat 3)
+class TestRewardServerFailureContract:
+    def _server(self, verifier, **cfg_kw):
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            verifier, lifecycle, RewardServerConfig(**cfg_kw)
+        )
+        return lifecycle, server
+
+    def test_worker_survives_verifier_crash(self):
+        """Regression (satellite 3): an exception escaping the verifier
+        in a threaded worker used to kill the thread silently — the pool
+        shrank for the rest of the run. Now it scores 0.0 and lives."""
+        crash_then_ok = FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(["crash", "crash", "ok", "ok"]),
+        )
+        lifecycle, server = self._server(crash_then_ok, n_workers=2)
+        server.start()
+        for _ in range(4):
+            lifecycle.completed(mk_traj())
+        assert server.drain(timeout=30.0)
+        assert server.alive_workers() == 2  # nobody died
+        assert server.scored == 4  # crashes scored 0.0, not lost
+        assert server.errors == 2
+        server.stop()
+
+    def test_rewarded_subscriber_crash_counted_not_fatal(self):
+        lifecycle, server = self._server(
+            FnVerifier(lambda p, r: 1.0), n_workers=1
+        )
+
+        def bad_subscriber(e):
+            raise RuntimeError("downstream bug")
+
+        lifecycle.subscribe(LifecycleEventKind.REWARDED, bad_subscriber)
+        server.start()
+        for _ in range(3):
+            lifecycle.completed(mk_traj())
+        assert server.drain(timeout=30.0)
+        assert server.alive_workers() == 1
+        assert server.worker_errors == 3
+        server.stop()
+
+    def test_verification_abort_publishes_aborted_not_rewarded(self):
+        hub = RewardHub(on_failure="abort")
+        hub.register("", FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(["error", "ok"]),
+        ))
+        seen = {"rewarded": [], "aborted": []}
+        lifecycle = TrajectoryLifecycle()
+        lifecycle.subscribe(
+            LifecycleEventKind.REWARDED,
+            lambda e: seen["rewarded"].append(e.traj_id),
+        )
+        lifecycle.subscribe(
+            LifecycleEventKind.ABORTED,
+            lambda e: seen["aborted"].append(e.traj_id),
+        )
+        server = RewardServer(hub, lifecycle, RewardServerConfig())
+        t_bad, t_ok = mk_traj(), mk_traj()
+        lifecycle.completed(t_bad)   # inner raises -> hub aborts
+        lifecycle.completed(t_ok)
+        assert seen["aborted"] == [t_bad.traj_id]
+        assert seen["rewarded"] == [t_ok.traj_id]
+        assert server.aborted == 1 and server.scored == 1
+        assert server.drain(timeout=1.0)  # dispositions add up
+
+    def test_on_abort_hook_receives_the_trajectory(self):
+        hub = RewardHub(on_failure="abort")
+        hub.register("", FnVerifier(
+            lambda p, r: (_ for _ in ()).throw(RuntimeError("down"))
+        ))
+        got = []
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            hub, lifecycle, RewardServerConfig(), on_abort=got.append
+        )
+        t = mk_traj()
+        lifecycle.completed(t)
+        assert got == [t]
+        assert server.aborted == 1
+
+    def test_raising_liveness_probe_drops_and_counts(self):
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            FnVerifier(lambda p, r: 1.0), lifecycle, RewardServerConfig(),
+            liveness=lambda t: (_ for _ in ()).throw(KeyError("probe bug")),
+        )
+        lifecycle.completed(mk_traj())
+        assert server.dropped == 1 and server.worker_errors == 1
+        assert server.scored == 0
+
+    def test_worker_error_metric_mirrors_counter(self):
+        from repro.obs import MetricsRegistry
+
+        m = MetricsRegistry()
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            FnVerifier(lambda p, r: 1.0), lifecycle, RewardServerConfig(),
+            metrics=m,
+        )
+        lifecycle.subscribe(
+            LifecycleEventKind.REWARDED,
+            lambda e: (_ for _ in ()).throw(RuntimeError("bug")),
+        )
+        lifecycle.completed(mk_traj())
+        assert server.worker_errors == 1
+        snap = m.snapshot()
+        (name,) = [n for n in snap if "reward_worker_errors" in n]
+        assert snap[name]["value"] == 1
+
+
+# ====================================== RewardServer backpressure (satellite 4)
+class TestRewardServerBackpressure:
+    def test_full_queue_blocks_submitter_and_drains(self):
+        """Bounded queue + slow verifier: the submitting thread observably
+        back-pressures (the paper's rollout-cannot-outrun-verification
+        property), then everything drains and latency percentiles are
+        sane."""
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            FnVerifier(lambda p, r: 1.0), lifecycle,
+            RewardServerConfig(
+                n_workers=1, queue_capacity=2, simulated_latency=0.02
+            ),
+        )
+        server.start()
+        n = 10
+        t0 = time.perf_counter()
+        for _ in range(n):
+            lifecycle.completed(mk_traj())  # blocks when the queue is full
+        submit_wall = time.perf_counter() - t0
+        # 10 submissions through a capacity-2 queue behind one 20ms-per-
+        # score worker: the submitter must have waited for most of the
+        # scoring time, not returned instantly
+        assert submit_wall > 0.02 * (n - 4), \
+            f"no backpressure: {n} submits took {submit_wall:.3f}s"
+        assert server.queue_depth() <= 2
+
+        assert server.drain(timeout=30.0)
+        server.stop()
+        assert server.scored == n and server.dropped == 0
+        pct = server.latency_percentiles((0.5, 0.95))
+        assert pct[0.5] is not None and pct[0.95] is not None
+        assert 0.0 < pct[0.5] <= pct[0.95]
+
+    def test_liveness_gate_drops_dead_work_while_queued(self):
+        alive = set()
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            FnVerifier(lambda p, r: 1.0), lifecycle,
+            RewardServerConfig(n_workers=1),
+            liveness=lambda t: t.traj_id in alive,
+        )
+        t_live, t_dead = mk_traj(), mk_traj()
+        alive.add(t_live.traj_id)
+        server.start()
+        lifecycle.completed(t_live)
+        lifecycle.completed(t_dead)  # aborted while queued: never scored
+        assert server.drain(timeout=10.0)
+        server.stop()
+        assert server.scored == 1 and server.dropped == 1
+
+    def test_stop_without_drain_drops_queued_work(self):
+        lifecycle = TrajectoryLifecycle()
+        server = RewardServer(
+            FnVerifier(lambda p, r: 1.0), lifecycle,
+            RewardServerConfig(n_workers=1, simulated_latency=0.05),
+        )
+        server.start()
+        for _ in range(4):
+            lifecycle.completed(mk_traj())
+        server.stop(drain=False)
+        stats = server.stats()
+        assert stats["scored"] + stats["dropped"] == stats["submitted"]
+        # post-stop completions are dropped, not scored into torn-down state
+        lifecycle.completed(mk_traj())
+        assert server.stats()["dropped"] >= 1
+
+
+# ================================================= runtime integration (slow)
+@pytest.fixture
+def runtime_factory():
+    from repro.configs import get_arch
+    from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
+
+    arch = get_arch("qwen2-1.5b").reduced()
+
+    def mk(**kw):
+        reset_traj_ids()
+        defaults = dict(
+            eta=1, batch_size=2, group_size=2, n_instances=2, max_slots=2,
+            max_len=48, max_new_tokens=8, total_steps=2, seed=0,
+        )
+        defaults.update(kw)
+        return AsyncRLRuntime(arch, RuntimeConfig(**defaults))
+
+    return mk
+
+
+class TestRuntimeIntegration:
+    def test_score_url_builds_hub_and_scrapes_route_metrics(
+        self, runtime_factory
+    ):
+        with StubJudge(inline=True) as judge:
+            rt = runtime_factory(score_url=judge.url, observability=True)
+            assert rt.reward_hub is not None
+            assert set(rt.reward_hub.tags()) >= {"", "math", "remote"}
+            rt.run(max_ticks=3000)
+            assert rt.model_version == 2
+            assert judge.submits > 0  # completions really crossed HTTP
+            rt.scrape_metrics()
+        names = set(rt.metrics.snapshot())
+        assert any("reward_route_calls" in n for n in names)
+        assert any("reward_route_breaker_open" in n for n in names)
+
+    def test_score_sandbox_routes_code_tag(self, runtime_factory):
+        rt = runtime_factory(
+            score_sandbox="def score(p, r):\n    return 1.0",
+        )
+        assert rt.reward_hub is not None
+        assert "code" in rt.reward_hub.tags()
+        # default route stays the in-process RewardModel (no score_url)
+        route = rt.reward_hub.route_for("anything-else")
+        assert type(route.verifier).__name__ == "RewardModel"
+
+    def test_explicit_verifier_override_wins(self, runtime_factory):
+        flat = FnVerifier(lambda p, r: 1.0)
+        rt = runtime_factory(verifier=flat)
+        assert rt.reward_server.verifier is flat
+        rt.run(max_ticks=3000)
+        assert rt.model_version == 2
+        h = rt.history
+        assert all(rec.mean_reward == 1.0 for rec in h)
+
+    def test_tick_abort_mode_releases_groups(self, runtime_factory):
+        """Cooperative scheduler + hub in abort mode: an unverifiable
+        trajectory aborts its whole group, the protocol entry is released
+        (no stuck Reserved entry), and training still completes on the
+        surviving groups."""
+        faulty = FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(seed=5, error_rate=0.15),
+        )
+        hub = RewardHub(default=faulty, on_failure="abort")
+        rt = runtime_factory(verifier=hub, total_steps=2)
+        rt.run(max_ticks=20000)
+        assert rt.model_version == 2
+        assert rt.reward_server.aborted > 0, \
+            "no aborts fired: the test proved nothing"
+        rt.manager.check_invariants()
+        assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+
+
+class TestThreadedFaultAcceptance:
+    """The tentpole's acceptance gate: seeded fault injection under the
+    threaded scheduler with staleness <= eta."""
+
+    def test_threaded_fallback_under_faults(self, runtime_factory):
+        faulty = FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(seed=11, error_rate=0.15, crash_rate=0.1,
+                          delay_rate=0.2, delay_s=0.002),
+        )
+        hub = RewardHub(default=faulty, on_failure="fallback",
+                        fallback_score=0.0)
+        rt = runtime_factory(
+            verifier=hub, scheduler="threaded", total_steps=2,
+            observability=True, reward_workers=2,
+        )
+        rt.scheduler.wall_timeout_s = 240.0
+        # sample the pool from inside REWARDED dispatch (worker threads):
+        # a silently-died sibling would show up as a shrunken count
+        alive = []
+        rt.lifecycle.subscribe(
+            LifecycleEventKind.REWARDED,
+            lambda e: alive.append(rt.reward_server.alive_workers()),
+        )
+        rt.run()
+        assert rt.model_version == 2
+        # every ROUTED span closed with exactly one terminal event
+        violations = rt.tracer.check_conservation(allow_open=True)
+        assert violations == [], violations
+        # staleness bound held on everything consumed
+        assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+        assert rt.tracer.realized_max_staleness() <= rt.rcfg.eta
+        rt.manager.check_invariants()
+        # the worker pool survived every injected crash
+        assert alive and min(alive) == rt.rcfg.reward_workers
+        stats = rt.reward_server.stats()
+        assert stats["scored"] + stats["dropped"] + stats["aborted"] \
+            == stats["submitted"]
+        # and the faults demonstrably fired
+        assert faulty.injected() > 0
+
+    @pytest.mark.slow
+    def test_threaded_abort_mode_under_faults(self, runtime_factory):
+        faulty = FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(seed=3, error_rate=0.3),
+        )
+        hub = RewardHub(default=faulty, on_failure="abort")
+        rt = runtime_factory(
+            verifier=hub, scheduler="threaded", total_steps=2, eta=2,
+            observability=True,
+        )
+        rt.scheduler.wall_timeout_s = 240.0
+        alive = []
+        rt.lifecycle.subscribe(
+            LifecycleEventKind.REWARDED,
+            lambda e: alive.append(rt.reward_server.alive_workers()),
+        )
+        rt.run()
+        assert rt.model_version == 2
+        violations = rt.tracer.check_conservation(allow_open=True)
+        assert violations == [], violations
+        assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+        rt.manager.check_invariants()
+        assert alive and min(alive) == rt.rcfg.reward_workers
+        stats = rt.reward_server.stats()
+        assert stats["scored"] + stats["dropped"] + stats["aborted"] \
+            == stats["submitted"]
+        assert faulty.injected() > 0
+        assert stats["aborted"] > 0  # the abort path actually ran
+
+    @pytest.mark.slow
+    def test_threaded_remote_judge_end_to_end(self, runtime_factory):
+        """Completions cross real loopback HTTP from reward workers while
+        instances decode: the disaggregated reward phase with an external
+        judge, end to end."""
+        with StubJudge(score_fn=lambda p, r, task: 1.0,
+                       inline=True) as judge:
+            rt = runtime_factory(
+                score_url=judge.url, scheduler="threaded", total_steps=2,
+                observability=True,
+            )
+            rt.scheduler.wall_timeout_s = 240.0
+            alive = []
+            rt.lifecycle.subscribe(
+                LifecycleEventKind.REWARDED,
+                lambda e: alive.append(rt.reward_server.alive_workers()),
+            )
+            rt.run()
+            assert rt.model_version == 2
+            assert judge.submits >= 2 * 2 * 2  # steps x batch x group
+        assert rt.tracer.check_conservation(allow_open=True) == []
+        assert rt.manager.max_consumed_staleness() <= rt.rcfg.eta
+        assert alive and min(alive) == rt.rcfg.reward_workers
+
+
+# ================================================================= sim mirror
+class TestSimVerifierMirror:
+    def test_sim_accepts_custom_verifier(self):
+        """SimConfig.verifier mirrors RuntimeConfig.verifier: the
+        discrete-event simulator scores through the injected verifier
+        (hub, fault stack, ...) instead of the constant 1.0."""
+        from repro.sim.engine import SimConfig, StaleFlowSim
+
+        reset_traj_ids()
+        calls = {"n": 0}
+
+        def counting(p, r):
+            calls["n"] += 1
+            return 0.5
+
+        cfg = SimConfig(
+            n_instances=2, batch_size=4, group_size=2, eta=1,
+            total_steps=2, response_mean=500, response_sigma=1.0,
+            response_cap=2000, dt=0.5, prompt_len=128,
+            train_fixed=5.0, train_per_token=2e-5,
+            verifier=FnVerifier(counting),
+        )
+        r = StaleFlowSim(cfg).run()
+        assert r.steps == 2
+        assert calls["n"] >= 2 * 4 * 2  # steps x batch x group
+
+    def test_sim_fallback_hub_keeps_protocol_flowing(self):
+        from repro.sim.engine import SimConfig, StaleFlowSim
+
+        reset_traj_ids()
+        faulty = FaultInjectingVerifier(
+            FnVerifier(lambda p, r: 1.0),
+            FaultSchedule(seed=2, error_rate=0.2),
+        )
+        hub = RewardHub(default=faulty, on_failure="fallback",
+                        fallback_score=0.0)
+        cfg = SimConfig(
+            n_instances=2, batch_size=4, group_size=2, eta=1,
+            total_steps=2, response_mean=500, response_sigma=1.0,
+            response_cap=2000, dt=0.5, prompt_len=128,
+            train_fixed=5.0, train_per_token=2e-5, verifier=hub,
+        )
+        r = StaleFlowSim(cfg).run()
+        assert r.steps == 2
+        assert faulty.injected() > 0
+        assert hub.stats()["routes"]["default"]["fallbacks"] > 0
+
+
+# ============================================================= tagged prompts
+class TestTaggedPrompts:
+    def test_trajectory_server_accepts_tagged_source(self):
+        from repro.core.trajectory_server import TrajectoryServer
+        from repro.data.tasks import ArithmeticDataset
+
+        reset_traj_ids()
+        ds = ArithmeticDataset(8, seed=1)
+        ts = TrajectoryServer(
+            ds.tagged_source(["math", "code"], seed=2),
+            capacity_groups=8, group_size=2,
+        )
+        ts.refill()
+        trajs = list(ts.registry.values())
+        assert len(trajs) == 16
+        tags = {t.task for t in trajs}
+        assert tags == {"math", "code"}
+        # every member of a group shares its prompt's tag
+        for g in ts.groups.values():
+            member_tags = {ts.get(tid).task for tid in g.traj_ids}
+            assert len(member_tags) == 1
+
+    def test_plain_source_still_works_untagged(self):
+        from repro.core.trajectory_server import TrajectoryServer
+        from repro.data.tasks import ArithmeticDataset
+
+        reset_traj_ids()
+        ds = ArithmeticDataset(4, seed=1)
+        ts = TrajectoryServer(ds.prompt_source(), capacity_groups=4)
+        ts.refill()
+        assert len(ts.registry) == 4
+        assert all(t.task == "" for t in ts.registry.values())
