@@ -1,0 +1,19 @@
+"""Concurrency correctness tooling.
+
+Two complementary halves, both stdlib-only (importable without jax):
+
+* :mod:`repro.analysis.lint` — AST-based static lint (``python -m
+  repro.analysis.lint``) enforcing the project's lock discipline
+  (RPL001–RPL005) with precise ``file:line`` diagnostics,
+  ``# repro: allow[RPLxxx] reason=...`` suppressions, and a committed
+  clean baseline.
+* :mod:`repro.analysis.witness` — opt-in runtime lock-order witness:
+  ``TrackedLock``/``TrackedRLock`` drop-ins that record per-thread
+  held-sets, build a global acquisition graph, and report lock-order
+  cycles and emit-under-lock events with offending stacks.
+
+The shared declared partial order lives in
+:mod:`repro.analysis.lock_order`.
+"""
+
+from repro.analysis import lock_order, witness  # noqa: F401

@@ -1,0 +1,786 @@
+"""AST-based lock-discipline lint (``python -m repro.analysis.lint``).
+
+Project-specific rules, each born from a real bug:
+
+* **RPL001** — no lifecycle ``emit()``/``publish`` (or any shorthand:
+  ``routed``/``interrupted``/``completed``/``rewarded``/``consumed``/
+  ``aborted``) reachable — directly or through a same-module call chain
+  — while a ``with <lock>:`` block is open, unless every held lock is
+  in the emit-safe coordinator prefix (:data:`lock_order.EMIT_SAFE`).
+  Prevents the PR 5 deadlock: REWARDED dispatched under a bus lock vs
+  INTERRUPTED emitted under the coordinator lock.
+* **RPL002** — lock acquisitions must respect the declared partial
+  order in :mod:`repro.analysis.lock_order` (coordinator → instances →
+  instance → domain → event plane → leaves; condition locks are
+  leaves). Re-acquiring a non-reentrant lock in the same lexical scope
+  is a self-deadlock and is also flagged.
+* **RPL003** — concurrency hygiene in multi-role modules (modules whose
+  state is touched by ≥ 2 thread roles, see
+  :data:`lock_order.MODULE_ROLES` or a ``# repro: roles=a,b``
+  directive): (a) no bare ``threading.Lock()``/``RLock()``/
+  ``Condition()`` attribute — use the witness-aware factory
+  ``make_lock(name)`` so the lock joins the declared order; (b) a
+  container attribute of a lock-owning class that is mutated from ≥ 2
+  methods must be mutated under a lock at every site (methods named
+  ``*_locked`` are exempt — their callers hold the lock). Catches the
+  PR 7 shape: ``ThreadedScheduler.busy`` written from three loop
+  threads without ``_busy_lock``.
+* **RPL004** — no wall-clock (``time.time``/``time_ns``,
+  ``datetime.now``), no unseeded ``random.*`` module calls, no unkeyed
+  ``jax.random.*`` in seed-deterministic modules
+  (:data:`lock_order.DETERMINISTIC_MODULES` or a
+  ``# repro: deterministic`` directive). Seeded constructions
+  (``random.Random(seed)``, ``np.random.default_rng(seed)``) are fine.
+* **RPL005** — every ``Condition.notify``/``notify_all`` must hold
+  exactly its own condition lock and nothing else (condition locks are
+  leaves; notifying under extra locks hands waiters a lock-order
+  landmine, notifying under none is a lost wakeup).
+
+Suppressions: a ``# repro: allow[RPLxxx] reason=<why>`` comment on the
+same line or the line above silences one rule at that site; an allow
+without a reason is ignored. Non-suppressed diagnostics must be empty
+(``--check``) — the committed baseline (``analysis/baseline.txt``) is
+empty and should stay that way; ``--write-baseline`` exists for
+emergency triage only.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import lock_order
+
+RULES = {
+    "RPL001": "lifecycle emit reachable under a non-emit-safe lock",
+    "RPL002": "lock acquisition violates the declared partial order",
+    "RPL003": "unannotated lock / unguarded shared container",
+    "RPL004": "wall-clock or unseeded randomness in deterministic module",
+    "RPL005": "Condition.notify must hold its own lock and nothing else",
+}
+
+EMIT_SHORTHANDS = frozenset(
+    {"routed", "interrupted", "completed", "rewarded", "consumed", "aborted"}
+)
+EMIT_RECEIVERS = frozenset({"lifecycle", "bus"})
+LOCK_FACTORIES = {
+    "make_lock": "lock",
+    "make_rlock": "rlock",
+    "make_condition": "cond",
+}
+BARE_LOCKS = {"Lock": "lock", "RLock": "rlock", "Condition": "cond"}
+CONTAINER_CALLS = frozenset(
+    {"dict", "list", "set", "deque", "defaultdict", "OrderedDict", "Counter"}
+)
+MUTATORS = frozenset({
+    "append", "appendleft", "extend", "insert", "pop", "popitem",
+    "popleft", "remove", "clear", "add", "discard", "update", "setdefault",
+})
+SAFE_NP_RANDOM = frozenset(
+    {"default_rng", "Generator", "SeedSequence", "RandomState", "PCG64"}
+)
+SAFE_RANDOM = frozenset({"Random", "SystemRandom"})
+
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow\[(RPL\d{3})\]\s*reason=(\S.*)$"
+)
+_ROLES_RE = re.compile(r"#\s*repro:\s*roles=([\w,\- ]+)")
+_DET_RE = re.compile(r"#\s*repro:\s*deterministic\b")
+_CONDISH_RE = re.compile(r"(_cond|\bcond)$")
+_LOCKISH_RE = re.compile(r"(_lock|\block|_mutex|_mu)$")
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    path: str
+    line: int
+    col: int
+    rule: str
+    msg: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}:{self.line}:{self.col} {self.rule}"
+
+    def __str__(self) -> str:
+        return f"{self.key} {self.msg}"
+
+
+@dataclass
+class LockInfo:
+    name: Optional[str]  # declared name from the factory, None if bare
+    kind: str  # "lock" | "rlock" | "cond"
+    bare: bool
+    line: int
+    col: int
+
+
+@dataclass(frozen=True)
+class LockRef:
+    name: Optional[str]
+    kind: str
+    src: str
+
+
+@dataclass
+class MutSite:
+    method: str
+    line: int
+    col: int
+    guarded: bool
+
+
+@dataclass
+class FuncInfo:
+    node: ast.AST
+    cls: Optional[str]
+    name: str
+    direct_emit: bool = False
+    callees: Tuple[Tuple[Optional[str], str], ...] = ()
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an attribute chain of Names, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _receiver_tail(node: ast.AST) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _emit_desc(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if not isinstance(f, ast.Attribute):
+        return None
+    if f.attr in ("emit", "publish"):
+        return ast.unparse(f)
+    if f.attr in EMIT_SHORTHANDS and _receiver_tail(f.value) in EMIT_RECEIVERS:
+        return ast.unparse(f)
+    return None
+
+
+def _classify_factory(value: ast.AST) -> Optional[LockInfo]:
+    """LockInfo for ``make_lock("x")`` / ``threading.Lock()`` values."""
+    if not isinstance(value, ast.Call):
+        return None
+    f = value.func
+    fname = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None
+    )
+    if fname in LOCK_FACTORIES:
+        name = None
+        if value.args and isinstance(value.args[0], ast.Constant) \
+                and isinstance(value.args[0].value, str):
+            name = value.args[0].value
+        return LockInfo(name, LOCK_FACTORIES[fname], False,
+                        value.lineno, value.col_offset)
+    if fname in BARE_LOCKS:
+        # require threading.X() or a bare imported name — not foo.Lock()
+        if isinstance(f, ast.Attribute):
+            base = _dotted(f.value)
+            if base not in ("threading", "_thread"):
+                return None
+        return LockInfo(None, BARE_LOCKS[fname], True,
+                        value.lineno, value.col_offset)
+    return None
+
+
+class ModuleLinter:
+    """Lints one source file; appends to a shared diagnostics list."""
+
+    def __init__(self, relpath: str, source: str) -> None:
+        self.relpath = relpath
+        self.tree = ast.parse(source, filename=relpath)
+        lines = source.splitlines()
+        # suppressions: line -> rules allowed there (and on the next line)
+        self.allow: Dict[int, Set[str]] = {}
+        roles_directive: Tuple[str, ...] = ()
+        det_directive = False
+        for i, ln in enumerate(lines, start=1):
+            m = _ALLOW_RE.search(ln)
+            if m:
+                self.allow.setdefault(i, set()).add(m.group(1))
+            m = _ROLES_RE.search(ln)
+            if m:
+                roles_directive = tuple(
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                )
+            if _DET_RE.search(ln):
+                det_directive = True
+        self.roles = lock_order.module_roles(relpath) or roles_directive
+        self.multi_role = len(self.roles) >= 2
+        self.deterministic = (
+            lock_order.is_deterministic_module(relpath) or det_directive
+        )
+        # collected state
+        self.lock_attrs: Dict[Tuple[Optional[str], str], LockInfo] = {}
+        self.container_attrs: Dict[Tuple[str, str], int] = {}  # -> def line
+        self.class_has_lock: Set[str] = set()
+        self.functions: Dict[Tuple[Optional[str], str], FuncInfo] = {}
+        self.may_emit: Dict[Tuple[Optional[str], str], bool] = {}
+        self.mutations: Dict[Tuple[str, str], List[MutSite]] = {}
+        self.diags: List[Diagnostic] = []
+
+    # -------------------------------------------------------------- driver
+    def run(self) -> List[Diagnostic]:
+        self._collect()
+        self._fixpoint_emit()
+        for (cls, _name), fi in self.functions.items():
+            _ContextWalker(self, fi).run()
+        self._check_containers()
+        return [
+            d for d in self.diags
+            if d.rule not in self.allow.get(d.line, ())
+            and d.rule not in self.allow.get(d.line - 1, ())
+        ]
+
+    def diag(self, node: ast.AST, rule: str, msg: str) -> None:
+        self.diags.append(Diagnostic(
+            self.relpath, node.lineno, node.col_offset, rule, msg
+        ))
+
+    # ---------------------------------------------------------- collection
+    def _collect(self) -> None:
+        for top in self.tree.body:
+            if isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._register_func(None, top)
+            elif isinstance(top, ast.ClassDef):
+                for item in top.body:
+                    if isinstance(
+                        item, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        self._register_func(top.name, item)
+                        self._collect_attrs(top.name, item)
+
+    def _register_func(self, cls: Optional[str], fn: ast.AST) -> None:
+        direct = False
+        callees: List[Tuple[Optional[str], str]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                if _emit_desc(node) is not None:
+                    direct = True
+                f = node.func
+                if isinstance(f, ast.Name):
+                    callees.append((None, f.id))
+                elif isinstance(f, ast.Attribute) \
+                        and isinstance(f.value, ast.Name) \
+                        and f.value.id == "self":
+                    callees.append((cls, f.attr))
+        self.functions[(cls, fn.name)] = FuncInfo(
+            fn, cls, fn.name, direct, tuple(callees)
+        )
+
+    def _collect_attrs(self, cls: str, fn: ast.AST) -> None:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"):
+                continue
+            info = _classify_factory(node.value)
+            if info is not None:
+                self.lock_attrs[(cls, tgt.attr)] = info
+                self.class_has_lock.add(cls)
+                if info.bare and self.multi_role:
+                    roles = ",".join(self.roles)
+                    prim = {"lock": "Lock", "rlock": "RLock",
+                            "cond": "Condition"}[info.kind]
+                    factory = {"lock": "make_lock", "rlock": "make_rlock",
+                               "cond": "make_condition"}[info.kind]
+                    self.diag(
+                        node.value, "RPL003",
+                        f"bare threading.{prim}() attribute '{tgt.attr}' "
+                        f"in multi-role module (roles: {roles}); use the "
+                        f"witness-aware factory {factory}(name) from "
+                        f"repro.analysis.witness so it joins the declared "
+                        f"lock order",
+                    )
+                continue
+            if fn.name == "__init__" and self._is_container(node.value):
+                self.container_attrs[(cls, tgt.attr)] = node.lineno
+
+    @staticmethod
+    def _is_container(value: ast.AST) -> bool:
+        if isinstance(value, (ast.Dict, ast.List, ast.Set, ast.DictComp,
+                              ast.ListComp, ast.SetComp)):
+            return True
+        if isinstance(value, ast.Call):
+            f = value.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else None
+            )
+            return name in CONTAINER_CALLS
+        return False
+
+    def _fixpoint_emit(self) -> None:
+        self.may_emit = {
+            k: fi.direct_emit for k, fi in self.functions.items()
+        }
+        changed = True
+        while changed:
+            changed = False
+            for k, fi in self.functions.items():
+                if self.may_emit[k]:
+                    continue
+                for callee in fi.callees:
+                    tgt = callee if callee in self.may_emit else None
+                    if tgt is None and callee[0] is not None:
+                        # method not on this class: try any class
+                        for other in self.may_emit:
+                            if other[1] == callee[1] and other[0] is not None:
+                                tgt = other
+                                break
+                    if tgt is not None and self.may_emit.get(tgt):
+                        self.may_emit[k] = True
+                        changed = True
+                        break
+
+    # ------------------------------------------------------ lock resolution
+    def classify_lock(
+        self, expr: ast.AST, cls: Optional[str]
+    ) -> Optional[LockRef]:
+        """Map a with-context expression to a lock reference, if any."""
+        try:
+            src = ast.unparse(expr)
+        except Exception:  # pragma: no cover - malformed expr
+            return None
+        if isinstance(expr, ast.Attribute) \
+                and isinstance(expr.value, ast.Name) \
+                and expr.value.id == "self":
+            info = self.lock_attrs.get((cls, expr.attr))
+            if info is not None:
+                return LockRef(info.name, info.kind, src)
+        for pat, name in lock_order.ATTR_HINTS:
+            if re.search(pat, src):
+                return LockRef(name, "rlock", src)
+        if isinstance(expr, ast.Name):
+            info = self.lock_attrs.get((None, expr.id))
+            if info is not None:
+                return LockRef(info.name, info.kind, src)
+        if _CONDISH_RE.search(src):
+            return LockRef(None, "cond", src)
+        if _LOCKISH_RE.search(src):
+            return LockRef(None, "lock", src)
+        return None
+
+    def is_condition_expr(self, expr: ast.AST, cls: Optional[str]) -> bool:
+        ref = self.classify_lock(expr, cls)
+        if ref is not None and ref.kind == "cond":
+            return True
+        if ref is not None and ref.name in lock_order.CONDITIONS:
+            return True
+        try:
+            return bool(_CONDISH_RE.search(ast.unparse(expr)))
+        except Exception:  # pragma: no cover
+            return False
+
+    def resolve_callee(
+        self, call: ast.Call, cls: Optional[str]
+    ) -> Optional[Tuple[Optional[str], str]]:
+        f = call.func
+        if isinstance(f, ast.Name) and (None, f.id) in self.functions:
+            return (None, f.id)
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self":
+            if (cls, f.attr) in self.functions:
+                return (cls, f.attr)
+        return None
+
+    # --------------------------------------------------- facet B post-pass
+    def _check_containers(self) -> None:
+        if not self.multi_role:
+            return
+        for (cls, attr), sites in sorted(self.mutations.items()):
+            if (cls, attr) not in self.container_attrs:
+                continue
+            if cls not in self.class_has_lock:
+                continue
+            methods = {s.method for s in sites}
+            if len(methods) < 2:
+                continue
+            for s in sites:
+                if s.guarded:
+                    continue
+                others = ",".join(sorted(methods - {s.method})) or "-"
+                self.diags.append(Diagnostic(
+                    self.relpath, s.line, s.col, "RPL003",
+                    f"shared container '{cls}.{attr}' mutated in "
+                    f"'{s.method}' without holding a lock (also mutated "
+                    f"in: {others}); guard every site or rename the "
+                    f"method '*_locked' if callers hold the lock",
+                ))
+
+
+class _ContextWalker:
+    """Walks one function tracking the lexically-held lock stack."""
+
+    def __init__(self, ml: ModuleLinter, fi: FuncInfo) -> None:
+        self.ml = ml
+        self.fi = fi
+        self.cls = fi.cls
+        self.held: List[LockRef] = []
+        self.exitstacks: Set[str] = set()
+
+    def run(self) -> None:
+        for stmt in self.fi.node.body:
+            self.visit(stmt)
+
+    # ------------------------------------------------------------- visitor
+    def visit(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            self._with(node)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # nested defs / lambdas run later, not under these locks
+            saved, self.held = self.held, []
+            body = node.body if isinstance(node.body, list) else [node.body]
+            for child in body:
+                self.visit(child)
+            self.held = saved
+            return
+        if isinstance(node, ast.Call):
+            self._call(node)
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+            self._mutation(node)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+    def _with(self, node: ast.With) -> None:
+        mark = len(self.held)
+        new_es: List[str] = []
+        for item in node.items:
+            ce = item.context_expr
+            ref = self.ml.classify_lock(ce, self.cls)
+            if ref is not None:
+                self._check_acquire(ref, ce)
+                self.held.append(ref)
+                continue
+            if isinstance(ce, ast.Call) and isinstance(
+                item.optional_vars, ast.Name
+            ):
+                f = ce.func
+                fname = f.attr if isinstance(f, ast.Attribute) else (
+                    f.id if isinstance(f, ast.Name) else None
+                )
+                if fname == "ExitStack":
+                    new_es.append(item.optional_vars.id)
+            self.visit(ce)
+        added = set(new_es) - self.exitstacks
+        self.exitstacks |= added
+        for stmt in node.body:
+            self.visit(stmt)
+        self.exitstacks -= added
+        del self.held[mark:]
+
+    def _check_acquire(self, ref: LockRef, node: ast.AST) -> None:
+        for h in self.held:
+            if h.src == ref.src:
+                if ref.kind != "rlock":
+                    self.ml.diag(
+                        node, "RPL002",
+                        f"re-acquiring non-reentrant lock {ref.src} "
+                        f"already held in this scope (self-deadlock)",
+                    )
+                continue
+            if h.name is None or ref.name is None:
+                continue
+            if not lock_order.can_acquire(h.name, ref.name):
+                self.ml.diag(
+                    node, "RPL002",
+                    f"acquiring '{ref.name}' ({ref.src}) while holding "
+                    f"'{h.name}' ({h.src}) violates the declared lock "
+                    f"order (see repro/analysis/lock_order.py)",
+                )
+
+    # --------------------------------------------------------------- calls
+    def _call(self, node: ast.Call) -> None:
+        f = node.func
+        # stack.enter_context(<lock>) inside a live ExitStack
+        if isinstance(f, ast.Attribute) and f.attr == "enter_context" \
+                and isinstance(f.value, ast.Name) \
+                and f.value.id in self.exitstacks and len(node.args) == 1:
+            ref = self.ml.classify_lock(node.args[0], self.cls)
+            if ref is not None:
+                self._check_acquire(ref, node)
+                self.held.append(ref)  # held until the ExitStack closes
+        self._check_emit(node)
+        self._check_notify(node)
+        if self.ml.deterministic:
+            self._check_determinism(node)
+        if isinstance(f, ast.Attribute) and f.attr in MUTATORS:
+            recv = f.value
+            if isinstance(recv, ast.Attribute) \
+                    and isinstance(recv.value, ast.Name) \
+                    and recv.value.id == "self":
+                self._record_mut(recv.attr, node)
+
+    def _check_emit(self, node: ast.Call) -> None:
+        if not self.held:
+            return
+        desc = _emit_desc(node)
+        if desc is None:
+            callee = self.ml.resolve_callee(node, self.cls)
+            if callee is not None and self.ml.may_emit.get(callee):
+                desc = f"{callee[1]}() [which can emit]"
+        if desc is None:
+            return
+        bad = [
+            h for h in self.held
+            if h.name is None or h.name not in lock_order.EMIT_SAFE
+        ]
+        if bad:
+            locks = ", ".join(h.src for h in bad)
+            self.ml.diag(
+                node, "RPL001",
+                f"lifecycle dispatch via {desc} while holding "
+                f"non-emit-safe lock(s) {locks}: subscribers take their "
+                f"own locks during dispatch (PR 5 deadlock shape) — "
+                f"emit after releasing, or snapshot and defer",
+            )
+
+    def _check_notify(self, node: ast.Call) -> None:
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and f.attr in ("notify", "notify_all")):
+            return
+        if not self.ml.is_condition_expr(f.value, self.cls):
+            return
+        recv = ast.unparse(f.value)
+        if not self.held:
+            self.ml.diag(
+                node, "RPL005",
+                f"{recv}.{f.attr}() outside 'with {recv}:' — an unlocked "
+                f"notify races the waiter's predicate check (lost wakeup)",
+            )
+            return
+        extra = [h.src for h in self.held if h.src != recv]
+        if recv not in [h.src for h in self.held]:
+            self.ml.diag(
+                node, "RPL005",
+                f"{recv}.{f.attr}() without holding {recv} "
+                f"(held: {', '.join(extra)})",
+            )
+        elif extra:
+            self.ml.diag(
+                node, "RPL005",
+                f"{recv}.{f.attr}() while also holding "
+                f"{', '.join(extra)} — condition locks are leaves; "
+                f"notify must hold its own lock and nothing else",
+            )
+
+    def _check_determinism(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted is None:
+            return
+        parts = dotted.split(".")
+        leaf = parts[-1]
+        if dotted in ("time.time", "time.time_ns"):
+            self.ml.diag(
+                node, "RPL004",
+                f"{dotted}() in seed-deterministic module: wall-clock "
+                f"reads break tick reproducibility; use the tick counter "
+                f"or time.perf_counter for local durations",
+            )
+        elif len(parts) == 2 and parts[0] == "random" \
+                and leaf not in SAFE_RANDOM:
+            self.ml.diag(
+                node, "RPL004",
+                f"{dotted}() draws from the global unseeded RNG; use a "
+                f"seeded random.Random(seed) instance",
+            )
+        elif len(parts) >= 3 and parts[-3] in ("np", "numpy") \
+                and parts[-2] == "random" and leaf not in SAFE_NP_RANDOM:
+            self.ml.diag(
+                node, "RPL004",
+                f"{dotted}() uses numpy's global RNG; use "
+                f"np.random.default_rng(seed)",
+            )
+        elif len(parts) >= 2 and parts[-2:] == ["jax", "random"]:
+            pass  # module ref, not a call of interest
+        elif "jax" in parts and "random" in parts and not node.args:
+            self.ml.diag(
+                node, "RPL004",
+                f"{dotted}() called without a PRNG key in a "
+                f"seed-deterministic module; thread an explicit "
+                f"jax.random.PRNGKey through",
+            )
+        elif dotted.endswith(("datetime.now", "datetime.utcnow",
+                              "date.today")):
+            self.ml.diag(
+                node, "RPL004",
+                f"{dotted}() is wall-clock; deterministic modules must "
+                f"derive time from the tick counter",
+            )
+
+    # ----------------------------------------------------------- mutations
+    def _mutation(self, node: ast.AST) -> None:
+        targets: List[ast.AST]
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        else:  # Delete
+            targets = list(node.targets)
+        for tgt in targets:
+            if isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Attribute) \
+                    and isinstance(tgt.value.value, ast.Name) \
+                    and tgt.value.value.id == "self":
+                self._record_mut(tgt.value.attr, node)
+
+    def _record_mut(self, attr: str, node: ast.AST) -> None:
+        if self.cls is None or self.fi.name == "__init__":
+            return
+        if (self.cls, attr) not in self.ml.container_attrs:
+            return
+        guarded = bool(self.held) or self.fi.name.endswith("_locked")
+        self.ml.mutations.setdefault((self.cls, attr), []).append(
+            MutSite(self.fi.name, node.lineno, node.col_offset, guarded)
+        )
+
+
+# ------------------------------------------------------------------ driver
+def _default_root() -> Path:
+    return Path(__file__).resolve().parents[1]  # src/repro
+
+
+def _src_root() -> Path:
+    return Path(__file__).resolve().parents[2]  # src
+
+
+def iter_files(paths: Sequence[Path]) -> List[Tuple[Path, str]]:
+    """(abspath, relpath-for-reporting) for every .py under ``paths``."""
+    out: List[Tuple[Path, str]] = []
+    for root in paths:
+        root = root.resolve()
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            if "__pycache__" in f.parts:
+                continue
+            try:
+                rel = f.relative_to(_src_root()).as_posix()
+            except ValueError:
+                base = root if root.is_dir() else root.parent
+                try:
+                    rel = f.relative_to(base).as_posix()
+                except ValueError:  # pragma: no cover
+                    rel = f.as_posix()
+            out.append((f, rel))
+    return out
+
+
+def run_lint(paths: Sequence[Path]) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for path, rel in iter_files(paths):
+        source = path.read_text()
+        try:
+            diags.extend(ModuleLinter(rel, source).run())
+        except SyntaxError as e:  # pragma: no cover
+            diags.append(Diagnostic(rel, e.lineno or 0, 0, "RPL000",
+                                    f"syntax error: {e.msg}"))
+    return sorted(diags, key=lambda d: (d.path, d.line, d.col, d.rule))
+
+
+def _load_baseline(path: Path) -> Set[str]:
+    if not path.exists():
+        return set()
+    return {
+        ln.strip() for ln in path.read_text().splitlines()
+        if ln.strip() and not ln.lstrip().startswith("#")
+    }
+
+
+def selftest(fixtures: Path) -> int:
+    """Run against the seeded violation fixtures; the diagnostic set must
+    match expected.txt exactly — every seeded hit found at its exact
+    position, zero false positives on the clean fixtures."""
+    expected_file = fixtures / "expected.txt"
+    expected = _load_baseline(expected_file)
+    got = {d.key for d in run_lint([fixtures])}
+    missing = sorted(expected - got)
+    surplus = sorted(got - expected)
+    for k in missing:
+        print(f"MISSING (seeded violation not caught): {k}")
+    for k in surplus:
+        print(f"FALSE POSITIVE (not in expected.txt): {k}")
+    if missing or surplus:
+        return 1
+    print(f"selftest OK: {len(expected)} seeded violations caught, "
+          f"0 false positives")
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="Project lock-discipline lint (RPL001-RPL005).",
+    )
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any non-baselined diagnostic")
+    ap.add_argument("--baseline", type=Path,
+                    default=Path(__file__).parent / "baseline.txt")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current diagnostics as the new baseline")
+    ap.add_argument("--selftest", nargs="?", type=Path, const=None,
+                    default=False, metavar="FIXTURES",
+                    help="verify the seeded fixtures are caught exactly "
+                         "(default dir: tests/fixtures/lint_violations)")
+    args = ap.parse_args(argv)
+
+    if args.selftest is not False:
+        fixtures = args.selftest
+        if fixtures is None:
+            fixtures = (
+                _src_root().parent / "tests" / "fixtures" / "lint_violations"
+            )
+        return selftest(fixtures)
+
+    paths = args.paths or [_default_root()]
+    diags = run_lint(paths)
+
+    if args.write_baseline:
+        args.baseline.write_text(
+            "".join(f"{d.key}\n" for d in diags)
+        )
+        print(f"wrote {len(diags)} entries to {args.baseline}")
+        return 0
+
+    baseline = _load_baseline(args.baseline)
+    fresh = [d for d in diags if d.key not in baseline]
+    for d in fresh:
+        print(d)
+    stale = baseline - {d.key for d in diags}
+    if stale and args.check:
+        for k in sorted(stale):
+            print(f"note: stale baseline entry (fixed?): {k}")
+    if fresh:
+        print(f"{len(fresh)} diagnostic(s) "
+              f"({len(baseline)} baselined, {len(stale)} stale)")
+        return 1 if args.check else 0
+    if args.check:
+        print(f"lint clean ({len(baseline)} baselined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,449 @@
+"""Runtime lock-order witness: tracked locks + acquisition graph.
+
+Drop-in ``TrackedLock`` / ``TrackedRLock`` wrappers record, per thread,
+the stack of witness-aware locks currently held, and maintain a global
+*acquisition graph* (edge ``A -> B`` whenever some thread acquired B
+while holding A). The witness reports three violation classes:
+
+* **order violations** — acquiring B while holding A when the declared
+  partial order (:mod:`repro.analysis.lock_order`) forbids it, checked
+  *before* blocking so a real deadlock still leaves a report behind;
+* **cycles** in the acquisition graph — two threads that each took the
+  same pair of locks in opposite orders never need to actually collide
+  to be reported (the PR 5 deadlock was exactly such a cycle between
+  the reward worker's REWARDED dispatch and the coordinator's
+  INTERRUPTED dispatch);
+* **emit-under-lock** — :meth:`LockWitness.record_emit` is called by
+  ``TrajectoryLifecycle.emit`` at dispatch time; holding any lock
+  outside :data:`repro.analysis.lock_order.EMIT_SAFE` at that point is
+  reported with the offending stack.
+
+Everything is opt-in: ``REPRO_LOCK_WITNESS=1`` in the environment, or
+``RuntimeConfig(lock_witness=True)``, or ``with witness.enabled():`` in
+tests. When inactive, ``make_lock``/``make_rlock``/``make_condition``
+return plain ``threading`` primitives and ``on_emit`` is a single
+global read — the tick/seed path is byte-identical with the witness
+off.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import traceback
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.analysis import lock_order
+
+_STACK_FRAMES = 12  # frames kept per violation sample
+_MAX_SAMPLES = 200  # cap per violation class (counters keep exact totals)
+
+
+def _stack() -> List[str]:
+    frames = traceback.format_stack()[:-2]
+    return [ln.rstrip("\n") for ln in frames[-_STACK_FRAMES:]]
+
+
+class LockWitness:
+    """Global acquisition graph + per-thread held-set recorder."""
+
+    def __init__(self) -> None:
+        self.active = True
+        self._mu = threading.Lock()  # raw: guards the graph, never tracked
+        self._tls = threading.local()
+        # graph over node labels ("name" or "name[key]")
+        self._edges: Dict[str, Set[str]] = {}
+        self._edge_samples: Dict[Tuple[str, str], List[str]] = {}
+        # counters (exact) + capped samples
+        self.acquires = 0
+        self.emits = 0
+        self.order_violation_count = 0
+        self.emit_violation_count = 0
+        self.order_violations: List[Dict[str, Any]] = []
+        self.emit_under_lock: List[Dict[str, Any]] = []
+        self._seen_order: Set[Tuple[str, str]] = set()
+        self._seen_emit: Set[Tuple[str, Tuple[str, ...]]] = set()
+
+    # ------------------------------------------------------------ held set
+    def _held(self) -> List["TrackedLock"]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = []
+            self._tls.held = held
+        return held
+
+    def held_labels(self) -> List[str]:
+        return [lk.label for lk in self._held()]
+
+    # ----------------------------------------------------------- recording
+    def before_acquire(self, lock: "TrackedLock") -> None:
+        """Record edges + order check *before* blocking on ``lock``."""
+        held = self._held()
+        if not held:
+            return
+        with self._mu:
+            for h in held:
+                self._edges.setdefault(h.label, set()).add(lock.label)
+                key = (h.label, lock.label)
+                if key not in self._edge_samples:
+                    self._edge_samples[key] = _stack()
+                ok = lock_order.can_acquire(
+                    h.name, lock.name,
+                    held_key=h.order_key, new_key=lock.order_key,
+                )
+                if not ok:
+                    self.order_violation_count += 1
+                    if key not in self._seen_order:
+                        self._seen_order.add(key)
+                        if len(self.order_violations) < _MAX_SAMPLES:
+                            self.order_violations.append({
+                                "held": h.label,
+                                "acquiring": lock.label,
+                                "thread": threading.current_thread().name,
+                                "stack": _stack(),
+                            })
+
+    def after_acquire(self, lock: "TrackedLock") -> None:
+        self._held().append(lock)
+        with self._mu:
+            self.acquires += 1
+
+    def on_release(self, lock: "TrackedLock") -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] is lock:
+                del held[i]
+                break
+
+    def record_emit(self, kind: str) -> None:
+        """Called by the lifecycle bus at dispatch time."""
+        with self._mu:
+            self.emits += 1
+        held = self._held()
+        if not held:
+            return
+        bad = [h.label for h in held if h.name not in lock_order.EMIT_SAFE]
+        if not bad:
+            return
+        with self._mu:
+            self.emit_violation_count += 1
+            key = (kind, tuple(bad))
+            if key not in self._seen_emit:
+                self._seen_emit.add(key)
+                if len(self.emit_under_lock) < _MAX_SAMPLES:
+                    self.emit_under_lock.append({
+                        "event": kind,
+                        "held": bad,
+                        "thread": threading.current_thread().name,
+                        "stack": _stack(),
+                    })
+
+    # ------------------------------------------------------------ analysis
+    def edges(self) -> List[Tuple[str, str]]:
+        with self._mu:
+            return sorted(
+                (a, b) for a, outs in self._edges.items() for b in outs
+            )
+
+    def cycles(self) -> List[List[str]]:
+        """Elementary cycles in the acquisition graph (DFS, deduped)."""
+        with self._mu:
+            graph = {a: sorted(outs) for a, outs in self._edges.items()}
+        out: List[List[str]] = []
+        seen: Set[Tuple[str, ...]] = set()
+
+        def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+            for nxt in graph.get(node, ()):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):] + [nxt]
+                    # canonical rotation for dedup
+                    body = cyc[:-1]
+                    k = min(range(len(body)), key=lambda i: body[i])
+                    canon = tuple(body[k:] + body[:k])
+                    if canon not in seen:
+                        seen.add(canon)
+                        out.append(list(canon) + [canon[0]])
+                elif len(path) < 32:
+                    on_path.add(nxt)
+                    dfs(nxt, path + [nxt], on_path)
+                    on_path.discard(nxt)
+
+        for start in sorted(graph):
+            dfs(start, [start], {start})
+        return out
+
+    def violations(self) -> Dict[str, int]:
+        return {
+            "order": self.order_violation_count,
+            "emit_under_lock": self.emit_violation_count,
+            "cycles": len(self.cycles()),
+        }
+
+    def assert_clean(self) -> None:
+        v = self.violations()
+        if any(v.values()):
+            raise AssertionError(
+                "lock witness found violations: "
+                f"{v}\n{json.dumps(self.report(), indent=2)}"
+            )
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "acquires": self.acquires,
+            "emits": self.emits,
+            "nodes": sorted(
+                set(self._edges)
+                | {b for outs in self._edges.values() for b in outs}
+            ),
+            "edges": [list(e) for e in self.edges()],
+            "cycles": self.cycles(),
+            "order_violations": self.order_violations,
+            "order_violation_count": self.order_violation_count,
+            "emit_under_lock": self.emit_under_lock,
+            "emit_violation_count": self.emit_violation_count,
+        }
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.report(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+class TrackedLock:
+    """Witness-aware ``threading.Lock`` drop-in."""
+
+    reentrant = False
+
+    def __init__(
+        self,
+        name: str,
+        order_key: Optional[int] = None,
+        witness: Optional[LockWitness] = None,
+    ) -> None:
+        self.name = name
+        self.order_key = order_key
+        self.label = name if order_key is None else f"{name}[{order_key}]"
+        self._w = witness if witness is not None else _active
+        self._inner = self._make_inner()
+
+    def _make_inner(self):
+        return threading.Lock()
+
+    def _tracking(self) -> bool:
+        w = self._w
+        return w is not None and w.active
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        track = self._tracking()
+        if track and blocking:
+            self._w.before_acquire(self)
+        got = self._inner.acquire(blocking, timeout)
+        if track and got:
+            self._w.after_acquire(self)
+        return got
+
+    def release(self) -> None:
+        if self._tracking():
+            self._w.on_release(self)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.label}>"
+
+
+class TrackedRLock(TrackedLock):
+    """Witness-aware ``threading.RLock`` drop-in.
+
+    Reentrant acquisitions by the owning thread are transparent to the
+    witness: only the outermost acquire/release pair is recorded, so
+    reentry never shows up as a self-edge.
+    """
+
+    reentrant = True
+
+    def __init__(
+        self,
+        name: str,
+        order_key: Optional[int] = None,
+        witness: Optional[LockWitness] = None,
+    ) -> None:
+        super().__init__(name, order_key, witness)
+        self._depth = threading.local()
+
+    def _make_inner(self):
+        return threading.RLock()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        depth = getattr(self._depth, "d", 0)
+        track = self._tracking() and depth == 0
+        if track and blocking:
+            self._w.before_acquire(self)
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._depth.d = depth + 1
+            if track:
+                self._w.after_acquire(self)
+        return got
+
+    def release(self) -> None:
+        depth = getattr(self._depth, "d", 0)
+        if depth <= 1 and self._tracking():
+            self._w.on_release(self)
+        self._depth.d = depth - 1
+        self._inner.release()
+
+
+# --------------------------------------------------------------- module API
+_active: Optional[LockWitness] = None
+
+
+def enable() -> LockWitness:
+    """Activate the witness (idempotent); new locks become tracked."""
+    global _active
+    if _active is None or not _active.active:
+        _active = LockWitness()
+    return _active
+
+
+def disable() -> None:
+    """Deactivate; existing tracked locks go dormant (attr-check only)."""
+    if _active is not None:
+        _active.active = False
+
+
+def reset() -> None:
+    global _active
+    _active = None
+
+
+def get_witness() -> Optional[LockWitness]:
+    """The active witness, or None when the witness is off."""
+    if _active is not None and _active.active:
+        return _active
+    return None
+
+
+def current() -> Optional[LockWitness]:
+    """Last witness, active or not (for post-run inspection)."""
+    return _active
+
+
+def is_enabled() -> bool:
+    return get_witness() is not None
+
+
+@contextmanager
+def enabled():
+    """Enable a fresh witness for the duration of a block (tests)."""
+    w = enable()
+    try:
+        yield w
+    finally:
+        disable()
+
+
+def on_emit(kind: str) -> None:
+    """Lifecycle dispatch hook; near-free when the witness is off."""
+    w = _active
+    if w is not None and w.active:
+        w.record_emit(kind)
+
+
+def make_lock(name: str, order_key: Optional[int] = None):
+    """A named mutex: ``TrackedLock`` when the witness is active, else a
+    plain ``threading.Lock``."""
+    w = get_witness()
+    if w is None:
+        return threading.Lock()
+    return TrackedLock(name, order_key, w)
+
+
+def make_rlock(name: str, order_key: Optional[int] = None):
+    w = get_witness()
+    if w is None:
+        return threading.RLock()
+    return TrackedRLock(name, order_key, w)
+
+
+def make_condition(name: str):
+    """A condition variable over a named (tracked) leaf lock."""
+    w = get_witness()
+    if w is None:
+        return threading.Condition()
+    return threading.Condition(TrackedLock(name, None, w))
+
+
+if os.environ.get("REPRO_LOCK_WITNESS", "").strip().lower() not in (
+    "", "0", "false", "no",
+):
+    enable()
+
+
+# ------------------------------------------------------------- smoke main
+def _smoke_main(argv: Optional[List[str]] = None) -> int:
+    """Run a tiny threaded streaming runtime under the witness and dump
+    the lock acquisition graph. Non-zero exit on any violation — this is
+    the CI race gate."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write lock-graph JSON")
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--barrier", action="store_true",
+                    help="also run a non-streaming (barrier) pass")
+    args = ap.parse_args(argv)
+
+    # heavyweight imports deferred: the module itself stays stdlib-only
+    from repro.configs import get_arch
+    from repro.core.types import reset_traj_ids
+    from repro.runtime.async_runtime import AsyncRLRuntime, RuntimeConfig
+
+    arch = get_arch("qwen2-1.5b").reduced()
+    w = enable()
+    try:
+        modes = [dict(streaming=True, stream_min_fill=1)]
+        if args.barrier:
+            modes.append(dict(streaming=False))
+        for mode in modes:
+            reset_traj_ids()
+            rt = AsyncRLRuntime(arch, RuntimeConfig(
+                eta=1, batch_size=2, group_size=2, n_instances=2,
+                max_slots=2, max_len=48, max_new_tokens=8,
+                total_steps=args.steps, seed=0, scheduler="threaded",
+                lock_witness=True, **mode,
+            ))
+            rt.scheduler.wall_timeout_s = 240.0
+            rt.run()
+            assert rt.model_version == args.steps, "run did not complete"
+    finally:
+        disable()
+        if args.json:
+            w.to_json(args.json)
+
+    v = w.violations()
+    print(f"lock witness: acquires={w.acquires} emits={w.emits} "
+          f"edges={len(w.edges())} violations={v}")
+    if any(v.values()):
+        print(json.dumps(w.report(), indent=2))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    # ``python -m repro.analysis.witness`` executes this file as
+    # ``__main__`` while the runtime's lock factories consult the
+    # canonical ``repro.analysis.witness`` module — delegate so both
+    # share one ``_active`` witness.
+    from repro.analysis import witness as _canonical
+
+    raise SystemExit(_canonical._smoke_main())

@@ -20,6 +20,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.analysis.witness import make_rlock
 from repro.core.commands import Abort, Command, CommandList, Interrupt, Pull, Route
 from repro.core.cost_model import CostModel
 from repro.core.lifecycle import (
@@ -49,7 +50,7 @@ class GroupBook:
     def __init__(self, ts: TrajectoryServer):
         self.ts = ts
         self._rewarded: Dict[int, Set[int]] = {}
-        self._lock = threading.RLock()
+        self._lock = make_rlock("groupbook")
 
     @staticmethod
     def key(group_id: int) -> int:
@@ -172,7 +173,7 @@ class RolloutCoordinator:
         # coordinator differences them into the per-cycle thrash rate the
         # cost model's routing penalty consumes
         self._preempt_seen: Dict[int, int] = {}
-        self._lock = threading.RLock()
+        self._lock = make_rlock("coordinator")
         # thread currently inside a routing decision (full ``step`` or the
         # ``route_instance`` fast path). Event subscribers that trigger
         # incremental admission re-entrantly — e.g. an ABORTED published by

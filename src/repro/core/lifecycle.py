@@ -35,10 +35,10 @@ emit concurrently; cross-thread consistency is the subscribers' own locks
 from __future__ import annotations
 
 import enum
-import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
+from repro.analysis.witness import make_lock, make_rlock, on_emit
 from repro.core.types import Trajectory
 
 
@@ -87,7 +87,7 @@ class TrajectoryLifecycle:
         self._subs: Dict[LifecycleEventKind, List[Subscriber]] = {
             k: [] for k in LifecycleEventKind
         }
-        self._lock = threading.RLock()
+        self._lock = make_rlock("lifecycle")
         self.counts: Dict[LifecycleEventKind, int] = {
             k: 0 for k in LifecycleEventKind
         }
@@ -132,6 +132,10 @@ class TrajectoryLifecycle:
             self.counts[event.kind] += 1
             # snapshot: a handler may subscribe/unsubscribe re-entrantly
             subs = list(self._subs[event.kind])
+        # lock-order witness hook: dispatching while holding any lock
+        # outside the emit-safe coordinator prefix is the PR 5 deadlock
+        # shape and gets reported with the offending stack
+        on_emit(event.kind.value)
         for fn in subs:
             fn(event)
 
@@ -186,7 +190,7 @@ class RetiredPayloadStore:
     """
 
     def __init__(self, lifecycle: TrajectoryLifecycle):
-        self._lock = threading.Lock()
+        self._lock = make_lock("retired")
         self._store: Dict[int, Trajectory] = {}
         lifecycle.subscribe(LifecycleEventKind.REWARDED, self._on_rewarded)
         lifecycle.subscribe(LifecycleEventKind.ABORTED, self._on_aborted)

@@ -26,12 +26,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
+from repro.analysis.witness import make_condition
+
 
 class ReadWriteLock:
     """Writer-preference RW lock (Pull = shared read, Push = exclusive write)."""
 
     def __init__(self) -> None:
-        self._cond = threading.Condition()
+        self._cond = make_condition("ps")
         self._readers = 0
         self._writer = False
         self._writers_waiting = 0

@@ -43,6 +43,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence
 
+from repro.analysis.witness import make_lock
 from repro.core.lifecycle import (
     LifecycleEvent,
     LifecycleEventKind,
@@ -118,7 +119,7 @@ class RewardServer:
         )
         self._workers: List[threading.Thread] = []
         self._running = False
-        self._lock = threading.Lock()
+        self._lock = make_lock("reward")
         self._stopped = False            # post-shutdown completions dropped
         # telemetry
         self.submitted = 0

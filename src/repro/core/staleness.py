@@ -31,9 +31,10 @@ be shared by the coordinator, reward workers, and the trainer thread.
 from __future__ import annotations
 
 import enum
-import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.witness import make_rlock
 
 
 class EntryState(enum.Enum):
@@ -142,7 +143,7 @@ class StalenessManager:
         self.train_version = 0          # next buffer to consume
         self._buffers: Dict[int, StalenessBuffer] = {}
         self._index: Dict[int, Tuple[int, int]] = {}  # key -> (v_buf, slot)
-        self._lock = threading.RLock()
+        self._lock = make_rlock("staleness")
         # telemetry: staleness (V_buf - V_traj) histogram per consumed buffer
         self.consumed_staleness: List[List[int]] = []
         # keys dropped by a Consume because their entry could not be

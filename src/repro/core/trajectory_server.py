@@ -24,8 +24,9 @@ execution) stays a direct call — it *returns* the payload.
 """
 from __future__ import annotations
 
-import threading
 from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.analysis.witness import make_rlock
 
 from repro.core.types import Trajectory, TrajectoryGroup, TrajStatus, next_traj_id
 
@@ -47,7 +48,7 @@ class TrajectoryServer:
         self.group_redundancy = group_redundancy
         self.max_new_tokens = max_new_tokens
         self._clock = clock
-        self._lock = threading.RLock()
+        self._lock = make_rlock("ts")
         self._available: Dict[int, Trajectory] = {}   # in TS, routable
         self.registry: Dict[int, Trajectory] = {}     # all live trajectories
         self.groups: Dict[int, TrajectoryGroup] = {}

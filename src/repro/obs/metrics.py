@@ -31,8 +31,9 @@ at zero per-observation allocation.
 """
 from __future__ import annotations
 
-import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.witness import make_lock
 
 LabelSet = Tuple[Tuple[str, str], ...]
 
@@ -56,7 +57,7 @@ class Counter:
         self.name = name
         self.labels = labels
         self._value = 0.0
-        self._lock = threading.Lock()
+        self._lock = make_lock("metric")
 
     def inc(self, n: float = 1.0) -> None:
         with self._lock:
@@ -82,7 +83,7 @@ class Gauge:
         self.name = name
         self.labels = labels
         self._value = 0.0
-        self._lock = threading.Lock()
+        self._lock = make_lock("metric")
 
     def set(self, value: float) -> None:
         with self._lock:
@@ -122,7 +123,7 @@ class Histogram:
         self._count = 0
         self._min: Optional[float] = None
         self._max: Optional[float] = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("metric")
 
     def observe(self, value: float) -> None:
         # linear scan: bucket lists are short (<= ~20) and observations
@@ -234,7 +235,7 @@ class MetricsRegistry:
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
-        self._lock = threading.Lock()
+        self._lock = make_lock("metrics")
         self._instruments: Dict[Tuple[str, str, LabelSet], object] = {}
 
     def _get(self, kind: str, name: str, labels: Dict[str, object], factory):

@@ -13,8 +13,9 @@ longitudinal benchmark JSONs stay comparable across PRs).
 """
 from __future__ import annotations
 
-import threading
 from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis.witness import make_lock
 
 
 def percentile(
@@ -60,7 +61,7 @@ class Ring:
         self._items: List[float] = []
         self._pos = 0
         self._total = 0
-        self._lock = threading.Lock()
+        self._lock = make_lock("stats")
 
     def append(self, value: float) -> None:
         with self._lock:

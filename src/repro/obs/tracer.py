@@ -52,6 +52,7 @@ from repro.core.lifecycle import (
     LifecycleEventKind,
     TrajectoryLifecycle,
 )
+from repro.analysis.witness import make_rlock
 from repro.obs.stats import Ring
 
 K = LifecycleEventKind
@@ -126,7 +127,7 @@ class TrajectoryTracer:
         self._clock = clock
         self._floor = floor_source
         self._lifecycle = lifecycle
-        self._lock = threading.RLock()
+        self._lock = make_rlock("tracer")
         self.t0 = clock()
         self.spans: Dict[int, TrajSpan] = {}
         self.activities: Deque[Activity] = deque(maxlen=max_activities)

@@ -24,11 +24,11 @@ Fault kinds:
 from __future__ import annotations
 
 import random
-import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Union
 
+from repro.analysis.witness import make_lock
 from repro.reward.retry import VerifierError, VerifierTimeout
 
 FAULT_KINDS = ("ok", "error", "crash", "delay", "drop")
@@ -131,7 +131,7 @@ class FaultInjectingVerifier:
         self.drop_hang_s = drop_hang_s
         self.name = name or f"faulty[{type(inner).__name__}]"
         self._sleep = sleep
-        self._lock = threading.Lock()
+        self._lock = make_lock("faults")
         self._next = 0
         self.counts = {k: 0 for k in FAULT_KINDS}
 

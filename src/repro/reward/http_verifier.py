@@ -25,12 +25,12 @@ from __future__ import annotations
 
 import json
 import random
-import threading
 import time
 import urllib.error
 import urllib.request
 from typing import Callable, List, Optional
 
+from repro.analysis.witness import make_lock
 from repro.reward.retry import (
     CircuitBreaker,
     RetryPolicy,
@@ -65,7 +65,7 @@ class HttpVerifier:
         self._rng = random.Random(seed)
         self._clock = clock
         self._sleep = sleep
-        self._lock = threading.Lock()
+        self._lock = make_lock("http")
         # telemetry
         self.calls = 0
         self.requests = 0        # HTTP round trips attempted

@@ -29,10 +29,10 @@ on the tracer's reward track.
 """
 from __future__ import annotations
 
-import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.analysis.witness import make_lock
 from repro.obs.stats import Ring, percentiles
 from repro.reward.retry import VerificationAbort
 
@@ -45,7 +45,7 @@ class _Route:
     def __init__(self, tag: str, verifier, max_latency_samples: int = 2048):
         self.tag = tag
         self.verifier = verifier
-        self.lock = threading.Lock()
+        self.lock = make_lock("route")
         self.calls = 0
         self.failures = 0    # terminal verifier failures seen by the hub
         self.fallbacks = 0   # failures resolved to the fallback score
@@ -98,7 +98,7 @@ class RewardHub:
         self._tracer = tracer
         self._metrics = metrics
         self._routes: Dict[str, _Route] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("hub")
         self.unrouted = 0    # trajectories whose tag matched no route
         if default is not None:
             self.register(DEFAULT_ROUTE, default)

@@ -30,10 +30,11 @@ from __future__ import annotations
 
 import enum
 import random
-import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, TypeVar
+
+from repro.analysis.witness import make_lock
 
 T = TypeVar("T")
 
@@ -118,7 +119,7 @@ class CircuitBreaker:
         self.failure_threshold = failure_threshold
         self.reset_timeout_s = reset_timeout_s
         self._clock = clock
-        self._lock = threading.Lock()
+        self._lock = make_lock("breaker")
         self._state = BreakerState.CLOSED
         self._consecutive = 0
         self._opened_at = 0.0
@@ -242,7 +243,7 @@ class RetryingVerifier:
         self.name = name or type(inner).__name__
         self._rng = random.Random(seed)
         self._sleep = sleep
-        self._lock = threading.Lock()
+        self._lock = make_lock("retry")
         # telemetry
         self.calls = 0
         self.retries = 0

@@ -41,10 +41,10 @@ import os
 import signal
 import subprocess
 import sys
-import threading
 import time
 from typing import Callable, List, Optional
 
+from repro.analysis.witness import make_lock
 from repro.reward.retry import VerifierError, VerifierTimeout
 
 _RUNNER = r"""
@@ -104,7 +104,7 @@ class SandboxVerifier:
         self.python = python
         self.name = name
         self._clock = clock
-        self._lock = threading.Lock()
+        self._lock = make_lock("sandbox")
         # telemetry
         self.calls = 0
         self.kills = 0           # wall-timeout SIGKILLs

@@ -25,6 +25,7 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Callable, List, Optional
+from repro.analysis.witness import make_lock
 
 
 class StubJudge:
@@ -43,7 +44,7 @@ class StubJudge:
         self.score_fn = score_fn or (lambda p, r, task: 1.0)
         self.pending_polls = pending_polls
         self.inline = inline
-        self._lock = threading.Lock()
+        self._lock = make_lock("judge")
         self._fail_remaining = fail_first
         self._jobs: dict = {}       # job_id -> {"score": s, "polls": n}
         self._next_job = 0

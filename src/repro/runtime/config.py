@@ -107,6 +107,13 @@ class RuntimeConfig:
     trace_path: Optional[str] = None
     # fleet-sampler cadence (occupancy / KV fill / staleness buffers)
     obs_sample_interval_s: float = 0.01
+    # runtime lock-order witness (repro.analysis.witness): every core lock
+    # becomes a TrackedLock recording the acquisition graph; order
+    # violations, graph cycles, and emit-under-lock events are reported
+    # with offending stacks (lock_witness_* metrics + tracer activities).
+    # Off by default: plain threading primitives, byte-identical seed path.
+    # Can also be forced on via the REPRO_LOCK_WITNESS=1 environment var.
+    lock_witness: bool = False
 
 
 @dataclass

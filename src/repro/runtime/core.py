@@ -33,7 +33,6 @@ under real concurrency exactly as it does cooperatively.
 """
 from __future__ import annotations
 
-import threading
 import time
 from contextlib import ExitStack
 from typing import Any, Callable, Dict, List, Optional
@@ -42,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import witness as lock_witness
+from repro.analysis.witness import make_lock, make_rlock
 from repro.configs.base import ArchConfig
 from repro.core import (
     Abort,
@@ -88,7 +89,10 @@ class LockedBackend:
 
     def __init__(self, inner: EngineBackend):
         self.inner = inner
-        self.lock = threading.RLock()
+        # order-keyed: barrier cycles enter several instance locks, always
+        # in ascending inst_id order (the sorted ExitStack below) — the
+        # witness checks the key ordering at runtime
+        self.lock = make_rlock("instance", order_key=inner.inst_id)
         self._retired = False
 
     def __getattr__(self, name: str) -> Any:
@@ -135,6 +139,10 @@ class RuntimeCore:
     def __init__(self, cfg: ArchConfig, rcfg: RuntimeConfig):
         self.cfg = cfg
         self.rcfg = rcfg
+        # opt-in lock-order witness: must activate before any service
+        # below constructs its locks, so every lock joins the tracked set
+        if rcfg.lock_witness:
+            lock_witness.enable()
         key = jax.random.PRNGKey(rcfg.seed)
         self.params = M.init_params(cfg, key)
         self.opt_state = init_opt_state(self.params)
@@ -306,13 +314,13 @@ class RuntimeCore:
                 LifecycleEventKind.COMPLETED, self._on_stream_completed
             )
 
-        self._instances_lock = threading.RLock()
+        self._instances_lock = make_rlock("instances")
         self.instances: Dict[int, LockedBackend] = {}
         for i in range(rcfg.n_instances):
             self.instances[i] = self._new_instance(i)
         self.coordinator.spec.resync(self._snapshots())
 
-        self._history_lock = threading.Lock()
+        self._history_lock = make_lock("history")
         self.history: List[StepRecord] = []
         self.model_version = 0
         self._tick = 0
@@ -323,7 +331,10 @@ class RuntimeCore:
             "decode": 0.0, "prefill": 0.0, "reward": 0.0, "train": 0.0,
             "coordinator": 0.0, "pull": 0.0, "route": 0.0, "interrupt": 0.0,
         }
-        self._timers_lock = threading.Lock()
+        self._timers_lock = make_lock("timers")
+        # witness violations already projected onto the tracer (so each
+        # offending stack becomes exactly one trace activity)
+        self._witness_exported = 0
 
     # -------------------------------------------------------------- plumbing
     def _build_reward_hub(self):
@@ -544,7 +555,10 @@ class RuntimeCore:
         t0 = time.perf_counter()
         snaps = collect_snapshots(handles)
         commands = self.coordinator.step(snaps, ps_version)
-        self.timers["coordinator"] += time.perf_counter() - t0
+        # RPL003 fix: the coordinator thread's add races the instance
+        # threads' locked decode/reward adds (and run()'s final read)
+        with self._timers_lock:
+            self.timers["coordinator"] += time.perf_counter() - t0
         res = execute_commands(
             commands, handles, self.ts, self.ps,
             timers=self.timers, lifecycle=self.lifecycle,
@@ -632,7 +646,8 @@ class RuntimeCore:
         self.model_version += 1
         self._push_fn(self.params, self.model_version)
         t1 = time.perf_counter()
-        self.timers["train"] += t1 - t0
+        with self._timers_lock:
+            self.timers["train"] += t1 - t0
         for s in staleness_hist:
             self._m_staleness.observe(s)
         if self.tracer is not None:
@@ -797,6 +812,31 @@ class RuntimeCore:
                     busy = dict(busy)
             for name, v in busy.items():
                 m.gauge("sched_busy_s", thread=name).set(v)
+        # lock-order witness (when it ran): counters + one tracer activity
+        # per violation, carrying the offending stack into the trace
+        w = lock_witness.current()
+        if w is not None:
+            viol = w.violations()
+            m.counter("lock_witness_acquires").set_total(w.acquires)
+            m.counter("lock_witness_emits").set_total(w.emits)
+            m.counter("lock_witness_edges").set_total(len(w.edges()))
+            m.counter("lock_witness_order_violations").set_total(
+                viol["order"]
+            )
+            m.counter("lock_witness_emit_under_lock").set_total(
+                viol["emit_under_lock"]
+            )
+            m.counter("lock_witness_cycles").set_total(viol["cycles"])
+            if self.tracer is not None:
+                samples = w.order_violations + w.emit_under_lock
+                now = time.perf_counter()
+                for s in samples[self._witness_exported:]:
+                    self.tracer.activity(
+                        "lock_witness_violation", now, now,
+                        args={k: v for k, v in s.items() if k != "stack"}
+                        | {"stack": "".join(s.get("stack", [])[-4:])},
+                    )
+                self._witness_exported = len(samples)
 
     def export_trace(self, path: Optional[str] = None) -> Optional[dict]:
         """Final metrics scrape + Chrome-trace export (None when off)."""

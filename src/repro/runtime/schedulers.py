@@ -36,6 +36,7 @@ import threading
 import time
 from typing import Callable, List, Optional, Protocol
 
+from repro.analysis.witness import make_condition, make_lock
 from repro.core import BackgroundPusher
 from repro.core.lifecycle import LifecycleEventKind
 from repro.runtime.config import StepRecord
@@ -56,7 +57,7 @@ class EventGate:
     """
 
     def __init__(self) -> None:
-        self._cond = threading.Condition()
+        self._cond = make_condition("gate")
         self._seq = 0
 
     def seq(self) -> int:
@@ -146,7 +147,7 @@ class ThreadedScheduler:
         # updates through the lock — instance threads are many, and the
         # coordinator/trainer adds race against run()'s final read
         self.busy = {"decode": 0.0, "train": 0.0, "coordinate": 0.0}
-        self._busy_lock = threading.Lock()
+        self._busy_lock = make_lock("busy")
         # event-driven wakeups (no 0.5 ms polling): each service loop
         # sleeps on its gate and lifecycle events signal it — wake latency
         # is one dispatch, idle threads cost nothing. Timeouts below are

@@ -1,0 +1,19 @@
+"""Shared fixtures for the test suite."""
+import pytest
+
+from repro.analysis import witness as lock_witness
+
+
+@pytest.fixture
+def lock_witnessed():
+    """Run the test under the runtime lock-order witness.
+
+    Enabling before the test body means every lock the test constructs
+    (runtimes, reward hubs, schedulers) joins the tracked set; teardown
+    fails the test if the acquisition graph recorded any order
+    violation, cycle, or emit-under-lock — the threaded stress tests
+    double as the race gate.
+    """
+    with lock_witness.enabled() as w:
+        yield w
+    w.assert_clean()

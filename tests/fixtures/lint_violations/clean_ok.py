@@ -1,0 +1,42 @@
+"""Near-miss patterns that must produce zero diagnostics (no false
+positives): emit under the emit-safe coordinator prefix, reentrant RLock
+reentry, correctly ordered nesting, bare locks in single-role modules,
+wall-clock outside deterministic modules, and an explicit suppression.
+"""
+import threading
+import time
+
+from repro.analysis.witness import make_lock, make_rlock
+
+
+class Coordinator:
+    def __init__(self, lifecycle):
+        self.lifecycle = lifecycle
+        self.lock = make_rlock("coordinator")
+        self._ts_lock = make_lock("ts")
+        # no roles directive: single-role modules may keep bare locks
+        self._bare = threading.Lock()
+
+    def consume(self, traj):
+        with self.lock:
+            # clean: the coordinator prefix is emit-safe by construction
+            self.lifecycle.consumed(traj)
+
+    def reentrant(self):
+        with self.lock:
+            with self.lock:  # clean: RLock reentry
+                pass
+
+    def ordered(self):
+        with self.lock:
+            with self._ts_lock:  # clean: 0 -> 30 respects the order
+                pass
+
+    def allowed_emit(self, traj):
+        with self._ts_lock:
+            # repro: allow[RPL001] reason=fixture demonstrates suppression
+            self.lifecycle.aborted(traj)
+
+    def stamp(self):
+        # clean: not a deterministic module, wall-clock is fine here
+        return time.time()

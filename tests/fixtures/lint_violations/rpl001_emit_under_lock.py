@@ -1,0 +1,29 @@
+"""Seeded RPL001: lifecycle dispatch while holding a non-emit-safe lock.
+
+Reconstructs the PR 5 deadlock shape: a reward worker publishes REWARDED
+while still holding its queue lock; the coordinator's INTERRUPTED
+subscriber then blocks on that lock while holding the coordinator lock.
+"""
+from repro.analysis.witness import make_lock
+
+
+class RewardWorker:
+    def __init__(self, lifecycle):
+        self.lifecycle = lifecycle
+        self._lock = make_lock("reward")
+
+    def score_one(self, traj):
+        with self._lock:
+            traj.reward = 1.0
+            self.lifecycle.rewarded(traj)  # seeded RPL001 (direct emit)
+
+    def score_indirect(self, traj):
+        with self._lock:
+            self._publish(traj)  # seeded RPL001 (transitive emit)
+
+    def _publish(self, traj):
+        self.lifecycle.rewarded(traj)
+
+    def finish(self, event):
+        # clean: dispatching with no lock held is the fixed shape
+        self.lifecycle.emit(event)

@@ -1,0 +1,32 @@
+"""Seeded RPL002: acquisitions that invert the declared partial order."""
+from repro.analysis.witness import make_lock, make_rlock
+
+
+class Coordinator:
+    def __init__(self):
+        self.lock = make_rlock("coordinator")
+        self._ts_lock = make_lock("ts")
+        self._stats_lock = make_lock("stats")
+
+    def bad_inversion(self):
+        with self._ts_lock:
+            with self.lock:  # seeded RPL002: ts(30) -> coordinator(0)
+                pass
+
+    def bad_terminal(self):
+        with self._stats_lock:
+            with self._ts_lock:  # seeded RPL002: stats is a hard leaf
+                pass
+
+    def bad_reacquire(self):
+        with self._ts_lock:
+            with self._ts_lock:  # seeded RPL002: non-reentrant self-deadlock
+                pass
+
+    def good_nesting(self):
+        # clean: coordinator(0) -> ts(30) -> stats(70) is the declared order
+        with self.lock:
+            with self._ts_lock:
+                pass
+        with self._stats_lock:
+            pass

@@ -1,0 +1,28 @@
+# repro: roles=coordinator,decode,trainer
+"""Seeded RPL003: the PR 7 unlocked-busy-dict shape.
+
+Three loop threads bump a shared telemetry dict; one site skips the
+lock. Facet A additionally flags the bare ``threading.Lock()`` that
+bypasses the witness-aware factory.
+"""
+import threading
+
+from repro.analysis.witness import make_lock
+
+
+class BusyScheduler:
+    def __init__(self):
+        self._bare = threading.Lock()  # seeded RPL003 (facet A)
+        self._busy_lock = make_lock("busy")
+        self.busy = {"decode": 0.0, "train": 0.0, "coordinate": 0.0}
+
+    def decode_loop(self, dt):
+        self.busy["decode"] += dt  # seeded RPL003 (facet B: unguarded)
+
+    def trainer_loop(self, dt):
+        with self._busy_lock:
+            self.busy["train"] += dt  # clean: guarded site
+
+    def coordinate_locked(self, dt):
+        # clean: '*_locked' names a caller-holds-the-lock contract
+        self.busy["coordinate"] += dt

@@ -1,0 +1,17 @@
+# repro: deterministic
+"""Seeded RPL004: wall-clock / unseeded randomness on a seed path."""
+import random
+import time
+
+
+def sample_latency():
+    jitter = random.random()  # seeded RPL004: global unseeded RNG
+    stamp = time.time()  # seeded RPL004: wall-clock read
+    return jitter, stamp
+
+
+def seeded_ok(seed):
+    # clean: explicit seeded generator + monotonic local duration
+    rng = random.Random(seed)
+    t0 = time.perf_counter()
+    return rng.random(), time.perf_counter() - t0

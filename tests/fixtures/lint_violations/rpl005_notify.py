@@ -1,0 +1,28 @@
+"""Seeded RPL005: Condition.notify must hold its own lock, alone."""
+from repro.analysis.witness import make_condition, make_lock
+
+
+class Gate:
+    def __init__(self):
+        self._cond = make_condition("gate")
+        self._reward_lock = make_lock("reward")
+        self._seq = 0
+
+    def bad_unlocked(self):
+        self._seq += 1
+        self._cond.notify_all()  # seeded RPL005: no lock held (lost wakeup)
+
+    def bad_wrong_lock(self):
+        with self._reward_lock:
+            self._cond.notify()  # seeded RPL005: holds the wrong lock
+
+    def bad_extra_lock(self):
+        with self._reward_lock:
+            with self._cond:
+                self._seq += 1
+                self._cond.notify_all()  # seeded RPL005: extra lock held
+
+    def good(self):
+        with self._cond:
+            self._seq += 1
+            self._cond.notify_all()

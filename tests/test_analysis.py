@@ -1,0 +1,298 @@
+"""Concurrency-correctness tooling tests: the RPL lint, the runtime
+lock-order witness, and the EventGate lost-wakeup contract.
+
+The lint/witness regression pairs reconstruct the repo's two historical
+races — the PR 5 emit-under-lock deadlock (reward worker dispatching
+REWARDED while holding its lock vs the coordinator's INTERRUPTED emit)
+and the PR 7 unlocked-busy-dict write — and prove the tooling catches
+both shapes.
+"""
+import threading
+import time
+from pathlib import Path
+
+from repro.analysis import lint, lock_order, witness
+from repro.analysis.lint import ModuleLinter
+from repro.analysis.witness import TrackedLock, TrackedRLock
+from repro.core.lifecycle import (
+    LifecycleEventKind as K,
+    TrajectoryLifecycle,
+)
+from repro.core.types import Trajectory
+from repro.runtime.schedulers import EventGate
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint_violations"
+
+
+def lint_src(source, relpath="mod.py"):
+    return ModuleLinter(relpath, source).run()
+
+
+# --------------------------------------------------------------------- lint
+class TestLint:
+    def test_selftest_catches_every_seeded_fixture_exactly(self):
+        # every seeded RPL001-RPL005 hit at its exact file:line:col,
+        # zero false positives on the clean fixtures
+        assert lint.selftest(FIXTURES) == 0
+
+    def test_repo_tree_is_clean_with_empty_baseline(self):
+        assert lint.main(["--check"]) == 0
+
+    def test_suppression_comment_silences_one_rule_with_reason(self):
+        src = (
+            "from repro.analysis.witness import make_lock\n"
+            "class W:\n"
+            "    def __init__(self, lifecycle):\n"
+            "        self.lifecycle = lifecycle\n"
+            "        self._lock = make_lock('reward')\n"
+            "    def go(self, t):\n"
+            "        with self._lock:\n"
+            "            self.lifecycle.rewarded(t){}\n"
+        )
+        assert [d.rule for d in lint_src(src.format(""))] == ["RPL001"]
+        ok = src.format("  # repro: allow[RPL001] reason=subs are lock-free")
+        assert lint_src(ok) == []
+        # a different rule in the allow bracket does not suppress
+        other = src.format("  # repro: allow[RPL002] reason=wrong rule")
+        assert [d.rule for d in lint_src(other)] == ["RPL001"]
+
+    def test_unknown_lock_names_are_permissive_for_order(self):
+        src = (
+            "from repro.analysis.witness import make_lock\n"
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._a_lock = make_lock('zebra')\n"
+            "        self._b_lock = make_lock('yak')\n"
+            "    def go(self):\n"
+            "        with self._a_lock:\n"
+            "            with self._b_lock:\n"
+            "                pass\n"
+        )
+        assert [d for d in lint_src(src) if d.rule == "RPL002"] == []
+
+    def test_emit_safe_prefix_not_flagged(self):
+        src = (
+            "from repro.analysis.witness import make_rlock\n"
+            "class C:\n"
+            "    def __init__(self, lifecycle):\n"
+            "        self.lifecycle = lifecycle\n"
+            "        self.lock = make_rlock('coordinator')\n"
+            "    def go(self, t):\n"
+            "        with self.lock:\n"
+            "            self.lifecycle.consumed(t)\n"
+        )
+        assert lint_src(src) == []
+
+    def test_can_acquire_order_semantics(self):
+        assert lock_order.can_acquire("coordinator", "ts")
+        assert not lock_order.can_acquire("ts", "coordinator")
+        # hard leaves admit nothing below them
+        assert not lock_order.can_acquire("busy", "gate")
+        # order-keyed same-name nesting must ascend
+        assert lock_order.can_acquire(
+            "instance", "instance", held_key=0, new_key=1
+        )
+        assert not lock_order.can_acquire(
+            "instance", "instance", held_key=1, new_key=0
+        )
+        # unknown names are permissive (runtime witness still graphs them)
+        assert lock_order.can_acquire("zebra", "coordinator")
+
+
+# ------------------------------------------------------------------ witness
+class TestWitness:
+    def test_order_violation_reported_before_blocking(self):
+        with witness.enabled() as w:
+            ts = TrackedLock("ts")
+            coord = TrackedLock("coordinator")
+            with ts:
+                with coord:  # ts(30) -> coordinator(0): inversion
+                    pass
+            assert w.violations()["order"] == 1
+            sample = w.order_violations[0]
+            assert sample["held"] == "ts" and sample["acquiring"] == "coordinator"
+            assert sample["stack"]  # offending stack captured
+
+    def test_opposite_order_threads_form_a_cycle_without_colliding(self):
+        # the PR 5 detection property: two threads taking the same pair
+        # in opposite orders are flagged even when they never deadlock
+        with witness.enabled() as w:
+            a = TrackedLock("zebra")  # unknown names: no order rank,
+            b = TrackedLock("yak")    # the cycle check still applies
+
+            def first():
+                with a:
+                    with b:
+                        pass
+
+            def second():
+                with b:
+                    with a:
+                        pass
+
+            for fn in (first, second):
+                t = threading.Thread(target=fn)
+                t.start()
+                t.join()
+            assert w.violations()["cycles"] == 1
+            (cycle,) = w.cycles()
+            assert set(cycle) == {"zebra", "yak"}
+
+    def test_emit_under_non_safe_lock_flagged_with_stack(self):
+        with witness.enabled() as w:
+            reward = TrackedLock("reward")
+            with reward:
+                witness.on_emit("rewarded")
+            assert w.violations()["emit_under_lock"] == 1
+            sample = w.emit_under_lock[0]
+            assert sample["held"] == ["reward"]
+            assert sample["event"] == "rewarded"
+
+    def test_emit_under_coordinator_prefix_is_clean(self):
+        with witness.enabled() as w:
+            coord = TrackedRLock("coordinator")
+            with coord:
+                witness.on_emit("consumed")
+            witness.on_emit("rewarded")  # no lock held
+            w.assert_clean()
+            assert w.emits == 2
+
+    def test_rlock_reentry_records_only_outermost(self):
+        with witness.enabled() as w:
+            coord = TrackedRLock("coordinator")
+            with coord:
+                with coord:
+                    pass
+            assert w.acquires == 1
+            w.assert_clean()
+
+    def test_condition_wait_flows_through_witness(self):
+        with witness.enabled() as w:
+            cond = witness.make_condition("gate")
+            fired = threading.Event()
+
+            def waiter():
+                with cond:
+                    cond.wait(timeout=5.0)
+                fired.set()
+
+            t = threading.Thread(target=waiter)
+            t.start()
+            time.sleep(0.05)
+            with cond:
+                cond.notify_all()
+            t.join(timeout=5.0)
+            assert fired.is_set()
+            w.assert_clean()
+            assert w.held_labels() == []
+
+    def test_factories_return_plain_primitives_when_disabled(self):
+        witness.disable()
+        assert not isinstance(witness.make_lock("x"), TrackedLock)
+        assert not isinstance(witness.make_rlock("x"), TrackedLock)
+        cond = witness.make_condition("x")
+        assert not isinstance(getattr(cond, "_lock", None), TrackedLock)
+        witness.on_emit("rewarded")  # no-op, must not raise
+
+    def test_pr5_regression_reward_dispatch_vs_coordinator_emit(self):
+        # reconstruction of the PR 5 deadlock shape on a real lifecycle
+        # bus: the coordinator path nests coordinator -> reward (legal),
+        # while a reward worker dispatches REWARDED still holding its
+        # lock — whose subscriber takes the coordinator lock. The
+        # witness reports the emit and the coordinator<->reward cycle
+        # without the threads ever needing to actually collide.
+        with witness.enabled() as w:
+            lifecycle = TrajectoryLifecycle()
+            coord_lock = TrackedRLock("coordinator")
+            reward_lock = TrackedLock("reward")
+            lifecycle.subscribe(
+                K.REWARDED, lambda e: coord_lock.acquire() or coord_lock.release()
+            )
+
+            def coordinator_path():
+                with coord_lock:       # coordinator submits a score
+                    with reward_lock:  # -> legal 0 -> 46 edge
+                        pass
+
+            def reward_worker():
+                traj = Trajectory(traj_id=1, prompt=[1, 2, 3])
+                with reward_lock:  # buggy: dispatch under the queue lock
+                    lifecycle.rewarded(traj)
+
+            for fn in (coordinator_path, reward_worker):
+                t = threading.Thread(target=fn)
+                t.start()
+                t.join()
+            v = w.violations()
+            assert v["emit_under_lock"] >= 1
+            assert v["cycles"] >= 1
+            assert any(
+                set(c) >= {"coordinator", "reward"} for c in w.cycles()
+            )
+
+    def test_fixed_shape_dispatch_outside_lock_is_clean(self):
+        with witness.enabled() as w:
+            lifecycle = TrajectoryLifecycle()
+            coord_lock = TrackedRLock("coordinator")
+            lifecycle.subscribe(
+                K.REWARDED, lambda e: coord_lock.acquire() or coord_lock.release()
+            )
+            reward_lock = TrackedLock("reward")
+            traj = Trajectory(traj_id=1, prompt=[1, 2, 3])
+            with reward_lock:
+                traj.reward = 1.0  # mutate under the lock ...
+            lifecycle.rewarded(traj)  # ... dispatch after releasing
+            w.assert_clean()
+
+
+# ---------------------------------------------------------------- EventGate
+class TestEventGate:
+    def test_notify_between_seq_and_wait_returns_immediately(self):
+        gate = EventGate()
+        seen = gate.seq()
+        gate.notify()  # lands in the seq()..wait() window
+        t0 = time.perf_counter()
+        assert gate.wait(seen, timeout=5.0)
+        assert time.perf_counter() - t0 < 1.0
+
+    def test_no_lost_wakeups_under_racing_notifier(self):
+        gate = EventGate()
+        stop = threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                gate.notify()
+
+        t = threading.Thread(target=hammer)
+        t.start()
+        try:
+            misses = 0
+            for _ in range(200):
+                seen = gate.seq()
+                if not gate.wait(seen, timeout=2.0):
+                    misses += 1
+            assert misses == 0
+        finally:
+            stop.set()
+            t.join()
+
+    def test_wait_times_out_false_when_idle(self):
+        gate = EventGate()
+        assert not gate.wait(gate.seq(), timeout=0.01)
+
+    def test_subscribe_many_unsubscribe_many_symmetry(self):
+        lifecycle = TrajectoryLifecycle()
+        gate = EventGate()
+        kinds = [K.REWARDED, K.ABORTED]
+        before = {k: list(lifecycle._subs[k]) for k in K}
+        lifecycle.subscribe_many(kinds, gate.notify)
+        seen = gate.seq()
+        traj = Trajectory(traj_id=1, prompt=[1, 2, 3])
+        lifecycle.rewarded(traj)
+        assert gate.seq() == seen + 1
+        lifecycle.aborted(2)
+        assert gate.seq() == seen + 2
+        lifecycle.unsubscribe_many(kinds, gate.notify)
+        lifecycle.rewarded(traj)  # no longer wired
+        assert gate.seq() == seen + 2
+        assert {k: list(lifecycle._subs[k]) for k in K} == before

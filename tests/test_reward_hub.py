@@ -701,7 +701,9 @@ class TestThreadedFaultAcceptance:
     """The tentpole's acceptance gate: seeded fault injection under the
     threaded scheduler with staleness <= eta."""
 
-    def test_threaded_fallback_under_faults(self, runtime_factory):
+    def test_threaded_fallback_under_faults(
+        self, runtime_factory, lock_witnessed
+    ):
         faulty = FaultInjectingVerifier(
             FnVerifier(lambda p, r: 1.0),
             FaultSchedule(seed=11, error_rate=0.15, crash_rate=0.1,
@@ -739,7 +741,9 @@ class TestThreadedFaultAcceptance:
         assert faulty.injected() > 0
 
     @pytest.mark.slow
-    def test_threaded_abort_mode_under_faults(self, runtime_factory):
+    def test_threaded_abort_mode_under_faults(
+        self, runtime_factory, lock_witnessed
+    ):
         faulty = FaultInjectingVerifier(
             FnVerifier(lambda p, r: 1.0),
             FaultSchedule(seed=3, error_rate=0.3),
@@ -769,7 +773,9 @@ class TestThreadedFaultAcceptance:
         assert stats["aborted"] > 0  # the abort path actually ran
 
     @pytest.mark.slow
-    def test_threaded_remote_judge_end_to_end(self, runtime_factory):
+    def test_threaded_remote_judge_end_to_end(
+        self, runtime_factory, lock_witnessed
+    ):
         """Completions cross real loopback HTTP from reward workers while
         instances decode: the disaggregated reward phase with an external
         judge, end to end."""

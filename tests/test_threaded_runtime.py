@@ -35,9 +35,11 @@ def mk_runtime(**kw):
 
 
 # ------------------------------------------------------------ threaded smoke
-def test_threaded_scheduler_trains_with_staleness_bound():
+def test_threaded_scheduler_trains_with_staleness_bound(lock_witnessed):
     """CI threaded-runtime smoke: fixed seed, small model, eta enforced on
-    every consumed batch under real thread interleavings."""
+    every consumed batch under real thread interleavings — with the lock
+    witness recording every acquisition (clean graph asserted at
+    teardown)."""
     rt = mk_runtime(scheduler="threaded", total_steps=2)
     rt.scheduler.wall_timeout_s = 240.0
     history = rt.run()
@@ -53,6 +55,8 @@ def test_threaded_scheduler_trains_with_staleness_bound():
     assert stats["scored"] >= 2 * rt.rcfg.batch_size * rt.rcfg.group_size
     # Push went through the background pusher (overlap path)
     assert rt.ps.version == rt.model_version
+    # the witness really tracked the run (teardown asserts it's clean)
+    assert lock_witnessed.acquires > 0 and lock_witnessed.emits > 0
 
 
 def test_threaded_scheduler_respects_larger_eta():
@@ -68,7 +72,7 @@ def test_threaded_scheduler_respects_larger_eta():
 
 # --------------------------------------------------- elasticity mid-decode
 @pytest.mark.slow
-def test_threaded_elasticity_fail_and_add_mid_decode():
+def test_threaded_elasticity_fail_and_add_mid_decode(lock_witnessed):
     """fail_instance / add_instance while instance threads are actively
     decoding: protocol invariants hold after every transition and the run
     still completes on the reshaped fleet."""
@@ -152,7 +156,7 @@ def test_tick_refused_on_threaded_scheduler():
 
 
 # ------------------------------------------------- streaming pipeline
-def test_threaded_streaming_trains_with_staleness_bound():
+def test_threaded_streaming_trains_with_staleness_bound(lock_witnessed):
     """Streaming smoke: event-driven admission (route_instance off
     COMPLETED/ABORTED), partial-batch consumption, and the event-gated
     scheduler together still honor eta on every consumed batch."""
@@ -171,11 +175,11 @@ def test_threaded_streaming_trains_with_staleness_bound():
 
 
 @pytest.mark.slow
-def test_threaded_streaming_stress_elastic_fleet():
+def test_threaded_streaming_stress_elastic_fleet(lock_witnessed):
     """Streaming stress: partial-batch consumption + incremental admission
     under real thread interleavings, with a replica failure and an elastic
     scale-up mid-run. The staleness bound and protocol invariants must
-    survive every transition."""
+    survive every transition — under the lock witness."""
     rt = mk_runtime(
         scheduler="threaded", total_steps=3, n_instances=2, eta=2,
         batch_size=2, streaming=True, stream_min_fill=1,
